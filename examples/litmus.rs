@@ -1,0 +1,76 @@
+//! Run the litmus suite (SB, MP, LB, IRIW, CO) under all three
+//! protocols and both core models with interleaving jitter, reporting
+//! outcome histograms and confirming no forbidden outcome appears.
+
+use std::collections::HashMap;
+
+use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::prog::{checker, litmus, Op, Workload};
+use tardis_dsm::sim::run_workload;
+use tardis_dsm::testutil::Rng;
+
+fn jitter(w: &Workload, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+    let mut w = w.clone();
+    for p in &mut w.programs {
+        for op in &mut p.ops {
+            match op {
+                Op::Load { gap, .. } | Op::Store { gap, .. } => *gap = rng.below(12) as u32,
+                _ => {}
+            }
+        }
+    }
+    w
+}
+
+fn main() -> anyhow::Result<()> {
+    const RUNS: u64 = 100;
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+            println!("== {} / {:?} ==", protocol.name(), model);
+            for lt in litmus::all() {
+                let mut outcomes: HashMap<Vec<u64>, u32> = HashMap::new();
+                let mut forbidden = 0;
+                for seed in 0..RUNS {
+                    let w = jitter(&lt.workload, seed);
+                    let mut cfg = SystemConfig::small(w.n_cores(), protocol);
+                    cfg.core_model = model;
+                    let res = run_workload(cfg, &w)?;
+                    checker::check(&res.log)
+                        .map_err(|v| anyhow::anyhow!("{}: SC violation {v:?}", lt.name))?;
+                    let out: Vec<u64> = lt
+                        .observed
+                        .iter()
+                        .map(|&(core, pc)| {
+                            res.log
+                                .records
+                                .iter()
+                                .find(|r| {
+                                    r.valid && r.core == core && r.pc == pc && r.value_read.is_some()
+                                })
+                                .map(|r| r.value_read.unwrap())
+                                .unwrap_or(u64::MAX)
+                        })
+                        .collect();
+                    if !(lt.allowed)(&out) {
+                        forbidden += 1;
+                    }
+                    *outcomes.entry(out).or_insert(0) += 1;
+                }
+                let mut hist: Vec<_> = outcomes.into_iter().collect();
+                hist.sort();
+                let render: Vec<String> =
+                    hist.iter().map(|(o, n)| format!("{o:?}x{n}")).collect();
+                println!(
+                    "  {:<5} forbidden={}  outcomes: {}",
+                    lt.name,
+                    forbidden,
+                    render.join(" ")
+                );
+                assert_eq!(forbidden, 0, "{} produced a forbidden outcome!", lt.name);
+            }
+        }
+    }
+    println!("\nall litmus tests clean — no forbidden SC outcome in any run");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! End-to-end paper reproduction driver: regenerates EVERY table and
+//! figure of the evaluation (Fig. 4–10, Tables VI and VII) from the
+//! AOT-compiled trace artifacts through the full simulator stack, and
+//! writes markdown + CSV into results/.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example reproduce_paper
+//! ```
+//!
+//! Scale note: full-length sweeps take tens of minutes; set
+//! TARDIS_SCALE_DOWN=4 (etc.) to divide trace lengths for a quick pass.
+
+use tardis_dsm::coordinator::experiments::{self, EvalCtx};
+use tardis_dsm::coordinator::report::Table;
+use tardis_dsm::runtime::TraceRuntime;
+
+fn emit(table: &Table, stem: &str) -> anyhow::Result<()> {
+    println!("\n{}", table.to_markdown());
+    table.write("results", stem)?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let runtime = match TraceRuntime::open_default() {
+        Ok(rt) => {
+            println!("trace source: PJRT artifacts ({:?} configs)", rt.configs().len());
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); falling back to the rust mirror");
+            None
+        }
+    };
+    let mut ctx = EvalCtx::new(runtime, 0);
+    ctx.scale_down = std::env::var("TARDIS_SCALE_DOWN")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    if ctx.scale_down > 1 {
+        println!("scale-down factor {} (trace lengths divided)", ctx.scale_down);
+    }
+
+    let t0 = std::time::Instant::now();
+    emit(&experiments::fig4(&mut ctx)?, "fig4")?;
+    emit(&experiments::fig5(&mut ctx)?, "fig5")?;
+    emit(&experiments::table6(&mut ctx)?, "table6")?;
+    emit(&experiments::fig6(&mut ctx)?, "fig6")?;
+    emit(&experiments::fig7(&mut ctx)?, "fig7")?;
+    let (a, b) = experiments::fig8(&mut ctx)?;
+    emit(&a, "fig8a")?;
+    emit(&b, "fig8b")?;
+    emit(&experiments::table7(), "table7")?;
+    emit(&experiments::fig9(&mut ctx)?, "fig9")?;
+    emit(&experiments::fig10(&mut ctx)?, "fig10")?;
+    println!(
+        "\nall tables and figures regenerated into results/ in {:.1?}",
+        t0.elapsed()
+    );
+    Ok(())
+}

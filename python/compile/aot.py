@@ -1,0 +1,85 @@
+"""AOT-lower the L2 workload model to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`).  The text parser reassigns ids and
+round-trips cleanly — see /opt/xla-example/gen_hlo.py.
+
+One artifact per (n_cores, trace_len) configuration; a manifest.json
+records the set so the rust side can discover them.
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .kernels import spec
+from .model import make_workload_fn
+
+# (n_cores, trace_len) AOT configurations.  Core counts follow the
+# paper's 16/64/256 sweep; the small ones serve tests and examples.
+CONFIGS = [
+    (2, 256),
+    (4, 512),
+    (16, 2048),
+    (64, 4096),
+    (256, 1024),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(n_cores: int, trace_len: int) -> str:
+    return f"tracegen_c{n_cores}_l{trace_len}.hlo.txt"
+
+
+def build_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"params_len": spec.N_PARAMS, "configs": []}
+    for n_cores, trace_len in CONFIGS:
+        fn = make_workload_fn(n_cores, trace_len)
+        params_spec = jax.ShapeDtypeStruct((spec.N_PARAMS,), jax.numpy.int32)
+        lowered = jax.jit(fn).lower(params_spec)
+        text = to_hlo_text(lowered)
+        name = artifact_name(n_cores, trace_len)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["configs"].append(
+            {"n_cores": n_cores, "trace_len": trace_len, "file": name}
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {out_dir}/manifest.json ({len(CONFIGS)} configs)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    # Legacy single-file interface kept for the Makefile stamp target.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    build_all(out_dir or ".")
+    if args.out and os.path.basename(args.out) not in os.listdir(out_dir):
+        # Stamp file so `make` sees the target as built.
+        with open(args.out, "w") as f:
+            f.write("see manifest.json\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Pure-jnp oracle for the tracegen Pallas kernel.
+
+Independent re-implementation of the trace-generation contract
+(kernels/spec.py) as one whole-array jnp computation — no pallas, no
+tiling.  pytest + hypothesis assert bit-identical output against
+kernels/tracegen.py across shapes and parameter vectors; this file is
+the correctness spec for the kernel's blocking/indexing.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import spec
+
+
+def _mix_ref(seed, core, slot, stream):
+    h = (
+        seed
+        ^ (core * jnp.uint32(0x85EBCA6B))
+        ^ (slot * jnp.uint32(0xC2B2AE35))
+        ^ (stream * jnp.uint32(0x27D4EB2F))
+    )
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(0x2C1B3C6D)
+    h = h ^ (h >> 12)
+    h = h * jnp.uint32(0x297A2D39)
+    h = h ^ (h >> 15)
+    return h
+
+
+def tracegen_ref(params, n_cores, trace_len):
+    """Reference trace tensor int32[n_cores, trace_len, 3]."""
+    params = jnp.asarray(params, jnp.int32)
+    u = lambda i: params[i].astype(jnp.uint32)
+
+    seed = u(spec.P_SEED)
+    pattern = u(spec.P_PATTERN)
+    priv_lines = jnp.maximum(u(spec.P_PRIV_LINES), 1)
+    shared_lines = jnp.maximum(u(spec.P_SHARED_LINES), 1)
+    pct_shared = u(spec.P_PCT_SHARED)
+    pct_w_sh = u(spec.P_PCT_WRITE_SHARED)
+    pct_w_pr = u(spec.P_PCT_WRITE_PRIV)
+    sync_kind = u(spec.P_SYNC_KIND)
+    sync_period = u(spec.P_SYNC_PERIOD)
+    crit_len = u(spec.P_CRIT_LEN)
+    n_locks = jnp.maximum(u(spec.P_N_LOCKS), 1)
+    gap_max = u(spec.P_COMPUTE_GAP)
+    stride = jnp.maximum(u(spec.P_STRIDE), 1)
+    grid_dim = jnp.maximum(u(spec.P_GRID_DIM), 1)
+    barrier_period = u(spec.P_BARRIER_PERIOD)
+
+    core = jax.lax.broadcasted_iota(jnp.uint32, (n_cores, trace_len), 0)
+    slot = jax.lax.broadcasted_iota(jnp.uint32, (n_cores, trace_len), 1)
+
+    h = [_mix_ref(seed, core, slot, jnp.uint32(k)) for k in range(7)]
+
+    use_barriers = (sync_kind & 2) != 0
+    bp = jnp.maximum(barrier_period, 1)
+    is_barrier = use_barriers & (barrier_period > 0) & (((slot + 1) % bp) == 0)
+    barrier_epoch = (slot + 1) // bp
+
+    use_locks = (sync_kind & 1) != 0
+    sp = jnp.maximum(sync_period, 1)
+    crit_len = jnp.minimum(crit_len, sp - jnp.minimum(sp, 2))
+    m = slot % sp
+    episode_start = slot - m
+    lock_id = _mix_ref(seed, core, episode_start, jnp.uint32(7)) % n_locks
+    episode_end = episode_start + crit_len + 1
+    fits = (episode_start >= 1) & (episode_end <= jnp.uint32(trace_len - 2))
+    first_bar = bp * ((episode_start + bp) // bp) - 1
+    no_bar_inside = jnp.logical_not(
+        use_barriers & (barrier_period > 0) & (first_bar <= episode_end)
+    )
+    in_lock_mode = use_locks & (sync_period > 0) & fits & no_bar_inside
+    is_lock = in_lock_mode & (m == 0)
+    is_unlock = in_lock_mode & (m == crit_len + 1)
+    is_crit = in_lock_mode & (m >= 1) & (m <= crit_len)
+    lock_addr = jnp.uint32(spec.LOCK_BASE) + lock_id
+    crit_addr = (
+        jnp.uint32(spec.LOCK_DATA_BASE)
+        + lock_id * jnp.uint32(spec.LOCK_DATA_SPAN)
+        + h[3] % jnp.uint32(spec.LOCK_DATA_SPAN)
+    )
+    crit_store = (h[2] % jnp.uint32(1000)) < jnp.uint32(500)
+
+    is_shared = (h[0] % jnp.uint32(1000)) < pct_shared
+    sh_store = (h[1] % jnp.uint32(1000)) < pct_w_sh
+    pr_store = (h[1] % jnp.uint32(1000)) < pct_w_pr
+
+    s_uniform = h[5] % shared_lines
+    part = jnp.maximum(shared_lines // jnp.uint32(n_cores), 1)
+    s_strided_rd = (slot * stride + core) % shared_lines
+    s_strided_wr = (core * part + (slot * stride) % part) % shared_lines
+    s_strided = jnp.where(sh_store, s_strided_wr, s_strided_rd)
+    blk = jnp.maximum(shared_lines // jnp.uint32(spec.N_BLOCKS), 1)
+    own_block = core % jnp.uint32(spec.N_BLOCKS)
+    rd_block = h[5] % jnp.uint32(spec.N_BLOCKS)
+    block_sel = jnp.where(sh_store, own_block, rd_block)
+    s_blocked = (block_sel * blk + h[6] % blk) % shared_lines
+    row = core % grid_dim
+    drow = h[5] % jnp.uint32(3)
+    row2 = (row + grid_dim + drow - 1) % grid_dim
+    row_sel = jnp.where(sh_store, row, row2)
+    s_stencil = (row_sel * grid_dim + h[6] % grid_dim) % shared_lines
+    hot = jnp.minimum(shared_lines, jnp.uint32(spec.HOT_SET_LINES))
+    s_hot = h[5] % hot
+
+    s = s_uniform
+    s = jnp.where(pattern == 1, s_strided, s)
+    s = jnp.where(pattern == 2, s_blocked, s)
+    s = jnp.where(pattern == 3, s_stencil, s)
+    s = jnp.where(pattern == 4, s_hot, s)
+    shared_addr = jnp.uint32(spec.SHARED_BASE) + s
+
+    hot_priv = jnp.maximum(priv_lines // jnp.uint32(8), 1)
+    priv_idx = jnp.where(
+        (h[6] % jnp.uint32(1000)) < jnp.uint32(800), h[3] % hot_priv, h[3] % priv_lines
+    )
+    priv_addr = (
+        jnp.uint32(spec.PRIV_BASE)
+        + core * jnp.uint32(spec.PRIV_STRIDE)
+        + priv_idx
+    )
+
+    normal_store = jnp.where(is_shared, sh_store, pr_store)
+    normal_addr = jnp.where(is_shared, shared_addr, priv_addr)
+    normal_op = jnp.where(
+        normal_store, jnp.uint32(spec.OP_STORE), jnp.uint32(spec.OP_LOAD)
+    )
+
+    op = normal_op
+    addr = normal_addr
+    op = jnp.where(
+        is_crit,
+        jnp.where(crit_store, jnp.uint32(spec.OP_STORE), jnp.uint32(spec.OP_LOAD)),
+        op,
+    )
+    addr = jnp.where(is_crit, crit_addr, addr)
+    op = jnp.where(is_unlock, jnp.uint32(spec.OP_UNLOCK), op)
+    addr = jnp.where(is_unlock, lock_addr, addr)
+    op = jnp.where(is_lock, jnp.uint32(spec.OP_LOCK), op)
+    addr = jnp.where(is_lock, lock_addr, addr)
+    op = jnp.where(is_barrier, jnp.uint32(spec.OP_BARRIER), op)
+    addr = jnp.where(is_barrier, jnp.uint32(spec.BARRIER_BASE), addr)
+
+    gap = h[4] % (gap_max + 1)
+    is_memop = (op == spec.OP_LOAD) | (op == spec.OP_STORE)
+    aux = jnp.where(is_memop, gap, jnp.uint32(0))
+    aux = jnp.where(is_barrier, barrier_epoch, aux)
+
+    return jnp.stack(
+        [op.astype(jnp.int32), addr.astype(jnp.int32), aux.astype(jnp.int32)],
+        axis=-1,
+    )

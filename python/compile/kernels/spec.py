@@ -1,0 +1,86 @@
+"""Shared *data-format* constants for the tracegen kernel and its oracle.
+
+This module defines the trace encoding contract between the python
+compile path (L1 pallas kernel / L2 jax model) and the rust simulator
+(rust/src/trace/decode.rs).  Only constants live here — the generation
+logic is implemented twice (kernels/tracegen.py and kernels/ref.py) so
+the pytest oracle is meaningful.
+
+Trace tensor: int32[n_cores, trace_len, 3] with columns (op, addr, aux).
+
+Opcodes
+    OP_LOAD    = 0   load  `addr`                     (aux = compute gap)
+    OP_STORE   = 1   store `addr`                     (aux = compute gap)
+    OP_LOCK    = 2   acquire spin-lock at `addr`      (aux = 0)
+    OP_UNLOCK  = 3   release spin-lock at `addr`      (aux = 0)
+    OP_BARRIER = 4   global barrier                   (aux = epoch)
+
+Addresses are 64-byte cacheline indices partitioned into disjoint
+regions so the rust side can classify traffic:
+
+    PRIV_BASE + core * PRIV_STRIDE + k   private per-core data
+    SHARED_BASE + k                      shared heap
+    LOCK_DATA_BASE + lock*64 + k         data protected by lock `lock`
+    LOCK_BASE + lock                     lock words
+    BARRIER_BASE (+1)                    barrier counter / sense lines
+
+Parameter vector: int32[16]
+    0  seed
+    1  pattern_id     0 uniform | 1 strided | 2 blocked | 3 stencil | 4 hot
+    2  priv_lines     per-core private working set (lines)
+    3  shared_lines   shared heap size (lines)
+    4  pct_shared     per-mille of non-sync slots touching shared heap
+    5  pct_write_shared  per-mille of shared accesses that are stores
+    6  pct_write_priv    per-mille of private accesses that are stores
+    7  sync_kind      bit0 = locks, bit1 = barriers
+    8  sync_period    slots per lock episode (0 = no locks)
+    9  crit_len       accesses inside a critical section
+    10 n_locks        distinct lock words
+    11 compute_gap_max  aux = hash % (gap+1) idle cycles before the op
+    12 stride         address stride for pattern 1
+    13 grid_dim       stencil grid dimension for pattern 3
+    14 barrier_period slots per barrier (0 = no barriers)
+    15 reserved (must be 0)
+"""
+
+N_PARAMS = 16
+
+OP_LOAD = 0
+OP_STORE = 1
+OP_LOCK = 2
+OP_UNLOCK = 3
+OP_BARRIER = 4
+
+PRIV_STRIDE = 1 << 16
+PRIV_BASE = 0
+LOCK_DATA_BASE = 1 << 26
+SHARED_BASE = 1 << 27
+LOCK_BASE = 1 << 28
+BARRIER_BASE = 1 << 29
+
+# Lines of protected data per lock.
+LOCK_DATA_SPAN = 64
+
+# Parameter indices.
+P_SEED = 0
+P_PATTERN = 1
+P_PRIV_LINES = 2
+P_SHARED_LINES = 3
+P_PCT_SHARED = 4
+P_PCT_WRITE_SHARED = 5
+P_PCT_WRITE_PRIV = 6
+P_SYNC_KIND = 7
+P_SYNC_PERIOD = 8
+P_CRIT_LEN = 9
+P_N_LOCKS = 10
+P_COMPUTE_GAP = 11
+P_STRIDE = 12
+P_GRID_DIM = 13
+P_BARRIER_PERIOD = 14
+P_RESERVED = 15
+
+# Blocked pattern (pattern_id == 2) uses a fixed number of blocks.
+N_BLOCKS = 32
+
+# Hot-set pattern (pattern_id == 4) cap.
+HOT_SET_LINES = 64

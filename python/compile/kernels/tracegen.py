@@ -1,0 +1,251 @@
+"""L1 Pallas kernel: synthetic-workload memory-trace generation.
+
+The simulator's input is a tensor of per-core memory operations.  For a
+64-core x 4096-slot trace that is ~786k generated tuples per workload;
+generation is the data-parallel hot spot of the compile path and is
+implemented as a Pallas kernel: a counter-based xxhash-style PRNG plus
+address-pattern synthesis evaluated per (core, slot) tile.
+
+The kernel is deterministic in (params, core, slot): the pure-jnp oracle
+in ref.py must produce bit-identical output, which pytest/hypothesis
+enforce across shapes and parameter vectors.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the
+(cores, slots) plane in (8, 128) VMEM blocks; all math is elementwise
+uint32 VPU work, no MXU.  On this CPU image the kernel always runs with
+interpret=True (real TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot execute).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import spec
+
+# xxhash/murmur-style 32-bit finalizer constants.
+_K_CORE = 0x85EBCA6B
+_K_SLOT = 0xC2B2AE35
+_K_STREAM = 0x27D4EB2F
+_M1 = 0x2C1B3C6D
+_M2 = 0x297A2D39
+
+
+def _mix(seed, core, slot, stream):
+    """Counter-based PRNG: finalizer-style avalanche over (core, slot, stream)."""
+    h = (
+        seed
+        ^ (core * jnp.uint32(_K_CORE))
+        ^ (slot * jnp.uint32(_K_SLOT))
+        ^ (stream * jnp.uint32(_K_STREAM))
+    )
+    h = h ^ (h >> 15)
+    h = h * jnp.uint32(_M1)
+    h = h ^ (h >> 12)
+    h = h * jnp.uint32(_M2)
+    h = h ^ (h >> 15)
+    return h
+
+
+def _gen_tile(params, core, slot, trace_len, n_cores):
+    """Generate (op, addr, aux) for a tile of (core, slot) pairs.
+
+    `core` and `slot` are uint32 arrays of identical shape; `params` is
+    the int32[16] parameter vector (see kernels/spec.py); `trace_len`
+    is the static trace length (needed to suppress lock episodes that
+    cannot complete before the join barrier).  Returns three int32
+    arrays of the tile shape.
+    """
+    u32 = lambda x: x.astype(jnp.uint32) if hasattr(x, "astype") else jnp.uint32(x)
+    p = lambda idx: u32(params[idx])
+
+    seed = p(spec.P_SEED)
+    pattern = p(spec.P_PATTERN)
+    priv_lines = jnp.maximum(p(spec.P_PRIV_LINES), 1)
+    shared_lines = jnp.maximum(p(spec.P_SHARED_LINES), 1)
+    pct_shared = p(spec.P_PCT_SHARED)
+    pct_w_sh = p(spec.P_PCT_WRITE_SHARED)
+    pct_w_pr = p(spec.P_PCT_WRITE_PRIV)
+    sync_kind = p(spec.P_SYNC_KIND)
+    sync_period = p(spec.P_SYNC_PERIOD)
+    crit_len = p(spec.P_CRIT_LEN)
+    n_locks = jnp.maximum(p(spec.P_N_LOCKS), 1)
+    gap_max = p(spec.P_COMPUTE_GAP)
+    stride = jnp.maximum(p(spec.P_STRIDE), 1)
+    grid_dim = jnp.maximum(p(spec.P_GRID_DIM), 1)
+    barrier_period = p(spec.P_BARRIER_PERIOD)
+
+    h0 = _mix(seed, core, slot, jnp.uint32(0))
+    h1 = _mix(seed, core, slot, jnp.uint32(1))
+    h2 = _mix(seed, core, slot, jnp.uint32(2))
+    h3 = _mix(seed, core, slot, jnp.uint32(3))
+    h4 = _mix(seed, core, slot, jnp.uint32(4))
+    h5 = _mix(seed, core, slot, jnp.uint32(5))
+    h6 = _mix(seed, core, slot, jnp.uint32(6))
+
+    # --- Barrier slots (sync_kind bit1): every barrier_period-th slot. ---
+    use_barriers = (sync_kind & 2) != 0
+    bp = jnp.maximum(barrier_period, 1)
+    is_barrier = use_barriers & (barrier_period > 0) & (((slot + 1) % bp) == 0)
+    barrier_epoch = (slot + 1) // bp
+
+    # --- Lock episodes (sync_kind bit0): slot position within a period. ---
+    use_locks = (sync_kind & 1) != 0
+    sp = jnp.maximum(sync_period, 1)
+    # An episode must fit inside its period: LOCK at m==0, UNLOCK at
+    # m==crit_len+1 < sp.
+    crit_len = jnp.minimum(crit_len, sp - jnp.minimum(sp, 2))
+    m = slot % sp
+    episode_start = slot - m
+    lock_id = _mix(seed, core, episode_start, jnp.uint32(7)) % n_locks
+    episode_end = episode_start + crit_len + 1
+    # Deadlock guards: (a) the episode completes before the join barrier
+    # and does not start at the warm-up slot 0; (b) no barrier slot
+    # falls inside [episode_start, episode_end] while a lock is held.
+    fits = (episode_start >= 1) & (episode_end <= jnp.uint32(trace_len - 2))
+    first_bar = bp * ((episode_start + bp) // bp) - 1
+    no_bar_inside = jnp.logical_not(
+        use_barriers & (barrier_period > 0) & (first_bar <= episode_end)
+    )
+    in_lock_mode = use_locks & (sync_period > 0) & fits & no_bar_inside
+    is_lock = in_lock_mode & (m == 0)
+    is_unlock = in_lock_mode & (m == crit_len + 1)
+    is_crit = in_lock_mode & (m >= 1) & (m <= crit_len)
+    lock_addr = jnp.uint32(spec.LOCK_BASE) + lock_id
+    crit_addr = (
+        jnp.uint32(spec.LOCK_DATA_BASE)
+        + lock_id * jnp.uint32(spec.LOCK_DATA_SPAN)
+        + h3 % jnp.uint32(spec.LOCK_DATA_SPAN)
+    )
+    crit_store = (h2 % jnp.uint32(1000)) < jnp.uint32(500)
+
+    # --- Normal slots: shared-heap vs private access. ---
+    is_shared = (h0 % jnp.uint32(1000)) < pct_shared
+    sh_store = (h1 % jnp.uint32(1000)) < pct_w_sh
+    pr_store = (h1 % jnp.uint32(1000)) < pct_w_pr
+
+    # Shared address by pattern.
+    s_uniform = h5 % shared_lines
+    # Strided (FFT/RADIX butterfly): reads sweep the whole array;
+    # writes land in the core's own 1/N output partition (SPLASH-2
+    # kernels write core-partitioned data).
+    part = jnp.maximum(shared_lines // jnp.uint32(n_cores), 1)
+    s_strided_rd = (slot * stride + core) % shared_lines
+    s_strided_wr = (core * part + (slot * stride) % part) % shared_lines
+    s_strided = jnp.where(sh_store, s_strided_wr, s_strided_rd)
+    blk = jnp.maximum(shared_lines // jnp.uint32(spec.N_BLOCKS), 1)
+    own_block = core % jnp.uint32(spec.N_BLOCKS)
+    rd_block = h5 % jnp.uint32(spec.N_BLOCKS)
+    block_sel = jnp.where(sh_store, own_block, rd_block)
+    s_blocked = (block_sel * blk + h6 % blk) % shared_lines
+    # Stencil (OCEAN): reads touch the core's own row and its
+    # neighbors; writes only the core's own row (each core owns a band
+        # of the grid).
+    row = core % grid_dim
+    drow = h5 % jnp.uint32(3)  # 0,1,2 -> -1,0,+1 via (row + dim + d - 1)
+    row2 = (row + grid_dim + drow - 1) % grid_dim
+    row_sel = jnp.where(sh_store, row, row2)
+    s_stencil = (row_sel * grid_dim + h6 % grid_dim) % shared_lines
+    hot = jnp.minimum(shared_lines, jnp.uint32(spec.HOT_SET_LINES))
+    s_hot = h5 % hot
+
+    s = s_uniform
+    s = jnp.where(pattern == 1, s_strided, s)
+    s = jnp.where(pattern == 2, s_blocked, s)
+    s = jnp.where(pattern == 3, s_stencil, s)
+    s = jnp.where(pattern == 4, s_hot, s)
+    shared_addr = jnp.uint32(spec.SHARED_BASE) + s
+
+    # Private accesses have temporal locality: 80% hit a hot 1/8
+    # subset of the region (benchmark-like L1 hit rates; uniform
+    # addressing would make every workload memory-bound).
+    hot_priv = jnp.maximum(priv_lines // jnp.uint32(8), 1)
+    priv_idx = jnp.where(
+        (h6 % jnp.uint32(1000)) < jnp.uint32(800), h3 % hot_priv, h3 % priv_lines
+    )
+    priv_addr = (
+        jnp.uint32(spec.PRIV_BASE)
+        + core * jnp.uint32(spec.PRIV_STRIDE)
+        + priv_idx
+    )
+
+    normal_store = jnp.where(is_shared, sh_store, pr_store)
+    normal_addr = jnp.where(is_shared, shared_addr, priv_addr)
+    normal_op = jnp.where(
+        normal_store, jnp.uint32(spec.OP_STORE), jnp.uint32(spec.OP_LOAD)
+    )
+
+    # --- Compose with priority: barrier > lock > unlock > crit > normal. ---
+    op = normal_op
+    addr = normal_addr
+    op = jnp.where(
+        is_crit,
+        jnp.where(crit_store, jnp.uint32(spec.OP_STORE), jnp.uint32(spec.OP_LOAD)),
+        op,
+    )
+    addr = jnp.where(is_crit, crit_addr, addr)
+    op = jnp.where(is_unlock, jnp.uint32(spec.OP_UNLOCK), op)
+    addr = jnp.where(is_unlock, lock_addr, addr)
+    op = jnp.where(is_lock, jnp.uint32(spec.OP_LOCK), op)
+    addr = jnp.where(is_lock, lock_addr, addr)
+    op = jnp.where(is_barrier, jnp.uint32(spec.OP_BARRIER), op)
+    addr = jnp.where(is_barrier, jnp.uint32(spec.BARRIER_BASE), addr)
+
+    gap = h4 % (gap_max + 1)
+    is_memop = (op == spec.OP_LOAD) | (op == spec.OP_STORE)
+    aux = jnp.where(is_memop, gap, jnp.uint32(0))
+    aux = jnp.where(is_barrier, barrier_epoch, aux)
+
+    return op.astype(jnp.int32), addr.astype(jnp.int32), aux.astype(jnp.int32)
+
+
+def _kernel(params_ref, op_ref, addr_ref, aux_ref, *, block_cores,
+            block_slots, trace_len, n_cores):
+    """Pallas kernel body: one (block_cores, block_slots) tile per grid step."""
+    pc = pl.program_id(0)
+    ps = pl.program_id(1)
+    core0 = (pc * block_cores).astype(jnp.uint32)
+    slot0 = (ps * block_slots).astype(jnp.uint32)
+    core = core0 + jax.lax.broadcasted_iota(
+        jnp.uint32, (block_cores, block_slots), 0
+    )
+    slot = slot0 + jax.lax.broadcasted_iota(
+        jnp.uint32, (block_cores, block_slots), 1
+    )
+    op, addr, aux = _gen_tile(params_ref[...], core, slot, trace_len, n_cores)
+    op_ref[...] = op
+    addr_ref[...] = addr
+    aux_ref[...] = aux
+
+
+def tracegen(params, n_cores, trace_len, *, interpret=True):
+    """Generate the trace tensor int32[n_cores, trace_len, 3].
+
+    `params` is the int32[16] parameter vector.  Shapes are static:
+    one AOT artifact is produced per (n_cores, trace_len) configuration.
+    """
+    block_cores = min(8, n_cores)
+    block_slots = min(128, trace_len)
+    assert n_cores % block_cores == 0, "n_cores must tile by 8 (or be < 8)"
+    assert trace_len % block_slots == 0, "trace_len must tile by 128"
+    grid = (n_cores // block_cores, trace_len // block_slots)
+    out_shape = jax.ShapeDtypeStruct((n_cores, trace_len), jnp.int32)
+
+    op, addr, aux = pl.pallas_call(
+        functools.partial(
+            _kernel, block_cores=block_cores, block_slots=block_slots,
+            trace_len=trace_len, n_cores=n_cores,
+        ),
+        grid=grid,
+        in_specs=[pl.BlockSpec((spec.N_PARAMS,), lambda i, j: (0,))],
+        out_specs=[
+            pl.BlockSpec((block_cores, block_slots), lambda i, j: (i, j)),
+            pl.BlockSpec((block_cores, block_slots), lambda i, j: (i, j)),
+            pl.BlockSpec((block_cores, block_slots), lambda i, j: (i, j)),
+        ],
+        out_shape=[out_shape, out_shape, out_shape],
+        interpret=interpret,
+    )(params)
+    return jnp.stack([op, addr, aux], axis=-1)

@@ -1,0 +1,69 @@
+"""L2 JAX model: full workload-program synthesis on top of the L1 kernel.
+
+`make_workload_fn(n_cores, trace_len)` returns the function that is
+AOT-lowered (see aot.py): params int32[16] -> trace int32[n_cores,
+trace_len, 3].  The L2 layer composes the Pallas tracegen kernel with
+the program epilogue:
+
+  * the final slot of every core is forced to a join BARRIER so the
+    simulated benchmark has a well-defined completion time (the paper's
+    throughput metric is benchmark cycles to completion);
+  * the first slot of every core is forced to a private warm-up load so
+    every core begins with a compulsory miss into its own region, like
+    a real benchmark's stack/frame touch.
+
+Shapes are static; one artifact per (n_cores, trace_len) configuration.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import spec
+from .kernels.tracegen import tracegen
+
+
+def _epilogue(trace, n_cores):
+    """Force slot 0 to a private warm-up load and the last slot to a
+    join barrier.
+
+    Implemented with elementwise `where` masks rather than `.at[].set`
+    scatters: the HLO-text interchange targets xla_extension 0.5.1,
+    whose scatter lowering mis-executes the jax>=0.8 pattern (it wrote
+    the scatter indices instead of the updates).
+    """
+    trace_len = trace.shape[1]
+    core = jax.lax.broadcasted_iota(jnp.int32, trace.shape[:2], 0)
+    slot = jax.lax.broadcasted_iota(jnp.int32, trace.shape[:2], 1)
+    first = slot == 0
+    last = slot == trace_len - 1
+
+    op, addr, aux = trace[..., 0], trace[..., 1], trace[..., 2]
+    warm_addr = jnp.int32(spec.PRIV_BASE) + core * jnp.int32(spec.PRIV_STRIDE)
+    op = jnp.where(first, jnp.int32(spec.OP_LOAD), op)
+    addr = jnp.where(first, warm_addr, addr)
+    aux = jnp.where(first, 0, aux)
+    op = jnp.where(last, jnp.int32(spec.OP_BARRIER), op)
+    addr = jnp.where(last, jnp.int32(spec.BARRIER_BASE), addr)
+    aux = jnp.where(last, 0, aux)
+    return jnp.stack([op, addr, aux], axis=-1)
+
+
+def make_workload_fn(n_cores, trace_len, *, interpret=True):
+    """Build the AOT entry point for one (n_cores, trace_len) configuration."""
+
+    def workload(params):
+        trace = tracegen(params, n_cores, trace_len, interpret=interpret)
+        # Return a flat int32[n_cores * trace_len * 3]: 1-D output has an
+        # unambiguous buffer layout, so the rust PJRT client reads it
+        # back in logical row-major order regardless of how XLA laid out
+        # the 3-D tensor.
+        return (_epilogue(trace, n_cores).reshape(-1),)
+
+    return workload
+
+
+def workload_ref(params, n_cores, trace_len):
+    """Oracle for the full L2 model (kernel oracle + epilogue)."""
+    from .kernels.ref import tracegen_ref
+
+    return _epilogue(tracegen_ref(params, n_cores, trace_len), n_cores)

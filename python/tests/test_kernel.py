@@ -1,0 +1,229 @@
+"""Kernel-vs-oracle tests: the CORE correctness signal for the L1 layer.
+
+The pallas tracegen kernel (interpret=True) must produce bit-identical
+output to the whole-array jnp oracle in kernels/ref.py for every shape
+and parameter vector.  Hypothesis sweeps both.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import spec
+from compile.kernels.ref import tracegen_ref
+from compile.kernels.tracegen import tracegen
+
+
+def make_params(
+    seed=1,
+    pattern=0,
+    priv_lines=64,
+    shared_lines=256,
+    pct_shared=300,
+    pct_write_shared=200,
+    pct_write_priv=300,
+    sync_kind=0,
+    sync_period=0,
+    crit_len=4,
+    n_locks=16,
+    compute_gap=4,
+    stride=3,
+    grid_dim=8,
+    barrier_period=0,
+):
+    p = np.zeros(spec.N_PARAMS, np.int32)
+    p[spec.P_SEED] = seed
+    p[spec.P_PATTERN] = pattern
+    p[spec.P_PRIV_LINES] = priv_lines
+    p[spec.P_SHARED_LINES] = shared_lines
+    p[spec.P_PCT_SHARED] = pct_shared
+    p[spec.P_PCT_WRITE_SHARED] = pct_write_shared
+    p[spec.P_PCT_WRITE_PRIV] = pct_write_priv
+    p[spec.P_SYNC_KIND] = sync_kind
+    p[spec.P_SYNC_PERIOD] = sync_period
+    p[spec.P_CRIT_LEN] = crit_len
+    p[spec.P_N_LOCKS] = n_locks
+    p[spec.P_COMPUTE_GAP] = compute_gap
+    p[spec.P_STRIDE] = stride
+    p[spec.P_GRID_DIM] = grid_dim
+    p[spec.P_BARRIER_PERIOD] = barrier_period
+    return jnp.asarray(p)
+
+
+def assert_kernel_matches_ref(params, n_cores, trace_len):
+    out = np.asarray(tracegen(params, n_cores, trace_len))
+    ref = np.asarray(tracegen_ref(params, n_cores, trace_len))
+    np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------- basic
+
+
+class TestKernelVsRef:
+    def test_default_params(self):
+        assert_kernel_matches_ref(make_params(), 4, 256)
+
+    @pytest.mark.parametrize("pattern", [0, 1, 2, 3, 4])
+    def test_every_pattern(self, pattern):
+        assert_kernel_matches_ref(make_params(pattern=pattern), 4, 256)
+
+    @pytest.mark.parametrize("n_cores,trace_len", [(2, 128), (4, 256), (8, 128), (16, 384)])
+    def test_shapes(self, n_cores, trace_len):
+        assert_kernel_matches_ref(make_params(), n_cores, trace_len)
+
+    def test_locks_enabled(self):
+        assert_kernel_matches_ref(
+            make_params(sync_kind=1, sync_period=32, crit_len=4), 4, 256
+        )
+
+    def test_barriers_enabled(self):
+        assert_kernel_matches_ref(
+            make_params(sync_kind=2, barrier_period=64), 4, 256
+        )
+
+    def test_locks_and_barriers(self):
+        assert_kernel_matches_ref(
+            make_params(sync_kind=3, sync_period=16, crit_len=2, barrier_period=64),
+            4,
+            256,
+        )
+
+    def test_degenerate_params_clamped(self):
+        # zero-sized regions must not divide by zero
+        assert_kernel_matches_ref(
+            make_params(priv_lines=0, shared_lines=0, n_locks=0, stride=0, grid_dim=0),
+            2,
+            128,
+        )
+
+    def test_multi_row_block_grid(self):
+        # n_cores > 8 exercises the row-block dimension of the grid
+        assert_kernel_matches_ref(make_params(seed=7), 16, 256)
+
+
+# ------------------------------------------------------- trace semantics
+
+
+class TestTraceSemantics:
+    def test_opcodes_in_range(self):
+        t = np.asarray(tracegen(make_params(sync_kind=3, sync_period=16,
+                                            barrier_period=32), 4, 256))
+        assert t[..., 0].min() >= spec.OP_LOAD
+        assert t[..., 0].max() <= spec.OP_BARRIER
+
+    def test_lock_unlock_pair_same_address(self):
+        t = np.asarray(tracegen(make_params(sync_kind=1, sync_period=16,
+                                            crit_len=3), 4, 256))
+        op, addr = t[..., 0], t[..., 1]
+        for c in range(4):
+            locks = np.where(op[c] == spec.OP_LOCK)[0]
+            for i in locks:
+                j = i + 4  # crit_len + 1
+                if j < 256 and op[c, j] == spec.OP_UNLOCK:
+                    assert addr[c, i] == addr[c, j]
+
+    def test_every_episode_unlock_matches_lock(self):
+        sp, cl = 16, 3
+        t = np.asarray(tracegen(make_params(sync_kind=1, sync_period=sp,
+                                            crit_len=cl), 2, 256))
+        op = t[..., 0]
+        for c in range(2):
+            # Episode at slot 0 is suppressed (warm-up guard); every
+            # later episode that fits before the join barrier is full.
+            for start in range(sp, 256 - sp, sp):
+                assert op[c, start] == spec.OP_LOCK
+                assert op[c, start + cl + 1] == spec.OP_UNLOCK
+
+    def test_private_addresses_disjoint_across_cores(self):
+        t = np.asarray(tracegen(make_params(pct_shared=0), 4, 256))
+        addr = t[..., 1]
+        priv = (addr < spec.LOCK_DATA_BASE)
+        for c in range(4):
+            a = addr[c][priv[c]]
+            assert (a // spec.PRIV_STRIDE == c).all()
+
+    def test_shared_fraction_tracks_param(self):
+        t = np.asarray(tracegen(make_params(pct_shared=500, sync_kind=0),
+                                8, 1024))
+        addr = t[..., 1]
+        shared = ((addr >= spec.SHARED_BASE) & (addr < spec.LOCK_BASE)).mean()
+        assert 0.40 < shared < 0.60
+
+    def test_write_fraction_tracks_param(self):
+        t = np.asarray(tracegen(make_params(pct_shared=1000,
+                                            pct_write_shared=250), 8, 1024))
+        stores = (t[..., 0] == spec.OP_STORE).mean()
+        assert 0.18 < stores < 0.32
+
+    def test_hot_pattern_small_footprint(self):
+        t = np.asarray(tracegen(make_params(pattern=4, pct_shared=1000,
+                                            shared_lines=4096), 4, 512))
+        addr = t[..., 1]
+        sh = addr[(addr >= spec.SHARED_BASE) & (addr < spec.LOCK_BASE)]
+        assert len(np.unique(sh)) <= spec.HOT_SET_LINES
+
+    def test_blocked_pattern_writes_own_block(self):
+        t = np.asarray(tracegen(make_params(pattern=2, pct_shared=1000,
+                                            pct_write_shared=500,
+                                            shared_lines=1024), 4, 512))
+        op, addr = t[..., 0], t[..., 1]
+        blk = 1024 // spec.N_BLOCKS
+        for c in range(4):
+            w = addr[c][(op[c] == spec.OP_STORE)] - spec.SHARED_BASE
+            if len(w):
+                assert ((w // blk) % spec.N_BLOCKS == c % spec.N_BLOCKS).all()
+
+    def test_deterministic(self):
+        p = make_params(seed=42)
+        a = np.asarray(tracegen(p, 4, 256))
+        b = np.asarray(tracegen(p, 4, 256))
+        np.testing.assert_array_equal(a, b)
+
+    def test_seed_changes_trace(self):
+        a = np.asarray(tracegen(make_params(seed=1), 4, 256))
+        b = np.asarray(tracegen(make_params(seed=2), 4, 256))
+        assert (a != b).any()
+
+    def test_compute_gap_bounded(self):
+        t = np.asarray(tracegen(make_params(compute_gap=7), 4, 256))
+        memop = (t[..., 0] == spec.OP_LOAD) | (t[..., 0] == spec.OP_STORE)
+        assert t[..., 2][memop].max() <= 7
+        assert t[..., 2][memop].min() >= 0
+
+
+# ----------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    pattern=st.integers(0, 4),
+    pct_shared=st.integers(0, 1000),
+    pct_w=st.integers(0, 1000),
+    priv_lines=st.integers(0, 2048),
+    shared_lines=st.integers(0, 8192),
+)
+def test_hypothesis_params_match_ref(seed, pattern, pct_shared, pct_w,
+                                     priv_lines, shared_lines):
+    p = make_params(seed=seed, pattern=pattern, pct_shared=pct_shared,
+                    pct_write_shared=pct_w, priv_lines=priv_lines,
+                    shared_lines=shared_lines)
+    assert_kernel_matches_ref(p, 4, 128)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n_cores=st.sampled_from([2, 4, 8, 16]),
+    n_blocks_len=st.integers(1, 4),
+    sync_kind=st.integers(0, 3),
+    sync_period=st.sampled_from([0, 8, 16, 40]),
+    barrier_period=st.sampled_from([0, 16, 50]),
+)
+def test_hypothesis_shapes_and_sync_match_ref(n_cores, n_blocks_len,
+                                              sync_kind, sync_period,
+                                              barrier_period):
+    p = make_params(sync_kind=sync_kind, sync_period=sync_period,
+                    crit_len=3, barrier_period=barrier_period)
+    assert_kernel_matches_ref(p, n_cores, 128 * n_blocks_len)

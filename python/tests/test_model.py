@@ -1,0 +1,92 @@
+"""L2 model tests: epilogue semantics, shapes, and model-vs-oracle."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile.kernels import spec
+from compile.model import make_workload_fn, workload_ref
+from .test_kernel import make_params
+
+
+class TestModel:
+    def test_output_shape(self):
+        fn = make_workload_fn(4, 256)
+        (t,) = fn(make_params())
+        assert t.shape == (4 * 256 * 3,)
+        assert t.dtype == jnp.int32
+
+    def test_model_matches_ref(self):
+        p = make_params(seed=9, pattern=2, sync_kind=1, sync_period=32)
+        (t,) = make_workload_fn(4, 256)(p)
+        ref = workload_ref(p, 4, 256)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(ref).reshape(-1))
+
+    def test_final_slot_is_join_barrier(self):
+        (t,) = make_workload_fn(4, 256)(make_params())
+        t = np.asarray(t).reshape(4, 256, 3)
+        assert (t[:, -1, 0] == spec.OP_BARRIER).all()
+        assert (t[:, -1, 1] == spec.BARRIER_BASE).all()
+
+    def test_first_slot_is_private_warmup(self):
+        (t,) = make_workload_fn(4, 256)(make_params())
+        t = np.asarray(t).reshape(4, 256, 3)
+        assert (t[:, 0, 0] == spec.OP_LOAD).all()
+        for c in range(4):
+            assert t[c, 0, 1] == c * spec.PRIV_STRIDE
+
+    def test_barrier_count_balanced_across_cores(self):
+        # Barriers come from slot arithmetic only, so every core must
+        # emit the same number — required for the barrier not to hang.
+        p = make_params(sync_kind=2, barrier_period=32)
+        (t,) = make_workload_fn(8, 256)(p)
+        t = np.asarray(t).reshape(8, 256, 3)
+        counts = (t[..., 0] == spec.OP_BARRIER).sum(axis=1)
+        assert (counts == counts[0]).all()
+
+    def test_no_barrier_inside_critical_section(self):
+        # A core must never hold a lock while waiting at a barrier
+        # (deadlock with a core spinning on that lock).
+        p = make_params(sync_kind=3, sync_period=16, crit_len=3,
+                        barrier_period=24)
+        (t,) = make_workload_fn(4, 512)(p)
+        t = np.asarray(t).reshape(4, 512, 3)
+        for c in range(4):
+            held = False
+            for op in t[c, :, 0]:
+                if op == spec.OP_LOCK:
+                    held = True
+                elif op == spec.OP_UNLOCK:
+                    held = False
+                elif op == spec.OP_BARRIER:
+                    assert not held
+
+    def test_every_lock_is_released_before_trace_end(self):
+        p = make_params(sync_kind=1, sync_period=16, crit_len=3)
+        for tl in (256, 512):
+            (t,) = make_workload_fn(4, tl)(p)
+            t = np.asarray(t).reshape(4, tl, 3)
+            for c in range(4):
+                held = {}
+                for op, addr in zip(t[c, :, 0], t[c, :, 1]):
+                    if op == spec.OP_LOCK:
+                        assert not held.get(addr, False), "nested lock"
+                        held[addr] = True
+                    elif op == spec.OP_UNLOCK:
+                        assert held.get(addr, False), "orphan unlock"
+                        held[addr] = False
+                assert not any(held.values()), "lock held at join barrier"
+
+    def test_lock_depth_never_negative_or_above_one(self):
+        # LOCK/UNLOCK alternate per core: depth stays in {0, 1}.
+        p = make_params(sync_kind=1, sync_period=16, crit_len=3)
+        (t,) = make_workload_fn(4, 512)(p)
+        t = np.asarray(t).reshape(4, 512, 3)
+        for c in range(4):
+            depth = 0
+            for op in t[c, :, 0]:
+                if op == spec.OP_LOCK:
+                    depth += 1
+                elif op == spec.OP_UNLOCK:
+                    depth -= 1
+                assert 0 <= depth <= 1

@@ -1,0 +1,59 @@
+//! Ablation bench: the paper's §IV optimizations and extensions, one
+//! at a time, on a renewal-heavy workload — speculation (§IV-A),
+//! private-write optimization (§IV-C), E state (§IV-D), and dynamic
+//! leases (§VI-C5 future work).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::config::{ProtocolKind, SystemConfig};
+use tardis_dsm::coordinator::experiments::base_cfg;
+use tardis_dsm::coordinator::report::Table;
+use tardis_dsm::sim::run_workload;
+use tardis_dsm::trace::synth_workload;
+use tardis_dsm::workloads;
+
+fn main() {
+    let spec = workloads::by_name("volrend").unwrap();
+    let w = synth_workload(&spec.params, 16, 2048);
+    let base = base_cfg(16, ProtocolKind::Msi);
+    let msi = run_workload(base, &w).unwrap().stats;
+
+    let mut table = Table::new(
+        "Ablations — VOLREND, 16 cores (normalized to MSI)",
+        &["variant", "thr", "traffic", "renew%", "renew ok%"],
+    );
+    let variants: Vec<(&str, Box<dyn Fn(&mut SystemConfig)>)> = vec![
+        ("tardis (default)", Box::new(|_| {})),
+        ("no speculation", Box::new(|c| c.tardis.speculation = false)),
+        ("no private-write opt", Box::new(|c| c.tardis.private_write_opt = false)),
+        ("+ E state", Box::new(|c| c.tardis.exclusive_state = true)),
+        ("+ dynamic lease", Box::new(|c| c.tardis.dynamic_lease = true)),
+        ("+ both extensions", Box::new(|c| {
+            c.tardis.exclusive_state = true;
+            c.tardis.dynamic_lease = true;
+        })),
+    ];
+    for (name, tweak) in variants {
+        let s = bench(&format!("ablation/{name}"), 2, || {
+            let mut cfg = base_cfg(16, ProtocolKind::Tardis);
+            tweak(&mut cfg);
+            run_workload(cfg, &w).unwrap().stats
+        });
+        let _ = s;
+        let mut cfg = base_cfg(16, ProtocolKind::Tardis);
+        tweak(&mut cfg);
+        let st = run_workload(cfg, &w).unwrap().stats;
+        let ok = if st.renew_requests == 0 {
+            100.0
+        } else {
+            100.0 * st.renew_success as f64 / st.renew_requests as f64
+        };
+        table.row(vec![
+            name.to_string(),
+            format!("{:.3}", msi.cycles as f64 / st.cycles as f64),
+            format!("{:.3}", st.traffic.total() as f64 / msi.traffic.total().max(1) as f64),
+            format!("{:.1}%", st.renew_rate() * 100.0),
+            format!("{ok:.1}%"),
+        ]);
+    }
+    println!("\n{}", table.to_markdown());
+    let _ = table.write("results", "ablations");
+}

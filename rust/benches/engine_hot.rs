@@ -1,0 +1,58 @@
+//! Engine micro-benchmarks: the §Perf hot paths — raw simulation
+//! throughput (memops/s) per protocol, trace generation, and the
+//! event-queue core.
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::coordinator::experiments::base_cfg;
+use tardis_dsm::sim::run_workload;
+use tardis_dsm::trace::{synth_raw, synth_workload};
+use tardis_dsm::workloads;
+
+fn main() {
+    let spec = workloads::by_name("barnes").unwrap();
+    let w64 = synth_workload(&spec.params, 64, 2048);
+    let ops = w64.total_ops();
+
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        let r = bench(&format!("engine/64c barnes {}", protocol.name()), 3, || {
+            let mut cfg = base_cfg(64, protocol);
+            cfg.record_accesses = false;
+            run_workload(cfg, &w64).unwrap().stats.cycles
+        });
+        let mops = ops as f64 / r.mean.as_secs_f64() / 1e6;
+        println!("  -> {:.2} M trace-ops/s ({} ops)", mops, ops);
+    }
+
+    let r = bench("engine/64c barnes tardis OoO", 2, || {
+        let mut cfg = base_cfg(64, ProtocolKind::Tardis);
+        cfg.record_accesses = false;
+        cfg.core_model = CoreModel::OutOfOrder;
+        run_workload(cfg, &w64).unwrap().stats.cycles
+    });
+    let mops = ops as f64 / r.mean.as_secs_f64() / 1e6;
+    println!("  -> {:.2} M trace-ops/s", mops);
+
+    bench("tracegen/rust-mirror 64x2048", 5, || synth_raw(&spec.params, 64, 2048));
+
+    // Event-queue microbench.
+    bench("event-queue/push-pop 100k", 10, || {
+        use tardis_dsm::sim::{Event, EventQueue};
+        let mut q = EventQueue::new();
+        for i in 0..100_000u64 {
+            q.push(i ^ 0x5555, Event::CoreWake((i % 64) as u32));
+        }
+        let mut n = 0;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        n
+    });
+
+    // SC-checking overhead (record + check).
+    let w8 = synth_workload(&spec.params, 8, 512);
+    bench("engine/8c with SC checking", 3, || {
+        let cfg = SystemConfig::small(8, ProtocolKind::Tardis);
+        let res = run_workload(cfg, &w8).unwrap();
+        tardis_dsm::prog::checker::check(&res.log).unwrap().loads_checked
+    });
+}

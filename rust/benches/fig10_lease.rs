@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 10 (lease sweep).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::{fig10, EvalCtx};
+
+fn main() {
+    bench("fig10/lease sweep (scaled 1/8)", 3, || {
+        let mut ctx = EvalCtx::new(None, 0);
+        ctx.scale_down = 8;
+        fig10(&mut ctx).unwrap()
+    });
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 8;
+    println!("\n{}", fig10(&mut ctx).unwrap().to_markdown());
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate Fig. 4 (64-core throughput + traffic, four
+//! protocol variants over all 12 workloads) on scaled-down traces and
+//! time the end-to-end sweep.
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::{fig4, EvalCtx};
+
+fn main() {
+    bench("fig4/64-core sweep (scaled 1/8)", 3, || {
+        let mut ctx = EvalCtx::new(None, 0);
+        ctx.scale_down = 8;
+        let t = fig4(&mut ctx).unwrap();
+        assert_eq!(t.rows.len(), 13);
+        t
+    });
+    // Print the table once for inspection.
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 8;
+    println!("\n{}", fig4(&mut ctx).unwrap().to_markdown());
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 5 (renew + misspeculation rates).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::{fig5, EvalCtx};
+
+fn main() {
+    bench("fig5/renew-rate sweep (scaled 1/8)", 3, || {
+        let mut ctx = EvalCtx::new(None, 0);
+        ctx.scale_down = 8;
+        fig5(&mut ctx).unwrap()
+    });
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 8;
+    println!("\n{}", fig5(&mut ctx).unwrap().to_markdown());
+}

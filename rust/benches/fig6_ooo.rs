@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 6 (out-of-order cores).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::{fig6, EvalCtx};
+
+fn main() {
+    bench("fig6/ooo sweep (scaled 1/8)", 2, || {
+        let mut ctx = EvalCtx::new(None, 0);
+        ctx.scale_down = 8;
+        fig6(&mut ctx).unwrap()
+    });
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 8;
+    println!("\n{}", fig6(&mut ctx).unwrap().to_markdown());
+}

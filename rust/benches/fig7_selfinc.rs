@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 7 (self-increment period sweep).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::{fig7, EvalCtx};
+
+fn main() {
+    bench("fig7/self-inc sweep (scaled 1/8)", 3, || {
+        let mut ctx = EvalCtx::new(None, 0);
+        ctx.scale_down = 8;
+        fig7(&mut ctx).unwrap()
+    });
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 8;
+    println!("\n{}", fig7(&mut ctx).unwrap().to_markdown());
+}

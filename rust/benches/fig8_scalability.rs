@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig. 8 (16- and 256-core scalability).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::{fig8, EvalCtx};
+
+fn main() {
+    bench("fig8/scalability sweep (scaled 1/8)", 2, || {
+        let mut ctx = EvalCtx::new(None, 0);
+        ctx.scale_down = 8;
+        fig8(&mut ctx).unwrap()
+    });
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 8;
+    let (a, b) = fig8(&mut ctx).unwrap();
+    println!("\n{}\n{}", a.to_markdown(), b.to_markdown());
+}

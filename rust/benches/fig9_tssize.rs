@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig. 9 (delta-timestamp size sweep).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::{fig9, EvalCtx};
+
+fn main() {
+    bench("fig9/ts-size sweep (scaled 1/8)", 3, || {
+        let mut ctx = EvalCtx::new(None, 0);
+        ctx.scale_down = 8;
+        fig9(&mut ctx).unwrap()
+    });
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 8;
+    println!("\n{}", fig9(&mut ctx).unwrap().to_markdown());
+}

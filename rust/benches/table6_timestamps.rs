@@ -1,0 +1,14 @@
+//! Bench: regenerate Table VI (timestamp statistics).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::{table6, EvalCtx};
+
+fn main() {
+    bench("table6/timestamp stats (scaled 1/8)", 3, || {
+        let mut ctx = EvalCtx::new(None, 0);
+        ctx.scale_down = 8;
+        table6(&mut ctx).unwrap()
+    });
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 8;
+    println!("\n{}", table6(&mut ctx).unwrap().to_markdown());
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Table VII (storage overhead — analytic).
+use tardis_dsm::benchutil::bench;
+use tardis_dsm::coordinator::experiments::table7;
+
+fn main() {
+    bench("table7/storage", 100, table7);
+    println!("\n{}", table7().to_markdown());
+}

@@ -1,0 +1,80 @@
+//! Bench harness for the `harness = false` bench targets (criterion is
+//! not in this image's crate registry).  Measures wall-clock per
+//! iteration with warmup, prints criterion-style lines, and appends
+//! machine-readable rows to target/bench_results.csv.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<42} {:>12.3?}/iter  (min {:.3?}, max {:.3?}, n={})",
+            self.name, self.mean, self.min, self.max, self.iters
+        );
+    }
+}
+
+/// Time `f` for `iters` iterations after one warmup run.
+pub fn bench<T>(name: &str, iters: u32, mut f: impl FnMut() -> T) -> BenchResult {
+    let _warm = f();
+    let mut times = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let out = f();
+        times.push(t0.elapsed());
+        std::hint::black_box(out);
+    }
+    let total: Duration = times.iter().sum();
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: total / iters,
+        min: times.iter().min().copied().unwrap_or_default(),
+        max: times.iter().max().copied().unwrap_or_default(),
+    };
+    res.report();
+    append_csv(&res);
+    res
+}
+
+fn append_csv(r: &BenchResult) {
+    use std::io::Write;
+    let path = std::path::Path::new("target").join("bench_results.csv");
+    let new = !path.exists();
+    if let Ok(mut f) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+        if new {
+            let _ = writeln!(f, "name,iters,mean_ns,min_ns,max_ns");
+        }
+        let _ = writeln!(
+            f,
+            "{},{},{},{},{}",
+            r.name,
+            r.iters,
+            r.mean.as_nanos(),
+            r.min.as_nanos(),
+            r.max.as_nanos()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-sum", 3, || (0..1000u64).sum::<u64>());
+        assert_eq!(r.iters, 3);
+        assert!(r.min <= r.mean && r.mean <= r.max + Duration::from_nanos(1));
+    }
+}

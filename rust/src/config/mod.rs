@@ -1,0 +1,238 @@
+//! System, protocol, and core-model configuration (paper Table V defaults).
+
+use crate::types::Cycle;
+
+/// Which coherence protocol backs the shared-memory system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProtocolKind {
+    /// Tardis timestamp coherence (the paper's contribution).
+    Tardis,
+    /// Full-map MSI directory (baseline).
+    Msi,
+    /// Ackwise-k limited-pointer directory with broadcast overflow.
+    Ackwise,
+}
+
+impl ProtocolKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "tardis" => Some(Self::Tardis),
+            "msi" => Some(Self::Msi),
+            "ackwise" => Some(Self::Ackwise),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Tardis => "tardis",
+            Self::Msi => "msi",
+            Self::Ackwise => "ackwise",
+        }
+    }
+}
+
+/// Core microarchitecture model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CoreModel {
+    /// In-order, single-issue (paper Table V default).
+    InOrder,
+    /// Out-of-order: issue window + in-order commit with timestamp
+    /// checking at commit (paper §III-D, §VI-C1).
+    OutOfOrder,
+}
+
+/// Tardis-specific knobs (paper Table V, §IV).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TardisConfig {
+    /// Static lease added to `rts` on shared requests.
+    pub lease: u64,
+    /// `pts += 1` every this many L1 data accesses (§III-E). 0 disables.
+    pub self_inc_period: u64,
+    /// Speculate through expired-line loads instead of stalling (§IV-A).
+    pub speculation: bool,
+    /// Base-delta delta timestamp width in bits (§IV-B). 64 = uncompressed.
+    pub delta_ts_bits: u32,
+    /// Cycles an L1 is busy during a rebase (128 ns @ 1 GHz).
+    pub l1_rebase_cycles: Cycle,
+    /// Cycles an LLC slice is busy during a rebase (1024 ns @ 1 GHz).
+    pub l2_rebase_cycles: Cycle,
+    /// Private-write optimization: repeated stores to a modified line do
+    /// not advance `pts` (§IV-C).
+    pub private_write_opt: bool,
+    /// E-state extension: grant exclusive on SH_REQ to untouched lines
+    /// (§IV-D).  Off by default (paper evaluates MSI-equivalent Tardis).
+    pub exclusive_state: bool,
+    /// Dynamic leases (paper §VI-C5 future work): per-line leases
+    /// double on successful renewals (read-mostly data earns long
+    /// leases) and reset on writes.  Off by default.
+    pub dynamic_lease: bool,
+    /// Cap for dynamic leases.  Kept moderate: spinners wait
+    /// ~lease x self-inc-period cycles per recheck, so long leases on
+    /// synchronization lines collapse spin-heavy workloads (the
+    /// paper's Fig. 10 tension — "intelligent leasing" must avoid
+    /// sync data).
+    pub max_lease: u64,
+}
+
+impl Default for TardisConfig {
+    fn default() -> Self {
+        Self {
+            lease: 10,
+            self_inc_period: 100,
+            speculation: true,
+            delta_ts_bits: 20,
+            l1_rebase_cycles: 128,
+            l2_rebase_cycles: 1024,
+            private_write_opt: true,
+            exclusive_state: false,
+            dynamic_lease: false,
+            max_lease: 80,
+        }
+    }
+}
+
+/// Ackwise-specific knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AckwiseConfig {
+    /// Number of precise sharer pointers before falling back to
+    /// broadcast (paper Table VII: 4 at 16/64 cores, 8 at 256).
+    pub num_pointers: u32,
+}
+
+impl Default for AckwiseConfig {
+    fn default() -> Self {
+        Self { num_pointers: 4 }
+    }
+}
+
+/// Full system configuration (paper Table V).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub n_cores: u32,
+    pub core_model: CoreModel,
+    /// Out-of-order issue-window depth (outstanding memory ops).
+    pub ooo_window: u32,
+    pub protocol: ProtocolKind,
+    pub tardis: TardisConfig,
+    pub ackwise: AckwiseConfig,
+
+    /// L1 data cache geometry.
+    pub l1_sets: u32,
+    pub l1_ways: u32,
+    /// Per-core shared-LLC slice geometry.
+    pub l2_sets: u32,
+    pub l2_ways: u32,
+    /// LLC slice access latency (tag + data array), cycles.
+    pub l2_latency: Cycle,
+
+    /// DRAM access latency in cycles (100 ns @ 1 GHz).
+    pub dram_latency: Cycle,
+    /// Number of memory controllers.
+    pub n_mcs: u32,
+    /// Cycles one 64-B line occupies a controller (10 GB/s → 6.4 ns).
+    pub dram_service_cycles: Cycle,
+
+    /// Per-hop network latency (1 router + 1 link).
+    pub hop_cycles: Cycle,
+    /// Flit width in bits.
+    pub flit_bits: u32,
+
+    /// Misspeculation rollback cost added on a failed renewal (pipeline
+    /// flush, like a branch mispredict).
+    pub rollback_penalty: Cycle,
+    /// Cycles between consecutive polls when a core spins on a cached,
+    /// still-valid line (test-and-test-and-set backoff).
+    pub spin_poll_cycles: Cycle,
+
+    /// Record a full access log for the sequential-consistency checker
+    /// (memory-heavy; enabled by tests/litmus, off for big sweeps).
+    pub record_accesses: bool,
+    /// Hard cap on simulated cycles (deadlock guard).
+    pub max_cycles: Cycle,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            n_cores: 64,
+            core_model: CoreModel::InOrder,
+            ooo_window: 16,
+            protocol: ProtocolKind::Tardis,
+            tardis: TardisConfig::default(),
+            ackwise: AckwiseConfig::default(),
+            // 32 KB, 4-way, 64-B lines -> 128 sets.
+            l1_sets: 128,
+            l1_ways: 4,
+            // 256 KB slice, 8-way -> 512 sets.
+            l2_sets: 512,
+            l2_ways: 8,
+            l2_latency: 8,
+            dram_latency: 100,
+            n_mcs: 8,
+            dram_service_cycles: 7,
+            hop_cycles: 2,
+            flit_bits: 128,
+            rollback_penalty: 8,
+            spin_poll_cycles: 1,
+            record_accesses: false,
+            max_cycles: 2_000_000_000,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Convenience: small test system.
+    pub fn small(n_cores: u32, protocol: ProtocolKind) -> Self {
+        Self {
+            n_cores,
+            protocol,
+            l1_sets: 16,
+            l1_ways: 4,
+            l2_sets: 64,
+            l2_ways: 8,
+            record_accesses: true,
+            max_cycles: 200_000_000,
+            ..Self::default()
+        }
+    }
+
+    /// Total L1 lines per core.
+    pub fn l1_lines(&self) -> u32 {
+        self.l1_sets * self.l1_ways
+    }
+
+    /// Total LLC lines per slice.
+    pub fn l2_lines(&self) -> u32 {
+        self.l2_sets * self.l2_ways
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_v_defaults() {
+        let c = SystemConfig::default();
+        assert_eq!(c.n_cores, 64);
+        // 32 KB / 64 B / 4 ways = 128 sets
+        assert_eq!(c.l1_sets * c.l1_ways * 64, 32 * 1024);
+        // 256 KB / 64 B / 8 ways = 512 sets
+        assert_eq!(c.l2_sets * c.l2_ways * 64, 256 * 1024);
+        assert_eq!(c.tardis.lease, 10);
+        assert_eq!(c.tardis.self_inc_period, 100);
+        assert_eq!(c.tardis.delta_ts_bits, 20);
+        assert_eq!(c.dram_latency, 100);
+        assert_eq!(c.hop_cycles, 2);
+        assert_eq!(c.flit_bits, 128);
+    }
+
+    #[test]
+    fn protocol_parse_roundtrip() {
+        for p in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+            assert_eq!(ProtocolKind::parse(p.name()), Some(p));
+        }
+        assert_eq!(ProtocolKind::parse("mesi"), None);
+    }
+}

@@ -1,0 +1,135 @@
+//! Experiment coordinator: the leader/worker layer that fans a set of
+//! simulation points out over a thread pool, gathers their statistics,
+//! and renders the paper's tables and figures.
+//!
+//! One simulation is single-threaded and deterministic; sweeps (12
+//! workloads x protocols x configs) parallelize across points.  The
+//! leader generates all traces up front through the PJRT runtime
+//! (executables are not Sync), then workers pull points off a shared
+//! queue.
+
+pub mod experiments;
+pub mod report;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::prog::Workload;
+use crate::sim::run_workload;
+use crate::stats::SimStats;
+
+/// One simulation to run.
+pub struct SimPoint {
+    /// Label, e.g. "fig4/volrend/tardis".
+    pub label: String,
+    pub cfg: SystemConfig,
+    pub workload: Arc<Workload>,
+}
+
+/// A completed point.
+pub struct SimPointResult {
+    pub label: String,
+    pub stats: SimStats,
+}
+
+/// Run all points on `threads` worker threads (0 = available
+/// parallelism), preserving input order in the result.
+pub fn run_points(points: Vec<SimPoint>, threads: usize) -> Result<Vec<SimPointResult>> {
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    } else {
+        threads
+    };
+    let n = points.len();
+    let points = Arc::new(points);
+    let next = Arc::new(AtomicUsize::new(0));
+    let results: Arc<Mutex<Vec<Option<SimPointResult>>>> =
+        Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+    let errors: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n.max(1)) {
+            let points = Arc::clone(&points);
+            let next = Arc::clone(&next);
+            let results = Arc::clone(&results);
+            let errors = Arc::clone(&errors);
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= points.len() {
+                    break;
+                }
+                let p = &points[i];
+                match run_workload(p.cfg.clone(), &p.workload) {
+                    Ok(res) => {
+                        results.lock().unwrap()[i] =
+                            Some(SimPointResult { label: p.label.clone(), stats: res.stats });
+                    }
+                    Err(e) => {
+                        errors.lock().unwrap().push(format!("{}: {e}", p.label));
+                    }
+                }
+            });
+        }
+    });
+
+    let errors = match Arc::try_unwrap(errors) {
+        Ok(m) => m.into_inner().unwrap(),
+        Err(_) => unreachable!("workers joined"),
+    };
+    if !errors.is_empty() {
+        anyhow::bail!("{} simulation(s) failed:\n{}", errors.len(), errors.join("\n"));
+    }
+    let results = match Arc::try_unwrap(results) {
+        Ok(m) => m.into_inner().unwrap(),
+        Err(_) => unreachable!("workers joined"),
+    };
+    Ok(results.into_iter().map(|r| r.unwrap()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ProtocolKind;
+    use crate::prog::{load, store, Program};
+
+    fn tiny_workload() -> Arc<Workload> {
+        Arc::new(Workload::new(vec![
+            Program::new(vec![store(crate::types::SHARED_BASE, 1), load(crate::types::SHARED_BASE)]),
+            Program::new(vec![load(crate::types::SHARED_BASE)]),
+        ]))
+    }
+
+    #[test]
+    fn parallel_sweep_preserves_order() {
+        let w = tiny_workload();
+        let points: Vec<SimPoint> = (0..8)
+            .map(|i| SimPoint {
+                label: format!("p{i}"),
+                cfg: SystemConfig::small(2, ProtocolKind::Tardis),
+                workload: Arc::clone(&w),
+            })
+            .collect();
+        let results = run_points(points, 4).unwrap();
+        assert_eq!(results.len(), 8);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.label, format!("p{i}"));
+            assert!(r.stats.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn identical_points_are_deterministic() {
+        let w = tiny_workload();
+        let mk = || SimPoint {
+            label: "x".into(),
+            cfg: SystemConfig::small(2, ProtocolKind::Msi),
+            workload: Arc::clone(&w),
+        };
+        let r = run_points(vec![mk(), mk()], 2).unwrap();
+        assert_eq!(r[0].stats.cycles, r[1].stats.cycles);
+        assert_eq!(r[0].stats.traffic.total(), r[1].stats.traffic.total());
+    }
+}

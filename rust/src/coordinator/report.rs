@@ -1,0 +1,124 @@
+//! Table rendering: markdown + CSV emitters for the experiment
+//! harness (results land in results/).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A generic results table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as github-flavored markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!("### {}\n\n", self.title);
+        s += &format!("| {} |\n", self.columns.join(" | "));
+        s += &format!("|{}|\n", self.columns.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            s += &format!("| {} |\n", row.join(" | "));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = self.columns.join(",") + "\n";
+        for row in &self.rows {
+            s += &(row.join(",") + "\n");
+        }
+        s
+    }
+
+    /// Write markdown + CSV under `dir` using `stem`.
+    pub fn write(&self, dir: impl AsRef<Path>, stem: &str) -> Result<()> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let mut md = std::fs::File::create(dir.join(format!("{stem}.md")))?;
+        md.write_all(self.to_markdown().as_bytes())?;
+        let mut csv = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+        csv.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+}
+
+/// Format a ratio to 3 decimals.
+pub fn r3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Format a percentage to 2 decimals.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+/// Geometric mean of positive ratios.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    fn csv_shape() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn geomean_of_ones_is_one() {
+        assert!((geomean(&[1.0, 1.0, 1.0]) - 1.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 0.5]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("tardis_report_test");
+        let mut t = Table::new("Demo", &["a"]);
+        t.row(vec!["1".into()]);
+        t.write(&dir, "demo").unwrap();
+        assert!(dir.join("demo.md").exists());
+        assert!(dir.join("demo.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

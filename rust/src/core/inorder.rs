@@ -1,0 +1,565 @@
+//! In-order, single-issue core (paper Table V): one memory operation
+//! per cycle, blocking on demand misses, with Tardis speculation
+//! continuing through expired-load renewals (§IV-A).
+
+use std::collections::HashMap;
+
+use super::{barrier, CoreAction, CoreEnv};
+use crate::prog::{Op, Program, Workload};
+use crate::proto::{AccessDone, AccessOutcome, Completion, CompletionKind, MemOp};
+use crate::types::{
+    CoreId, Cycle, LineAddr, BARRIER_COUNTER_LINE, BARRIER_SENSE_LINE,
+};
+
+/// What the core resumes once a blocked access completes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cont {
+    /// Plain trace load/store: advance pc.
+    Plain,
+    /// Lock test-and-set: acquired if old == 0, else spin.
+    LockTas { lock: LineAddr },
+    /// Spin-loop poll load; exit when `pred` is satisfied.
+    SpinLoad,
+    /// Barrier fetch-and-increment of the counter line.
+    BarrierArrive,
+    /// Last arrival resets the counter, then flips the sense.
+    BarrierResetCounter,
+    BarrierSetSense,
+}
+
+/// Why the core is spinning and what to do on exit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SpinGoal {
+    /// Waiting for the lock word to read 0, then retry the Tas.
+    LockFree { lock: LineAddr },
+    /// Waiting for the barrier sense line to reach `target`.
+    Sense { target: u64 },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    /// Issue the op at `pc` when next woken.
+    Ready,
+    /// Serving the pre-access compute gap.
+    Gap,
+    /// Demand access outstanding at the protocol.
+    WaitDemand(Cont),
+    /// Spinning: next wake re-polls `addr`.
+    SpinPoll { addr: LineAddr, goal: SpinGoal },
+    /// Spinning but parked (protocol will push SpinWake).
+    SpinPark { addr: LineAddr, goal: SpinGoal },
+    /// Waiting for outstanding speculative renewals to resolve before
+    /// issuing a non-re-executable op (store/atomic/sync/miss).
+    WaitDrain,
+    Done,
+}
+
+pub struct InOrderCore {
+    pub id: CoreId,
+    program: Program,
+    pc: usize,
+    state: State,
+    /// Completed barrier episodes (drives the local sense).
+    barrier_count: u64,
+    /// Accumulated rollback penalty to charge before the next issue.
+    penalty: Cycle,
+    /// Unresolved speculative renewals per address (window gate).
+    spec_unresolved: HashMap<LineAddr, u32>,
+    /// Speculation window: (pc, log idx) of every op executed since the
+    /// first unresolved speculative load — all re-executable (hit or
+    /// spec loads only).  Squashed + re-executed on misspeculation.
+    window: Vec<(usize, usize)>,
+    window_start: Option<usize>,
+    /// Cycle the current spin started (for spin_cycles accounting).
+    spin_since: Option<Cycle>,
+    /// Spin context preserved across a Pending spin load.
+    pending_spin: Option<(LineAddr, SpinGoal)>,
+    /// Dedup token for CoreWake events.
+    pub next_wake: Option<Cycle>,
+    pub finished_at: Option<Cycle>,
+    pub committed_ops: u64,
+}
+
+impl InOrderCore {
+    pub fn new(id: CoreId, workload: &Workload) -> Self {
+        Self {
+            id,
+            program: workload.programs[id as usize].clone(),
+            pc: 0,
+            state: State::Ready,
+            barrier_count: 0,
+            penalty: 0,
+            spec_unresolved: HashMap::new(),
+            window: Vec::new(),
+            window_start: None,
+            spin_since: None,
+            pending_spin: None,
+            next_wake: None,
+            finished_at: None,
+            committed_ops: 0,
+        }
+    }
+
+    /// Engine entry: the core was woken at `now`.
+    pub fn step(&mut self, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        self.next_wake = None;
+        match self.state {
+            State::Done => CoreAction::Park,
+            State::WaitDemand(_) | State::SpinPark { .. } => CoreAction::Park, // spurious
+            State::WaitDrain => {
+                if self.spec_unresolved.is_empty() {
+                    self.state = State::Ready;
+                    self.issue_current(now, env)
+                } else {
+                    CoreAction::Park
+                }
+            }
+            State::Ready | State::Gap => self.issue_current(now, env),
+            State::SpinPoll { addr, goal } => self.spin_poll(now, addr, goal, env),
+        }
+    }
+
+    /// Issue (or finish gapping for) the op at pc.
+    fn issue_current(&mut self, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        if self.penalty > 0 {
+            let p = self.penalty;
+            self.penalty = 0;
+            env.pctx.stats.rollback_cycles += p;
+            return self.wake_at(now + p);
+        }
+        let Some(&op) = self.program.ops.get(self.pc) else {
+            // The final instruction cannot retire under an open
+            // speculation window: drain outstanding renewals first (a
+            // failure rolls the window back and re-executes).
+            if !self.spec_unresolved.is_empty() {
+                self.state = State::WaitDrain;
+                return CoreAction::Park;
+            }
+            self.state = State::Done;
+            self.finished_at = Some(now);
+            return CoreAction::Finished;
+        };
+        // Serve the compute gap once per op.
+        if self.state == State::Ready {
+            let gap = match op {
+                Op::Load { gap, .. } | Op::Store { gap, .. } => gap as Cycle,
+                _ => 0,
+            };
+            if gap > 0 {
+                self.state = State::Gap;
+                return self.wake_at(now + gap);
+            }
+        }
+        // While speculative renewals are unresolved, only re-executable
+        // ops may issue (hit / speculative loads); everything else
+        // drains the window first — stores and atomics must not commit
+        // under an open speculation (like buffered stores behind a
+        // branch).
+        if !self.spec_unresolved.is_empty() {
+            use crate::proto::Probe;
+            // Bound the window like a ROB: past the cap, stall until
+            // outstanding renewals resolve (keeps rollback re-execution
+            // cost bounded, like a branch-mispredict flush).
+            const WINDOW_CAP: usize = 16;
+            let drain = self.window.len() >= WINDOW_CAP
+                || match op {
+                    Op::Load { addr, .. } => env.proto.probe(self.id, addr) == Probe::Miss,
+                    _ => true,
+                };
+            if drain {
+                self.state = State::WaitDrain;
+                return CoreAction::Park;
+            }
+        }
+        self.state = State::Ready;
+        match op {
+            Op::Load { addr, .. } => {
+                let outcome = env.proto.core_access(self.id, addr, MemOp::Load, true, env.pctx);
+                self.resolve_access(now, addr, MemOp::Load, Cont::Plain, outcome, env)
+            }
+            Op::Store { addr, value, .. } => {
+                let v = value.unwrap_or_else(|| unique_store_value(self.id, self.pc));
+                let mem = MemOp::Store { value: v };
+                let outcome = env.proto.core_access(self.id, addr, mem, true, env.pctx);
+                self.resolve_access(now, addr, mem, Cont::Plain, outcome, env)
+            }
+            Op::Lock { addr } => {
+                let outcome = env.proto.core_access(self.id, addr, MemOp::Tas, false, env.pctx);
+                self.resolve_access(now, addr, MemOp::Tas, Cont::LockTas { lock: addr }, outcome, env)
+            }
+            Op::Unlock { addr } => {
+                let mem = MemOp::Store { value: 0 };
+                let outcome = env.proto.core_access(self.id, addr, mem, false, env.pctx);
+                self.resolve_access(now, addr, mem, Cont::Plain, outcome, env)
+            }
+            Op::Barrier => {
+                let mem = MemOp::FetchAdd { delta: 1 };
+                let outcome =
+                    env.proto.core_access(self.id, BARRIER_COUNTER_LINE, mem, false, env.pctx);
+                self.resolve_access(now, BARRIER_COUNTER_LINE, mem, Cont::BarrierArrive, outcome, env)
+            }
+        }
+    }
+
+    /// Handle the outcome of an access issued with continuation `cont`.
+    fn resolve_access(
+        &mut self,
+        now: Cycle,
+        addr: LineAddr,
+        mem: MemOp,
+        cont: Cont,
+        outcome: AccessOutcome,
+        env: &mut CoreEnv,
+    ) -> CoreAction {
+        match outcome {
+            AccessOutcome::Done(d) => self.finish_access(now, addr, mem, cont, d, env),
+            AccessOutcome::SpecDone(d) => {
+                // Speculated load: open (or extend) the window.
+                let idx = env.log_access(self.id, self.pc as u32, addr, Some(d.value), None, d.ts, now);
+                if self.window_start.is_none() {
+                    self.window_start = Some(self.pc);
+                }
+                self.window.push((self.pc, idx));
+                *self.spec_unresolved.entry(addr).or_insert(0) += 1;
+                self.committed_ops += 1;
+                env.pctx.stats.memops += 1;
+                env.pctx.stats.loads += 1;
+                self.pc += 1;
+                self.state = State::Ready;
+                self.wake_at(now + 1 + d.extra_cycles)
+            }
+            AccessOutcome::Pending => {
+                self.state = State::WaitDemand(cont);
+                CoreAction::Park
+            }
+        }
+    }
+
+    /// An access finished with value `d`: log it and run the
+    /// continuation.
+    fn finish_access(
+        &mut self,
+        now: Cycle,
+        addr: LineAddr,
+        mem: MemOp,
+        cont: Cont,
+        d: AccessDone,
+        env: &mut CoreEnv,
+    ) -> CoreAction {
+        let (read, written) = match mem {
+            MemOp::Load => (Some(d.value), None),
+            MemOp::Store { value } => (None, Some(value)),
+            MemOp::Tas => (Some(d.value), Some(1)),
+            MemOp::FetchAdd { delta } => (Some(d.value), Some(d.value.wrapping_add(delta))),
+        };
+        let idx = env.log_access(self.id, self.pc as u32, addr, read, written, d.ts, now);
+        if self.window_start.is_some() {
+            self.window.push((self.pc, idx));
+        }
+        env.pctx.stats.memops += 1;
+        match mem {
+            MemOp::Load => env.pctx.stats.loads += 1,
+            MemOp::Store { .. } => env.pctx.stats.stores += 1,
+            _ => env.pctx.stats.atomics += 1,
+        }
+        let next = now + 1 + d.extra_cycles;
+        match cont {
+            Cont::Plain => {
+                self.committed_ops += 1;
+                self.pc += 1;
+                self.state = State::Ready;
+                self.wake_at(next)
+            }
+            Cont::LockTas { lock } => {
+                if d.value == 0 {
+                    // Acquired.
+                    env.pctx.stats.locks_acquired += 1;
+                    self.committed_ops += 1;
+                    self.pc += 1;
+                    self.state = State::Ready;
+                    self.wake_at(next)
+                } else {
+                    self.enter_spin(now, lock, SpinGoal::LockFree { lock }, env)
+                }
+            }
+            Cont::SpinLoad => {
+                let (State::SpinPoll { addr: saddr, goal } | State::SpinPark { addr: saddr, goal }) =
+                    self.state
+                else {
+                    unreachable!("SpinLoad outside spin state");
+                };
+                debug_assert_eq!(saddr, addr);
+                if self.spin_satisfied(goal, d.value) {
+                    self.exit_spin(now, goal, env)
+                } else {
+                    self.continue_spin(now, addr, goal, env)
+                }
+            }
+            Cont::BarrierArrive => {
+                let old = d.value;
+                let target = barrier::target_sense(self.barrier_count);
+                if old == env.n_cores as u64 - 1 {
+                    // Last arrival: reset the counter, then flip sense.
+                    let mem = MemOp::Store { value: 0 };
+                    let outcome = env.proto.core_access(
+                        self.id,
+                        BARRIER_COUNTER_LINE,
+                        mem,
+                        false,
+                        env.pctx,
+                    );
+                    self.resolve_access(now, BARRIER_COUNTER_LINE, mem, Cont::BarrierResetCounter, outcome, env)
+                } else {
+                    self.enter_spin(now, BARRIER_SENSE_LINE, SpinGoal::Sense { target }, env)
+                }
+            }
+            Cont::BarrierResetCounter => {
+                let target = barrier::target_sense(self.barrier_count);
+                let mem = MemOp::Store { value: target };
+                let outcome =
+                    env.proto.core_access(self.id, BARRIER_SENSE_LINE, mem, false, env.pctx);
+                self.resolve_access(now, BARRIER_SENSE_LINE, mem, Cont::BarrierSetSense, outcome, env)
+            }
+            Cont::BarrierSetSense => {
+                self.barrier_count += 1;
+                env.pctx.stats.barriers_passed += 1;
+                self.committed_ops += 1;
+                self.pc += 1;
+                self.state = State::Ready;
+                self.wake_at(next)
+            }
+        }
+    }
+
+    fn spin_satisfied(&self, goal: SpinGoal, value: u64) -> bool {
+        match goal {
+            SpinGoal::LockFree { .. } => value == 0,
+            SpinGoal::Sense { target } => value == target,
+        }
+    }
+
+    /// Begin (or continue) spinning after an unsatisfying poll.
+    fn enter_spin(&mut self, now: Cycle, addr: LineAddr, goal: SpinGoal, env: &mut CoreEnv) -> CoreAction {
+        if self.spin_since.is_none() {
+            self.spin_since = Some(now);
+        }
+        self.continue_spin(now, addr, goal, env)
+    }
+
+    fn continue_spin(&mut self, now: Cycle, addr: LineAddr, goal: SpinGoal, env: &mut CoreEnv) -> CoreAction {
+        use crate::proto::SpinHint;
+        match env.proto.spin_hint(self.id, addr, env.pctx) {
+            SpinHint::Retry => {
+                self.state = State::SpinPoll { addr, goal };
+                self.wake_at(now + env.spin_poll)
+            }
+            SpinHint::WaitInvalidate => {
+                self.state = State::SpinPark { addr, goal };
+                CoreAction::Park
+            }
+            SpinHint::ExpiresAfterSelfInc { spins_needed } => {
+                self.state = State::SpinPoll { addr, goal };
+                self.wake_at(now + spins_needed.max(1) * env.spin_poll)
+            }
+        }
+    }
+
+    /// A poll is due: issue the spin load.
+    fn spin_poll(&mut self, now: Cycle, addr: LineAddr, goal: SpinGoal, env: &mut CoreEnv) -> CoreAction {
+        let outcome = env.proto.core_access(self.id, addr, MemOp::Load, false, env.pctx);
+        match outcome {
+            AccessOutcome::Done(d) => self.finish_spin_value(now, addr, goal, d, env),
+            AccessOutcome::Pending => {
+                // Preserve the spin context for the completion path.
+                self.state = State::WaitDemand(Cont::SpinLoad);
+                self.pending_spin = Some((addr, goal));
+                CoreAction::Park
+            }
+            AccessOutcome::SpecDone(_) => unreachable!("spin loads never speculate"),
+        }
+    }
+
+    fn finish_spin_value(
+        &mut self,
+        now: Cycle,
+        addr: LineAddr,
+        goal: SpinGoal,
+        d: AccessDone,
+        env: &mut CoreEnv,
+    ) -> CoreAction {
+        env.log_access(self.id, self.pc as u32, addr, Some(d.value), None, d.ts, now);
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.loads += 1;
+        if self.spin_satisfied(goal, d.value) {
+            self.exit_spin(now, goal, env)
+        } else {
+            self.state = State::SpinPoll { addr, goal };
+            self.continue_spin(now, addr, goal, env)
+        }
+    }
+
+    /// The spin predicate finally holds.
+    fn exit_spin(&mut self, now: Cycle, goal: SpinGoal, env: &mut CoreEnv) -> CoreAction {
+        if let Some(start) = self.spin_since.take() {
+            env.pctx.stats.spin_cycles += now - start;
+        }
+        match goal {
+            SpinGoal::LockFree { lock } => {
+                // Retry the Tas next cycle.
+                let outcome = env.proto.core_access(self.id, lock, MemOp::Tas, false, env.pctx);
+                self.resolve_access(now, lock, MemOp::Tas, Cont::LockTas { lock }, outcome, env)
+            }
+            SpinGoal::Sense { .. } => {
+                self.barrier_count += 1;
+                env.pctx.stats.barriers_passed += 1;
+                self.committed_ops += 1;
+                self.pc += 1;
+                self.state = State::Ready;
+                self.wake_at(now + 1)
+            }
+        }
+    }
+
+    /// Protocol completion for this core.
+    pub fn on_completion(&mut self, c: &Completion, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        match c.kind {
+            CompletionKind::Misspec => {
+                // Failed renewal: roll the speculation window back —
+                // squash everything executed since the first unresolved
+                // speculative load and re-execute from there (branch-
+                // mispredict analogy, §IV-A).
+                self.spec_resolve(c.addr);
+                if let Some(start) = self.window_start.take() {
+                    self.penalty += env.rollback_penalty;
+                    for &(_, idx) in &self.window {
+                        if idx != usize::MAX {
+                            env.log.squash(idx);
+                        }
+                    }
+                    // Re-executed ops do not recount toward memops.
+                    let n = self.window.len() as u64;
+                    self.committed_ops = self.committed_ops.saturating_sub(n);
+                    env.pctx.stats.memops = env.pctx.stats.memops.saturating_sub(n);
+                    self.window.clear();
+                    self.pc = start;
+                    self.state = State::Ready;
+                    self.wake_at(now + 1)
+                } else {
+                    // Already rolled back by an earlier failure.
+                    self.maybe_resume_drain(now)
+                }
+            }
+            CompletionKind::SpecOk => {
+                self.spec_resolve(c.addr);
+                if self.spec_unresolved.is_empty() {
+                    // Window commits.
+                    self.window.clear();
+                    self.window_start = None;
+                }
+                self.maybe_resume_drain(now)
+            }
+            CompletionKind::SpinWake => match self.state {
+                State::SpinPark { addr, goal } if addr == c.addr => {
+                    self.state = State::SpinPoll { addr, goal };
+                    self.wake_at(now + 1)
+                }
+                _ => CoreAction::Park, // stale wake
+            },
+            CompletionKind::Demand => {
+                let State::WaitDemand(cont) = self.state else {
+                    return CoreAction::Park; // stale (e.g., already rolled back)
+                };
+                match cont {
+                    Cont::SpinLoad => {
+                        let (addr, goal) = self.pending_spin.take().expect("spin context");
+                        debug_assert_eq!(addr, c.addr);
+                        self.state = State::SpinPoll { addr, goal };
+                        self.finish_spin_value(
+                            now,
+                            addr,
+                            goal,
+                            AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 },
+                            env,
+                        )
+                    }
+                    cont => {
+                        let mem = self.current_memop(cont);
+                        self.state = State::Ready;
+                        self.finish_access(
+                            now,
+                            c.addr,
+                            mem,
+                            cont,
+                            AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 },
+                            env,
+                        )
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reconstruct the MemOp a continuation was issued with (for
+    /// logging at completion time).
+    fn current_memop(&self, cont: Cont) -> MemOp {
+        match cont {
+            Cont::Plain => match self.program.ops[self.pc] {
+                Op::Load { .. } => MemOp::Load,
+                Op::Store { addr: _, value, .. } => MemOp::Store {
+                    value: value.unwrap_or_else(|| unique_store_value(self.id, self.pc)),
+                },
+                Op::Unlock { .. } => MemOp::Store { value: 0 },
+                _ => unreachable!(),
+            },
+            Cont::LockTas { .. } => MemOp::Tas,
+            Cont::SpinLoad => MemOp::Load,
+            Cont::BarrierArrive => MemOp::FetchAdd { delta: 1 },
+            Cont::BarrierResetCounter => MemOp::Store { value: 0 },
+            Cont::BarrierSetSense => {
+                MemOp::Store { value: barrier::target_sense(self.barrier_count) }
+            }
+        }
+    }
+
+    fn wake_at(&mut self, t: Cycle) -> CoreAction {
+        self.next_wake = Some(t);
+        CoreAction::WakeAt(t)
+    }
+
+    /// Diagnostic snapshot for deadlock reports.
+    pub fn state_string(&self) -> String {
+        format!(
+            "core {} pc {}/{} state {:?} specs {:?} next_wake {:?}",
+            self.id,
+            self.pc,
+            self.program.len(),
+            self.state,
+            self.spec_unresolved,
+            self.next_wake
+        )
+    }
+
+    /// Mark one speculative renewal for `addr` resolved.
+    fn spec_resolve(&mut self, addr: LineAddr) {
+        if let Some(n) = self.spec_unresolved.get_mut(&addr) {
+            *n -= 1;
+            if *n == 0 {
+                self.spec_unresolved.remove(&addr);
+            }
+        }
+    }
+
+    /// Wake the core if it was draining and the window just emptied.
+    fn maybe_resume_drain(&mut self, now: Cycle) -> CoreAction {
+        if self.state == State::WaitDrain && self.spec_unresolved.is_empty() {
+            self.wake_at(now + 1)
+        } else {
+            CoreAction::Park
+        }
+    }
+}
+
+/// Unique per-(core, pc) store value (trace stores carry no payload).
+fn unique_store_value(core: CoreId, pc: usize) -> u64 {
+    crate::prog::Workload::store_value(core, pc)
+}

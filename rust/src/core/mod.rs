@@ -1,0 +1,148 @@
+//! Core models: in-order single-issue (paper Table V) and out-of-order
+//! with commit-time timestamp checking (§III-D).  Cores interpret the
+//! trace programs, expanding Lock/Unlock/Barrier into test-and-test-
+//! and-set and sense-reversing-barrier microcode over ordinary memory
+//! operations, so all synchronization traffic flows through the
+//! coherence protocol under test.
+
+pub mod inorder;
+pub mod ooo;
+
+use crate::proto::{Coherence, Completion, ProtoCtx};
+use crate::prog::checker::{AccessLog, LogRecord};
+use crate::types::{CoreId, Cycle, LineAddr, Ts};
+
+/// What the engine should do with a core after a step/completion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreAction {
+    /// Schedule a wake at this cycle.
+    WakeAt(Cycle),
+    /// The core is blocked; a completion will wake it.
+    Park,
+    /// The core finished its program.
+    Finished,
+}
+
+/// Everything a core needs while stepping: the protocol, the protocol
+/// side-effect context, and the access log.
+pub struct CoreEnv<'a, 'b> {
+    pub proto: &'a mut dyn Coherence,
+    pub pctx: &'a mut ProtoCtx<'b>,
+    pub log: &'a mut AccessLog,
+    /// Global commit sequence (state-mutation order).
+    pub seq: &'a mut u64,
+    /// Record accesses into the log (SC checking enabled)?
+    pub record: bool,
+    pub n_cores: u32,
+    pub spin_poll: Cycle,
+    pub rollback_penalty: Cycle,
+    pub ooo_window: u32,
+}
+
+impl<'a, 'b> CoreEnv<'a, 'b> {
+    /// Append a committed access to the log; returns its index (or
+    /// usize::MAX when recording is off).
+    #[allow(clippy::too_many_arguments)]
+    pub fn log_access(
+        &mut self,
+        core: CoreId,
+        pc: u32,
+        addr: LineAddr,
+        value_read: Option<u64>,
+        value_written: Option<u64>,
+        ts: Ts,
+        cycle: Cycle,
+    ) -> usize {
+        *self.seq += 1;
+        if !self.record {
+            return usize::MAX;
+        }
+        self.log.push(LogRecord {
+            core,
+            pc,
+            addr,
+            value_read,
+            value_written,
+            ts,
+            commit_cycle: cycle,
+            seq: *self.seq,
+            valid: true,
+        })
+    }
+}
+
+/// Either core model, enum-dispatched (no trait objects on the hot
+/// path).
+pub enum CoreUnit {
+    InOrder(inorder::InOrderCore),
+    Ooo(ooo::OooCore),
+}
+
+impl CoreUnit {
+    pub fn step(&mut self, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        match self {
+            CoreUnit::InOrder(c) => c.step(now, env),
+            CoreUnit::Ooo(c) => c.step(now, env),
+        }
+    }
+
+    pub fn on_completion(&mut self, c: &Completion, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        match self {
+            CoreUnit::InOrder(core) => core.on_completion(c, now, env),
+            CoreUnit::Ooo(core) => core.on_completion(c, now, env),
+        }
+    }
+
+    /// Prime the wake-dedup token (engine start-up).
+    pub fn set_next_wake(&mut self, t: Cycle) {
+        match self {
+            CoreUnit::InOrder(c) => c.next_wake = Some(t),
+            CoreUnit::Ooo(c) => c.next_wake = Some(t),
+        }
+    }
+
+    pub fn next_wake(&self) -> Option<Cycle> {
+        match self {
+            CoreUnit::InOrder(c) => c.next_wake,
+            CoreUnit::Ooo(c) => c.next_wake,
+        }
+    }
+
+    /// Diagnostic snapshot for deadlock reports.
+    pub fn state_string(&self) -> String {
+        match self {
+            CoreUnit::InOrder(c) => c.state_string(),
+            CoreUnit::Ooo(c) => c.state_string(),
+        }
+    }
+
+    pub fn finished_at(&self) -> Option<Cycle> {
+        match self {
+            CoreUnit::InOrder(c) => c.finished_at,
+            CoreUnit::Ooo(c) => c.finished_at,
+        }
+    }
+
+    pub fn committed_ops(&self) -> u64 {
+        match self {
+            CoreUnit::InOrder(c) => c.committed_ops,
+            CoreUnit::Ooo(c) => c.committed_ops,
+        }
+    }
+}
+
+/// Sense-reversing barrier helpers shared by both core models.
+pub(crate) mod barrier {
+    /// Target sense value for the k-th barrier episode (0-indexed);
+    /// the shared sense line starts at 0 and flips every episode.
+    pub fn target_sense(episode: u64) -> u64 {
+        1 - (episode % 2)
+    }
+
+    #[test]
+    fn sense_alternates_starting_at_one() {
+        assert_eq!(target_sense(0), 1);
+        assert_eq!(target_sense(1), 0);
+        assert_eq!(target_sense(2), 1);
+    }
+}

@@ -1,0 +1,637 @@
+//! Out-of-order core model (paper §III-D, §VI-C1).
+//!
+//! A window of up to `ooo_window` in-flight memory operations: loads
+//! issue eagerly (possibly many outstanding), stores/atomics execute
+//! only at the ROB head (sequential consistency — no store buffer),
+//! and everything commits in order.  At commit, loads re-validate
+//! against the protocol (`commit_check`): under Tardis this is the
+//! timestamp check — `pts <= rts` or exclusive — and a failure
+//! re-executes the load (the renewal path); under directory protocols
+//! it models invalidation-triggered replay.
+//!
+//! Synchronization ops (lock/unlock/barrier) serialize: the window
+//! drains, then the same TTAS / sense-reversing-barrier microcode as
+//! the in-order core runs, one access at a time.
+
+use std::collections::VecDeque;
+
+use super::{barrier, CoreAction, CoreEnv};
+use crate::prog::{Op, Program, Workload};
+use crate::proto::{AccessDone, AccessOutcome, Completion, CompletionKind, MemOp};
+use crate::types::{CoreId, Cycle, LineAddr, BARRIER_COUNTER_LINE, BARRIER_SENSE_LINE};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    /// Waiting to issue (stores below head; loads being retried).
+    NotIssued,
+    /// Access outstanding at the protocol.
+    Issued,
+    /// Value available, waiting for in-order commit.
+    Ready(AccessDone),
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RobEntry {
+    pc: usize,
+    addr: LineAddr,
+    mem: MemOp,
+    status: Status,
+    /// Completed speculatively via Tardis SpecDone (renewal pending).
+    speculative: bool,
+    /// Value bound before this entry reached the ROB head.
+    early: bool,
+}
+
+/// Sync microcode state (mirrors the in-order core's spin machinery).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SyncState {
+    Idle,
+    WaitTas { lock: LineAddr },
+    WaitBarrierAdd,
+    SpinPoll { addr: LineAddr, target_zero: bool, target: u64 },
+    SpinPark { addr: LineAddr, target_zero: bool, target: u64 },
+    WaitSpinLoad { addr: LineAddr, target_zero: bool, target: u64 },
+    WaitCounterReset,
+    WaitSenseStore,
+    WaitUnlock,
+}
+
+pub struct OooCore {
+    pub id: CoreId,
+    program: Program,
+    /// Next op index to enter the ROB.
+    fetch_pc: usize,
+    rob: VecDeque<RobEntry>,
+    sync: SyncState,
+    barrier_count: u64,
+    penalty: Cycle,
+    spin_since: Option<Cycle>,
+    /// Replay safeguard: after repeated commit-check failures at the
+    /// same head, stop issuing and fetching until the head commits
+    /// (freezes pts, guarantees forward progress under contention).
+    drain_mode: bool,
+    /// Consecutive commit-check failures at the current head.
+    head_retries: u32,
+    pub next_wake: Option<Cycle>,
+    pub finished_at: Option<Cycle>,
+    pub committed_ops: u64,
+}
+
+impl OooCore {
+    pub fn new(id: CoreId, workload: &Workload) -> Self {
+        Self {
+            id,
+            program: workload.programs[id as usize].clone(),
+            fetch_pc: 0,
+            rob: VecDeque::new(),
+            sync: SyncState::Idle,
+            barrier_count: 0,
+            penalty: 0,
+            spin_since: None,
+            drain_mode: false,
+            head_retries: 0,
+            next_wake: None,
+            finished_at: None,
+            committed_ops: 0,
+        }
+    }
+
+    pub fn step(&mut self, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        self.next_wake = None;
+        if self.finished_at.is_some() {
+            return CoreAction::Park;
+        }
+        if self.penalty > 0 {
+            let p = self.penalty;
+            self.penalty = 0;
+            env.pctx.stats.rollback_cycles += p;
+            return self.wake_at(now + p);
+        }
+        // Sync microcode in progress?
+        match self.sync {
+            SyncState::Idle => {}
+            SyncState::SpinPoll { addr, target_zero, target } => {
+                return self.spin_poll(now, addr, target_zero, target, env);
+            }
+            // Parked / waiting states progress via completions.
+            _ => return CoreAction::Park,
+        }
+        self.pipeline_step(now, env)
+    }
+
+    /// One cycle of the load/store pipeline: commit the head if ready,
+    /// issue what can issue, fetch into the window.
+    fn pipeline_step(&mut self, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        // 1. Commit the head if ready (one per cycle).  Speculative
+        // heads wait for their renewal to resolve (SpecOk / Misspec).
+        let mut progressed = false;
+        if let Some(head) = self.rob.front().copied() {
+            if let Status::Ready(mut d) = head.status {
+                if !head.speculative {
+                    let decision = match head.mem {
+                        MemOp::Load => {
+                            env.proto.commit_check(self.id, head.addr, head.early, d.value)
+                        }
+                        _ => Some(d.ts),
+                    };
+                    match decision {
+                        Some(ts) => {
+                            d.ts = ts;
+                            self.commit_head(now, d, env);
+                            self.drain_mode = false;
+                            self.head_retries = 0;
+                            progressed = true;
+                        }
+                        None => {
+                            // Commit check failed (§III-D): re-execute.
+                            // Drain (freeze the window so pts stops
+                            // moving) only after repeated failures —
+                            // the forward-progress safeguard, not the
+                            // common case.
+                            env.pctx.stats.rollback_cycles += env.rollback_penalty;
+                            let head = self.rob.front_mut().unwrap();
+                            head.status = Status::NotIssued;
+                            head.speculative = false;
+                            self.penalty += env.rollback_penalty;
+                            self.head_retries += 1;
+                            if self.head_retries >= 3 {
+                                self.drain_mode = true;
+                            }
+                            progressed = true;
+                        }
+                    }
+                }
+            }
+        }
+
+        // 2. Issue: loads anywhere in the window, writes only at head.
+        // In drain mode only the head may issue (replay safeguard).
+        let mut issued = false;
+        for i in 0..self.rob.len() {
+            let e = self.rob[i];
+            if e.status != Status::NotIssued {
+                continue;
+            }
+            let is_head = i == 0;
+            if self.drain_mode && !is_head {
+                break;
+            }
+            // One outstanding access per line across the whole window:
+            // protocol completions are matched by address, so a second
+            // in-flight access to the same line would steal the first
+            // one's completion (worst case: a store adopting a load's
+            // fill without exclusivity).
+            let line_busy = self
+                .rob
+                .iter()
+                .enumerate()
+                .any(|(j, p)| j != i && p.addr == e.addr && p.status == Status::Issued);
+            // A load must not bypass an older, not-yet-committed write
+            // to the same address (no store-to-load forwarding).
+            let older_write = self
+                .rob
+                .iter()
+                .take(i)
+                .any(|p| p.addr == e.addr && p.mem.is_write());
+            let can_issue = !line_busy
+                && match e.mem {
+                    MemOp::Load => !older_write,
+                    _ => is_head,
+                };
+            if !can_issue {
+                continue;
+            }
+            let outcome = env.proto.core_access(self.id, e.addr, e.mem, true, env.pctx);
+            let entry = &mut self.rob[i];
+            entry.early = !is_head;
+            match outcome {
+                AccessOutcome::Done(d) => entry.status = Status::Ready(d),
+                AccessOutcome::SpecDone(d) => {
+                    entry.status = Status::Ready(d);
+                    entry.speculative = true;
+                }
+                AccessOutcome::Pending => entry.status = Status::Issued,
+            }
+            issued = true;
+            break; // one issue per cycle
+        }
+
+        // 3. Fetch the next op into the window.
+        let mut fetched = false;
+        if !self.drain_mode && self.rob.len() < env.ooo_window as usize {
+            match self.program.ops.get(self.fetch_pc).copied() {
+                Some(Op::Load { addr, .. }) => {
+                    self.rob.push_back(RobEntry {
+                        pc: self.fetch_pc,
+                        addr,
+                        mem: MemOp::Load,
+                        status: Status::NotIssued,
+                        speculative: false,
+                        early: false,
+                    });
+                    self.fetch_pc += 1;
+                    fetched = true;
+                }
+                Some(Op::Store { addr, value, .. }) => {
+                    let v = value.unwrap_or_else(|| Workload::store_value(self.id, self.fetch_pc));
+                    self.rob.push_back(RobEntry {
+                        pc: self.fetch_pc,
+                        addr,
+                        mem: MemOp::Store { value: v },
+                        status: Status::NotIssued,
+                        speculative: false,
+                        early: false,
+                    });
+                    self.fetch_pc += 1;
+                    fetched = true;
+                }
+                Some(sync_op) if self.rob.is_empty() => {
+                    // Serialize: start the sync microcode.
+                    return self.start_sync(now, sync_op, env);
+                }
+                Some(_) => {} // sync op waits for the window to drain
+                None => {
+                    if self.rob.is_empty() {
+                        self.finished_at = Some(now);
+                        return CoreAction::Finished;
+                    }
+                }
+            }
+        }
+
+        if progressed || issued || fetched {
+            self.wake_at(now + 1)
+        } else {
+            CoreAction::Park // completions (or spec resolutions) wake us
+        }
+    }
+
+    fn commit_head(&mut self, now: Cycle, d: AccessDone, env: &mut CoreEnv) {
+        let head = self.rob.pop_front().unwrap();
+        let (read, written) = match head.mem {
+            MemOp::Load => (Some(d.value), None),
+            MemOp::Store { value } => (None, Some(value)),
+            MemOp::Tas => (Some(d.value), Some(1)),
+            MemOp::FetchAdd { delta } => (Some(d.value), Some(d.value.wrapping_add(delta))),
+        };
+        env.log_access(self.id, head.pc as u32, head.addr, read, written, d.ts, now);
+        env.pctx.stats.memops += 1;
+        match head.mem {
+            MemOp::Load => env.pctx.stats.loads += 1,
+            MemOp::Store { .. } => env.pctx.stats.stores += 1,
+            _ => env.pctx.stats.atomics += 1,
+        }
+        self.committed_ops += 1;
+    }
+
+    // ------------------------------------------------ sync microcode
+
+    fn start_sync(&mut self, now: Cycle, op: Op, env: &mut CoreEnv) -> CoreAction {
+        match op {
+            Op::Lock { addr } => {
+                self.sync = SyncState::WaitTas { lock: addr };
+                let outcome = env.proto.core_access(self.id, addr, MemOp::Tas, false, env.pctx);
+                match outcome {
+                    AccessOutcome::Done(d) => self.sync_tas_result(now, addr, d, env),
+                    AccessOutcome::Pending => CoreAction::Park,
+                    AccessOutcome::SpecDone(_) => unreachable!("atomics never speculate"),
+                }
+            }
+            Op::Unlock { addr } => {
+                self.sync = SyncState::WaitUnlock;
+                let mem = MemOp::Store { value: 0 };
+                let outcome = env.proto.core_access(self.id, addr, mem, false, env.pctx);
+                match outcome {
+                    AccessOutcome::Done(d) => self.sync_unlock_done(now, addr, d, env),
+                    AccessOutcome::Pending => CoreAction::Park,
+                    AccessOutcome::SpecDone(_) => unreachable!(),
+                }
+            }
+            Op::Barrier => {
+                self.sync = SyncState::WaitBarrierAdd;
+                let mem = MemOp::FetchAdd { delta: 1 };
+                let outcome =
+                    env.proto.core_access(self.id, BARRIER_COUNTER_LINE, mem, false, env.pctx);
+                match outcome {
+                    AccessOutcome::Done(d) => self.sync_barrier_arrived(now, d, env),
+                    AccessOutcome::Pending => CoreAction::Park,
+                    AccessOutcome::SpecDone(_) => unreachable!(),
+                }
+            }
+            _ => unreachable!("start_sync on non-sync op"),
+        }
+    }
+
+    fn sync_tas_result(&mut self, now: Cycle, lock: LineAddr, d: AccessDone, env: &mut CoreEnv) -> CoreAction {
+        env.log_access(self.id, self.fetch_pc as u32, lock, Some(d.value), Some(1), d.ts, now);
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.atomics += 1;
+        if d.value == 0 {
+            env.pctx.stats.locks_acquired += 1;
+            self.sync_done(now)
+        } else {
+            if self.spin_since.is_none() {
+                self.spin_since = Some(now);
+            }
+            self.spin_continue(now, lock, true, 0, env)
+        }
+    }
+
+    fn sync_unlock_done(&mut self, now: Cycle, addr: LineAddr, d: AccessDone, env: &mut CoreEnv) -> CoreAction {
+        env.log_access(self.id, self.fetch_pc as u32, addr, None, Some(0), d.ts, now);
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.stores += 1;
+        self.sync_done(now)
+    }
+
+    fn sync_barrier_arrived(&mut self, now: Cycle, d: AccessDone, env: &mut CoreEnv) -> CoreAction {
+        env.log_access(
+            self.id,
+            self.fetch_pc as u32,
+            BARRIER_COUNTER_LINE,
+            Some(d.value),
+            Some(d.value + 1),
+            d.ts,
+            now,
+        );
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.atomics += 1;
+        let target = barrier::target_sense(self.barrier_count);
+        if d.value == env.n_cores as u64 - 1 {
+            self.sync = SyncState::WaitCounterReset;
+            let mem = MemOp::Store { value: 0 };
+            let outcome =
+                env.proto.core_access(self.id, BARRIER_COUNTER_LINE, mem, false, env.pctx);
+            match outcome {
+                AccessOutcome::Done(d2) => self.sync_counter_reset(now, d2, env),
+                AccessOutcome::Pending => CoreAction::Park,
+                AccessOutcome::SpecDone(_) => unreachable!(),
+            }
+        } else {
+            if self.spin_since.is_none() {
+                self.spin_since = Some(now);
+            }
+            self.spin_continue(now, BARRIER_SENSE_LINE, false, target, env)
+        }
+    }
+
+    fn sync_counter_reset(&mut self, now: Cycle, d: AccessDone, env: &mut CoreEnv) -> CoreAction {
+        env.log_access(self.id, self.fetch_pc as u32, BARRIER_COUNTER_LINE, None, Some(0), d.ts, now);
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.stores += 1;
+        self.sync = SyncState::WaitSenseStore;
+        let target = barrier::target_sense(self.barrier_count);
+        let mem = MemOp::Store { value: target };
+        let outcome = env.proto.core_access(self.id, BARRIER_SENSE_LINE, mem, false, env.pctx);
+        match outcome {
+            AccessOutcome::Done(d2) => self.sync_sense_stored(now, d2, env),
+            AccessOutcome::Pending => CoreAction::Park,
+            AccessOutcome::SpecDone(_) => unreachable!(),
+        }
+    }
+
+    fn sync_sense_stored(&mut self, now: Cycle, d: AccessDone, env: &mut CoreEnv) -> CoreAction {
+        let target = barrier::target_sense(self.barrier_count);
+        env.log_access(self.id, self.fetch_pc as u32, BARRIER_SENSE_LINE, None, Some(target), d.ts, now);
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.stores += 1;
+        self.barrier_count += 1;
+        env.pctx.stats.barriers_passed += 1;
+        self.sync_done(now)
+    }
+
+    fn spin_continue(
+        &mut self,
+        now: Cycle,
+        addr: LineAddr,
+        target_zero: bool,
+        target: u64,
+        env: &mut CoreEnv,
+    ) -> CoreAction {
+        use crate::proto::SpinHint;
+        match env.proto.spin_hint(self.id, addr, env.pctx) {
+            SpinHint::Retry => {
+                self.sync = SyncState::SpinPoll { addr, target_zero, target };
+                self.wake_at(now + env.spin_poll)
+            }
+            SpinHint::WaitInvalidate => {
+                self.sync = SyncState::SpinPark { addr, target_zero, target };
+                CoreAction::Park
+            }
+            SpinHint::ExpiresAfterSelfInc { spins_needed } => {
+                self.sync = SyncState::SpinPoll { addr, target_zero, target };
+                self.wake_at(now + spins_needed.max(1) * env.spin_poll)
+            }
+        }
+    }
+
+    fn spin_poll(
+        &mut self,
+        now: Cycle,
+        addr: LineAddr,
+        target_zero: bool,
+        target: u64,
+        env: &mut CoreEnv,
+    ) -> CoreAction {
+        let outcome = env.proto.core_access(self.id, addr, MemOp::Load, false, env.pctx);
+        match outcome {
+            AccessOutcome::Done(d) => self.spin_value(now, addr, target_zero, target, d, env),
+            AccessOutcome::Pending => {
+                self.sync = SyncState::WaitSpinLoad { addr, target_zero, target };
+                CoreAction::Park
+            }
+            AccessOutcome::SpecDone(_) => unreachable!("spin loads never speculate"),
+        }
+    }
+
+    fn spin_value(
+        &mut self,
+        now: Cycle,
+        addr: LineAddr,
+        target_zero: bool,
+        target: u64,
+        d: AccessDone,
+        env: &mut CoreEnv,
+    ) -> CoreAction {
+        env.log_access(self.id, self.fetch_pc as u32, addr, Some(d.value), None, d.ts, now);
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.loads += 1;
+        let satisfied = if target_zero { d.value == 0 } else { d.value == target };
+        if satisfied {
+            if let Some(start) = self.spin_since.take() {
+                env.pctx.stats.spin_cycles += now - start;
+            }
+            if target_zero {
+                // Lock free: retry the Tas.
+                self.sync = SyncState::WaitTas { lock: addr };
+                let outcome = env.proto.core_access(self.id, addr, MemOp::Tas, false, env.pctx);
+                match outcome {
+                    AccessOutcome::Done(d2) => self.sync_tas_result(now, addr, d2, env),
+                    AccessOutcome::Pending => CoreAction::Park,
+                    AccessOutcome::SpecDone(_) => unreachable!(),
+                }
+            } else {
+                // Barrier sense reached.
+                self.barrier_count += 1;
+                env.pctx.stats.barriers_passed += 1;
+                self.sync_done(now)
+            }
+        } else {
+            self.spin_continue(now, addr, target_zero, target, env)
+        }
+    }
+
+    fn sync_done(&mut self, now: Cycle) -> CoreAction {
+        self.sync = SyncState::Idle;
+        self.fetch_pc += 1;
+        self.committed_ops += 1;
+        self.wake_at(now + 1)
+    }
+
+    // ------------------------------------------------ completions
+
+    pub fn on_completion(&mut self, c: &Completion, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        match c.kind {
+            CompletionKind::SpecOk => {
+                // Renewal succeeded: the ROB entry's value was current;
+                // commit_check will pass once the head reaches it.
+                for e in self.rob.iter_mut() {
+                    if e.addr == c.addr && e.speculative {
+                        e.speculative = false;
+                    }
+                }
+                self.wake_at_if_parked(now + 1)
+            }
+            CompletionKind::Misspec => {
+                // The speculative renewal failed; the ROB entry (if not
+                // yet committed) adopts the corrected value and will be
+                // re-checked at commit.
+                for e in self.rob.iter_mut() {
+                    if e.addr == c.addr && e.speculative {
+                        e.status = Status::Ready(AccessDone {
+                            value: c.value,
+                            ts: c.ts,
+                            extra_cycles: 0,
+                        });
+                        e.speculative = false;
+                    }
+                }
+                self.penalty += env.rollback_penalty;
+                self.wake_at_if_parked(now + 1)
+            }
+            CompletionKind::SpinWake => match self.sync {
+                SyncState::SpinPark { addr, target_zero, target } if addr == c.addr => {
+                    self.sync = SyncState::SpinPoll { addr, target_zero, target };
+                    self.wake_at(now + 1)
+                }
+                _ => {
+                    // Retry wake for a parked duplicate access: put any
+                    // still-Issued entries for this line back to
+                    // NotIssued so they re-execute (their original
+                    // completion may have been matched to an earlier
+                    // entry of the same address).
+                    for e in self.rob.iter_mut() {
+                        if e.addr == c.addr && e.status == Status::Issued {
+                            e.status = Status::NotIssued;
+                        }
+                    }
+                    self.wake_at_if_parked(now + 1)
+                }
+            },
+            CompletionKind::Demand => {
+                match self.sync {
+                    SyncState::WaitBarrierAdd if c.addr == BARRIER_COUNTER_LINE => {
+                        return self.sync_barrier_arrived(
+                            now,
+                            AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 },
+                            env,
+                        );
+                    }
+                    SyncState::WaitTas { lock } if lock == c.addr => {
+                        return self.sync_tas_result(
+                            now,
+                            lock,
+                            AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 },
+                            env,
+                        );
+                    }
+                    SyncState::WaitUnlock => {
+                        return self.sync_unlock_done(
+                            now,
+                            c.addr,
+                            AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 },
+                            env,
+                        );
+                    }
+                    SyncState::WaitCounterReset => {
+                        return self.sync_counter_reset(
+                            now,
+                            AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 },
+                            env,
+                        );
+                    }
+                    SyncState::WaitSenseStore => {
+                        return self.sync_sense_stored(
+                            now,
+                            AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 },
+                            env,
+                        );
+                    }
+                    SyncState::WaitSpinLoad { addr, target_zero, target } if addr == c.addr => {
+                        return self.spin_value(
+                            now,
+                            addr,
+                            target_zero,
+                            target,
+                            AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 },
+                            env,
+                        );
+                    }
+                    _ => {}
+                }
+                // Pipeline completion: mark matching issued entry ready.
+                for (i, e) in self.rob.iter_mut().enumerate() {
+                    if e.addr == c.addr && e.status == Status::Issued {
+                        e.status =
+                            Status::Ready(AccessDone { value: c.value, ts: c.ts, extra_cycles: 0 });
+                        e.early = i > 0;
+                        break;
+                    }
+                }
+                self.wake_at(now + 1)
+            }
+        }
+    }
+
+    /// Diagnostic snapshot for deadlock reports.
+    pub fn state_string(&self) -> String {
+        let rob: Vec<String> = self
+            .rob
+            .iter()
+            .map(|e| format!("pc{} {:#x} {:?} spec={} early={}", e.pc, e.addr, e.status, e.speculative, e.early))
+            .collect();
+        format!(
+            "core {} fetch_pc {}/{} sync {:?} drain {} next_wake {:?} rob [{}]",
+            self.id,
+            self.fetch_pc,
+            self.program.len(),
+            self.sync,
+            self.drain_mode,
+            self.next_wake,
+            rob.join("; ")
+        )
+    }
+
+    fn wake_at_if_parked(&mut self, t: Cycle) -> CoreAction {
+        if self.next_wake.is_none() {
+            self.wake_at(t)
+        } else {
+            CoreAction::Park
+        }
+    }
+
+    fn wake_at(&mut self, t: Cycle) -> CoreAction {
+        self.next_wake = Some(t);
+        CoreAction::WakeAt(t)
+    }
+}

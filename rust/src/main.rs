@@ -1,0 +1,309 @@
+//! `tardis` CLI — the leader entrypoint.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in this image's
+//! registry):
+//!
+//! ```text
+//! tardis run   --workload fft --protocol tardis --cores 64 [--ooo]
+//!              [--lease N] [--self-inc N] [--no-spec] [--delta-bits N]
+//! tardis sweep --figure fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7
+//!              [--threads N] [--scale-down N] [--out results/]
+//! tardis litmus
+//! tardis case-study
+//! tardis reproduce [--threads N] [--out results/]
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::coordinator::experiments::{self, EvalCtx};
+use tardis_dsm::coordinator::report::Table;
+use tardis_dsm::prog::litmus;
+use tardis_dsm::runtime::TraceRuntime;
+use tardis_dsm::sim::run_workload;
+use tardis_dsm::workloads;
+
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Self {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            if let Some(name) = raw[i].strip_prefix("--") {
+                let value = raw
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                flags.push((name.to_string(), value));
+            }
+            i += 1;
+        }
+        Self { flags }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+
+    fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "sweep" => cmd_sweep(&args),
+        "litmus" => cmd_litmus(),
+        "case-study" => cmd_case_study(),
+        "reproduce" => cmd_reproduce(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} (try `tardis help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "tardis — Tardis coherence simulator (Yu & Devadas 2015 reproduction)
+
+USAGE:
+  tardis run --workload <name> [--protocol tardis|msi|ackwise] [--cores N]
+             [--ooo] [--lease N] [--self-inc N] [--no-spec] [--delta-bits N]
+  tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7>
+             [--threads N] [--scale-down N] [--out DIR]
+  tardis litmus           run the litmus suite under all three protocols
+  tardis case-study       cycle-by-cycle §V example, Tardis vs MSI
+  tardis reproduce        regenerate every table and figure
+  workloads: {}",
+        workloads::all().iter().map(|w| w.name).collect::<Vec<_>>().join(", ")
+    );
+}
+
+fn build_cfg(args: &Args) -> Result<SystemConfig> {
+    let protocol = match args.get("protocol").unwrap_or("tardis") {
+        p => ProtocolKind::parse(p).ok_or_else(|| anyhow!("unknown protocol {p:?}"))?,
+    };
+    let n_cores = args.get_u64("cores", 64)? as u32;
+    let mut cfg = experiments::base_cfg(n_cores, protocol);
+    if args.has("ooo") {
+        cfg.core_model = CoreModel::OutOfOrder;
+    }
+    cfg.tardis.lease = args.get_u64("lease", cfg.tardis.lease)?;
+    cfg.tardis.self_inc_period = args.get_u64("self-inc", cfg.tardis.self_inc_period)?;
+    cfg.tardis.delta_ts_bits = args.get_u64("delta-bits", cfg.tardis.delta_ts_bits as u64)? as u32;
+    if args.has("no-spec") {
+        cfg.tardis.speculation = false;
+    }
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name = args.get("workload").unwrap_or("fft");
+    let spec = workloads::by_name(name).ok_or_else(|| anyhow!("unknown workload {name:?}"))?;
+    let cfg = build_cfg(args)?;
+    let mut runtime = TraceRuntime::open_default().ok();
+    let mut ctx = EvalCtx::new(None, 1);
+    ctx.scale_down = args.get_u64("scale-down", 1)? as u32;
+    let trace_len = ctx.trace_len(cfg.n_cores);
+    let workload =
+        tardis_dsm::runtime::workload_or_synth(&mut runtime, cfg.n_cores, trace_len, &spec.params);
+    println!(
+        "running {} on {} x{} cores ({} ops)...",
+        spec.name,
+        cfg.protocol.name(),
+        cfg.n_cores,
+        workload.total_ops()
+    );
+    let res = run_workload(cfg, &workload)?;
+    let s = &res.stats;
+    println!("cycles            {}", s.cycles);
+    println!("memops            {}", s.memops);
+    println!("throughput        {:.4} ops/cycle", s.throughput());
+    println!("L1 miss rate      {:.3}%", s.l1_miss_rate() * 100.0);
+    println!("traffic (flits)   {}", s.traffic.total());
+    println!("  renew flits     {}", s.traffic.renew_flits);
+    println!("  inv flits       {}", s.traffic.invalidation_flits);
+    println!("renew requests    {} (success {})", s.renew_requests, s.renew_success);
+    println!("misspeculations   {}", s.misspeculations);
+    println!("locks acquired    {}", s.locks_acquired);
+    println!("barriers passed   {}", s.barriers_passed);
+    println!("ts incr rate      {:.0} cycles/ts", s.ts_incr_rate());
+    println!("self incr share   {:.1}%", s.self_inc_fraction() * 100.0);
+    Ok(())
+}
+
+fn eval_ctx(args: &Args) -> Result<EvalCtx> {
+    let runtime = TraceRuntime::open_default().ok();
+    if runtime.is_none() {
+        eprintln!("note: artifacts not found, using rust synth fallback (run `make artifacts`)");
+    }
+    let mut ctx = EvalCtx::new(runtime, args.get_u64("threads", 0)? as usize);
+    ctx.scale_down = args.get_u64("scale-down", 1)? as u32;
+    Ok(ctx)
+}
+
+fn emit(table: &Table, out: &str, stem: &str) -> Result<()> {
+    println!("\n{}", table.to_markdown());
+    table.write(out, stem)?;
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let fig = args.get("figure").unwrap_or("fig4");
+    let out = args.get("out").unwrap_or("results");
+    let mut ctx = eval_ctx(args)?;
+    match fig {
+        "fig4" => emit(&experiments::fig4(&mut ctx)?, out, "fig4"),
+        "fig5" => emit(&experiments::fig5(&mut ctx)?, out, "fig5"),
+        "fig6" => emit(&experiments::fig6(&mut ctx)?, out, "fig6"),
+        "fig7" => emit(&experiments::fig7(&mut ctx)?, out, "fig7"),
+        "fig8" => {
+            let (a, b) = experiments::fig8(&mut ctx)?;
+            emit(&a, out, "fig8a")?;
+            emit(&b, out, "fig8b")
+        }
+        "fig9" => emit(&experiments::fig9(&mut ctx)?, out, "fig9"),
+        "fig10" => emit(&experiments::fig10(&mut ctx)?, out, "fig10"),
+        "table6" => emit(&experiments::table6(&mut ctx)?, out, "table6"),
+        "table7" => emit(&experiments::table7(), out, "table7"),
+        other => bail!("unknown figure {other:?}"),
+    }
+}
+
+fn cmd_litmus() -> Result<()> {
+    for proto in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        println!("== {} ==", proto.name());
+        for lt in litmus::all() {
+            let n = lt.workload.n_cores();
+            let mut forbidden = 0;
+            // Perturb interleavings with per-run gap jitter.
+            for seed in 0..50u64 {
+                let w = jitter(&lt.workload, seed);
+                let cfg = SystemConfig::small(n, proto);
+                let res = run_workload(cfg, &w)?;
+                let outcome = extract_outcome(&res, &lt.observed);
+                if !(lt.allowed)(&outcome) {
+                    forbidden += 1;
+                }
+                tardis_dsm::prog::checker::check(&res.log)
+                    .map_err(|v| anyhow!("{}: SC violation {v:?}", lt.name))?;
+            }
+            println!(
+                "  {:<6} {:>3} runs, forbidden outcomes: {}",
+                lt.name,
+                50,
+                if forbidden == 0 { "none".to_string() } else { format!("{forbidden} !!") }
+            );
+            if forbidden > 0 {
+                bail!("litmus {} observed a forbidden outcome under {}", lt.name, proto.name());
+            }
+        }
+    }
+    println!("all litmus tests clean");
+    Ok(())
+}
+
+/// Jitter compute gaps to explore interleavings (deterministic per
+/// seed).
+fn jitter(w: &tardis_dsm::prog::Workload, seed: u64) -> tardis_dsm::prog::Workload {
+    use tardis_dsm::prog::Op;
+    use tardis_dsm::testutil::Rng;
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+    let mut w = w.clone();
+    for p in &mut w.programs {
+        for op in &mut p.ops {
+            match op {
+                Op::Load { gap, .. } | Op::Store { gap, .. } => *gap = rng.below(12) as u32,
+                _ => {}
+            }
+        }
+    }
+    w
+}
+
+fn extract_outcome(res: &tardis_dsm::sim::SimResult, observed: &[(u32, u32)]) -> Vec<u64> {
+    observed
+        .iter()
+        .map(|&(core, pc)| {
+            res.log
+                .records
+                .iter()
+                .find(|r| r.core == core && r.pc == pc && r.value_read.is_some())
+                .map(|r| r.value_read.unwrap())
+                .unwrap_or(u64::MAX)
+        })
+        .collect()
+}
+
+fn cmd_case_study() -> Result<()> {
+    let w = litmus::case_study();
+    for proto in [ProtocolKind::Msi, ProtocolKind::Tardis] {
+        let cfg = SystemConfig::small(2, proto);
+        let res = run_workload(cfg, &w)?;
+        println!("== {} == finished in {} cycles", proto.name(), res.stats.cycles);
+        for r in &res.log.records {
+            println!(
+                "  cyc {:>4}  core {}  pc {}  {}{:#x}  val {:?}  ts {}",
+                r.commit_cycle,
+                r.core,
+                r.pc,
+                if r.value_written.is_some() { "W " } else { "R " },
+                r.addr,
+                r.value_read.or(r.value_written),
+                r.ts
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_reproduce(args: &Args) -> Result<()> {
+    let out = args.get("out").unwrap_or("results");
+    let mut ctx = eval_ctx(args)?;
+    println!("Reproducing all paper tables and figures into {out}/ ...");
+    emit(&experiments::fig4(&mut ctx)?, out, "fig4")?;
+    emit(&experiments::fig5(&mut ctx)?, out, "fig5")?;
+    emit(&experiments::table6(&mut ctx)?, out, "table6")?;
+    emit(&experiments::fig6(&mut ctx)?, out, "fig6")?;
+    emit(&experiments::fig7(&mut ctx)?, out, "fig7")?;
+    let (a, b) = experiments::fig8(&mut ctx)?;
+    emit(&a, out, "fig8a")?;
+    emit(&b, out, "fig8b")?;
+    emit(&experiments::table7(), out, "table7")?;
+    emit(&experiments::fig9(&mut ctx)?, out, "fig9")?;
+    emit(&experiments::fig10(&mut ctx)?, out, "fig10")?;
+    println!("done.");
+    Ok(())
+}
+
+// Arc is used by experiments through coordinator; silence unused import
+// when compiled without it.
+#[allow(unused)]
+fn _keep(_: Arc<()>) {}

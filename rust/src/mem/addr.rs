@@ -1,0 +1,35 @@
+//! Address-to-home mapping: LLC slices and memory controllers are
+//! line-interleaved across the chip.
+
+use crate::types::{LineAddr, McId, SliceId};
+
+/// Home LLC slice (timestamp-manager / directory slice) of a line.
+pub fn home_slice(addr: LineAddr, n_slices: u32) -> SliceId {
+    (addr % n_slices as u64) as SliceId
+}
+
+/// Memory controller serving a line.
+pub fn home_mc(addr: LineAddr, n_mcs: u32) -> McId {
+    ((addr / 8) % n_mcs as u64) as McId
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_interleave_covers_all() {
+        let mut seen = vec![false; 16];
+        for a in 0..64u64 {
+            seen[home_slice(a, 16) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn mc_interleave_is_block_wise() {
+        // 8-line blocks map to the same MC, consecutive blocks rotate.
+        assert_eq!(home_mc(0, 8), home_mc(7, 8));
+        assert_ne!(home_mc(0, 8), home_mc(8, 8));
+    }
+}

@@ -1,0 +1,304 @@
+//! Generic set-associative cache array with LRU replacement.  Both the
+//! private L1s and the LLC slices instantiate this with their own
+//! per-line metadata type.
+
+use crate::types::LineAddr;
+
+#[derive(Debug, Clone)]
+struct Entry<T> {
+    /// Full line address (index hashing makes set+tag reconstruction
+    /// non-trivial, so the whole address is kept).
+    tag: u64,
+    valid: bool,
+    lru: u64,
+    data: T,
+}
+
+/// A set-associative array of `sets * ways` lines indexed by line
+/// address.  `T` is the protocol's per-line state.
+#[derive(Debug, Clone)]
+pub struct SetAssoc<T> {
+    sets: u32,
+    ways: u32,
+    tick: u64,
+    entries: Vec<Entry<T>>,
+}
+
+impl<T> SetAssoc<T> {
+    pub fn new(sets: u32, ways: u32) -> Self
+    where
+        T: Default + Clone,
+    {
+        assert!(sets > 0 && ways > 0);
+        Self {
+            sets,
+            ways,
+            tick: 0,
+            entries: vec![
+                Entry { tag: 0, valid: false, lru: 0, data: T::default() };
+                (sets * ways) as usize
+            ],
+        }
+    }
+
+    /// Set index with hashing: regular address strides (e.g., the
+    /// trace format's 64 KiB private regions) would otherwise collide
+    /// whole working sets into a handful of sets; real LLCs hash the
+    /// index for the same reason.
+    #[inline]
+    fn set_of(&self, addr: LineAddr) -> u32 {
+        let mut x = addr;
+        x ^= x >> 33;
+        x = x.wrapping_mul(0xFF51AFD7ED558CCD);
+        x ^= x >> 33;
+        (x % self.sets as u64) as u32
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: LineAddr) -> u64 {
+        addr
+    }
+
+    #[inline]
+    fn set_range(&self, set: u32) -> std::ops::Range<usize> {
+        let base = (set * self.ways) as usize;
+        base..base + self.ways as usize
+    }
+
+    /// Line address of an entry index.
+    fn addr_of(&self, idx: usize) -> LineAddr {
+        self.entries[idx].tag
+    }
+
+    /// Look up a line, updating LRU on hit.
+    pub fn get_mut(&mut self, addr: LineAddr) -> Option<&mut T> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        self.tick += 1;
+        let tick = self.tick;
+        let range = self.set_range(set);
+        self.entries[range]
+            .iter_mut()
+            .find(|e| e.valid && e.tag == tag)
+            .map(|e| {
+                e.lru = tick;
+                &mut e.data
+            })
+    }
+
+    /// Look up without touching LRU (for snoops / external requests).
+    pub fn peek_mut(&mut self, addr: LineAddr) -> Option<&mut T> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        let range = self.set_range(set);
+        self.entries[range]
+            .iter_mut()
+            .find(|e| e.valid && e.tag == tag)
+            .map(|e| &mut e.data)
+    }
+
+    pub fn peek(&self, addr: LineAddr) -> Option<&T> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        self.entries[self.set_range(set)]
+            .iter()
+            .find(|e| e.valid && e.tag == tag)
+            .map(|e| &e.data)
+    }
+
+    /// Insert a line, evicting the LRU entry among those `evictable`
+    /// admits.  Returns `Ok(Some((victim_addr, victim_state)))` if a
+    /// valid line was displaced, `Ok(None)` if a free way was used, and
+    /// `Err(data)` if every way is pinned (caller must retry later).
+    pub fn insert_filtered(
+        &mut self,
+        addr: LineAddr,
+        data: T,
+        evictable: impl Fn(&T) -> bool,
+    ) -> Result<Option<(LineAddr, T)>, T> {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        self.tick += 1;
+        let tick = self.tick;
+        let range = self.set_range(set);
+
+        debug_assert!(
+            !self.entries[range.clone()].iter().any(|e| e.valid && e.tag == tag),
+            "insert over existing line"
+        );
+
+        // Prefer a free way.
+        if let Some(idx) = range.clone().find(|&i| !self.entries[i].valid) {
+            self.entries[idx] = Entry { tag, valid: true, lru: tick, data };
+            return Ok(None);
+        }
+        // Otherwise evict the LRU admissible line.
+        let victim = range
+            .filter(|&i| evictable(&self.entries[i].data))
+            .min_by_key(|&i| self.entries[i].lru);
+        match victim {
+            Some(idx) => {
+                let vaddr = self.addr_of(idx);
+                let old = std::mem::replace(
+                    &mut self.entries[idx],
+                    Entry { tag, valid: true, lru: tick, data },
+                );
+                Ok(Some((vaddr, old.data)))
+            }
+            None => Err(data),
+        }
+    }
+
+    /// Pick the LRU admissible victim in `addr`'s set without
+    /// inserting anything.  Returns the victim's line address, or None
+    /// if the set has a free way or no admissible victim.
+    pub fn victim_for(&self, addr: LineAddr, admissible: impl Fn(&T) -> bool) -> Option<LineAddr> {
+        let set = self.set_of(addr);
+        let range = self.set_range(set);
+        if range.clone().any(|i| !self.entries[i].valid) {
+            return None;
+        }
+        range
+            .filter(|&i| admissible(&self.entries[i].data))
+            .min_by_key(|&i| self.entries[i].lru)
+            .map(|i| self.addr_of(i))
+    }
+
+    /// Insert with every line evictable.
+    pub fn insert(&mut self, addr: LineAddr, data: T) -> Option<(LineAddr, T)> {
+        match self.insert_filtered(addr, data, |_| true) {
+            Ok(v) => v,
+            Err(_) => unreachable!("unfiltered insert cannot fail"),
+        }
+    }
+
+    /// Remove a line, returning its state.
+    pub fn invalidate(&mut self, addr: LineAddr) -> Option<T>
+    where
+        T: Default,
+    {
+        let (set, tag) = (self.set_of(addr), self.tag_of(addr));
+        let range = self.set_range(set);
+        for i in range {
+            if self.entries[i].valid && self.entries[i].tag == tag {
+                self.entries[i].valid = false;
+                return Some(std::mem::take(&mut self.entries[i].data));
+            }
+        }
+        None
+    }
+
+    /// Visit every valid line (rebase scans, checkers).  The callback
+    /// returns `false` to invalidate the line in place.
+    pub fn retain_lines(&mut self, mut f: impl FnMut(LineAddr, &mut T) -> bool) {
+        for i in 0..self.entries.len() {
+            if self.entries[i].valid {
+                let addr = self.addr_of(i);
+                if !f(addr, &mut self.entries[i].data) {
+                    self.entries[i].valid = false;
+                }
+            }
+        }
+    }
+
+    /// Iterate all valid lines immutably.
+    pub fn for_each(&self, mut f: impl FnMut(LineAddr, &T)) {
+        for i in 0..self.entries.len() {
+            if self.entries[i].valid {
+                f(self.addr_of(i), &self.entries[i].data);
+            }
+        }
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.entries.iter().filter(|e| e.valid).count()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(sets: u32, ways: u32) -> SetAssoc<u64> {
+        SetAssoc::new(sets, ways)
+    }
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = cache(4, 2);
+        assert!(c.insert(13, 99).is_none());
+        assert_eq!(c.get_mut(13), Some(&mut 99));
+        assert_eq!(c.peek(13), Some(&99));
+        assert!(c.get_mut(14).is_none());
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = cache(1, 2);
+        c.insert(0, 100);
+        c.insert(1, 101);
+        // Touch 0 so 1 becomes LRU.
+        c.get_mut(0);
+        let evicted = c.insert(2, 102);
+        assert_eq!(evicted, Some((1, 101)));
+        assert!(c.peek(0).is_some());
+        assert!(c.peek(2).is_some());
+    }
+
+    #[test]
+    fn victim_address_reconstruction() {
+        let mut c = cache(8, 1);
+        c.insert(3, 1); // set 3, tag 0
+        let evicted = c.insert(11, 2); // set 3, tag 1
+        assert_eq!(evicted, Some((3, 1)));
+        let evicted = c.insert(19, 3); // set 3, tag 2
+        assert_eq!(evicted, Some((11, 2)));
+    }
+
+    #[test]
+    fn filtered_insert_respects_pins() {
+        let mut c = cache(1, 2);
+        c.insert(0, 100);
+        c.insert(1, 101);
+        // Only value 101 is evictable.
+        let r = c.insert_filtered(2, 102, |v| *v == 101);
+        assert_eq!(r, Ok(Some((1, 101))));
+        // Now 100 and 102 are pinned: insertion fails.
+        let r = c.insert_filtered(3, 103, |_| false);
+        assert_eq!(r, Err(103));
+    }
+
+    #[test]
+    fn invalidate_removes() {
+        let mut c = cache(4, 2);
+        c.insert(5, 50);
+        assert_eq!(c.invalidate(5), Some(50));
+        assert!(c.peek(5).is_none());
+        assert_eq!(c.invalidate(5), None);
+    }
+
+    #[test]
+    fn retain_lines_scan_and_drop() {
+        let mut c = cache(4, 4);
+        for a in 0..12u64 {
+            c.insert(a, a * 10);
+        }
+        assert_eq!(c.occupancy(), 12);
+        // Drop odd addresses.
+        c.retain_lines(|addr, _| addr % 2 == 0);
+        assert_eq!(c.occupancy(), 6);
+        assert!(c.peek(4).is_some());
+        assert!(c.peek(5).is_none());
+    }
+
+    #[test]
+    fn peek_does_not_disturb_lru() {
+        let mut c = cache(1, 2);
+        c.insert(0, 100);
+        c.insert(1, 101);
+        // peek 0, then insert: LRU should still evict 0.
+        c.peek_mut(0);
+        let evicted = c.insert(2, 102);
+        assert_eq!(evicted, Some((0, 100)));
+    }
+}

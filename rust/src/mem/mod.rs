@@ -1,0 +1,9 @@
+//! Memory-hierarchy substrates: address mapping, set-associative cache
+//! arrays, and the DRAM timing model.
+
+pub mod addr;
+pub mod cache;
+pub mod dram;
+
+pub use cache::SetAssoc;
+pub use dram::Dram;

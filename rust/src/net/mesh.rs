@@ -1,0 +1,145 @@
+//! 2-D mesh topology with XY routing (paper Table V): hop latency
+//! 2 cycles (1 router + 1 link), 128-bit flits.  Latency is analytic
+//! (no per-link contention queues — DESIGN.md substitution #1); flit
+//! counts are exact and drive the traffic statistics.
+
+use super::message::{Message, Node};
+use crate::types::{Cycle, McId};
+
+/// The on-chip interconnect.  Core `i` and LLC slice `i` share tile
+/// `i`; memory controllers are spread evenly along the tile sequence.
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    /// Mesh side length (ceil(sqrt(n_tiles))).
+    dim: u32,
+    n_tiles: u32,
+    n_mcs: u32,
+    hop_cycles: Cycle,
+    flit_bits: u32,
+}
+
+impl Mesh {
+    pub fn new(n_tiles: u32, n_mcs: u32, hop_cycles: Cycle, flit_bits: u32) -> Self {
+        let dim = (n_tiles as f64).sqrt().ceil() as u32;
+        Self { dim, n_tiles, n_mcs, hop_cycles, flit_bits }
+    }
+
+    /// Tile index of a node.
+    pub fn tile_of(&self, node: Node) -> u32 {
+        match node {
+            Node::Core(c) => c % self.n_tiles,
+            Node::Slice(s) => s % self.n_tiles,
+            Node::Mc(m) => self.mc_tile(m),
+        }
+    }
+
+    /// Memory controller `m`'s tile: spread evenly across the tiles.
+    pub fn mc_tile(&self, m: McId) -> u32 {
+        (m % self.n_mcs) * (self.n_tiles / self.n_mcs.min(self.n_tiles)).max(1) % self.n_tiles
+    }
+
+    /// (x, y) coordinates of a tile.
+    pub fn coords(&self, tile: u32) -> (u32, u32) {
+        (tile % self.dim, tile / self.dim)
+    }
+
+    /// XY-routed hop count between two nodes.
+    pub fn hops(&self, a: Node, b: Node) -> u32 {
+        let (ax, ay) = self.coords(self.tile_of(a));
+        let (bx, by) = self.coords(self.tile_of(b));
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// End-to-end latency of a message: per-hop router+link latency
+    /// plus payload serialization.  Same-tile messages skip the network
+    /// (1-cycle controller hand-off).
+    pub fn latency(&self, msg: &Message) -> Cycle {
+        let hops = self.hops(msg.src, msg.dst);
+        if hops == 0 {
+            return 1;
+        }
+        self.hop_cycles * hops as Cycle + msg.kind.flits(self.flit_bits)
+    }
+
+    /// Flits this message contributes to network traffic.  Same-tile
+    /// messages never enter the mesh and count zero.
+    pub fn traffic_flits(&self, msg: &Message) -> u64 {
+        if self.hops(msg.src, msg.dst) == 0 {
+            0
+        } else {
+            msg.kind.flits(self.flit_bits)
+        }
+    }
+
+    pub fn dim(&self) -> u32 {
+        self.dim
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::message::MsgKind;
+    use crate::types::LineAddr;
+
+    fn mesh64() -> Mesh {
+        Mesh::new(64, 8, 2, 128)
+    }
+
+    fn msg(src: Node, dst: Node, kind: MsgKind) -> Message {
+        Message { src, dst, addr: 0 as LineAddr, requester: 0, kind }
+    }
+
+    #[test]
+    fn dim_is_sqrt() {
+        assert_eq!(mesh64().dim(), 8);
+        assert_eq!(Mesh::new(16, 8, 2, 128).dim(), 4);
+        assert_eq!(Mesh::new(256, 8, 2, 128).dim(), 16);
+        // Non-square counts round up.
+        assert_eq!(Mesh::new(12, 4, 2, 128).dim(), 4);
+    }
+
+    #[test]
+    fn xy_hops() {
+        let m = mesh64();
+        // tile 0 = (0,0), tile 63 = (7,7): 14 hops corner to corner.
+        assert_eq!(m.hops(Node::Core(0), Node::Slice(63)), 14);
+        // Core and slice on the same tile: 0 hops.
+        assert_eq!(m.hops(Node::Core(5), Node::Slice(5)), 0);
+        // Neighbors.
+        assert_eq!(m.hops(Node::Core(0), Node::Slice(1)), 1);
+        assert_eq!(m.hops(Node::Core(0), Node::Slice(8)), 1);
+    }
+
+    #[test]
+    fn latency_control_vs_data() {
+        let m = mesh64();
+        let ctrl = msg(Node::Core(0), Node::Slice(1), MsgKind::GetS);
+        let data = msg(Node::Slice(1), Node::Core(0), MsgKind::DataS { value: 0 });
+        // 1 hop: 2 + 1 flit vs 2 + 5 flits.
+        assert_eq!(m.latency(&ctrl), 3);
+        assert_eq!(m.latency(&data), 7);
+    }
+
+    #[test]
+    fn same_tile_is_fast_and_free() {
+        let m = mesh64();
+        let local = msg(Node::Core(3), Node::Slice(3), MsgKind::GetS);
+        assert_eq!(m.latency(&local), 1);
+        assert_eq!(m.traffic_flits(&local), 0);
+    }
+
+    #[test]
+    fn traffic_counts_flits_for_remote() {
+        let m = mesh64();
+        let data = msg(Node::Slice(9), Node::Core(0), MsgKind::DataX { value: 0 });
+        assert_eq!(m.traffic_flits(&data), 5);
+    }
+
+    #[test]
+    fn mc_tiles_spread() {
+        let m = mesh64();
+        let tiles: Vec<u32> = (0..8).map(|i| m.mc_tile(i)).collect();
+        assert_eq!(tiles, vec![0, 8, 16, 24, 32, 40, 48, 56]);
+    }
+}

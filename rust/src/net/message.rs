@@ -1,0 +1,199 @@
+//! Network message types for all three protocols (paper Table IV for
+//! Tardis) plus DRAM transactions, with flit sizing and traffic-class
+//! attribution.
+
+use crate::types::{CoreId, LineAddr, McId, SliceId, Ts};
+
+/// A network endpoint: a core's private-cache controller, an LLC slice
+/// (timestamp manager / directory), or a memory controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Node {
+    Core(CoreId),
+    Slice(SliceId),
+    Mc(McId),
+}
+
+/// Message payloads.  One unified enum keeps the engine protocol-
+/// agnostic; each protocol only produces/consumes its own variants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    // ------ Tardis (paper Table IV) ------
+    /// Shared (load) request; `renew` marks a lease-extension attempt
+    /// (requester still holds data with matching `wts`).
+    ShReq { pts: Ts, wts: Ts, renew: bool },
+    /// Exclusive (store) request with the requester's cached `wts`.
+    ExReq { wts: Ts },
+    /// TM asks the owner to flush (invalidate + return data).
+    FlushReq,
+    /// TM asks the owner to write back (keep shared); carries the
+    /// reservation end timestamp for the requester.
+    WbReq { rts: Ts },
+    /// Shared reply with data.
+    ShRep { wts: Ts, rts: Ts, value: u64 },
+    /// Exclusive reply with data.
+    ExRep { wts: Ts, rts: Ts, value: u64 },
+    /// Exclusive grant without data (requester's copy is current).
+    UpgradeRep { rts: Ts },
+    /// Lease renewed without data.
+    RenewRep { rts: Ts },
+    /// Owner returns + invalidates; `dirty` controls LLC writeback.
+    FlushRep { wts: Ts, rts: Ts, value: u64, dirty: bool },
+    /// Owner returns + downgrades to shared.
+    WbRep { wts: Ts, rts: Ts, value: u64 },
+
+    // ------ MSI / Ackwise directory ------
+    /// Read miss.
+    GetS,
+    /// Write miss / upgrade.
+    GetX,
+    /// Clean eviction notification from an L1 (removes sharer).
+    PutS,
+    /// Dirty eviction with data from the owner.
+    PutM { value: u64 },
+    /// Directory invalidates an L1 copy.
+    Inv,
+    /// L1 acknowledges an invalidation.
+    InvAck,
+    /// Directory asks the owner to downgrade M -> S and return data.
+    DownReq,
+    DownRep { value: u64 },
+    /// Directory asks the owner to flush M -> I and return data.
+    DirFlushReq,
+    DirFlushRep { value: u64 },
+    /// Data replies to the requester.
+    DataS { value: u64 },
+    DataX { value: u64 },
+    /// Exclusive grant without data (requester already had the line).
+    GrantX,
+
+    // ------ DRAM ------
+    DramLdReq,
+    DramLdRep { value: u64 },
+    DramStReq { value: u64 },
+}
+
+/// Traffic class for the stats breakdown.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgClass {
+    Request,
+    Data,
+    Control,
+    Renew,
+    Invalidation,
+    Dram,
+}
+
+impl MsgKind {
+    /// Does this message carry a 64-B data payload?
+    pub fn carries_data(&self) -> bool {
+        matches!(
+            self,
+            MsgKind::ShRep { .. }
+                | MsgKind::ExRep { .. }
+                | MsgKind::FlushRep { .. }
+                | MsgKind::WbRep { .. }
+                | MsgKind::PutM { .. }
+                | MsgKind::DownRep { .. }
+                | MsgKind::DirFlushRep { .. }
+                | MsgKind::DataS { .. }
+                | MsgKind::DataX { .. }
+                | MsgKind::DramLdRep { .. }
+                | MsgKind::DramStReq { .. }
+        )
+    }
+
+    /// Message size in flits: control messages fit one 128-bit flit
+    /// (address + up to two timestamps, paper §VI-B2: "a successful
+    /// renewal only requires a single flit message"); data messages add
+    /// a 64-B payload = 4 more flits.
+    pub fn flits(&self, flit_bits: u32) -> u64 {
+        let header = 1u64;
+        if self.carries_data() {
+            header + (crate::types::LINE_BYTES * 8).div_ceil(flit_bits as u64)
+        } else {
+            header
+        }
+    }
+
+    /// Traffic class for the stats breakdown.
+    pub fn class(&self) -> MsgClass {
+        match self {
+            MsgKind::ShReq { renew: true, .. } | MsgKind::RenewRep { .. } => MsgClass::Renew,
+            MsgKind::ShReq { .. }
+            | MsgKind::ExReq { .. }
+            | MsgKind::GetS
+            | MsgKind::GetX
+            | MsgKind::FlushReq
+            | MsgKind::WbReq { .. }
+            | MsgKind::DownReq
+            | MsgKind::DirFlushReq => MsgClass::Request,
+            MsgKind::ShRep { .. }
+            | MsgKind::ExRep { .. }
+            | MsgKind::FlushRep { .. }
+            | MsgKind::WbRep { .. }
+            | MsgKind::PutM { .. }
+            | MsgKind::DownRep { .. }
+            | MsgKind::DirFlushRep { .. }
+            | MsgKind::DataS { .. }
+            | MsgKind::DataX { .. } => MsgClass::Data,
+            MsgKind::Inv | MsgKind::InvAck | MsgKind::PutS => MsgClass::Invalidation,
+            MsgKind::UpgradeRep { .. } | MsgKind::GrantX => MsgClass::Control,
+            MsgKind::DramLdReq | MsgKind::DramLdRep { .. } | MsgKind::DramStReq { .. } => {
+                MsgClass::Dram
+            }
+        }
+    }
+}
+
+/// A message in flight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Message {
+    pub src: Node,
+    pub dst: Node,
+    pub addr: LineAddr,
+    /// The core whose demand access ultimately caused this message
+    /// (so the slice knows whom to serve / reply to).
+    pub requester: CoreId,
+    pub kind: MsgKind,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_messages_are_one_flit() {
+        assert_eq!(MsgKind::ShReq { pts: 0, wts: 0, renew: false }.flits(128), 1);
+        assert_eq!(MsgKind::RenewRep { rts: 9 }.flits(128), 1);
+        assert_eq!(MsgKind::Inv.flits(128), 1);
+        assert_eq!(MsgKind::GrantX.flits(128), 1);
+    }
+
+    #[test]
+    fn data_messages_are_five_flits() {
+        // 64 B = 512 bits = 4 x 128-bit flits + 1 header.
+        assert_eq!(MsgKind::ShRep { wts: 0, rts: 0, value: 1 }.flits(128), 5);
+        assert_eq!(MsgKind::DataX { value: 3 }.flits(128), 5);
+        assert_eq!(MsgKind::PutM { value: 3 }.flits(128), 5);
+    }
+
+    #[test]
+    fn renewal_classified_as_renew_traffic() {
+        assert_eq!(
+            MsgKind::ShReq { pts: 1, wts: 1, renew: true }.class(),
+            MsgClass::Renew
+        );
+        assert_eq!(MsgKind::RenewRep { rts: 1 }.class(), MsgClass::Renew);
+        // A cold shared request is ordinary request traffic.
+        assert_eq!(
+            MsgKind::ShReq { pts: 1, wts: 0, renew: false }.class(),
+            MsgClass::Request
+        );
+    }
+
+    #[test]
+    fn wider_flits_shrink_data_messages() {
+        assert_eq!(MsgKind::DataS { value: 0 }.flits(256), 3);
+        assert_eq!(MsgKind::DataS { value: 0 }.flits(512), 2);
+    }
+}

@@ -1,0 +1,7 @@
+//! On-chip network: message formats and the 2-D mesh timing/traffic model.
+
+pub mod mesh;
+pub mod message;
+
+pub use mesh::Mesh;
+pub use message::{Message, MsgClass, MsgKind, Node};

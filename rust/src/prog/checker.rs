@@ -1,0 +1,287 @@
+//! Sequential-consistency witness checker.
+//!
+//! The simulator logs every committed memory operation with its
+//! physiological key — (logical timestamp, commit cycle, commit
+//! sequence).  For Tardis, Definition 1 of the paper says the global
+//! memory order *is* the physiological order; for directory protocols
+//! (ts = 0 throughout) the key degenerates to physical commit order.
+//! SC then reduces to two mechanically checkable rules:
+//!
+//! * **Rule 1**: each core's keys are non-decreasing in program order.
+//! * **Rule 2**: per address, every load observes the value of the
+//!   latest write preceding it in the key order.
+//!
+//! Plus two synchronization invariants: spin-lock acquire/release
+//! alternation and balanced barrier episodes.
+
+use std::collections::HashMap;
+
+use crate::types::{CoreId, Cycle, LineAddr, Ts};
+
+/// One committed memory operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LogRecord {
+    pub core: CoreId,
+    /// Program counter of the trace op this access implements (sync
+    /// microcode reuses the surrounding op's pc).
+    pub pc: u32,
+    pub addr: LineAddr,
+    /// Loaded / atomic-old value (None for plain stores).
+    pub value_read: Option<u64>,
+    /// Stored value (None for loads).
+    pub value_written: Option<u64>,
+    /// Logical timestamp (0 under directory protocols).
+    pub ts: Ts,
+    pub commit_cycle: Cycle,
+    /// Global commit order (state-mutation order inside the engine).
+    pub seq: u64,
+    /// False for records squashed by a speculation rollback (the core
+    /// re-executed them; checks skip squashed records).
+    pub valid: bool,
+}
+
+impl LogRecord {
+    /// Physiological key (Definition 1): logical time, tie-broken by
+    /// physical time.
+    pub fn key(&self) -> (Ts, Cycle, u64) {
+        (self.ts, self.commit_cycle, self.seq)
+    }
+}
+
+/// Growable access log, one per simulation when checking is enabled.
+#[derive(Debug, Default)]
+pub struct AccessLog {
+    pub records: Vec<LogRecord>,
+}
+
+impl AccessLog {
+    pub fn push(&mut self, r: LogRecord) -> usize {
+        self.records.push(r);
+        self.records.len() - 1
+    }
+
+    /// Rewrite a speculated load's outcome after a failed renewal (the
+    /// core re-executes; the committed value is the corrected one).
+    pub fn fix_speculation(&mut self, idx: usize, value: u64, ts: Ts, cycle: Cycle, seq: u64) {
+        let r = &mut self.records[idx];
+        r.value_read = Some(value);
+        r.ts = ts;
+        r.commit_cycle = cycle;
+        r.seq = seq;
+    }
+
+    /// Squash a record: it belonged to a rolled-back speculation window
+    /// and the core re-executed the operation.
+    pub fn squash(&mut self, idx: usize) {
+        self.records[idx].valid = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+}
+
+/// A detected consistency violation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// Rule 1: a core's timestamps went backwards.
+    ProgramOrder { core: CoreId, at_seq: u64 },
+    /// Rule 2: a load saw a value other than the latest preceding
+    /// write in the physiological order.
+    StaleRead { core: CoreId, addr: LineAddr, expected: u64, got: u64, at_seq: u64 },
+    /// Two successful lock acquires without an intervening release.
+    LockOverlap { addr: LineAddr, first: CoreId, second: CoreId },
+}
+
+/// Summary of a clean check.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CheckReport {
+    pub records: usize,
+    pub addresses: usize,
+    pub loads_checked: usize,
+}
+
+/// Run all checks over a log.  Lock alternation runs before value
+/// order: overlapping lock acquires always also manifest as a stale
+/// read of the lock word, and the more specific violation is the
+/// useful diagnosis.
+pub fn check(log: &AccessLog) -> Result<CheckReport, Violation> {
+    check_program_order(log)?;
+    check_lock_alternation(log)?;
+    check_value_order(log)
+}
+
+/// Rule 1: per-core monotonic physiological keys in program order
+/// (records are appended in commit order, which equals program order
+/// per core).
+fn check_program_order(log: &AccessLog) -> Result<(), Violation> {
+    let mut last: HashMap<CoreId, (Ts, Cycle, u64)> = HashMap::new();
+    for r in log.records.iter().filter(|r| r.valid) {
+        let key = r.key();
+        if let Some(prev) = last.get(&r.core) {
+            if key < *prev {
+                return Err(Violation::ProgramOrder { core: r.core, at_seq: r.seq });
+            }
+        }
+        last.insert(r.core, key);
+    }
+    Ok(())
+}
+
+/// Rule 2: sort per address by physiological key; each read must see
+/// the preceding write's value (memory starts zeroed).
+fn check_value_order(log: &AccessLog) -> Result<CheckReport, Violation> {
+    let mut by_addr: HashMap<LineAddr, Vec<&LogRecord>> = HashMap::new();
+    for r in log.records.iter().filter(|r| r.valid) {
+        by_addr.entry(r.addr).or_default().push(r);
+    }
+    let mut loads_checked = 0;
+    for (addr, mut recs) in by_addr.iter_mut().map(|(a, v)| (*a, std::mem::take(v))) {
+        recs.sort_by_key(|r| r.key());
+        let mut current: u64 = 0;
+        for r in recs {
+            if let Some(read) = r.value_read {
+                if read != current {
+                    return Err(Violation::StaleRead {
+                        core: r.core,
+                        addr,
+                        expected: current,
+                        got: read,
+                        at_seq: r.seq,
+                    });
+                }
+                loads_checked += 1;
+            }
+            if let Some(written) = r.value_written {
+                current = written;
+            }
+        }
+    }
+    Ok(CheckReport {
+        records: log.records.len(),
+        addresses: by_addr.len(),
+        loads_checked,
+    })
+}
+
+/// Mutual exclusion: per lock word, successful test-and-set acquires
+/// (old 0 -> 1) and releases (store 0) must alternate in physical
+/// commit order.
+fn check_lock_alternation(log: &AccessLog) -> Result<(), Violation> {
+    use crate::types::{region_of, Region};
+    let mut holder: HashMap<LineAddr, CoreId> = HashMap::new();
+    let mut recs: Vec<&LogRecord> = log
+        .records
+        .iter()
+        .filter(|r| r.valid && region_of(r.addr) == Region::Lock)
+        .collect();
+    recs.sort_by_key(|r| (r.commit_cycle, r.seq));
+    for r in recs {
+        let acquired = r.value_read == Some(0) && r.value_written == Some(1);
+        let released = r.value_read.is_none() && r.value_written == Some(0);
+        if acquired {
+            if let Some(&h) = holder.get(&r.addr) {
+                return Err(Violation::LockOverlap { addr: r.addr, first: h, second: r.core });
+            }
+            holder.insert(r.addr, r.core);
+        } else if released {
+            holder.remove(&r.addr);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::LOCK_BASE;
+
+    fn rec(core: CoreId, addr: LineAddr, rd: Option<u64>, wr: Option<u64>, ts: Ts, cyc: Cycle, seq: u64) -> LogRecord {
+        LogRecord { core, pc: 0, addr, value_read: rd, value_written: wr, ts, commit_cycle: cyc, seq, valid: true }
+    }
+
+    #[test]
+    fn clean_log_passes() {
+        let mut log = AccessLog::default();
+        log.push(rec(0, 1, None, Some(7), 1, 10, 1));
+        log.push(rec(1, 1, Some(7), None, 2, 20, 2));
+        let r = check(&log).unwrap();
+        assert_eq!(r.loads_checked, 1);
+    }
+
+    #[test]
+    fn initial_zero_read_ok() {
+        let mut log = AccessLog::default();
+        log.push(rec(0, 5, Some(0), None, 0, 1, 1));
+        assert!(check(&log).is_ok());
+    }
+
+    #[test]
+    fn stale_read_detected() {
+        let mut log = AccessLog::default();
+        log.push(rec(0, 1, None, Some(7), 1, 10, 1));
+        // Load logically AFTER the store (ts 2) but saw the old value.
+        log.push(rec(1, 1, Some(0), None, 2, 20, 2));
+        assert!(matches!(check(&log), Err(Violation::StaleRead { .. })));
+    }
+
+    #[test]
+    fn old_value_at_earlier_timestamp_is_legal() {
+        // The Tardis signature: a load at a SMALLER logical time may
+        // read the old value even if it commits later in physical time.
+        let mut log = AccessLog::default();
+        log.push(rec(0, 1, None, Some(7), 10, 5, 1));
+        log.push(rec(1, 1, Some(0), None, 3, 50, 2)); // physically later, logically earlier
+        assert!(check(&log).is_ok());
+    }
+
+    #[test]
+    fn program_order_violation_detected() {
+        let mut log = AccessLog::default();
+        log.push(rec(0, 1, Some(0), None, 5, 10, 1));
+        log.push(rec(0, 2, Some(0), None, 3, 11, 2)); // ts went backwards
+        assert!(matches!(check(&log), Err(Violation::ProgramOrder { core: 0, .. })));
+    }
+
+    #[test]
+    fn atomic_read_and_write_both_checked() {
+        let mut log = AccessLog::default();
+        log.push(rec(0, 1, None, Some(5), 1, 1, 1));
+        log.push(rec(1, 1, Some(5), Some(6), 2, 2, 2)); // atomic sees 5, writes 6
+        log.push(rec(0, 1, Some(6), None, 3, 3, 3));
+        assert!(check(&log).is_ok());
+    }
+
+    #[test]
+    fn lock_overlap_detected() {
+        let l = LOCK_BASE + 1;
+        let mut log = AccessLog::default();
+        log.push(rec(0, l, Some(0), Some(1), 1, 1, 1)); // core 0 acquires
+        log.push(rec(1, l, Some(0), Some(1), 2, 2, 2)); // core 1 also "acquires"
+        assert!(matches!(check(&log), Err(Violation::LockOverlap { .. })));
+    }
+
+    #[test]
+    fn lock_alternation_clean() {
+        let l = LOCK_BASE;
+        let mut log = AccessLog::default();
+        log.push(rec(0, l, Some(0), Some(1), 1, 1, 1));
+        log.push(rec(0, l, None, Some(0), 2, 2, 2)); // release
+        log.push(rec(1, l, Some(0), Some(1), 3, 3, 3));
+        assert!(check(&log).is_ok());
+    }
+
+    #[test]
+    fn speculation_fixup_rewrites_record() {
+        let mut log = AccessLog::default();
+        let idx = log.push(rec(0, 1, Some(0), None, 1, 1, 1));
+        log.push(rec(1, 1, None, Some(9), 2, 2, 2));
+        log.fix_speculation(idx, 9, 3, 5, 3);
+        assert!(check(&log).is_ok());
+        assert_eq!(log.records[idx].value_read, Some(9));
+    }
+}

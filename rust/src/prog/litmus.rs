@@ -1,0 +1,173 @@
+//! Litmus tests: small multi-core programs with enumerated
+//! SC-allowed outcomes.  Includes the paper's Listing 1 (store
+//! buffering — the A=B=0 outcome Tardis must forbid, §III-C3/§III-D2)
+//! and the §V case-study program (Listing 2).
+
+use super::{load, store, Op, Program, Workload};
+use crate::types::{LineAddr, SHARED_BASE};
+
+/// Addresses used by the litmus programs (distinct shared lines).
+pub const A: LineAddr = SHARED_BASE + 0x10;
+pub const B: LineAddr = SHARED_BASE + 0x21;
+pub const F: LineAddr = SHARED_BASE + 0x32;
+
+/// A named litmus test: programs plus a predicate over the observed
+/// load values (keyed by (core, pc)) deciding whether an outcome is
+/// SC-legal.
+pub struct Litmus {
+    pub name: &'static str,
+    pub workload: Workload,
+    /// The (core, pc) pairs whose loaded values form the outcome tuple.
+    pub observed: Vec<(u32, u32)>,
+    /// SC-legality of an outcome tuple (same order as `observed`).
+    pub allowed: fn(&[u64]) -> bool,
+}
+
+/// Store buffering (paper Listing 1):
+///   C0: A = 1; r0 = B          C1: B = 1; r1 = A
+/// SC forbids r0 = r1 = 0.
+pub fn store_buffering() -> Litmus {
+    Litmus {
+        name: "SB",
+        workload: Workload::new(vec![
+            Program::new(vec![store(A, 1), load(B)]),
+            Program::new(vec![store(B, 1), load(A)]),
+        ]),
+        observed: vec![(0, 1), (1, 1)],
+        allowed: |v| !(v[0] == 0 && v[1] == 0),
+    }
+}
+
+/// Message passing:
+///   C0: A = 1; F = 1           C1: r0 = F; r1 = A
+/// SC forbids r0 = 1 && r1 = 0.
+pub fn message_passing() -> Litmus {
+    Litmus {
+        name: "MP",
+        workload: Workload::new(vec![
+            Program::new(vec![store(A, 1), store(F, 1)]),
+            Program::new(vec![load(F), load(A)]),
+        ]),
+        observed: vec![(1, 0), (1, 1)],
+        allowed: |v| !(v[0] == 1 && v[1] == 0),
+    }
+}
+
+/// Load buffering:
+///   C0: r0 = A; B = 1          C1: r1 = B; A = 1
+/// SC forbids r0 = r1 = 1.
+pub fn load_buffering() -> Litmus {
+    Litmus {
+        name: "LB",
+        workload: Workload::new(vec![
+            Program::new(vec![load(A), store(B, 1)]),
+            Program::new(vec![load(B), store(A, 1)]),
+        ]),
+        observed: vec![(0, 0), (1, 0)],
+        allowed: |v| !(v[0] == 1 && v[1] == 1),
+    }
+}
+
+/// Independent reads of independent writes (4 cores).
+/// SC forbids the two readers disagreeing on the write order:
+/// r0=1,r1=0 together with r2=1,r3=0.
+pub fn iriw() -> Litmus {
+    Litmus {
+        name: "IRIW",
+        workload: Workload::new(vec![
+            Program::new(vec![store(A, 1)]),
+            Program::new(vec![store(B, 1)]),
+            Program::new(vec![load(A), load(B)]),
+            Program::new(vec![load(B), load(A)]),
+        ]),
+        observed: vec![(2, 0), (2, 1), (3, 0), (3, 1)],
+        allowed: |v| {
+            // v = [rA@c2, rB@c2, rB@c3, rA@c3]
+            !(v[0] == 1 && v[1] == 0 && v[2] == 1 && v[3] == 0)
+        },
+    }
+}
+
+/// Coherence (same-location) test: both readers of one location must
+/// agree with some single write order — reading 2-then-1 on one core
+/// and 1-then-2 on another is forbidden.
+pub fn coherence_co() -> Litmus {
+    Litmus {
+        name: "CO",
+        workload: Workload::new(vec![
+            Program::new(vec![store(A, 1)]),
+            Program::new(vec![store(A, 2)]),
+            Program::new(vec![load(A), load(A)]),
+            Program::new(vec![load(A), load(A)]),
+        ]),
+        observed: vec![(2, 0), (2, 1), (3, 0), (3, 1)],
+        allowed: |v| {
+            let fwd = |x: u64, y: u64| !(x == 2 && y == 1);
+            let rev = |x: u64, y: u64| !(x == 1 && y == 2);
+            // Both readers must be consistent with a single order.
+            (fwd(v[0], v[1]) && fwd(v[2], v[3])) || (rev(v[0], v[1]) && rev(v[2], v[3]))
+        },
+    }
+}
+
+/// The §V case-study program (Listing 2):
+///   C0: L(B); A=1; L(A); L(B); A=3     C1: nop; B=2; L(A); B=4
+/// (the nop is modeled as a 1-cycle gap before B=2).
+pub fn case_study() -> Workload {
+    Workload::new(vec![
+        Program::new(vec![
+            load(B),
+            store(A, 1),
+            load(A),
+            load(B),
+            store(A, 3),
+        ]),
+        Program::new(vec![
+            Op::Store { addr: B, value: Some(2), gap: 1 },
+            load(A),
+            store(B, 4),
+        ]),
+    ])
+}
+
+/// All outcome-checked litmus tests.
+pub fn all() -> Vec<Litmus> {
+    vec![store_buffering(), message_passing(), load_buffering(), iriw(), coherence_co()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sb_forbids_zero_zero() {
+        let l = store_buffering();
+        assert!(!(l.allowed)(&[0, 0]));
+        assert!((l.allowed)(&[1, 0]));
+        assert!((l.allowed)(&[0, 1]));
+        assert!((l.allowed)(&[1, 1]));
+    }
+
+    #[test]
+    fn mp_forbids_flag_without_data() {
+        let l = message_passing();
+        assert!(!(l.allowed)(&[1, 0]));
+        assert!((l.allowed)(&[0, 0]));
+        assert!((l.allowed)(&[1, 1]));
+    }
+
+    #[test]
+    fn co_rejects_disagreeing_readers() {
+        let l = coherence_co();
+        assert!(!(l.allowed)(&[2, 1, 1, 2]));
+        assert!((l.allowed)(&[1, 2, 1, 2]));
+        assert!((l.allowed)(&[2, 2, 1, 2])); // reader saw 2 then 2: fine
+    }
+
+    #[test]
+    fn distinct_addresses() {
+        assert_ne!(A, B);
+        assert_ne!(B, F);
+        assert_ne!(A, F);
+    }
+}

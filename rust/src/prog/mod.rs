@@ -1,0 +1,139 @@
+//! Simulated programs: the per-core operation streams the cores
+//! execute, matching the trace format produced by the AOT tracegen
+//! artifacts (python/compile/kernels/spec.py).
+
+pub mod checker;
+pub mod litmus;
+
+use crate::types::{CoreId, LineAddr};
+
+/// One program operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Load `addr` after `gap` compute cycles.
+    Load { addr: LineAddr, gap: u32 },
+    /// Store `value` to `addr` after `gap` compute cycles.  A value of
+    /// `None` means "use the core's unique per-op value" (trace stores).
+    Store { addr: LineAddr, value: Option<u64>, gap: u32 },
+    /// Acquire the test-and-test-and-set spin lock at `addr`.
+    Lock { addr: LineAddr },
+    /// Release the spin lock at `addr`.
+    Unlock { addr: LineAddr },
+    /// Sense-reversing global barrier.
+    Barrier,
+}
+
+impl Op {
+    pub fn addr(&self) -> LineAddr {
+        match *self {
+            Op::Load { addr, .. }
+            | Op::Store { addr, .. }
+            | Op::Lock { addr }
+            | Op::Unlock { addr } => addr,
+            Op::Barrier => crate::types::BARRIER_BASE,
+        }
+    }
+}
+
+/// One core's instruction stream.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub ops: Vec<Op>,
+}
+
+impl Program {
+    pub fn new(ops: Vec<Op>) -> Self {
+        Self { ops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// A multi-core workload: one program per core.
+#[derive(Debug, Clone, Default)]
+pub struct Workload {
+    pub programs: Vec<Program>,
+}
+
+impl Workload {
+    pub fn new(programs: Vec<Program>) -> Self {
+        Self { programs }
+    }
+
+    pub fn n_cores(&self) -> u32 {
+        self.programs.len() as u32
+    }
+
+    /// Total operation count across cores.
+    pub fn total_ops(&self) -> usize {
+        self.programs.iter().map(|p| p.len()).sum()
+    }
+
+    /// The unique value written by core `core`'s trace store at `pc`
+    /// (distinguishable across all (core, pc) pairs — the SC checker
+    /// relies on global uniqueness).
+    pub fn store_value(core: CoreId, pc: usize) -> u64 {
+        ((core as u64 + 1) << 32) | pc as u64
+    }
+}
+
+/// Tiny builder DSL used by litmus tests and unit tests.
+pub fn load(addr: LineAddr) -> Op {
+    Op::Load { addr, gap: 0 }
+}
+
+pub fn store(addr: LineAddr, value: u64) -> Op {
+    Op::Store { addr, value: Some(value), gap: 0 }
+}
+
+pub fn lock(addr: LineAddr) -> Op {
+    Op::Lock { addr }
+}
+
+pub fn unlock(addr: LineAddr) -> Op {
+    Op::Unlock { addr }
+}
+
+pub fn barrier() -> Op {
+    Op::Barrier
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_values_globally_unique() {
+        use std::collections::HashSet;
+        let mut seen = HashSet::new();
+        for core in 0..8u32 {
+            for pc in 0..100usize {
+                assert!(seen.insert(Workload::store_value(core, pc)));
+            }
+        }
+    }
+
+    #[test]
+    fn op_addr_accessor() {
+        assert_eq!(load(5).addr(), 5);
+        assert_eq!(store(7, 1).addr(), 7);
+        assert_eq!(lock(9).addr(), 9);
+        assert_eq!(barrier().addr(), crate::types::BARRIER_BASE);
+    }
+
+    #[test]
+    fn workload_totals() {
+        let w = Workload::new(vec![
+            Program::new(vec![load(1), store(2, 0)]),
+            Program::new(vec![load(3)]),
+        ]);
+        assert_eq!(w.n_cores(), 2);
+        assert_eq!(w.total_ops(), 3);
+    }
+}

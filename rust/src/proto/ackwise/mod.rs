@@ -1,0 +1,62 @@
+//! Ackwise-k (paper [11], §VI-A): the scalable directory baseline — a
+//! limited-pointer directory that broadcasts invalidations once the
+//! sharer count exceeds its pointer budget.  Implemented as the MSI
+//! directory with `ptr_limit = Some(k)`; this module provides the
+//! protocol-kind wrapper.
+
+use crate::config::SystemConfig;
+use crate::net::Message;
+use crate::proto::{AccessOutcome, Coherence, MemOp, ProtoCtx, SpinHint};
+use crate::types::{CoreId, LineAddr, Ts};
+
+use super::msi::Msi;
+
+/// Ackwise-k protocol.
+pub struct Ackwise(Msi);
+
+impl Ackwise {
+    pub fn new(sys: &SystemConfig) -> Self {
+        Self(Msi::with_limit(sys, Some(sys.ackwise.num_pointers)))
+    }
+}
+
+impl Coherence for Ackwise {
+    fn core_access(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        op: MemOp,
+        spec_ok: bool,
+        ctx: &mut ProtoCtx,
+    ) -> AccessOutcome {
+        self.0.core_access(core, addr, op, spec_ok, ctx)
+    }
+
+    fn on_message(&mut self, msg: Message, ctx: &mut ProtoCtx) {
+        self.0.on_message(msg, ctx)
+    }
+
+    fn spin_hint(&mut self, core: CoreId, addr: LineAddr, ctx: &mut ProtoCtx) -> SpinHint {
+        self.0.spin_hint(core, addr, ctx)
+    }
+
+    fn probe(&self, core: CoreId, addr: LineAddr) -> crate::proto::Probe {
+        self.0.probe(core, addr)
+    }
+
+    fn commit_check(&mut self, core: CoreId, addr: LineAddr, early: bool, bound: u64) -> Option<Ts> {
+        self.0.commit_check(core, addr, early, bound)
+    }
+
+    fn llc_storage_bits(&self, n_cores: u32) -> u64 {
+        self.0.llc_storage_bits(n_cores)
+    }
+
+    fn l1_storage_bits(&self) -> u64 {
+        self.0.l1_storage_bits()
+    }
+
+    fn name(&self) -> &'static str {
+        "ackwise"
+    }
+}

@@ -1,0 +1,209 @@
+//! Coherence-protocol abstraction.  The engine, cores, and NoC are
+//! protocol-agnostic; Tardis, full-map MSI, and Ackwise all implement
+//! [`Coherence`] and run on the identical substrate.
+
+pub mod ackwise;
+pub mod msi;
+pub mod tardis;
+
+use crate::net::Message;
+use crate::stats::SimStats;
+use crate::types::{CoreId, Cycle, LineAddr, Ts};
+
+/// A memory operation issued by a core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemOp {
+    Load,
+    Store { value: u64 },
+    /// Atomic test-and-set: writes 1, returns the old value.
+    Tas,
+    /// Atomic fetch-and-add: returns the old value.
+    FetchAdd { delta: u64 },
+}
+
+impl MemOp {
+    /// Does this op require exclusive ownership?
+    pub fn is_write(&self) -> bool {
+        !matches!(self, MemOp::Load)
+    }
+
+    /// Value written, given the old line value (None for loads).
+    pub fn write_value(&self, old: u64) -> Option<u64> {
+        match self {
+            MemOp::Load => None,
+            MemOp::Store { value } => Some(*value),
+            MemOp::Tas => Some(1),
+            MemOp::FetchAdd { delta } => Some(old.wrapping_add(*delta)),
+        }
+    }
+}
+
+/// A finished access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessDone {
+    /// Value observed: for loads the loaded value, for atomics the
+    /// *old* value, for stores the value written.
+    pub value: u64,
+    /// Logical timestamp assigned to the operation (Tardis); 0 for
+    /// directory protocols (they order by physical time).
+    pub ts: Ts,
+    /// Extra cycles beyond the 1-cycle L1 access (e.g., rebase stall).
+    pub extra_cycles: Cycle,
+}
+
+/// Outcome of [`Coherence::core_access`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessOutcome {
+    /// L1 hit: completed now.
+    Done(AccessDone),
+    /// Miss: the protocol sent messages and will push a [`Completion`]
+    /// when the access finishes.
+    Pending,
+    /// Tardis speculation (§IV-A): the expired value is returned now
+    /// and a renewal is in flight.  If the renewal fails, a
+    /// [`Completion`] with `misspec = true` follows carrying the
+    /// corrected value.
+    SpecDone(AccessDone),
+}
+
+/// Pushed by the protocol into [`ProtoCtx`] when a pending access (or
+/// speculation outcome) resolves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    pub core: CoreId,
+    pub addr: LineAddr,
+    pub kind: CompletionKind,
+    /// Observed value (same convention as [`AccessDone::value`]).
+    pub value: u64,
+    pub ts: Ts,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionKind {
+    /// A pending demand access finished.
+    Demand,
+    /// A speculated renewal failed: the core must roll back and adopt
+    /// the corrected value.
+    Misspec,
+    /// A watched line was invalidated/updated — wake a spinning core.
+    SpinWake,
+    /// A speculative renewal succeeded: the value the core ran ahead
+    /// with was current.
+    SpecOk,
+}
+
+/// Non-mutating L1 probe (used by the in-order core to gate issue
+/// while a speculation window is open).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    /// Would hit in the L1.
+    Hit,
+    /// Expired shared line: a load would speculate through a renewal.
+    Spec,
+    /// Would miss (demand request).
+    Miss,
+}
+
+/// What a spinning core should do after observing an unsatisfying
+/// value (see `Coherence::spin_hint`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpinHint {
+    /// Line not locally valid — re-issue the load after a poll interval.
+    Retry,
+    /// Line cached and valid indefinitely; the protocol will push a
+    /// `SpinWake` completion when it is invalidated or flushed
+    /// (directory protocols, or Tardis exclusive lines).
+    WaitInvalidate,
+    /// Tardis: the line is leased until `rts`; spinning loads count as
+    /// L1 accesses, so the core's own self-increment advances `pts`
+    /// past the lease after `spins_needed` polls (§III-E).  The
+    /// protocol has already applied the pts bump + stats.
+    ExpiresAfterSelfInc { spins_needed: u64 },
+}
+
+/// Side-effect sink handed to the protocol on every call.  The engine
+/// drains `msgs` into the event queue (adding mesh latency + traffic
+/// accounting) and dispatches `completions` to cores.
+pub struct ProtoCtx<'a> {
+    pub now: Cycle,
+    pub msgs: &'a mut Vec<Message>,
+    pub completions: &'a mut Vec<Completion>,
+    pub stats: &'a mut SimStats,
+}
+
+impl<'a> ProtoCtx<'a> {
+    pub fn send(&mut self, msg: Message) {
+        self.msgs.push(msg);
+    }
+
+    pub fn complete(&mut self, c: Completion) {
+        self.completions.push(c);
+    }
+}
+
+/// A coherence protocol: the paired private-cache controllers and LLC
+/// slice managers (timestamp manager or directory), owning all cache
+/// state.
+pub trait Coherence {
+    /// A core issues a memory operation.  `spec_ok` permits Tardis to
+    /// answer an expired load speculatively (spin loads and atomics
+    /// pass false).
+    fn core_access(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        op: MemOp,
+        spec_ok: bool,
+        ctx: &mut ProtoCtx,
+    ) -> AccessOutcome;
+
+    /// Deliver a network message to its destination controller.
+    fn on_message(&mut self, msg: Message, ctx: &mut ProtoCtx);
+
+    /// Ask how a core should wait while spinning on `addr` after an
+    /// unsatisfying load.  May mutate protocol state (Tardis advances
+    /// pts by the self-increments the spin loop would perform;
+    /// directory protocols register an invalidation watcher).
+    fn spin_hint(&mut self, core: CoreId, addr: LineAddr, ctx: &mut ProtoCtx) -> SpinHint;
+
+    /// Non-mutating probe: how would a load to `addr` fare right now?
+    fn probe(&self, core: CoreId, addr: LineAddr) -> Probe;
+
+    /// Commit-time validation of a load (out-of-order cores, §III-D).
+    /// `early` = the value was bound before the load reached the ROB
+    /// head; `bound` = the value the load returned at execution.
+    /// Returns the logical timestamp to commit at, or None if the load
+    /// must re-execute.  Tardis re-derives ts = max(pts, wts) and
+    /// checks the lease; both protocols additionally require the
+    /// line's current value to match the bound value (value-based
+    /// replay — the line may have been invalidated and refilled with
+    /// newer data between execution and commit).  Head-bound values
+    /// are safe in directory protocols: a conflicting store cannot
+    /// complete before its invalidation round-trip.
+    fn commit_check(&mut self, core: CoreId, addr: LineAddr, early: bool, bound: u64)
+        -> Option<Ts>;
+
+    /// Per-LLC-line coherence storage in bits (paper Table VII).
+    fn llc_storage_bits(&self, n_cores: u32) -> u64;
+
+    /// Per-L1-line coherence storage in bits beyond the baseline tag.
+    fn l1_storage_bits(&self) -> u64;
+
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memop_write_semantics() {
+        assert!(!MemOp::Load.is_write());
+        assert!(MemOp::Tas.is_write());
+        assert_eq!(MemOp::Load.write_value(7), None);
+        assert_eq!(MemOp::Store { value: 3 }.write_value(7), Some(3));
+        assert_eq!(MemOp::Tas.write_value(0), Some(1));
+        assert_eq!(MemOp::Tas.write_value(1), Some(1));
+        assert_eq!(MemOp::FetchAdd { delta: 2 }.write_value(7), Some(9));
+    }
+}

@@ -1,0 +1,390 @@
+//! MSI / Ackwise directory slice: sharer tracking, invalidation
+//! collection, owner round-trips, DRAM fills, LLC evictions.
+
+use std::collections::VecDeque;
+
+use super::sharers::InvTargets;
+use super::*;
+use crate::mem::addr::home_mc;
+
+impl Msi {
+    pub(crate) fn dir_on_message(&mut self, slice: SliceId, msg: Message, ctx: &mut ProtoCtx) {
+        match msg.kind {
+            MsgKind::GetS => {
+                ctx.stats.llc_accesses += 1;
+                self.dir_request(slice, msg.addr, DirReq { core: msg.requester, write: false }, ctx);
+            }
+            MsgKind::GetX => {
+                ctx.stats.llc_accesses += 1;
+                self.dir_request(slice, msg.addr, DirReq { core: msg.requester, write: true }, ctx);
+            }
+            MsgKind::PutS => self.dir_put_s(slice, msg, ctx),
+            MsgKind::PutM { value } => self.dir_owner_data(slice, msg.addr, msg.src, value, true, ctx),
+            MsgKind::DownRep { value } => {
+                self.dir_owner_data(slice, msg.addr, msg.src, value, false, ctx)
+            }
+            MsgKind::DirFlushRep { value } => {
+                self.dir_owner_data(slice, msg.addr, msg.src, value, true, ctx)
+            }
+            MsgKind::InvAck => self.dir_inv_ack(slice, msg.addr, ctx),
+            MsgKind::DramLdRep { value } => self.dir_install(slice, msg.addr, value, ctx),
+            other => panic!("directory got unexpected message {other:?}"),
+        }
+    }
+
+    fn dir_request(&mut self, slice: SliceId, addr: LineAddr, req: DirReq, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        if let Some(p) = self.dir[s].pending.get_mut(&addr) {
+            p.waiters.push_back(req);
+            return;
+        }
+        self.dir_process(slice, addr, req, ctx);
+    }
+
+    fn dir_process(&mut self, slice: SliceId, addr: LineAddr, req: DirReq, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        if self.dir[s].cache.peek(addr).is_none() {
+            // Fetch from DRAM.
+            let mut p = DirPending::new(DirPendKind::Fetch);
+            p.waiters.push_back(req);
+            self.dir[s].pending.insert(addr, p);
+            ctx.stats.dram_accesses += 1;
+            let mc = home_mc(addr, 8);
+            ctx.send(Message {
+                src: Node::Slice(slice),
+                dst: Node::Mc(mc),
+                addr,
+                requester: req.core,
+                kind: MsgKind::DramLdReq,
+            });
+            return;
+        }
+
+        let (owner, was_sharer, others_empty) = {
+            let line = self.dir[s].cache.get_mut(addr).unwrap();
+            // GrantX (no data) requires *certain* knowledge that the
+            // requester holds a copy; Ackwise Global mode cannot vouch.
+            let was_sharer = line.sharers.contains_certain(req.core);
+            let others_empty = match &line.sharers {
+                Sharers::Global { .. } => false, // must broadcast
+                s => {
+                    let mut others = s.clone();
+                    others.remove(req.core);
+                    others.is_empty()
+                }
+            };
+            (line.owner, was_sharer, others_empty)
+        };
+
+        match (req.write, owner) {
+            // ---- Read, uncached or shared ----
+            (false, None) => {
+                let line = self.dir[s].cache.get_mut(addr).unwrap();
+                line.sharers.add(req.core);
+                let value = line.value;
+                ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::DataS { value }));
+            }
+            // ---- Read, owned: downgrade the owner ----
+            (false, Some(owner)) => {
+                let line = self.dir[s].cache.get_mut(addr).unwrap();
+                line.busy = true;
+                let mut p = DirPending::new(DirPendKind::AwaitDown);
+                p.waiters.push_back(req);
+                self.dir[s].pending.insert(addr, p);
+                ctx.send(to_core(slice, owner, addr, req.core, MsgKind::DownReq));
+            }
+            // ---- Write, no owner ----
+            (true, None) => {
+                if others_empty {
+                    // No other sharers: grant immediately.
+                    let line = self.dir[s].cache.get_mut(addr).unwrap();
+                    line.sharers.clear();
+                    line.owner = Some(req.core);
+                    let value = line.value;
+                    if was_sharer {
+                        ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::GrantX));
+                    } else {
+                        ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::DataX { value }));
+                    }
+                } else {
+                    // Invalidate every other sharer, then grant.
+                    self.dir_send_invs(slice, addr, Some(req.core), false, req, ctx);
+                }
+            }
+            // ---- Write, owned: flush the owner ----
+            (true, Some(owner)) => {
+                let line = self.dir[s].cache.get_mut(addr).unwrap();
+                line.busy = true;
+                let mut p = DirPending::new(DirPendKind::AwaitFlush);
+                p.waiters.push_back(req);
+                self.dir[s].pending.insert(addr, p);
+                ctx.send(to_core(slice, owner, addr, req.core, MsgKind::DirFlushReq));
+            }
+        }
+    }
+
+    /// Send invalidations to all sharers except `except`; create the
+    /// ack-collection pending entry (for a GetX or an LLC eviction).
+    fn dir_send_invs(
+        &mut self,
+        slice: SliceId,
+        addr: LineAddr,
+        except: Option<CoreId>,
+        evicting: bool,
+        req: DirReq,
+        ctx: &mut ProtoCtx,
+    ) {
+        let s = slice as usize;
+        let targets = {
+            let line = self.dir[s].cache.get_mut(addr).unwrap();
+            line.busy = true;
+            line.sharers.inv_targets(except)
+        };
+        let (count, list): (u32, Vec<CoreId>) = match targets {
+            InvTargets::List(list) => (list.len() as u32, list),
+            InvTargets::Broadcast => {
+                // Ackwise overflow: invalidate every core (except the
+                // requester); all of them ack.
+                ctx.stats.broadcasts += 1;
+                let list: Vec<CoreId> =
+                    (0..self.n_cores).filter(|&c| Some(c) != except).collect();
+                (list.len() as u32, list)
+            }
+        };
+        debug_assert!(count > 0, "inv fan-out of zero");
+        ctx.stats.invalidations_sent += count as u64;
+        for core in list {
+            ctx.send(to_core(slice, core, addr, req.core, MsgKind::Inv));
+        }
+        let kind = if evicting {
+            DirPendKind::EvictInvAcks { left: count }
+        } else {
+            DirPendKind::AwaitInvAcks { left: count }
+        };
+        let mut p = DirPending::new(kind);
+        if !evicting {
+            p.waiters.push_back(req);
+        }
+        self.dir[s].pending.insert(addr, p);
+    }
+
+    fn dir_inv_ack(&mut self, slice: SliceId, addr: LineAddr, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        let Some(p) = self.dir[s].pending.get_mut(&addr) else {
+            return; // stray ack (PutS crossed an Inv)
+        };
+        let done = match &mut p.kind {
+            DirPendKind::AwaitInvAcks { left } | DirPendKind::EvictInvAcks { left } => {
+                *left -= 1;
+                *left == 0
+            }
+            _ => false,
+        };
+        if !done {
+            return;
+        }
+        let mut p = self.dir[s].pending.remove(&addr).unwrap();
+        match p.kind {
+            DirPendKind::AwaitInvAcks { .. } => {
+                // All copies gone: grant exclusivity to the head waiter.
+                let req = p.waiters.pop_front().expect("GetX waiter");
+                {
+                    let line = self.dir[s].cache.get_mut(addr).unwrap();
+                    line.busy = false;
+                    let was_sharer = line.sharers.contains_certain(req.core);
+                    line.sharers.clear();
+                    line.owner = Some(req.core);
+                    let value = line.value;
+                    if was_sharer {
+                        ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::GrantX));
+                    } else {
+                        ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::DataX { value }));
+                    }
+                }
+                self.dir_drain(slice, addr, p.waiters, ctx);
+            }
+            DirPendKind::EvictInvAcks { .. } => {
+                // Eviction complete: write back, drop, retry the fill.
+                if let Some(line) = self.dir[s].cache.invalidate(addr) {
+                    self.dir_writeback(slice, addr, &line, ctx);
+                }
+                if let Some((fill_addr, fill_value)) = p.fill.take() {
+                    self.dir_install(slice, fill_addr, fill_value, ctx);
+                }
+                self.dir_drain(slice, addr, p.waiters, ctx);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Data returned by an owner (PutM / DownRep / DirFlushRep).
+    fn dir_owner_data(
+        &mut self,
+        slice: SliceId,
+        addr: LineAddr,
+        src: Node,
+        value: u64,
+        owner_gone: bool,
+        ctx: &mut ProtoCtx,
+    ) {
+        let s = slice as usize;
+        let src_core = match src {
+            Node::Core(c) => c,
+            _ => panic!("owner data from non-core"),
+        };
+        {
+            let Some(line) = self.dir[s].cache.peek_mut(addr) else {
+                // Owned line fell out of the directory: write through.
+                ctx.stats.dram_accesses += 1;
+                let mc = home_mc(addr, 8);
+                ctx.send(Message {
+                    src: Node::Slice(slice),
+                    dst: Node::Mc(mc),
+                    addr,
+                    requester: 0,
+                    kind: MsgKind::DramStReq { value },
+                });
+                return;
+            };
+            if line.owner != Some(src_core) {
+                return; // stale (already transferred)
+            }
+            line.owner = None;
+            line.busy = false;
+            line.value = value;
+            line.dirty = true;
+            if !owner_gone {
+                // Downgrade: the old owner remains a sharer.
+                line.sharers.add(src_core);
+            }
+        }
+        let Some(mut p) = self.dir[s].pending.remove(&addr) else {
+            return; // unsolicited PutM
+        };
+        match p.kind {
+            DirPendKind::AwaitDown | DirPendKind::AwaitFlush => {
+                self.dir_drain(slice, addr, p.waiters, ctx);
+            }
+            DirPendKind::EvictFlush => {
+                if let Some(line) = self.dir[s].cache.invalidate(addr) {
+                    self.dir_writeback(slice, addr, &line, ctx);
+                }
+                if let Some((fill_addr, fill_value)) = p.fill.take() {
+                    self.dir_install(slice, fill_addr, fill_value, ctx);
+                }
+                self.dir_drain(slice, addr, p.waiters, ctx);
+            }
+            _ => {
+                // A PutM raced with invalidations/fetch: keep waiting.
+                self.dir[s].pending.insert(addr, p);
+            }
+        }
+    }
+
+    /// Clean-eviction notification.
+    fn dir_put_s(&mut self, slice: SliceId, msg: Message, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        let Node::Core(core) = msg.src else { return };
+        if let Some(line) = self.dir[s].cache.peek_mut(msg.addr) {
+            line.sharers.remove(core);
+        }
+        let _ = ctx;
+    }
+
+    /// Install a DRAM fill, evicting if necessary.
+    fn dir_install(&mut self, slice: SliceId, addr: LineAddr, value: u64, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        let new_line = DirLine {
+            sharers: self.new_sharers(),
+            owner: None,
+            value,
+            dirty: false,
+            busy: false,
+        };
+        // Preferred victims: no sharers, no owner, not busy.
+        let res = self.dir[s].cache.insert_filtered(addr, new_line, |l| {
+            l.owner.is_none() && l.sharers.is_empty() && !l.busy
+        });
+        match res {
+            Ok(evicted) => {
+                if let Some((vaddr, v)) = evicted {
+                    self.dir_writeback(slice, vaddr, &v, ctx);
+                }
+                if let Some(p) = self.dir[s].pending.remove(&addr) {
+                    debug_assert_eq!(p.kind, DirPendKind::Fetch);
+                    self.dir_drain(slice, addr, p.waiters, ctx);
+                }
+            }
+            Err(_) => {
+                // Evict a line with sharers (invalidate them) or an
+                // owner (flush it); park the fill.
+                if let Some(vaddr) =
+                    self.dir[s].cache.victim_for(addr, |l| l.owner.is_none() && !l.busy)
+                {
+                    self.dir_send_invs(
+                        slice,
+                        vaddr,
+                        None,
+                        true,
+                        DirReq { core: 0, write: false },
+                        ctx,
+                    );
+                    self.dir[s].pending.get_mut(&vaddr).unwrap().fill = Some((addr, value));
+                } else if let Some(vaddr) =
+                    self.dir[s].cache.victim_for(addr, |l| l.owner.is_some() && !l.busy)
+                {
+                    let owner = {
+                        let line = self.dir[s].cache.peek_mut(vaddr).unwrap();
+                        line.busy = true;
+                        line.owner.unwrap()
+                    };
+                    let mut p = DirPending::new(DirPendKind::EvictFlush);
+                    p.fill = Some((addr, value));
+                    self.dir[s].pending.insert(vaddr, p);
+                    ctx.send(to_core(slice, owner, vaddr, owner, MsgKind::DirFlushReq));
+                } else {
+                    // Whole set busy: retry shortly.
+                    ctx.send(Message {
+                        src: Node::Slice(slice),
+                        dst: Node::Slice(slice),
+                        addr,
+                        requester: 0,
+                        kind: MsgKind::DramLdRep { value },
+                    });
+                }
+            }
+        }
+    }
+
+    fn dir_drain(
+        &mut self,
+        slice: SliceId,
+        addr: LineAddr,
+        mut waiters: VecDeque<DirReq>,
+        ctx: &mut ProtoCtx,
+    ) {
+        let s = slice as usize;
+        while let Some(req) = waiters.pop_front() {
+            self.dir_process(slice, addr, req, ctx);
+            if let Some(p) = self.dir[s].pending.get_mut(&addr) {
+                p.waiters.extend(waiters.drain(..));
+                return;
+            }
+        }
+    }
+
+    fn dir_writeback(&mut self, slice: SliceId, addr: LineAddr, line: &DirLine, ctx: &mut ProtoCtx) {
+        debug_assert!(line.owner.is_none() && line.sharers.is_empty());
+        if line.dirty {
+            ctx.stats.dram_accesses += 1;
+            let mc = home_mc(addr, 8);
+            ctx.send(Message {
+                src: Node::Slice(slice),
+                dst: Node::Mc(mc),
+                addr,
+                requester: 0,
+                kind: MsgKind::DramStReq { value: line.value },
+            });
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! MSI private-cache (L1) controller.
+
+use super::*;
+use crate::proto::AccessDone;
+
+impl Msi {
+    /// Core-side access.
+    pub(crate) fn l1_access(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        op: MemOp,
+        ctx: &mut ProtoCtx,
+    ) -> AccessOutcome {
+        let c = core as usize;
+        if self.l1[c].demand.contains_key(&addr) {
+            self.l1[c].demand.get_mut(&addr).unwrap().parked += 1;
+            return AccessOutcome::Pending;
+        }
+        let state = self.l1[c].cache.get_mut(addr).map(|l| l.m);
+        match (op, state) {
+            // Load hit (S or M).
+            (MemOp::Load, Some(_)) => {
+                ctx.stats.l1_hits += 1;
+                let value = self.l1[c].cache.peek(addr).unwrap().value;
+                AccessOutcome::Done(AccessDone { value, ts: 0, extra_cycles: 0 })
+            }
+            // Write hit (M).
+            (_, Some(true)) => {
+                ctx.stats.l1_hits += 1;
+                let line = self.l1[c].cache.get_mut(addr).unwrap();
+                let old = line.value;
+                let new = op.write_value(old).expect("write op");
+                line.value = new;
+                let observed = if matches!(op, MemOp::Store { .. }) { new } else { old };
+                AccessOutcome::Done(AccessDone { value: observed, ts: 0, extra_cycles: 0 })
+            }
+            // Write to S (upgrade) or any miss.
+            (_, state) => {
+                ctx.stats.l1_misses += 1;
+                let kind = if op.is_write() {
+                    if state == Some(false) {
+                        self.l1[c].cache.peek_mut(addr).unwrap().pinned = true;
+                    }
+                    MsgKind::GetX
+                } else {
+                    MsgKind::GetS
+                };
+                self.l1[c].demand.insert(addr, Demand { op, parked: 0 });
+                let slice = self.slice_of(addr);
+                ctx.send(to_slice(core, slice, addr, kind));
+                AccessOutcome::Pending
+            }
+        }
+    }
+
+    /// Network events at the private cache.
+    pub(crate) fn l1_on_message(&mut self, core: CoreId, msg: Message, ctx: &mut ProtoCtx) {
+        match msg.kind {
+            MsgKind::DataS { value } => self.l1_data(core, msg.addr, value, false, true, ctx),
+            MsgKind::DataX { value } => self.l1_data(core, msg.addr, value, true, true, ctx),
+            MsgKind::GrantX => self.l1_data(core, msg.addr, 0, true, false, ctx),
+            MsgKind::Inv => self.l1_inv(core, msg, ctx),
+            MsgKind::DownReq => self.l1_down_req(core, msg, ctx),
+            MsgKind::DirFlushReq => self.l1_flush_req(core, msg, ctx),
+            other => panic!("msi L1 got unexpected message {other:?}"),
+        }
+    }
+
+    /// Data (or data-less grant) response: fill, perform the blocked
+    /// op, complete.
+    fn l1_data(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        value: u64,
+        exclusive: bool,
+        carries_data: bool,
+        ctx: &mut ProtoCtx,
+    ) {
+        let c = core as usize;
+        let Some(demand) = self.l1[c].demand.remove(&addr) else {
+            return; // stale
+        };
+        let old_value = if carries_data {
+            value
+        } else {
+            let line = self.l1[c]
+                .cache
+                .peek_mut(addr)
+                .expect("GrantX for a line we no longer hold (pin violated)");
+            line.pinned = false;
+            line.value
+        };
+        let (observed, line) = match demand.op {
+            MemOp::Load => (
+                old_value,
+                MsiL1Line { m: exclusive, value: old_value, pinned: false },
+            ),
+            op => {
+                debug_assert!(exclusive, "write demand answered without exclusivity");
+                let new = op.write_value(old_value).expect("write op");
+                let observed = if matches!(op, MemOp::Store { .. }) { new } else { old_value };
+                (observed, MsiL1Line { m: true, value: new, pinned: false })
+            }
+        };
+        if carries_data && self.l1[c].cache.peek(addr).is_none() {
+            if !self.l1_fill(core, addr, line.clone(), ctx) {
+                // Bypass (every way pinned): the directory believes we
+                // hold this line — relinquish it immediately so its
+                // sharer/owner state stays truthful.
+                let slice = self.slice_of(addr);
+                let kind = if line.m { MsgKind::PutM { value: line.value } } else { MsgKind::PutS };
+                ctx.send(to_slice(core, slice, addr, kind));
+            }
+        } else {
+            *self.l1[c].cache.get_mut(addr).unwrap() = line;
+        }
+        ctx.complete(completion(core, addr, CompletionKind::Demand, observed));
+        for _ in 0..demand.parked {
+            ctx.complete(completion(core, addr, CompletionKind::SpinWake, 0));
+        }
+    }
+
+    /// Fill with eviction: S victims notify the directory (PutS — the
+    /// traffic Tardis avoids, §III-F1); M victims write back (PutM).
+    /// Returns false if the fill could not be cached (all ways pinned).
+    fn l1_fill(&mut self, core: CoreId, addr: LineAddr, line: MsiL1Line, ctx: &mut ProtoCtx) -> bool {
+        let c = core as usize;
+        let evicted = match self.l1[c].cache.insert_filtered(addr, line, |l| !l.pinned) {
+            Ok(v) => v,
+            Err(_) => return false, // all ways pinned: bypass
+        };
+        if let Some((vaddr, v)) = evicted {
+            let slice = self.slice_of(vaddr);
+            let kind = if v.m { MsgKind::PutM { value: v.value } } else { MsgKind::PutS };
+            ctx.send(to_slice(core, slice, vaddr, kind));
+        }
+        true
+    }
+
+    /// Directory invalidation: drop the line (any state), always ack.
+    fn l1_inv(&mut self, core: CoreId, msg: Message, ctx: &mut ProtoCtx) {
+        let c = core as usize;
+        self.l1[c].cache.invalidate(msg.addr);
+        let slice = self.slice_of(msg.addr);
+        ctx.send(to_slice(core, slice, msg.addr, MsgKind::InvAck));
+        if self.l1[c].watch == Some(msg.addr) {
+            self.l1[c].watch = None;
+            ctx.complete(completion(core, msg.addr, CompletionKind::SpinWake, 0));
+        }
+    }
+
+    /// Downgrade request (GetS hit an M line): return data, keep S.
+    fn l1_down_req(&mut self, core: CoreId, msg: Message, ctx: &mut ProtoCtx) {
+        let c = core as usize;
+        let Some(line) = self.l1[c].cache.peek_mut(msg.addr) else {
+            return; // crossed with our PutM
+        };
+        if !line.m {
+            return;
+        }
+        line.m = false;
+        let value = line.value;
+        let slice = self.slice_of(msg.addr);
+        ctx.send(to_slice(core, slice, msg.addr, MsgKind::DownRep { value }));
+    }
+
+    /// Flush request (GetX hit an M line): return data, invalidate.
+    fn l1_flush_req(&mut self, core: CoreId, msg: Message, ctx: &mut ProtoCtx) {
+        let c = core as usize;
+        match self.l1[c].cache.peek(msg.addr) {
+            Some(line) if line.m => {}
+            _ => return, // crossed with our PutM
+        }
+        let line = self.l1[c].cache.invalidate(msg.addr).unwrap();
+        let slice = self.slice_of(msg.addr);
+        ctx.send(to_slice(core, slice, msg.addr, MsgKind::DirFlushRep { value: line.value }));
+        if self.l1[c].watch == Some(msg.addr) {
+            self.l1[c].watch = None;
+            ctx.complete(completion(core, msg.addr, CompletionKind::SpinWake, 0));
+        }
+    }
+}

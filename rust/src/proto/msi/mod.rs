@@ -1,0 +1,243 @@
+//! Full-map MSI directory coherence (the paper's baseline), also
+//! parameterizable as Ackwise-k (limited pointers + broadcast) — the
+//! paper's second baseline.  Same substrate as Tardis: per-core L1
+//! controllers + per-slice directory, exchanging [`MsgKind`] messages.
+
+mod dir;
+mod l1;
+mod sharers;
+
+use std::collections::HashMap;
+
+use crate::config::SystemConfig;
+use crate::mem::addr::home_slice;
+use crate::mem::SetAssoc;
+use crate::net::{Message, MsgKind, Node};
+use crate::proto::{
+    AccessOutcome, Coherence, Completion, CompletionKind, MemOp, ProtoCtx, SpinHint,
+};
+use crate::types::{CoreId, LineAddr, SliceId, Ts};
+
+pub use sharers::Sharers;
+
+/// Per-line L1 state: present means S or M.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct MsiL1Line {
+    /// Modified (exclusive + dirty) vs shared.
+    pub m: bool,
+    pub value: u64,
+    /// Outstanding upgrade relies on this copy (not evictable).
+    pub pinned: bool,
+}
+
+/// A demand miss outstanding at an L1.
+#[derive(Debug, Clone)]
+pub struct Demand {
+    pub op: MemOp,
+    pub parked: u32,
+}
+
+pub struct MsiL1 {
+    pub cache: SetAssoc<MsiL1Line>,
+    pub demand: HashMap<LineAddr, Demand>,
+    pub watch: Option<LineAddr>,
+}
+
+/// Directory entry per LLC line.
+#[derive(Debug, Clone, Default)]
+pub struct DirLine {
+    pub sharers: Sharers,
+    pub owner: Option<CoreId>,
+    pub value: u64,
+    pub dirty: bool,
+    /// Mid-transaction: not evictable.
+    pub busy: bool,
+}
+
+/// Why a directory line is busy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DirPendKind {
+    /// DRAM fetch in flight (line absent).
+    Fetch,
+    /// Owner downgrade (GetS to an M line).
+    AwaitDown,
+    /// Owner flush (GetX to an M line).
+    AwaitFlush,
+    /// Invalidation acks outstanding for a GetX.
+    AwaitInvAcks { left: u32 },
+    /// LLC eviction: invalidation acks outstanding, then fill.
+    EvictInvAcks { left: u32 },
+    /// LLC eviction: owner flush outstanding, then fill.
+    EvictFlush,
+}
+
+#[derive(Debug, Clone)]
+pub struct DirPending {
+    pub kind: DirPendKind,
+    pub waiters: std::collections::VecDeque<DirReq>,
+    pub fill: Option<(LineAddr, u64)>,
+}
+
+impl DirPending {
+    fn new(kind: DirPendKind) -> Self {
+        Self { kind, waiters: std::collections::VecDeque::new(), fill: None }
+    }
+}
+
+/// A queued directory request.
+#[derive(Debug, Clone, Copy)]
+pub struct DirReq {
+    pub core: CoreId,
+    pub write: bool,
+}
+
+pub struct DirSlice {
+    pub cache: SetAssoc<DirLine>,
+    pub pending: HashMap<LineAddr, DirPending>,
+}
+
+/// The directory protocol (MSI full map, or Ackwise-k when
+/// `ptr_limit` is set).
+pub struct Msi {
+    n_cores: u32,
+    /// None = full-map bit vector; Some(k) = Ackwise-k pointers.
+    ptr_limit: Option<u32>,
+    l1: Vec<MsiL1>,
+    dir: Vec<DirSlice>,
+}
+
+impl Msi {
+    pub fn new(sys: &SystemConfig) -> Self {
+        Self::with_limit(sys, None)
+    }
+
+    pub fn with_limit(sys: &SystemConfig, ptr_limit: Option<u32>) -> Self {
+        Self {
+            n_cores: sys.n_cores,
+            ptr_limit,
+            l1: (0..sys.n_cores)
+                .map(|_| MsiL1 {
+                    cache: SetAssoc::new(sys.l1_sets, sys.l1_ways),
+                    demand: HashMap::new(),
+                    watch: None,
+                })
+                .collect(),
+            dir: (0..sys.n_cores)
+                .map(|_| DirSlice {
+                    cache: SetAssoc::new(sys.l2_sets, sys.l2_ways),
+                    pending: HashMap::new(),
+                })
+                .collect(),
+        }
+    }
+
+    pub(crate) fn slice_of(&self, addr: LineAddr) -> SliceId {
+        home_slice(addr, self.n_cores)
+    }
+
+    pub(crate) fn new_sharers(&self) -> Sharers {
+        match self.ptr_limit {
+            None => Sharers::new_map(self.n_cores),
+            Some(k) => Sharers::new_ptrs(k),
+        }
+    }
+}
+
+impl Coherence for Msi {
+    fn core_access(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        op: MemOp,
+        _spec_ok: bool,
+        ctx: &mut ProtoCtx,
+    ) -> AccessOutcome {
+        self.l1_access(core, addr, op, ctx)
+    }
+
+    fn on_message(&mut self, msg: Message, ctx: &mut ProtoCtx) {
+        match msg.dst {
+            Node::Core(c) => self.l1_on_message(c, msg, ctx),
+            Node::Slice(s) => self.dir_on_message(s, msg, ctx),
+            Node::Mc(_) => unreachable!("MC messages are handled by the engine"),
+        }
+    }
+
+    fn spin_hint(&mut self, core: CoreId, addr: LineAddr, _ctx: &mut ProtoCtx) -> SpinHint {
+        // A cached line's value can only change after an invalidation
+        // (or flush) reaches this L1 — sleep until then.
+        if self.l1[core as usize].cache.peek(addr).is_some() {
+            self.l1[core as usize].watch = Some(addr);
+            SpinHint::WaitInvalidate
+        } else {
+            SpinHint::Retry
+        }
+    }
+
+    fn probe(&self, core: CoreId, addr: LineAddr) -> crate::proto::Probe {
+        if self.l1[core as usize].cache.peek(addr).is_some() {
+            crate::proto::Probe::Hit
+        } else {
+            crate::proto::Probe::Miss
+        }
+    }
+
+    fn commit_check(&mut self, core: CoreId, addr: LineAddr, early: bool, bound: u64) -> Option<Ts> {
+        // Invalidation / value-based replay (Gharachorloo et al.; Cain
+        // & Lipasti): an early-bound load replays unless the line is
+        // still present *with the bound value* (it may have been
+        // invalidated and refilled with newer data).  A head-bound
+        // value always commits: the conflicting store's invalidation
+        // round-trip cannot have completed yet.
+        if !early {
+            return Some(0);
+        }
+        match self.l1[core as usize].cache.peek(addr) {
+            Some(line) if line.value == bound => Some(0),
+            _ => None,
+        }
+    }
+
+    fn llc_storage_bits(&self, n_cores: u32) -> u64 {
+        match self.ptr_limit {
+            // Full sharer bit vector (paper Table VII).
+            None => n_cores as u64,
+            // k pointers of log2(N) bits each.
+            Some(k) => k as u64 * (n_cores as f64).log2().ceil() as u64,
+        }
+    }
+
+    fn l1_storage_bits(&self) -> u64 {
+        1 // M bit
+    }
+
+    fn name(&self) -> &'static str {
+        match self.ptr_limit {
+            None => "msi",
+            Some(_) => "ackwise",
+        }
+    }
+}
+
+pub(crate) fn to_slice(core: CoreId, slice: SliceId, addr: LineAddr, kind: MsgKind) -> Message {
+    Message { src: Node::Core(core), dst: Node::Slice(slice), addr, requester: core, kind }
+}
+
+pub(crate) fn to_core(
+    slice: SliceId,
+    core: CoreId,
+    addr: LineAddr,
+    requester: CoreId,
+    kind: MsgKind,
+) -> Message {
+    Message { src: Node::Slice(slice), dst: Node::Core(core), addr, requester, kind }
+}
+
+pub(crate) fn completion(
+    core: CoreId,
+    addr: LineAddr,
+    kind: CompletionKind,
+    value: u64,
+) -> Completion {
+    Completion { core, addr, kind, value, ts: 0 }
+}

@@ -1,0 +1,211 @@
+//! Sharer-set representations: full bit vector (MSI) and limited
+//! pointers with broadcast overflow (Ackwise, paper §VII-B / [11]).
+
+use crate::types::CoreId;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Sharers {
+    /// Full-map bit vector.
+    Map(Vec<u64>),
+    /// Up to `limit` precise pointers.
+    Ptrs { list: Vec<CoreId>, limit: u32 },
+    /// Pointer overflow: only the population count is known;
+    /// invalidation requires broadcast.
+    Global { count: u32, limit: u32 },
+}
+
+impl Default for Sharers {
+    fn default() -> Self {
+        Sharers::Ptrs { list: Vec::new(), limit: 0 }
+    }
+}
+
+/// Who must be invalidated.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InvTargets {
+    List(Vec<CoreId>),
+    /// Every core in the system (Ackwise overflow).
+    Broadcast,
+}
+
+impl Sharers {
+    pub fn new_map(n_cores: u32) -> Self {
+        Sharers::Map(vec![0; n_cores.div_ceil(64) as usize])
+    }
+
+    pub fn new_ptrs(limit: u32) -> Self {
+        Sharers::Ptrs { list: Vec::new(), limit }
+    }
+
+    pub fn add(&mut self, core: CoreId) {
+        match self {
+            Sharers::Map(bits) => bits[core as usize / 64] |= 1 << (core % 64),
+            Sharers::Ptrs { list, limit } => {
+                if !list.contains(&core) {
+                    if list.len() < *limit as usize {
+                        list.push(core);
+                    } else {
+                        // Overflow: degrade to a count.
+                        *self = Sharers::Global { count: list.len() as u32 + 1, limit: *limit };
+                    }
+                }
+            }
+            Sharers::Global { count, .. } => *count += 1,
+        }
+    }
+
+    pub fn remove(&mut self, core: CoreId) {
+        match self {
+            Sharers::Map(bits) => bits[core as usize / 64] &= !(1 << (core % 64)),
+            Sharers::Ptrs { list, .. } => list.retain(|&c| c != core),
+            Sharers::Global { count, limit } => {
+                *count = count.saturating_sub(1);
+                if *count == 0 {
+                    *self = Sharers::Ptrs { list: Vec::new(), limit: *limit };
+                }
+            }
+        }
+    }
+
+    pub fn contains(&self, core: CoreId) -> bool {
+        match self {
+            Sharers::Map(bits) => bits[core as usize / 64] & (1 << (core % 64)) != 0,
+            Sharers::Ptrs { list, .. } => list.contains(&core),
+            // Conservative: unknown membership.
+            Sharers::Global { .. } => true,
+        }
+    }
+
+    /// Membership that is *certainly* true (Global mode cannot vouch
+    /// for anyone — used for data-less GrantX decisions, which assume
+    /// the requester still holds a copy).
+    pub fn contains_certain(&self, core: CoreId) -> bool {
+        match self {
+            Sharers::Global { .. } => false,
+            other => other.contains(core),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Sharers::Map(bits) => bits.iter().all(|&b| b == 0),
+            Sharers::Ptrs { list, .. } => list.is_empty(),
+            Sharers::Global { count, .. } => *count == 0,
+        }
+    }
+
+    pub fn count(&self) -> u32 {
+        match self {
+            Sharers::Map(bits) => bits.iter().map(|b| b.count_ones()).sum(),
+            Sharers::Ptrs { list, .. } => list.len() as u32,
+            Sharers::Global { count, .. } => *count,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        match self {
+            Sharers::Map(bits) => bits.fill(0),
+            Sharers::Ptrs { list, .. } => list.clear(),
+            Sharers::Global { count, limit } => {
+                let limit = *limit;
+                let _ = count;
+                *self = Sharers::Ptrs { list: Vec::new(), limit };
+            }
+        }
+    }
+
+    /// Invalidation targets, excluding `except`.
+    pub fn inv_targets(&self, except: Option<CoreId>) -> InvTargets {
+        match self {
+            Sharers::Map(bits) => {
+                let mut v = Vec::new();
+                for (w, &word) in bits.iter().enumerate() {
+                    let mut word = word;
+                    while word != 0 {
+                        let b = word.trailing_zeros();
+                        let core = (w as u32) * 64 + b;
+                        if Some(core) != except {
+                            v.push(core);
+                        }
+                        word &= word - 1;
+                    }
+                }
+                InvTargets::List(v)
+            }
+            Sharers::Ptrs { list, .. } => {
+                InvTargets::List(list.iter().copied().filter(|&c| Some(c) != except).collect())
+            }
+            Sharers::Global { .. } => InvTargets::Broadcast,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_add_remove_contains() {
+        let mut s = Sharers::new_map(128);
+        s.add(0);
+        s.add(63);
+        s.add(64);
+        s.add(127);
+        assert!(s.contains(0) && s.contains(63) && s.contains(64) && s.contains(127));
+        assert!(!s.contains(1));
+        assert_eq!(s.count(), 4);
+        s.remove(63);
+        assert!(!s.contains(63));
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn map_inv_targets_excludes_requester() {
+        let mut s = Sharers::new_map(64);
+        s.add(3);
+        s.add(7);
+        s.add(11);
+        assert_eq!(s.inv_targets(Some(7)), InvTargets::List(vec![3, 11]));
+    }
+
+    #[test]
+    fn ptrs_overflow_to_global() {
+        let mut s = Sharers::new_ptrs(2);
+        s.add(1);
+        s.add(2);
+        assert!(matches!(s, Sharers::Ptrs { .. }));
+        s.add(3);
+        assert!(matches!(s, Sharers::Global { count: 3, .. }));
+        assert_eq!(s.inv_targets(None), InvTargets::Broadcast);
+    }
+
+    #[test]
+    fn ptrs_duplicate_add_is_noop() {
+        let mut s = Sharers::new_ptrs(2);
+        s.add(1);
+        s.add(1);
+        assert!(matches!(&s, Sharers::Ptrs { list, .. } if list.len() == 1));
+    }
+
+    #[test]
+    fn global_drains_back_to_ptrs() {
+        let mut s = Sharers::new_ptrs(1);
+        s.add(1);
+        s.add(2); // overflow
+        s.remove(1);
+        s.remove(2);
+        assert!(s.is_empty());
+        assert!(matches!(s, Sharers::Ptrs { .. }));
+        // Precise again after draining.
+        s.add(5);
+        assert!(matches!(&s, Sharers::Ptrs { list, .. } if list == &vec![5]));
+    }
+
+    #[test]
+    fn global_contains_is_conservative() {
+        let mut s = Sharers::new_ptrs(1);
+        s.add(1);
+        s.add(2);
+        assert!(s.contains(40)); // unknown -> conservative yes
+    }
+}

@@ -1,0 +1,548 @@
+//! Tardis private-cache (L1) controller — paper Table II.
+
+use super::*;
+use crate::proto::AccessDone;
+
+impl Tardis {
+    /// Core-side access (Table II, core-event columns).
+    pub(crate) fn l1_access(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        op: MemOp,
+        spec_ok: bool,
+        ctx: &mut ProtoCtx,
+    ) -> AccessOutcome {
+        let mut extra = self.count_access(core, ctx);
+        let c = core as usize;
+
+        // A demand miss to this address is already outstanding: park.
+        if self.l1[c].demand.contains_key(&addr) {
+            self.l1[c].demand.get_mut(&addr).unwrap().parked += 1;
+            return AccessOutcome::Pending;
+        }
+
+        // Single lookup on the hit path (the hottest code in the
+        // simulator — §Perf): pull everything needed out of the line
+        // in one probe and update in place.
+        let pts0 = self.l1[c].pts;
+        let line_state = self.l1[c].cache.get_mut(addr).map(|l| {
+            let st = (l.excl, l.wts, l.rts, l.value);
+            if matches!(op, MemOp::Load) {
+                if l.excl {
+                    let pts = pts0.max(l.wts);
+                    l.rts = l.rts.max(pts);
+                }
+            }
+            st
+        });
+        match (op, line_state) {
+            // ---- Load, exclusive hit ----
+            (MemOp::Load, Some((true, wts, rts, value))) => {
+                let pts = pts0.max(wts);
+                self.raise_pts(core, pts, false, ctx);
+                extra += self.l1_check_rebase(core, rts.max(pts), ctx);
+                ctx.stats.l1_hits += 1;
+                AccessOutcome::Done(AccessDone { value, ts: pts, extra_cycles: extra })
+            }
+            // ---- Load, shared ----
+            (MemOp::Load, Some((false, wts, rts, value))) => {
+                if pts0 <= rts {
+                    // Valid lease: plain hit.
+                    let pts = pts0.max(wts);
+                    self.raise_pts(core, pts, false, ctx);
+                    extra += self.l1_check_rebase(core, pts, ctx);
+                    ctx.stats.l1_hits += 1;
+                    AccessOutcome::Done(AccessDone { value, ts: pts, extra_cycles: extra })
+                } else {
+                    // Expired: renew (and maybe speculate, §IV-A).
+                    self.l1_expired_load(core, addr, wts, spec_ok, extra, ctx)
+                }
+            }
+            // ---- Store/atomic, exclusive hit ----
+            (_, Some((true, _wts, rts, _value))) => {
+                let old_pts = self.l1[c].pts;
+                let modified = self.l1[c].cache.peek(addr).map(|l| l.modified).unwrap_or(false);
+                // Private-write optimization (§IV-C): repeated stores to
+                // an already-modified line need not jump past rts + 1.
+                let ts = if self.cfg.private_write_opt && modified {
+                    old_pts.max(rts)
+                } else {
+                    old_pts.max(rts + 1)
+                };
+                self.raise_pts(core, ts, false, ctx);
+                let line = self.l1[c].cache.get_mut(addr).unwrap();
+                let old = line.value;
+                let new = op.write_value(old).expect("write op");
+                line.value = new;
+                line.wts = ts;
+                line.rts = ts;
+                line.modified = true;
+                extra += self.l1_check_rebase(core, ts, ctx);
+                ctx.stats.l1_hits += 1;
+                let observed = if matches!(op, MemOp::Store { .. }) { new } else { old };
+                AccessOutcome::Done(AccessDone { value: observed, ts, extra_cycles: extra })
+            }
+            // ---- Store/atomic, shared (upgrade) or miss ----
+            (_, other) => {
+                ctx.stats.l1_misses += 1;
+                let slice = self.slice_of(addr);
+                let kind = if op.is_write() {
+                    let wts = match other {
+                        Some((false, wts, _, _)) => {
+                            // Pin the shared copy: the TM may answer
+                            // UpgradeRep, which assumes we keep the data.
+                            self.l1[c].cache.peek_mut(addr).unwrap().pinned = true;
+                            wts
+                        }
+                        _ => 0,
+                    };
+                    MsgKind::ExReq { wts }
+                } else {
+                    MsgKind::ShReq { pts: self.l1[c].pts, wts: 0, renew: false }
+                };
+                self.l1[c].demand.insert(addr, Demand { op, parked: 0 });
+                ctx.send(to_slice(core, slice, addr, kind));
+                AccessOutcome::Pending
+            }
+        }
+    }
+
+    /// Load to an expired shared line: send a renewal; speculate through
+    /// it when allowed (§IV-A).
+    fn l1_expired_load(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        wts: Ts,
+        spec_ok: bool,
+        extra: u64,
+        ctx: &mut ProtoCtx,
+    ) -> AccessOutcome {
+        let c = core as usize;
+        let spec_outstanding: u32 =
+            self.l1[c].renewals.values().map(|r| r.spec_count).sum();
+        let speculate =
+            spec_ok && self.cfg.speculation && (spec_outstanding as usize) < self.max_spec;
+
+        if let Some(r) = self.l1[c].renewals.get_mut(&addr) {
+            // Renewal already in flight.
+            if speculate {
+                r.spec_count += 1;
+                let pts = self.l1[c].pts.max(wts);
+                self.raise_pts(core, pts, false, ctx);
+                let value = self.l1[c].cache.peek(addr).unwrap().value;
+                return AccessOutcome::SpecDone(AccessDone { value, ts: pts, extra_cycles: extra });
+            }
+            r.demand_waiting = true;
+            return AccessOutcome::Pending;
+        }
+
+        ctx.stats.renew_requests += 1;
+        let pts0 = self.l1[c].pts;
+        let slice = self.slice_of(addr);
+        ctx.send(to_slice(core, slice, addr, MsgKind::ShReq { pts: pts0, wts, renew: true }));
+        if speculate {
+            self.l1[c]
+                .renewals
+                .insert(addr, Renewal { spec_count: 1, demand_waiting: false });
+            let pts = pts0.max(wts);
+            self.raise_pts(core, pts, false, ctx);
+            let value = self.l1[c].cache.peek(addr).unwrap().value;
+            AccessOutcome::SpecDone(AccessDone { value, ts: pts, extra_cycles: extra })
+        } else {
+            self.l1[c]
+                .renewals
+                .insert(addr, Renewal { spec_count: 0, demand_waiting: true });
+            ctx.stats.l1_misses += 1;
+            AccessOutcome::Pending
+        }
+    }
+
+    /// Network events at the private cache (Table II, right columns).
+    pub(crate) fn l1_on_message(&mut self, core: CoreId, msg: Message, ctx: &mut ProtoCtx) {
+        match msg.kind {
+            MsgKind::ShRep { wts, rts, value } => self.l1_sh_rep(core, msg.addr, wts, rts, value, ctx),
+            MsgKind::RenewRep { rts } => self.l1_renew_rep(core, msg.addr, rts, ctx),
+            MsgKind::ExRep { wts, rts, value } => {
+                self.l1_ex_rep(core, msg.addr, Some((wts, value)), rts, ctx)
+            }
+            MsgKind::UpgradeRep { rts } => self.l1_ex_rep(core, msg.addr, None, rts, ctx),
+            MsgKind::FlushReq => self.l1_flush_req(core, msg, ctx),
+            MsgKind::WbReq { rts } => self.l1_wb_req(core, msg, rts, ctx),
+            other => panic!("tardis L1 got unexpected message {other:?}"),
+        }
+    }
+
+    /// Fill a line into the L1, evicting as needed (Table II eviction
+    /// column: shared victims drop silently; exclusive victims flush
+    /// back to their timestamp manager).  Pinned lines (outstanding
+    /// upgrades) are never evicted; if every way is pinned the fill is
+    /// simply not cached (the completion already carries the value).
+    fn l1_fill(&mut self, core: CoreId, addr: LineAddr, line: L1Line, ctx: &mut ProtoCtx) -> bool {
+        let c = core as usize;
+        let evicted = match self.l1[c].cache.insert_filtered(addr, line.clone(), |l| !l.pinned) {
+            Ok(v) => v,
+            Err(_) => {
+                // All ways pinned: bypass the cache.  A shared line can
+                // simply be dropped (Tardis keeps no sharer state), but
+                // an exclusive grant must be returned to the TM at once
+                // or the owner entry would dangle.
+                if line.excl {
+                    let slice = self.slice_of(addr);
+                    ctx.send(to_slice(
+                        core,
+                        slice,
+                        addr,
+                        MsgKind::FlushRep {
+                            wts: line.wts,
+                            rts: line.rts,
+                            value: line.value,
+                            dirty: line.modified,
+                        },
+                    ));
+                }
+                return false;
+            }
+        };
+        if let Some((vaddr, v)) = evicted {
+            if v.excl {
+                let slice = self.slice_of(vaddr);
+                ctx.send(to_slice(
+                    core,
+                    slice,
+                    vaddr,
+                    MsgKind::FlushRep { wts: v.wts, rts: v.rts, value: v.value, dirty: v.modified },
+                ));
+            }
+            // An evicted line may carry an outstanding renewal; the
+            // reply handlers tolerate an absent line.
+            debug_assert!(
+                self.l1[c].watch != Some(vaddr),
+                "evicted a watched line (spinning cores issue no fills)"
+            );
+        }
+        true
+    }
+
+    fn l1_sh_rep(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        wts: Ts,
+        rts: Ts,
+        value: u64,
+        ctx: &mut ProtoCtx,
+    ) {
+        let c = core as usize;
+        // Renewal outcome: a ShRep for an outstanding renewal means the
+        // lease could not be extended at the old version — new data.
+        if let Some(renewal) = self.l1[c].renewals.remove(&addr) {
+            if let Some(line) = self.l1[c].cache.get_mut(addr) {
+                line.excl = false;
+                line.wts = wts;
+                line.rts = rts;
+                line.value = value;
+                line.modified = false;
+            }
+            let pts = self.l1[c].pts.max(wts);
+            self.raise_pts(core, pts, false, ctx);
+            self.l1_check_rebase(core, pts.max(rts), ctx);
+            if renewal.spec_count > 0 {
+                ctx.stats.misspeculations += 1;
+                for _ in 0..renewal.spec_count {
+                    ctx.complete(completion(core, addr, CompletionKind::Misspec, value, pts));
+                }
+            }
+            if renewal.demand_waiting {
+                ctx.complete(completion(core, addr, CompletionKind::Demand, value, pts));
+            }
+            return;
+        }
+        // Plain demand fill.
+        let Some(demand) = self.l1[c].demand.remove(&addr) else {
+            return; // stale reply (e.g., line was rebase-invalidated)
+        };
+        debug_assert!(matches!(demand.op, MemOp::Load));
+        let pts = self.l1[c].pts.max(wts);
+        self.raise_pts(core, pts, false, ctx);
+        let _ = self.l1_fill(
+            core,
+            addr,
+            L1Line { excl: false, wts, rts, value, modified: false, pinned: false },
+            ctx,
+        );
+        self.l1_check_rebase(core, pts.max(rts), ctx);
+        ctx.complete(completion(core, addr, CompletionKind::Demand, value, pts));
+        self.l1_release_parked(core, addr, demand.parked, ctx);
+    }
+
+    fn l1_renew_rep(&mut self, core: CoreId, addr: LineAddr, rts: Ts, ctx: &mut ProtoCtx) {
+        let c = core as usize;
+        ctx.stats.renew_success += 1;
+        let Some(renewal) = self.l1[c].renewals.remove(&addr) else {
+            return;
+        };
+        match self.l1[c].cache.get_mut(addr) {
+            Some(line) => {
+                line.rts = line.rts.max(rts);
+                let (value, wts) = (line.value, line.wts);
+                let pts = self.l1[c].pts.max(wts);
+                self.raise_pts(core, pts, false, ctx);
+                self.l1_check_rebase(core, rts, ctx);
+                if renewal.demand_waiting {
+                    ctx.complete(completion(core, addr, CompletionKind::Demand, value, pts));
+                }
+                for _ in 0..renewal.spec_count {
+                    // Speculative success: the core closes its window.
+                    ctx.complete(completion(core, addr, CompletionKind::SpecOk, value, pts));
+                }
+            }
+            None => {
+                // The line vanished (rebase invalidation) while the
+                // renewal was in flight.  A blocked demand must re-issue
+                // as a cold miss; a speculative load is fine — the
+                // renewal succeeded, so the value it used was current.
+                for _ in 0..renewal.spec_count {
+                    ctx.complete(completion(core, addr, CompletionKind::SpecOk, 0, 0));
+                }
+                if renewal.demand_waiting {
+                    ctx.stats.l1_misses += 1;
+                    let slice = self.slice_of(addr);
+                    let pts = self.l1[c].pts;
+                    self.l1[c].demand.insert(addr, Demand { op: MemOp::Load, parked: 0 });
+                    ctx.send(to_slice(core, slice, addr, MsgKind::ShReq { pts, wts: 0, renew: false }));
+                }
+            }
+        }
+    }
+
+    /// Exclusive ownership granted: ExRep carries data; UpgradeRep
+    /// relies on our cached (pinned) copy — its wts matched at the TM.
+    fn l1_ex_rep(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        data: Option<(Ts, u64)>,
+        rts: Ts,
+        ctx: &mut ProtoCtx,
+    ) {
+        let c = core as usize;
+        // Resolve any renewal that raced with this upgrade: an
+        // UpgradeRep proves our copy was current (renewal would have
+        // succeeded); an ExRep proves it was stale (misspeculation).
+        if let Some(renewal) = self.l1[c].renewals.remove(&addr) {
+            match data {
+                None => {
+                    ctx.stats.renew_success += 1;
+                    for _ in 0..renewal.spec_count {
+                        ctx.complete(completion(core, addr, CompletionKind::SpecOk, 0, 0));
+                    }
+                }
+                Some((new_wts, new_value)) => {
+                    if renewal.spec_count > 0 {
+                        ctx.stats.misspeculations += 1;
+                        for _ in 0..renewal.spec_count {
+                            ctx.complete(completion(
+                                core,
+                                addr,
+                                CompletionKind::Misspec,
+                                new_value,
+                                new_wts,
+                            ));
+                        }
+                    }
+                    if renewal.demand_waiting {
+                        ctx.complete(completion(
+                            core,
+                            addr,
+                            CompletionKind::Demand,
+                            new_value,
+                            new_wts,
+                        ));
+                    }
+                }
+            }
+        }
+        let Some(demand) = self.l1[c].demand.remove(&addr) else {
+            return;
+        };
+
+        let (wts, old_value) = match data {
+            Some((wts, value)) => (wts, value),
+            None => {
+                let line = self.l1[c]
+                    .cache
+                    .peek_mut(addr)
+                    .expect("UpgradeRep for a line we no longer hold (pin violated)");
+                line.pinned = false;
+                (line.wts, line.value)
+            }
+        };
+        let (value_obs, new_line) = match demand.op {
+            MemOp::Load => {
+                // An exclusive reply can serve a load (E-state
+                // extension, §IV-D): load-on-exclusive semantics.
+                let ts = self.l1[c].pts.max(wts);
+                self.raise_pts(core, ts, false, ctx);
+                (
+                    old_value,
+                    L1Line {
+                        excl: true,
+                        wts,
+                        rts: rts.max(ts),
+                        value: old_value,
+                        modified: false,
+                        pinned: false,
+                    },
+                )
+            }
+            op => {
+                // Store-hit semantics on the now-exclusive line
+                // (Table II): ts = max(pts, rts + 1).
+                let ts = self.l1[c].pts.max(rts + 1);
+                self.raise_pts(core, ts, false, ctx);
+                let new = op.write_value(old_value).expect("write op");
+                let observed = if matches!(op, MemOp::Store { .. }) { new } else { old_value };
+                (
+                    observed,
+                    L1Line { excl: true, wts: ts, rts: ts, value: new, modified: true, pinned: false },
+                )
+            }
+        };
+        let ts_final = new_line.rts;
+        if data.is_some() && self.l1[c].cache.peek(addr).is_none() {
+            let _ = self.l1_fill(core, addr, new_line, ctx);
+        } else {
+            *self.l1[c].cache.get_mut(addr).unwrap() = new_line;
+        }
+        self.l1_check_rebase(core, ts_final, ctx);
+        ctx.complete(completion(core, addr, CompletionKind::Demand, value_obs, ts_final));
+        self.l1_release_parked(core, addr, demand.parked, ctx);
+    }
+
+    /// FLUSH_REQ from the TM: return data + timestamps and invalidate
+    /// (Table II, last column).
+    fn l1_flush_req(&mut self, core: CoreId, msg: Message, ctx: &mut ProtoCtx) {
+        let c = core as usize;
+        match self.l1[c].cache.peek(msg.addr) {
+            Some(line) if line.excl => {}
+            // Crossed with our own FlushRep (eviction): the TM will
+            // treat that FlushRep as the response.
+            _ => return,
+        }
+        let line = self.l1[c].cache.invalidate(msg.addr).unwrap();
+        let slice = self.slice_of(msg.addr);
+        ctx.send(to_slice(
+            core,
+            slice,
+            msg.addr,
+            MsgKind::FlushRep { wts: line.wts, rts: line.rts, value: line.value, dirty: line.modified },
+        ));
+        self.l1_wake_watcher(core, msg.addr, ctx);
+    }
+
+    /// WB_REQ from the TM: extend rts per Table II, return data, keep
+    /// the line shared.
+    fn l1_wb_req(&mut self, core: CoreId, msg: Message, req_rts: Ts, ctx: &mut ProtoCtx) {
+        let c = core as usize;
+        let lease = self.cfg.lease;
+        let up_to;
+        {
+            let Some(line) = self.l1[c].cache.peek_mut(msg.addr) else {
+                return; // crossed with eviction FlushRep
+            };
+            if !line.excl {
+                return;
+            }
+            line.rts = line.rts.max(line.wts + lease).max(req_rts);
+            line.excl = false;
+            line.modified = false;
+            up_to = (line.wts, line.rts, line.value);
+        }
+        let slice = self.slice_of(msg.addr);
+        ctx.send(to_slice(
+            core,
+            slice,
+            msg.addr,
+            MsgKind::WbRep { wts: up_to.0, rts: up_to.1, value: up_to.2 },
+        ));
+        self.l1_check_rebase(core, up_to.1, ctx);
+        // A core spin-parked on this (formerly exclusive) line was
+        // waiting for a flush; after the downgrade the line is shared
+        // and will never be invalidated — wake it so it re-enters the
+        // lease-expiry spin path.
+        self.l1_wake_watcher(core, msg.addr, ctx);
+    }
+
+    /// Wake a spinning core whose watched line was invalidated.
+    pub(crate) fn l1_wake_watcher(&mut self, core: CoreId, addr: LineAddr, ctx: &mut ProtoCtx) {
+        if self.l1[core as usize].watch == Some(addr) {
+            self.l1[core as usize].watch = None;
+            ctx.complete(completion(core, addr, CompletionKind::SpinWake, 0, 0));
+        }
+    }
+
+    /// Re-issue accesses that were parked behind a demand miss.
+    fn l1_release_parked(&mut self, core: CoreId, addr: LineAddr, parked: u32, ctx: &mut ProtoCtx) {
+        for _ in 0..parked {
+            ctx.complete(completion(core, addr, CompletionKind::SpinWake, 0, 0));
+        }
+    }
+
+    /// Base-delta compression model (§IV-B): if `ts` no longer fits in
+    /// the delta width relative to this L1's base timestamp, rebase —
+    /// advance bts by half the range (repeatedly), drop shared lines
+    /// whose rts fell behind the new base, clamp the rest up.  Returns
+    /// stall cycles charged to the triggering access.
+    pub(crate) fn l1_check_rebase(&mut self, core: CoreId, ts: Ts, ctx: &mut ProtoCtx) -> u64 {
+        if self.ts_range == u64::MAX {
+            return 0;
+        }
+        let c = core as usize;
+        if ts.saturating_sub(self.l1[c].bts) < self.ts_range {
+            return 0;
+        }
+        // Defer while an upgrade is pinned: rebase would invalidate the
+        // copy an UpgradeRep relies on.  The upgrade resolves within a
+        // round-trip and the rebase re-triggers on the next assignment.
+        let mut pinned = false;
+        self.l1[c].cache.for_each(|_, l| pinned |= l.pinned);
+        if pinned {
+            return 0;
+        }
+        let half = self.ts_range / 2;
+        let mut bts = self.l1[c].bts;
+        let mut stall = 0u64;
+        while ts.saturating_sub(bts) >= self.ts_range {
+            bts += half;
+            ctx.stats.ts.l1_rebases += 1;
+            stall += self.cfg.l1_rebase_cycles;
+        }
+        self.l1[c].bts = bts;
+        let mut invalidated: Vec<LineAddr> = Vec::new();
+        self.l1[c].cache.retain_lines(|addr, line| {
+            if line.excl {
+                // Exclusive lines may move both timestamps up freely.
+                line.wts = line.wts.max(bts);
+                line.rts = line.rts.max(bts);
+                true
+            } else if line.rts < bts {
+                // delta_rts would go negative: invalidate (§IV-B).
+                invalidated.push(addr);
+                false
+            } else {
+                line.wts = line.wts.max(bts);
+                true
+            }
+        });
+        ctx.stats.ts.rebase_invalidations += invalidated.len() as u64;
+        ctx.stats.ts.rebase_stall_cycles += stall;
+        for addr in invalidated {
+            self.l1_wake_watcher(core, addr, ctx);
+            // Outstanding renewals to dropped lines resolve safely: the
+            // reply handlers tolerate an absent line.
+        }
+        stall
+    }
+}

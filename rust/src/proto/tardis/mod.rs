@@ -1,0 +1,336 @@
+//! Tardis timestamp-coherence protocol (paper §III–§IV).
+//!
+//! State lives in two halves mirroring the paper's Tables II and III:
+//! per-core private caches ([`l1`]) and per-slice timestamp managers
+//! ([`tm`]).  All timestamps are tracked exactly as u64; the base-delta
+//! compression of §IV-B is *modeled*: per-cache base timestamps trigger
+//! rebase events (with their stall cost and S-line invalidations)
+//! whenever an assigned timestamp no longer fits in the configured
+//! delta width.
+
+mod l1;
+mod tm;
+
+use std::collections::HashMap;
+
+use crate::config::{SystemConfig, TardisConfig};
+use crate::mem::addr::home_slice;
+use crate::mem::SetAssoc;
+use crate::net::{Message, MsgKind, Node};
+use crate::proto::{
+    AccessOutcome, Coherence, Completion, CompletionKind, MemOp, ProtoCtx, SpinHint,
+};
+use crate::types::{CoreId, LineAddr, SliceId, Ts};
+
+pub use tm::{Pending, PendingKind, Req, ReqKind};
+
+/// Per-line state in a private L1 (paper Table II).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct L1Line {
+    /// Exclusive (M-like) vs shared.
+    pub excl: bool,
+    pub wts: Ts,
+    /// Shared: reservation (lease) end.  Exclusive: ts of last access.
+    pub rts: Ts,
+    pub value: u64,
+    /// Written while exclusive (drives dirty write-back and the
+    /// private-write optimization of §IV-C).
+    pub modified: bool,
+    /// An upgrade (ExReq from Shared) is outstanding: this copy is the
+    /// data the UpgradeRep relies on — not evictable.
+    pub pinned: bool,
+}
+
+/// A demand miss outstanding at an L1 (one per address).
+#[derive(Debug, Clone)]
+pub struct Demand {
+    pub op: MemOp,
+    /// Extra same-address accesses parked behind this miss; they get a
+    /// `Retry` completion once the line arrives.
+    pub parked: u32,
+}
+
+/// An outstanding renewal (lease-extension) request.
+#[derive(Debug, Clone, Copy)]
+pub struct Renewal {
+    /// Number of loads the core speculated through on this renewal
+    /// (§IV-A); each gets a SpecOk/Misspec completion at resolution.
+    pub spec_count: u32,
+    /// A non-speculative demand load is blocked on this renewal.
+    pub demand_waiting: bool,
+}
+
+/// Per-core private-cache controller state.
+pub struct L1 {
+    pub cache: SetAssoc<L1Line>,
+    /// Program timestamp: ts of the last committed operation.
+    pub pts: Ts,
+    /// Base timestamp for delta compression (§IV-B).
+    pub bts: Ts,
+    /// L1 data accesses since the last self increment.
+    pub accesses_since_inc: u64,
+    pub demand: HashMap<LineAddr, Demand>,
+    pub renewals: HashMap<LineAddr, Renewal>,
+    /// Line a spinning core is parked on (SpinWake on invalidate).
+    pub watch: Option<LineAddr>,
+}
+
+/// Per-line state at a timestamp manager (paper Table III).  `owner`
+/// Some = exclusive; the stored wts/rts are only meaningful while the
+/// line is shared (the paper reuses those bits for the owner id).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TmLine {
+    pub owner: Option<CoreId>,
+    /// Mid-transaction (owner round-trip in flight): not evictable.
+    pub busy: bool,
+    pub wts: Ts,
+    pub rts: Ts,
+    pub value: u64,
+    pub dirty: bool,
+    /// Any sharer since fill (E-state extension heuristic, §IV-D).
+    pub touched: bool,
+    /// Dynamic-lease multiplier (lease << lease_exp), §VI-C5.
+    pub lease_exp: u8,
+}
+
+/// Per-slice timestamp-manager state.
+pub struct Tm {
+    pub cache: SetAssoc<TmLine>,
+    /// Memory timestamp for DRAM-resident lines (§III-C2).
+    pub mts: Ts,
+    pub bts: Ts,
+    /// Running max of timestamps assigned in this slice (incremental —
+    /// the rebase trigger must not scan the array per request).
+    pub max_ts: Ts,
+    pub pending: HashMap<LineAddr, Pending>,
+}
+
+/// The full protocol: all L1s + all timestamp managers.
+pub struct Tardis {
+    pub(crate) cfg: TardisConfig,
+    pub(crate) n_cores: u32,
+    pub(crate) l1: Vec<L1>,
+    pub(crate) tm: Vec<Tm>,
+    /// 2^delta_ts_bits (saturating); timestamps must satisfy
+    /// ts - bts < range or a rebase fires.
+    pub(crate) ts_range: u64,
+    /// Outstanding speculative renewals allowed per core.
+    pub(crate) max_spec: usize,
+}
+
+impl Tardis {
+    pub fn new(sys: &SystemConfig) -> Self {
+        let cfg = sys.tardis;
+        let ts_range = if cfg.delta_ts_bits >= 63 {
+            u64::MAX
+        } else {
+            1u64 << cfg.delta_ts_bits
+        };
+        Self {
+            cfg,
+            n_cores: sys.n_cores,
+            l1: (0..sys.n_cores)
+                .map(|_| L1 {
+                    cache: SetAssoc::new(sys.l1_sets, sys.l1_ways),
+                    pts: 0,
+                    bts: 0,
+                    accesses_since_inc: 0,
+                    demand: HashMap::new(),
+                    renewals: HashMap::new(),
+                    watch: None,
+                })
+                .collect(),
+            tm: (0..sys.n_cores)
+                .map(|_| Tm {
+                    cache: SetAssoc::new(sys.l2_sets, sys.l2_ways),
+                    // The paper initializes all timestamps to 1 (§III-C):
+                    // wts = 0 in a request is then an unambiguous
+                    // "requester holds no copy" sentinel for the
+                    // RenewRep / UpgradeRep version checks.
+                    mts: 1,
+                    bts: 0,
+                    max_ts: 1,
+                    pending: HashMap::new(),
+                })
+                .collect(),
+            ts_range,
+            max_spec: 8,
+        }
+    }
+
+    pub(crate) fn slice_of(&self, addr: LineAddr) -> SliceId {
+        home_slice(addr, self.n_cores)
+    }
+
+    /// Raise a core's pts, attributing the increase in the stats.
+    pub(crate) fn raise_pts(&mut self, core: CoreId, new: Ts, self_inc: bool, ctx: &mut ProtoCtx) {
+        let l1 = &mut self.l1[core as usize];
+        if new > l1.pts {
+            let delta = new - l1.pts;
+            ctx.stats.ts.pts_increase_total += delta;
+            if self_inc {
+                ctx.stats.ts.pts_increase_self_inc += delta;
+            }
+            l1.pts = new;
+        }
+    }
+
+    /// Count an L1 data access and apply the periodic self increment
+    /// (§III-E).  Returns extra stall cycles (rebase).
+    pub(crate) fn count_access(&mut self, core: CoreId, ctx: &mut ProtoCtx) -> u64 {
+        let period = self.cfg.self_inc_period;
+        if period == 0 {
+            return 0;
+        }
+        let l1 = &mut self.l1[core as usize];
+        l1.accesses_since_inc += 1;
+        if l1.accesses_since_inc >= period {
+            l1.accesses_since_inc = 0;
+            let new = l1.pts + 1;
+            self.raise_pts(core, new, true, ctx);
+            return self.l1_check_rebase(core, new, ctx);
+        }
+        0
+    }
+
+    /// Current program timestamp of a core (diagnostics / tests).
+    pub fn pts(&self, core: CoreId) -> Ts {
+        self.l1[core as usize].pts
+    }
+}
+
+impl Coherence for Tardis {
+    fn core_access(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        op: MemOp,
+        spec_ok: bool,
+        ctx: &mut ProtoCtx,
+    ) -> AccessOutcome {
+        self.l1_access(core, addr, op, spec_ok, ctx)
+    }
+
+    fn on_message(&mut self, msg: Message, ctx: &mut ProtoCtx) {
+        match msg.dst {
+            Node::Core(c) => self.l1_on_message(c, msg, ctx),
+            Node::Slice(s) => self.tm_on_message(s, msg, ctx),
+            Node::Mc(_) => unreachable!("MC messages are handled by the engine"),
+        }
+    }
+
+    fn spin_hint(&mut self, core: CoreId, addr: LineAddr, ctx: &mut ProtoCtx) -> SpinHint {
+        let period = self.cfg.self_inc_period;
+        let (valid, excl, rts) = match self.l1[core as usize].cache.peek(addr) {
+            None => return SpinHint::Retry,
+            Some(line) => (
+                line.excl || self.l1[core as usize].pts <= line.rts,
+                line.excl,
+                line.rts,
+            ),
+        };
+        if !valid {
+            return SpinHint::Retry;
+        }
+        if excl || period == 0 {
+            // Exclusive lines only change via an external flush; with
+            // self increment disabled a shared line never expires
+            // (the §III-E livelock — the watchdog will flag it if the
+            // update never comes).
+            self.l1[core as usize].watch = Some(addr);
+            return SpinHint::WaitInvalidate;
+        }
+        // Shared + valid: the spin loop's own accesses self-increment
+        // pts past the lease.  Apply the bump now and tell the core
+        // how many polls that costs.
+        let l1 = &self.l1[core as usize];
+        let need = rts - l1.pts + 1;
+        let spins = need * period - l1.accesses_since_inc.min(period - 1);
+        let new = rts + 1;
+        self.raise_pts(core, new, true, ctx);
+        let l1 = &mut self.l1[core as usize];
+        l1.accesses_since_inc = 0;
+        self.l1_check_rebase(core, new, ctx);
+        SpinHint::ExpiresAfterSelfInc { spins_needed: spins.max(1) }
+    }
+
+    fn probe(&self, core: CoreId, addr: LineAddr) -> crate::proto::Probe {
+        use crate::proto::Probe;
+        let l1 = &self.l1[core as usize];
+        match l1.cache.peek(addr) {
+            None => Probe::Miss,
+            Some(line) if line.excl || l1.pts <= line.rts => Probe::Hit,
+            Some(_) if self.cfg.speculation => Probe::Spec,
+            Some(_) => Probe::Miss,
+        }
+    }
+
+    fn commit_check(&mut self, core: CoreId, addr: LineAddr, _early: bool, bound: u64) -> Option<Ts> {
+        // OoO commit-time timestamp check (§III-D): the load commits at
+        // ts = max(pts, wts) iff the line is still usable at that pts
+        // (pts <= rts or exclusive) AND still holds the bound value
+        // (it may have been renewed to a newer version since
+        // execution); otherwise it re-executes.
+        let l1 = &self.l1[core as usize];
+        let (wts, excl, ok) = match l1.cache.peek(addr) {
+            Some(line) => (
+                line.wts,
+                line.excl,
+                (line.excl || l1.pts <= line.rts) && line.value == bound,
+            ),
+            None => return None, // line gone: re-execute
+        };
+        if !ok {
+            return None;
+        }
+        let ts = self.l1[core as usize].pts.max(wts);
+        self.l1[core as usize].pts = ts; // commit updates pts (Rule 1)
+        if excl {
+            // Full Table-II load semantics: an exclusive line's rts
+            // tracks the last access so a later flush/write is ordered
+            // after this read.
+            let line = self.l1[core as usize].cache.peek_mut(addr).unwrap();
+            line.rts = line.rts.max(ts);
+        }
+        Some(ts)
+    }
+
+    fn llc_storage_bits(&self, _n_cores: u32) -> u64 {
+        // Two delta timestamps; owner id shares the same bits (§III-F2).
+        2 * self.cfg.delta_ts_bits as u64
+    }
+
+    fn l1_storage_bits(&self) -> u64 {
+        // wts + rts deltas + modified bit.
+        2 * self.cfg.delta_ts_bits as u64 + 1
+    }
+
+    fn name(&self) -> &'static str {
+        "tardis"
+    }
+}
+
+/// Message constructor helpers shared by l1.rs / tm.rs.
+pub(crate) fn to_slice(core: CoreId, slice: SliceId, addr: LineAddr, kind: MsgKind) -> Message {
+    Message { src: Node::Core(core), dst: Node::Slice(slice), addr, requester: core, kind }
+}
+
+pub(crate) fn to_core(
+    slice: SliceId,
+    core: CoreId,
+    addr: LineAddr,
+    requester: CoreId,
+    kind: MsgKind,
+) -> Message {
+    Message { src: Node::Slice(slice), dst: Node::Core(core), addr, requester, kind }
+}
+
+pub(crate) fn completion(
+    core: CoreId,
+    addr: LineAddr,
+    kind: CompletionKind,
+    value: u64,
+    ts: Ts,
+) -> Completion {
+    Completion { core, addr, kind, value, ts }
+}

@@ -1,0 +1,399 @@
+//! Tardis timestamp manager (shared-LLC slice) — paper Table III.
+
+use std::collections::VecDeque;
+
+use super::*;
+use crate::mem::addr::home_mc;
+
+/// A queued request at a TM line that is busy (DRAM fetch or owner
+/// round-trip in flight).
+#[derive(Debug, Clone, Copy)]
+pub struct Req {
+    pub core: CoreId,
+    pub kind: ReqKind,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum ReqKind {
+    Sh { pts: Ts, wts: Ts, renew: bool },
+    Ex { wts: Ts },
+}
+
+/// Why a line is busy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PendingKind {
+    /// DRAM read in flight; the line is absent from the array.
+    Fetch,
+    /// Waiting for the owner's WB_REP (shared request to an exclusive
+    /// line).
+    AwaitWb,
+    /// Waiting for the owner's FLUSH_REP (exclusive request to an
+    /// exclusive line).
+    AwaitFlush,
+    /// LLC eviction of an exclusive line: flush the owner, then retry
+    /// the fill stored in `Pending::fill`.
+    EvictFlush,
+}
+
+#[derive(Debug, Clone)]
+pub struct Pending {
+    pub kind: PendingKind,
+    pub waiters: VecDeque<Req>,
+    /// Deferred fill for `EvictFlush` (address + DRAM value).
+    pub fill: Option<(LineAddr, u64)>,
+}
+
+impl Pending {
+    fn new(kind: PendingKind) -> Self {
+        Self { kind, waiters: VecDeque::new(), fill: None }
+    }
+}
+
+impl Tardis {
+    /// Network events at a timestamp manager.
+    pub(crate) fn tm_on_message(&mut self, slice: SliceId, msg: Message, ctx: &mut ProtoCtx) {
+        match msg.kind {
+            MsgKind::ShReq { pts, wts, renew } => {
+                ctx.stats.llc_accesses += 1;
+                self.tm_request(
+                    slice,
+                    msg.addr,
+                    Req { core: msg.requester, kind: ReqKind::Sh { pts, wts, renew } },
+                    ctx,
+                );
+            }
+            MsgKind::ExReq { wts } => {
+                ctx.stats.llc_accesses += 1;
+                self.tm_request(
+                    slice,
+                    msg.addr,
+                    Req { core: msg.requester, kind: ReqKind::Ex { wts } },
+                    ctx,
+                );
+            }
+            MsgKind::WbRep { wts, rts, value } => {
+                self.tm_owner_return(slice, msg.addr, wts, rts, value, true, ctx);
+            }
+            MsgKind::FlushRep { wts, rts, value, dirty } => {
+                self.tm_owner_return(slice, msg.addr, wts, rts, value, dirty, ctx);
+            }
+            MsgKind::DramLdRep { value } => self.tm_install(slice, msg.addr, value, ctx),
+            other => panic!("tardis TM got unexpected message {other:?}"),
+        }
+    }
+
+    /// Entry point for SH/EX requests: queue if the line is busy,
+    /// otherwise process.
+    fn tm_request(&mut self, slice: SliceId, addr: LineAddr, req: Req, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        if let Some(p) = self.tm[s].pending.get_mut(&addr) {
+            p.waiters.push_back(req);
+            return;
+        }
+        self.tm_process(slice, addr, req, ctx);
+    }
+
+    /// Process one request against a non-busy line (Table III columns
+    /// 1 and 2).  May create a new pending entry.
+    fn tm_process(&mut self, slice: SliceId, addr: LineAddr, req: Req, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        let lease = self.cfg.lease;
+        let line = match self.tm[s].cache.get_mut(addr) {
+            None => {
+                // Invalid: load from DRAM (Table III column 1/2, row 1).
+                let mut p = Pending::new(PendingKind::Fetch);
+                p.waiters.push_back(req);
+                self.tm[s].pending.insert(addr, p);
+                ctx.stats.dram_accesses += 1;
+                let mc = home_mc(addr, 8);
+                ctx.send(Message {
+                    src: Node::Slice(slice),
+                    dst: Node::Mc(mc),
+                    addr,
+                    requester: req.core,
+                    kind: MsgKind::DramLdReq,
+                });
+                return;
+            }
+            Some(line) => line,
+        };
+
+        match (req.kind, line.owner) {
+            // ---- Shared request, line shared ----
+            (ReqKind::Sh { pts, wts, renew }, None) => {
+                // E-state extension (§IV-D): a line nobody has touched
+                // since its fill "seems private" — grant it exclusively
+                // so it never expires (silent upgrades, no renewals).
+                if self.cfg.exclusive_state && !line.touched {
+                    let (l_wts, l_rts, l_val) = (line.wts, line.rts, line.value);
+                    line.owner = Some(req.core);
+                    line.touched = true;
+                    ctx.send(to_core(
+                        slice,
+                        req.core,
+                        addr,
+                        req.core,
+                        MsgKind::ExRep { wts: l_wts, rts: l_rts, value: l_val },
+                    ));
+                    return;
+                }
+                // Dynamic leases (§VI-C5): successful renewals signal
+                // read-mostly data — double the line's lease up to the
+                // cap; writes reset it (see the Ex arm).
+                let eff_lease = if self.cfg.dynamic_lease {
+                    let l = (lease << line.lease_exp).min(self.cfg.max_lease);
+                    if renew && wts == line.wts {
+                        let max_exp = 63 - self.cfg.max_lease.leading_zeros() as u8;
+                        line.lease_exp = (line.lease_exp + 1).min(max_exp);
+                    }
+                    l
+                } else {
+                    lease
+                };
+                line.rts = line.rts.max(line.wts + eff_lease).max(pts + eff_lease);
+                line.touched = true;
+                let (l_wts, l_rts, l_val) = (line.wts, line.rts, line.value);
+                self.tm[s].max_ts = self.tm[s].max_ts.max(l_rts);
+                if wts == l_wts {
+                    // Requester's copy is current: renew without data.
+                    ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::RenewRep { rts: l_rts }));
+                } else {
+                    ctx.send(to_core(
+                        slice,
+                        req.core,
+                        addr,
+                        req.core,
+                        MsgKind::ShRep { wts: l_wts, rts: l_rts, value: l_val },
+                    ));
+                }
+                self.tm_check_rebase(slice, ctx);
+            }
+            // ---- Exclusive request, line shared: jump ahead, no
+            // invalidations (§III-C2) ----
+            (ReqKind::Ex { wts }, None) => {
+                let (l_wts, l_rts, l_val) = (line.wts, line.rts, line.value);
+                line.owner = Some(req.core);
+                line.touched = true;
+                line.lease_exp = 0; // writes reset the dynamic lease
+                if wts == l_wts {
+                    ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::UpgradeRep { rts: l_rts }));
+                } else {
+                    ctx.send(to_core(
+                        slice,
+                        req.core,
+                        addr,
+                        req.core,
+                        MsgKind::ExRep { wts: l_wts, rts: l_rts, value: l_val },
+                    ));
+                }
+            }
+            // ---- Either request, line exclusively owned ----
+            (kind, Some(owner)) => {
+                line.busy = true;
+                let (pk, msg_kind) = match kind {
+                    ReqKind::Sh { pts, .. } => {
+                        (PendingKind::AwaitWb, MsgKind::WbReq { rts: pts + lease })
+                    }
+                    ReqKind::Ex { .. } => (PendingKind::AwaitFlush, MsgKind::FlushReq),
+                };
+                let mut p = Pending::new(pk);
+                p.waiters.push_back(req);
+                self.tm[s].pending.insert(addr, p);
+                ctx.send(to_core(slice, owner, addr, req.core, msg_kind));
+            }
+        }
+    }
+
+    /// WB_REP / FLUSH_REP from an owner — either solicited (resolves a
+    /// pending owner round-trip) or an unsolicited eviction flush
+    /// (Table III column 5: fill in data, state <- Shared).
+    fn tm_owner_return(
+        &mut self,
+        slice: SliceId,
+        addr: LineAddr,
+        wts: Ts,
+        rts: Ts,
+        value: u64,
+        dirty: bool,
+        ctx: &mut ProtoCtx,
+    ) {
+        let s = slice as usize;
+        match self.tm[s].cache.peek_mut(addr) {
+            Some(line) => {
+                line.owner = None;
+                line.busy = false;
+                line.wts = wts;
+                line.rts = rts;
+                line.value = value;
+                line.dirty |= dirty;
+                self.tm[s].max_ts = self.tm[s].max_ts.max(rts);
+            }
+            None => {
+                // The line was dropped from the LLC while owned (bypass
+                // grant): fold into mts and write back directly.
+                self.tm[s].mts = self.tm[s].mts.max(rts);
+                if dirty {
+                    ctx.stats.dram_accesses += 1;
+                    let mc = home_mc(addr, 8);
+                    ctx.send(Message {
+                        src: Node::Slice(slice),
+                        dst: Node::Mc(mc),
+                        addr,
+                        requester: 0,
+                        kind: MsgKind::DramStReq { value },
+                    });
+                }
+            }
+        }
+        let Some(mut p) = self.tm[s].pending.remove(&addr) else {
+            return; // plain eviction flush, nothing queued
+        };
+        match p.kind {
+            PendingKind::AwaitWb | PendingKind::AwaitFlush => {
+                self.tm_drain(slice, addr, p.waiters, ctx);
+            }
+            PendingKind::EvictFlush => {
+                // The line was being evicted: write it back, drop it,
+                // then retry the deferred fill.
+                if let Some(line) = self.tm[s].cache.invalidate(addr) {
+                    self.tm_writeback(slice, addr, &line, ctx);
+                }
+                if let Some((fill_addr, fill_value)) = p.fill.take() {
+                    self.tm_install(slice, fill_addr, fill_value, ctx);
+                }
+                // Requests that arrived for the victim restart cold.
+                self.tm_drain(slice, addr, p.waiters, ctx);
+            }
+            PendingKind::Fetch => unreachable!("owner return while fetching"),
+        }
+    }
+
+    /// Install a DRAM-fetched line with wts = rts = mts (§III-C2),
+    /// evicting a victim if needed, then serve the waiters queued under
+    /// the Fetch pending entry.
+    fn tm_install(&mut self, slice: SliceId, addr: LineAddr, value: u64, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        let mts = self.tm[s].mts;
+        let new_line =
+            TmLine { owner: None, busy: false, wts: mts, rts: mts, value, dirty: false, touched: false, lease_exp: 0 };
+
+        // Preferred victims: unowned, non-busy lines (silent except for
+        // the mts fold + dirty writeback).
+        match self.tm[s].cache.insert_filtered(addr, new_line, |l| l.owner.is_none() && !l.busy) {
+            Ok(evicted) => {
+                if let Some((vaddr, v)) = evicted {
+                    self.tm_writeback(slice, vaddr, &v, ctx);
+                }
+                if let Some(p) = self.tm[s].pending.remove(&addr) {
+                    debug_assert_eq!(p.kind, PendingKind::Fetch);
+                    self.tm_drain(slice, addr, p.waiters, ctx);
+                }
+            }
+            Err(_) => {
+                // Fall back to evicting an owned line: flush its owner
+                // and park the fill on the victim (Table III column 3,
+                // exclusive case).
+                let victim = self.tm[s].cache.victim_for(addr, |l| l.owner.is_some() && !l.busy);
+                match victim {
+                    Some(vaddr) => {
+                        let owner = {
+                            let vline = self.tm[s].cache.peek_mut(vaddr).unwrap();
+                            vline.busy = true;
+                            vline.owner.unwrap()
+                        };
+                        let mut p = Pending::new(PendingKind::EvictFlush);
+                        p.fill = Some((addr, value));
+                        self.tm[s].pending.insert(vaddr, p);
+                        ctx.send(to_core(slice, owner, vaddr, owner, MsgKind::FlushReq));
+                    }
+                    None => {
+                        // Every way is mid-transaction (needs 8+
+                        // concurrent owner round-trips in one set):
+                        // retry the install after a cycle via a
+                        // self-delivered DRAM reply.
+                        ctx.send(Message {
+                            src: Node::Slice(slice),
+                            dst: Node::Slice(slice),
+                            addr,
+                            requester: 0,
+                            kind: MsgKind::DramLdRep { value },
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    /// Serve queued requests in order.  If one re-busies the line, the
+    /// remaining waiters follow it into the new pending entry.
+    fn tm_drain(
+        &mut self,
+        slice: SliceId,
+        addr: LineAddr,
+        mut waiters: VecDeque<Req>,
+        ctx: &mut ProtoCtx,
+    ) {
+        let s = slice as usize;
+        while let Some(req) = waiters.pop_front() {
+            self.tm_process(slice, addr, req, ctx);
+            if let Some(p) = self.tm[s].pending.get_mut(&addr) {
+                p.waiters.extend(waiters.drain(..));
+                return;
+            }
+        }
+    }
+
+    /// LLC eviction of a shared line (Table III column 3): fold its rts
+    /// into mts; write data back to DRAM if dirty.  No invalidations —
+    /// private copies stay readable until they expire (§III-F1).
+    fn tm_writeback(&mut self, slice: SliceId, addr: LineAddr, line: &TmLine, ctx: &mut ProtoCtx) {
+        let s = slice as usize;
+        debug_assert!(line.owner.is_none(), "writeback of owned line");
+        self.tm[s].mts = self.tm[s].mts.max(line.rts);
+        if line.dirty {
+            ctx.stats.dram_accesses += 1;
+            let mc = home_mc(addr, 8);
+            ctx.send(Message {
+                src: Node::Slice(slice),
+                dst: Node::Mc(mc),
+                addr,
+                requester: 0,
+                kind: MsgKind::DramStReq { value: line.value },
+            });
+        }
+    }
+
+    /// LLC-side base-delta rebase model (§IV-B): triggered when mts or
+    /// a line timestamp outgrows the delta width; counted in stats (the
+    /// slice-busy cost is recorded, not timed — see DESIGN.md §Perf).
+    /// The trigger uses the incrementally-tracked slice max timestamp —
+    /// scanning the array per request was the #1 hot spot (§Perf).
+    pub(crate) fn tm_check_rebase(&mut self, slice: SliceId, ctx: &mut ProtoCtx) {
+        if self.ts_range == u64::MAX {
+            return;
+        }
+        let s = slice as usize;
+        let max_ts = self.tm[s].max_ts.max(self.tm[s].mts);
+        if max_ts.saturating_sub(self.tm[s].bts) < self.ts_range {
+            return;
+        }
+        let half = self.ts_range / 2;
+        let mut bts = self.tm[s].bts;
+        while max_ts.saturating_sub(bts) >= self.ts_range {
+            bts += half;
+            ctx.stats.ts.l2_rebases += 1;
+            ctx.stats.ts.rebase_stall_cycles += self.cfg.l2_rebase_cycles;
+        }
+        self.tm[s].bts = bts;
+        // Clamp timestamps up to the new base (safe: a hypothetical
+        // later read/write of the same data, §IV-B).
+        self.tm[s].cache.retain_lines(|_, l| {
+            if l.owner.is_none() {
+                l.wts = l.wts.max(bts);
+                l.rts = l.rts.max(bts);
+            }
+            true
+        });
+        self.tm[s].mts = self.tm[s].mts.max(bts);
+    }
+}

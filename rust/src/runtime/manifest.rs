@@ -1,0 +1,93 @@
+//! Minimal parser for artifacts/manifest.json (no serde in this
+//! image's crate registry).  The format is fixed and produced by our
+//! own aot.py, so a small field extractor is sufficient and strict.
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub n_cores: u32,
+    pub trace_len: u32,
+    pub file: String,
+}
+
+/// Parse the manifest: extracts every `{"n_cores": N, "trace_len": L,
+/// "file": "..."}` object from the configs array.
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut entries = Vec::new();
+    let configs_at = text
+        .find("\"configs\"")
+        .ok_or_else(|| anyhow!("manifest missing \"configs\""))?;
+    let body = &text[configs_at..];
+    for obj in body.split('{').skip(1) {
+        let obj = obj.split('}').next().unwrap_or("");
+        let n_cores = extract_u32(obj, "n_cores");
+        let trace_len = extract_u32(obj, "trace_len");
+        let file = extract_str(obj, "file");
+        if let (Some(n_cores), Some(trace_len), Some(file)) = (n_cores, trace_len, file) {
+            entries.push(ManifestEntry { n_cores, trace_len, file });
+        }
+    }
+    if entries.is_empty() {
+        return Err(anyhow!("manifest has no artifact configs"));
+    }
+    Ok(entries)
+}
+
+fn extract_u32(obj: &str, key: &str) -> Option<u32> {
+    let pat = format!("\"{key}\"");
+    let at = obj.find(&pat)?;
+    let rest = &obj[at + pat.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+fn extract_str(obj: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\"");
+    let at = obj.find(&pat)?;
+    let rest = &obj[at + pat.len()..];
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let rest = rest.strip_prefix('"')?;
+    Some(rest[..rest.find('"')?].to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+  "params_len": 16,
+  "configs": [
+    { "n_cores": 2, "trace_len": 256, "file": "tracegen_c2_l256.hlo.txt" },
+    { "n_cores": 64, "trace_len": 4096, "file": "tracegen_c64_l4096.hlo.txt" }
+  ]
+}"#;
+
+    #[test]
+    fn parses_entries() {
+        let e = parse_manifest(SAMPLE).unwrap();
+        assert_eq!(e.len(), 2);
+        assert_eq!(e[0], ManifestEntry {
+            n_cores: 2,
+            trace_len: 256,
+            file: "tracegen_c2_l256.hlo.txt".into()
+        });
+        assert_eq!(e[1].n_cores, 64);
+        assert_eq!(e[1].trace_len, 4096);
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest("{\"configs\": []}").is_err());
+    }
+
+    #[test]
+    fn tolerates_compact_json() {
+        let compact = r#"{"configs":[{"n_cores":4,"trace_len":512,"file":"x.hlo.txt"}]}"#;
+        let e = parse_manifest(compact).unwrap();
+        assert_eq!(e[0].n_cores, 4);
+        assert_eq!(e[0].file, "x.hlo.txt");
+    }
+}

@@ -1,0 +1,110 @@
+//! Deterministic discrete-event queue: a binary heap keyed by
+//! (cycle, sequence) so same-cycle events fire in insertion order.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::net::Message;
+use crate::types::{CoreId, Cycle};
+
+/// Events dispatched by the engine.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    /// A core is scheduled to make progress.
+    CoreWake(CoreId),
+    /// A network message reaches its destination controller.
+    Deliver(Message),
+}
+
+#[derive(Debug)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<(Cycle, u64, EventBox)>>,
+    seq: u64,
+}
+
+/// Wrapper giving `Event` a total order (by discriminant only; the
+/// sequence number already breaks ties deterministically).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct EventBox(Event);
+
+impl Ord for EventBox {
+    fn cmp(&self, _other: &Self) -> std::cmp::Ordering {
+        std::cmp::Ordering::Equal
+    }
+}
+impl PartialOrd for EventBox {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    pub fn push(&mut self, at: Cycle, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse((at, self.seq, EventBox(ev))));
+    }
+
+    pub fn pop(&mut self) -> Option<(Cycle, Event)> {
+        self.heap.pop().map(|Reverse((t, _, e))| (t, e.0))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, Event::CoreWake(3));
+        q.push(10, Event::CoreWake(1));
+        q.push(20, Event::CoreWake(2));
+        assert_eq!(q.pop(), Some((10, Event::CoreWake(1))));
+        assert_eq!(q.pop(), Some((20, Event::CoreWake(2))));
+        assert_eq!(q.pop(), Some((30, Event::CoreWake(3))));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn same_cycle_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(5, Event::CoreWake(i));
+        }
+        for i in 0..10 {
+            assert_eq!(q.pop(), Some((5, Event::CoreWake(i))));
+        }
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let mut q = EventQueue::new();
+        q.push(1, Event::CoreWake(0));
+        assert_eq!(q.pop(), Some((1, Event::CoreWake(0))));
+        q.push(3, Event::CoreWake(1));
+        q.push(2, Event::CoreWake(2));
+        assert_eq!(q.pop(), Some((2, Event::CoreWake(2))));
+        q.push(2, Event::CoreWake(3));
+        assert_eq!(q.pop(), Some((2, Event::CoreWake(3))));
+        assert_eq!(q.pop(), Some((3, Event::CoreWake(1))));
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event simulation: event queue and engine.
+
+pub mod engine;
+pub mod event;
+
+pub use engine::{run_workload, Engine, SimResult};
+pub use event::{Event, EventQueue};

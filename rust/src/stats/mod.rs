@@ -1,0 +1,229 @@
+//! Simulation statistics: every counter the paper's tables and figures
+//! need, plus merge/normalize helpers for the experiment harness.
+
+use crate::types::Cycle;
+
+/// Network-traffic breakdown by message class, in flits.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrafficStats {
+    /// Demand requests (SH_REQ/EX_REQ/GETS/GETX) excluding renewals.
+    pub request_flits: u64,
+    /// Data-carrying responses (SH_REP/EX_REP/WB_REP/FLUSH_REP...).
+    pub data_flits: u64,
+    /// Control responses (UPGRADE_REP/RENEW_REP/acks/grants).
+    pub control_flits: u64,
+    /// Renewal requests (Tardis SH_REQ with matching wts — lease
+    /// extension attempts).
+    pub renew_flits: u64,
+    /// Invalidations + eviction notifications (directory protocols).
+    pub invalidation_flits: u64,
+    /// LLC <-> memory-controller traffic.
+    pub dram_flits: u64,
+}
+
+impl TrafficStats {
+    pub fn total(&self) -> u64 {
+        self.request_flits
+            + self.data_flits
+            + self.control_flits
+            + self.renew_flits
+            + self.invalidation_flits
+            + self.dram_flits
+    }
+
+    pub fn add(&mut self, other: &TrafficStats) {
+        self.request_flits += other.request_flits;
+        self.data_flits += other.data_flits;
+        self.control_flits += other.control_flits;
+        self.renew_flits += other.renew_flits;
+        self.invalidation_flits += other.invalidation_flits;
+        self.dram_flits += other.dram_flits;
+    }
+}
+
+/// Tardis timestamp dynamics (paper Table VI).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TimestampStats {
+    /// Total pts increase accumulated across all cores.
+    pub pts_increase_total: u64,
+    /// pts increase attributable to periodic self increment (§III-E).
+    pub pts_increase_self_inc: u64,
+    /// Number of L1 rebase events (base-delta rollover, §IV-B).
+    pub l1_rebases: u64,
+    /// Number of LLC rebase events.
+    pub l2_rebases: u64,
+    /// Cycles spent stalled on rebases.
+    pub rebase_stall_cycles: u64,
+    /// Shared L1 lines invalidated because delta_rts went negative
+    /// during a rebase.
+    pub rebase_invalidations: u64,
+}
+
+/// Everything measured by one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct SimStats {
+    /// Cores in the simulated system (for per-core normalizations).
+    pub n_cores: u32,
+    /// Benchmark completion time (cycle when the last core finished).
+    pub cycles: Cycle,
+    /// Completed memory operations (loads + stores + atomics),
+    /// including spin re-loads.
+    pub memops: u64,
+    /// Loads (incl. spin polls), stores, atomics.
+    pub loads: u64,
+    pub stores: u64,
+    pub atomics: u64,
+
+    /// L1 data-cache hits/misses (demand, excluding renew checks).
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+
+    /// Requests processed by the LLC / timestamp managers, including
+    /// renewals (paper Fig. 5 normalizes renewals by this).
+    pub llc_accesses: u64,
+    /// DRAM line fetches + writebacks.
+    pub dram_accesses: u64,
+
+    /// Tardis renewals: lease-extension requests and their outcomes.
+    pub renew_requests: u64,
+    pub renew_success: u64,
+    /// Failed renewals that had been speculated through (rollback).
+    pub misspeculations: u64,
+    /// Cycles charged to rollback penalties.
+    pub rollback_cycles: u64,
+
+    /// Directory invalidations sent (MSI/Ackwise), and broadcasts.
+    pub invalidations_sent: u64,
+    pub broadcasts: u64,
+
+    /// Cycles cores spent spinning (lock/barrier waits).
+    pub spin_cycles: u64,
+    /// Lock acquisitions and barrier episodes completed.
+    pub locks_acquired: u64,
+    pub barriers_passed: u64,
+
+    pub traffic: TrafficStats,
+    pub ts: TimestampStats,
+}
+
+impl SimStats {
+    /// Instructions(memops)-per-cycle style throughput metric.  The
+    /// paper reports throughput normalized to baseline MSI; the ratio
+    /// of `throughput()` across runs of the same workload gives that.
+    pub fn throughput(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.memops as f64 / self.cycles as f64
+        }
+    }
+
+    /// Renew requests as a fraction of LLC accesses (Fig. 5).
+    pub fn renew_rate(&self) -> f64 {
+        if self.llc_accesses == 0 {
+            0.0
+        } else {
+            self.renew_requests as f64 / self.llc_accesses as f64
+        }
+    }
+
+    /// Misspeculations as a fraction of LLC accesses (Fig. 5).
+    pub fn misspeculation_rate(&self) -> f64 {
+        if self.llc_accesses == 0 {
+            0.0
+        } else {
+            self.misspeculations as f64 / self.llc_accesses as f64
+        }
+    }
+
+    /// Cycles per unit of per-core pts increase (paper Table VI
+    /// "Ts. Incr. Rate"): each core's pts advances once every this
+    /// many cycles on average.
+    pub fn ts_incr_rate(&self) -> f64 {
+        if self.ts.pts_increase_total == 0 {
+            f64::INFINITY
+        } else {
+            let per_core = self.ts.pts_increase_total as f64 / self.n_cores.max(1) as f64;
+            self.cycles as f64 / per_core
+        }
+    }
+
+    /// Fraction of pts increase caused by self increment (Table VI).
+    pub fn self_inc_fraction(&self) -> f64 {
+        if self.ts.pts_increase_total == 0 {
+            0.0
+        } else {
+            self.ts.pts_increase_self_inc as f64 / self.ts.pts_increase_total as f64
+        }
+    }
+
+    /// L1 miss rate over demand accesses.
+    pub fn l1_miss_rate(&self) -> f64 {
+        let total = self.l1_hits + self.l1_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.l1_misses as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traffic_total_sums_all_classes() {
+        let t = TrafficStats {
+            request_flits: 1,
+            data_flits: 2,
+            control_flits: 3,
+            renew_flits: 4,
+            invalidation_flits: 5,
+            dram_flits: 6,
+        };
+        assert_eq!(t.total(), 21);
+    }
+
+    #[test]
+    fn traffic_add_accumulates() {
+        let mut a = TrafficStats::default();
+        let b = TrafficStats { request_flits: 2, data_flits: 7, ..Default::default() };
+        a.add(&b);
+        a.add(&b);
+        assert_eq!(a.request_flits, 4);
+        assert_eq!(a.data_flits, 14);
+    }
+
+    #[test]
+    fn derived_rates() {
+        let s = SimStats {
+            n_cores: 1,
+            cycles: 1000,
+            memops: 500,
+            llc_accesses: 100,
+            renew_requests: 25,
+            misspeculations: 1,
+            ts: TimestampStats {
+                pts_increase_total: 10,
+                pts_increase_self_inc: 4,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert!((s.throughput() - 0.5).abs() < 1e-12);
+        assert!((s.renew_rate() - 0.25).abs() < 1e-12);
+        assert!((s.misspeculation_rate() - 0.01).abs() < 1e-12);
+        assert!((s.ts_incr_rate() - 100.0).abs() < 1e-12);
+        assert!((s.self_inc_fraction() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_division_guards() {
+        let s = SimStats::default();
+        assert_eq!(s.throughput(), 0.0);
+        assert_eq!(s.renew_rate(), 0.0);
+        assert_eq!(s.l1_miss_rate(), 0.0);
+        assert!(s.ts_incr_rate().is_infinite());
+    }
+}

@@ -1,0 +1,71 @@
+//! Decode raw trace tensors (PJRT artifact output or the rust synth
+//! mirror) into executable [`Workload`]s.
+
+use crate::prog::{Op, Program, Workload};
+use crate::types::{LineAddr, OP_BARRIER, OP_LOAD, OP_LOCK, OP_STORE, OP_UNLOCK};
+
+/// Decode a flat int32[n_cores * trace_len * 3] (op, addr, aux) tensor.
+pub fn decode_workload(raw: &[i32], n_cores: u32, trace_len: u32) -> Workload {
+    assert_eq!(
+        raw.len(),
+        (n_cores * trace_len * 3) as usize,
+        "trace tensor shape mismatch"
+    );
+    let mut programs = Vec::with_capacity(n_cores as usize);
+    for core in 0..n_cores as usize {
+        let base = core * trace_len as usize * 3;
+        let mut ops = Vec::with_capacity(trace_len as usize);
+        for slot in 0..trace_len as usize {
+            let i = base + slot * 3;
+            let (op, addr, aux) = (raw[i], raw[i + 1] as LineAddr, raw[i + 2]);
+            ops.push(match op {
+                OP_LOAD => Op::Load { addr, gap: aux as u32 },
+                OP_STORE => Op::Store { addr, value: None, gap: aux as u32 },
+                OP_LOCK => Op::Lock { addr },
+                OP_UNLOCK => Op::Unlock { addr },
+                OP_BARRIER => Op::Barrier,
+                other => panic!("bad opcode {other} at core {core} slot {slot}"),
+            });
+        }
+        programs.push(Program::new(ops));
+    }
+    Workload::new(programs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decodes_all_op_kinds() {
+        #[rustfmt::skip]
+        let raw = vec![
+            0, 10, 2,   // load addr 10 gap 2
+            1, 11, 0,   // store addr 11
+            2, 12, 0,   // lock
+            3, 12, 0,   // unlock
+            4, 99, 1,   // barrier
+            0, 13, 0,   // load
+        ];
+        let w = decode_workload(&raw, 2, 3);
+        assert_eq!(w.n_cores(), 2);
+        assert_eq!(w.programs[0].ops[0], Op::Load { addr: 10, gap: 2 });
+        assert_eq!(w.programs[0].ops[1], Op::Store { addr: 11, value: None, gap: 0 });
+        assert_eq!(w.programs[0].ops[2], Op::Lock { addr: 12 });
+        assert_eq!(w.programs[1].ops[0], Op::Unlock { addr: 12 });
+        assert_eq!(w.programs[1].ops[1], Op::Barrier);
+        assert_eq!(w.programs[1].ops[2], Op::Load { addr: 13, gap: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn rejects_bad_shape() {
+        decode_workload(&[0, 1, 2, 3], 1, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad opcode")]
+    fn rejects_bad_opcode() {
+        decode_workload(&[9, 0, 0], 1, 1);
+    }
+}

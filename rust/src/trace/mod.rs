@@ -1,0 +1,9 @@
+//! Trace handling: decoding AOT tracegen artifacts into [`Workload`]s,
+//! plus a bit-exact pure-rust mirror of the generator used as a
+//! cross-language oracle and artifact-free fallback.
+
+pub mod decode;
+pub mod synth;
+
+pub use decode::decode_workload;
+pub use synth::{synth_raw, synth_workload, TraceParams};

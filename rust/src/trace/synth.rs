@@ -1,0 +1,311 @@
+//! Pure-rust mirror of the Pallas tracegen kernel
+//! (python/compile/kernels/tracegen.py).  Bit-exact by construction:
+//! the integration test `runtime_artifacts.rs` asserts equality against
+//! the PJRT-executed artifact, which validates both this port and the
+//! artifact decode path.  Also the artifact-free fallback for tests.
+
+use crate::types::{
+    BARRIER_BASE, LOCK_BASE, LOCK_DATA_BASE, LOCK_DATA_SPAN, PRIV_BASE, PRIV_STRIDE, SHARED_BASE,
+};
+
+/// Parameter vector — mirrors python/compile/kernels/spec.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceParams {
+    pub seed: u32,
+    pub pattern: u32,
+    pub priv_lines: u32,
+    pub shared_lines: u32,
+    pub pct_shared: u32,
+    pub pct_write_shared: u32,
+    pub pct_write_priv: u32,
+    pub sync_kind: u32,
+    pub sync_period: u32,
+    pub crit_len: u32,
+    pub n_locks: u32,
+    pub compute_gap_max: u32,
+    pub stride: u32,
+    pub grid_dim: u32,
+    pub barrier_period: u32,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        Self {
+            seed: 1,
+            pattern: 0,
+            priv_lines: 64,
+            shared_lines: 256,
+            pct_shared: 300,
+            pct_write_shared: 200,
+            pct_write_priv: 300,
+            sync_kind: 0,
+            sync_period: 0,
+            crit_len: 4,
+            n_locks: 16,
+            compute_gap_max: 4,
+            stride: 3,
+            grid_dim: 8,
+            barrier_period: 0,
+        }
+    }
+}
+
+impl TraceParams {
+    /// Serialize to the int32[16] vector the artifacts take as input.
+    pub fn to_vec(&self) -> [i32; 16] {
+        [
+            self.seed as i32,
+            self.pattern as i32,
+            self.priv_lines as i32,
+            self.shared_lines as i32,
+            self.pct_shared as i32,
+            self.pct_write_shared as i32,
+            self.pct_write_priv as i32,
+            self.sync_kind as i32,
+            self.sync_period as i32,
+            self.crit_len as i32,
+            self.n_locks as i32,
+            self.compute_gap_max as i32,
+            self.stride as i32,
+            self.grid_dim as i32,
+            self.barrier_period as i32,
+            0,
+        ]
+    }
+}
+
+const OP_LOAD: i32 = 0;
+const OP_STORE: i32 = 1;
+const OP_LOCK: i32 = 2;
+const OP_UNLOCK: i32 = 3;
+const OP_BARRIER: i32 = 4;
+
+const N_BLOCKS: u32 = 32;
+const HOT_SET_LINES: u32 = 64;
+
+/// The counter-based PRNG (xxhash-style finalizer) — must match
+/// `_mix` in tracegen.py exactly.
+#[inline]
+pub fn mix(seed: u32, core: u32, slot: u32, stream: u32) -> u32 {
+    let mut h = seed
+        ^ core.wrapping_mul(0x85EB_CA6B)
+        ^ slot.wrapping_mul(0xC2B2_AE35)
+        ^ stream.wrapping_mul(0x27D4_EB2F);
+    h ^= h >> 15;
+    h = h.wrapping_mul(0x2C1B_3C6D);
+    h ^= h >> 12;
+    h = h.wrapping_mul(0x297A_2D39);
+    h ^= h >> 15;
+    h
+}
+
+/// Generate one slot — the scalar twin of `_gen_tile`.
+fn gen_slot(p: &TraceParams, core: u32, slot: u32, trace_len: u32, n_cores: u32) -> (i32, i32, i32) {
+    let seed = p.seed;
+    let priv_lines = p.priv_lines.max(1);
+    let shared_lines = p.shared_lines.max(1);
+    let n_locks = p.n_locks.max(1);
+    let stride = p.stride.max(1);
+    let grid_dim = p.grid_dim.max(1);
+
+    let h: Vec<u32> = (0..7).map(|k| mix(seed, core, slot, k)).collect();
+
+    // Barriers.
+    let use_barriers = (p.sync_kind & 2) != 0;
+    let bp = p.barrier_period.max(1);
+    let is_barrier = use_barriers && p.barrier_period > 0 && (slot + 1) % bp == 0;
+    let barrier_epoch = (slot + 1) / bp;
+
+    // Lock episodes.
+    let use_locks = (p.sync_kind & 1) != 0;
+    let sp = p.sync_period.max(1);
+    let crit_len = p.crit_len.min(sp - sp.min(2));
+    let m = slot % sp;
+    let episode_start = slot - m;
+    let lock_id = mix(seed, core, episode_start, 7) % n_locks;
+    let episode_end = episode_start + crit_len + 1;
+    let fits = episode_start >= 1 && episode_end <= trace_len - 2;
+    let first_bar = bp * ((episode_start + bp) / bp) - 1;
+    let no_bar_inside = !(use_barriers && p.barrier_period > 0 && first_bar <= episode_end);
+    let in_lock_mode = use_locks && p.sync_period > 0 && fits && no_bar_inside;
+    let is_lock = in_lock_mode && m == 0;
+    let is_unlock = in_lock_mode && m == crit_len + 1;
+    let is_crit = in_lock_mode && m >= 1 && m <= crit_len;
+    let lock_addr = LOCK_BASE as u32 + lock_id;
+    let crit_addr =
+        LOCK_DATA_BASE as u32 + lock_id * LOCK_DATA_SPAN as u32 + h[3] % LOCK_DATA_SPAN as u32;
+    let crit_store = h[2] % 1000 < 500;
+
+    // Normal slots.
+    let is_shared = h[0] % 1000 < p.pct_shared;
+    let sh_store = h[1] % 1000 < p.pct_write_shared;
+    let pr_store = h[1] % 1000 < p.pct_write_priv;
+
+    let s_uniform = h[5] % shared_lines;
+    // Strided reads sweep the whole array; writes stay in the core's
+    // own 1/N output partition (SPLASH-2 kernels write core-
+    // partitioned data).
+    let part = (shared_lines / n_cores.max(1)).max(1);
+    let s_strided_rd = (slot.wrapping_mul(stride).wrapping_add(core)) % shared_lines;
+    let s_strided_wr =
+        (core.wrapping_mul(part).wrapping_add(slot.wrapping_mul(stride) % part)) % shared_lines;
+    let s_strided = if sh_store { s_strided_wr } else { s_strided_rd };
+    let blk = (shared_lines / N_BLOCKS).max(1);
+    let own_block = core % N_BLOCKS;
+    let rd_block = h[5] % N_BLOCKS;
+    let block_sel = if sh_store { own_block } else { rd_block };
+    let s_blocked = (block_sel.wrapping_mul(blk).wrapping_add(h[6] % blk)) % shared_lines;
+    let row = core % grid_dim;
+    let drow = h[5] % 3;
+    let row2 = (row + grid_dim + drow - 1) % grid_dim;
+    // Stencil: reads may touch neighbor rows; writes only the own row.
+    let row_sel = if sh_store { row } else { row2 };
+    let s_stencil = (row_sel.wrapping_mul(grid_dim).wrapping_add(h[6] % grid_dim)) % shared_lines;
+    let hot = shared_lines.min(HOT_SET_LINES);
+    let s_hot = h[5] % hot;
+
+    let s = match p.pattern {
+        1 => s_strided,
+        2 => s_blocked,
+        3 => s_stencil,
+        4 => s_hot,
+        _ => s_uniform,
+    };
+    let shared_addr = SHARED_BASE as u32 + s;
+    // Private accesses have temporal locality: 80% hit a hot 1/8
+    // subset (benchmark-like L1 hit rates).
+    let hot_priv = (priv_lines / 8).max(1);
+    let priv_idx = if h[6] % 1000 < 800 { h[3] % hot_priv } else { h[3] % priv_lines };
+    let priv_addr = PRIV_BASE as u32 + core * PRIV_STRIDE as u32 + priv_idx;
+
+    let normal_store = if is_shared { sh_store } else { pr_store };
+    let normal_addr = if is_shared { shared_addr } else { priv_addr };
+    let normal_op = if normal_store { OP_STORE } else { OP_LOAD };
+
+    // Priority composition: barrier > lock > unlock > crit > normal.
+    let (mut op, mut addr) = (normal_op, normal_addr);
+    if is_crit {
+        op = if crit_store { OP_STORE } else { OP_LOAD };
+        addr = crit_addr;
+    }
+    if is_unlock {
+        op = OP_UNLOCK;
+        addr = lock_addr;
+    }
+    if is_lock {
+        op = OP_LOCK;
+        addr = lock_addr;
+    }
+    if is_barrier {
+        op = OP_BARRIER;
+        addr = BARRIER_BASE as u32;
+    }
+
+    let gap = h[4] % (p.compute_gap_max + 1);
+    let aux = if op == OP_LOAD || op == OP_STORE {
+        gap
+    } else if op == OP_BARRIER {
+        barrier_epoch
+    } else {
+        0
+    };
+    (op, addr as i32, aux as i32)
+}
+
+/// Raw trace rows (op, addr, aux), flat [n_cores * trace_len * 3] —
+/// the kernel output, including the L2 epilogue (warm-up slot 0 and
+/// join barrier at the end, matching model.py).
+pub fn synth_raw(p: &TraceParams, n_cores: u32, trace_len: u32) -> Vec<i32> {
+    let mut out = Vec::with_capacity((n_cores * trace_len * 3) as usize);
+    for core in 0..n_cores {
+        for slot in 0..trace_len {
+            let (op, addr, aux) = if slot == 0 {
+                // Warm-up private load (model.py epilogue).
+                (OP_LOAD, (PRIV_BASE + core as u64 * PRIV_STRIDE) as i32, 0)
+            } else if slot == trace_len - 1 {
+                // Join barrier.
+                (OP_BARRIER, BARRIER_BASE as i32, 0)
+            } else {
+                gen_slot(p, core, slot, trace_len, n_cores)
+            };
+            out.extend_from_slice(&[op, addr, aux]);
+        }
+    }
+    out
+}
+
+/// Generate straight to a [`crate::prog::Workload`].
+pub fn synth_workload(p: &TraceParams, n_cores: u32, trace_len: u32) -> crate::prog::Workload {
+    crate::trace::decode::decode_workload(&synth_raw(p, n_cores, trace_len), n_cores, trace_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let p = TraceParams::default();
+        assert_eq!(synth_raw(&p, 2, 64), synth_raw(&p, 2, 64));
+    }
+
+    #[test]
+    fn seed_changes_output() {
+        let a = synth_raw(&TraceParams { seed: 1, ..Default::default() }, 2, 64);
+        let b = synth_raw(&TraceParams { seed: 2, ..Default::default() }, 2, 64);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn epilogue_applied() {
+        let p = TraceParams::default();
+        let raw = synth_raw(&p, 2, 64);
+        // Core 0, slot 0: warm-up load of its private base.
+        assert_eq!(&raw[0..3], &[OP_LOAD, 0, 0]);
+        // Core 1, slot 0.
+        let c1 = (64 * 3) as usize;
+        assert_eq!(&raw[c1..c1 + 3], &[OP_LOAD, PRIV_STRIDE as i32, 0]);
+        // Last slot of each core: join barrier.
+        let last0 = (63 * 3) as usize;
+        assert_eq!(raw[last0], OP_BARRIER);
+        let last1 = c1 + last0;
+        assert_eq!(raw[last1], OP_BARRIER);
+    }
+
+    #[test]
+    fn opcodes_in_range() {
+        let p = TraceParams {
+            sync_kind: 3,
+            sync_period: 16,
+            barrier_period: 40,
+            ..Default::default()
+        };
+        for v in synth_raw(&p, 4, 256).chunks(3) {
+            assert!((0..=4).contains(&v[0]));
+            assert!(v[1] >= 0);
+            assert!(v[2] >= 0);
+        }
+    }
+
+    #[test]
+    fn lock_episodes_balanced() {
+        let p = TraceParams { sync_kind: 1, sync_period: 16, crit_len: 3, ..Default::default() };
+        let raw = synth_raw(&p, 2, 256);
+        for core in 0..2usize {
+            let ops: Vec<i32> =
+                raw[core * 256 * 3..(core + 1) * 256 * 3].chunks(3).map(|c| c[0]).collect();
+            let locks = ops.iter().filter(|&&o| o == OP_LOCK).count();
+            let unlocks = ops.iter().filter(|&&o| o == OP_UNLOCK).count();
+            assert_eq!(locks, unlocks);
+            assert!(locks > 0);
+        }
+    }
+
+    #[test]
+    fn mix_avalanche() {
+        // Flipping one input bit changes many output bits on average.
+        let a = mix(1, 2, 3, 4);
+        let b = mix(1, 2, 3, 5);
+        assert!((a ^ b).count_ones() >= 8);
+    }
+}

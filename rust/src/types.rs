@@ -1,0 +1,97 @@
+//! Fundamental scalar types and trace-format constants shared across the
+//! simulator.  The trace constants mirror `python/compile/kernels/spec.py`
+//! — the contract between the AOT tracegen artifacts and this crate.
+
+/// Simulated clock cycle (1 GHz: 1 cycle == 1 ns).
+pub type Cycle = u64;
+
+/// Logical (physiological) timestamp — Tardis `pts`/`wts`/`rts`.
+pub type Ts = u64;
+
+/// Cacheline index (64-byte granularity).  The trace format uses i32
+/// line addresses; we widen to u64 internally.
+pub type LineAddr = u64;
+
+/// Core identifier.
+pub type CoreId = u32;
+
+/// LLC slice (timestamp manager / directory slice) identifier.
+pub type SliceId = u32;
+
+/// Memory-controller identifier.
+pub type McId = u32;
+
+/// Cacheline size in bytes.
+pub const LINE_BYTES: u64 = 64;
+
+// --- Trace opcode encoding (kernels/spec.py) ---------------------------
+pub const OP_LOAD: i32 = 0;
+pub const OP_STORE: i32 = 1;
+pub const OP_LOCK: i32 = 2;
+pub const OP_UNLOCK: i32 = 3;
+pub const OP_BARRIER: i32 = 4;
+
+// --- Trace address-region bases (kernels/spec.py) ----------------------
+pub const PRIV_STRIDE: u64 = 1 << 16;
+pub const PRIV_BASE: u64 = 0;
+pub const LOCK_DATA_BASE: u64 = 1 << 26;
+pub const SHARED_BASE: u64 = 1 << 27;
+pub const LOCK_BASE: u64 = 1 << 28;
+pub const BARRIER_BASE: u64 = 1 << 29;
+
+/// Lines of protected data per lock (kernels/spec.py LOCK_DATA_SPAN).
+pub const LOCK_DATA_SPAN: u64 = 64;
+
+/// Barrier implementation lines (derived from BARRIER_BASE):
+/// counter line and sense line used by the sense-reversing barrier.
+pub const BARRIER_COUNTER_LINE: u64 = BARRIER_BASE + 1;
+pub const BARRIER_SENSE_LINE: u64 = BARRIER_BASE + 2;
+
+/// Classification of a line address into its trace region, mainly for
+/// diagnostics and traffic breakdowns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Region {
+    Private,
+    LockData,
+    Shared,
+    Lock,
+    Barrier,
+}
+
+/// Classify a line address into its generator region.
+pub fn region_of(addr: LineAddr) -> Region {
+    if addr >= BARRIER_BASE {
+        Region::Barrier
+    } else if addr >= LOCK_BASE {
+        Region::Lock
+    } else if addr >= SHARED_BASE {
+        Region::Shared
+    } else if addr >= LOCK_DATA_BASE {
+        Region::LockData
+    } else {
+        Region::Private
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn region_classification() {
+        assert_eq!(region_of(0), Region::Private);
+        assert_eq!(region_of(3 * PRIV_STRIDE + 5), Region::Private);
+        assert_eq!(region_of(LOCK_DATA_BASE), Region::LockData);
+        assert_eq!(region_of(SHARED_BASE), Region::Shared);
+        assert_eq!(region_of(LOCK_BASE + 7), Region::Lock);
+        assert_eq!(region_of(BARRIER_SENSE_LINE), Region::Barrier);
+    }
+
+    #[test]
+    fn region_bases_ordered_and_disjoint() {
+        assert!(PRIV_BASE < LOCK_DATA_BASE);
+        assert!(LOCK_DATA_BASE < SHARED_BASE);
+        assert!(SHARED_BASE < LOCK_BASE);
+        assert!(LOCK_BASE < BARRIER_BASE);
+    }
+}

@@ -1,0 +1,84 @@
+//! The §V case study (Listing 2): the program runs on both Tardis and
+//! MSI; Tardis must avoid MSI's invalidation stalls (finishing at
+//! least as fast) and may produce the paper's "time-traveling"
+//! interleaving — the second L(B) of core 0 logically ordered before
+//! both stores to B despite committing physically later.
+
+use tardis_dsm::config::{ProtocolKind, SystemConfig};
+use tardis_dsm::prog::{checker, litmus};
+use tardis_dsm::sim::run_workload;
+
+#[test]
+fn case_study_runs_clean_on_both_protocols() {
+    let w = litmus::case_study();
+    for protocol in [ProtocolKind::Msi, ProtocolKind::Tardis] {
+        let res = run_workload(SystemConfig::small(2, protocol), &w).unwrap();
+        checker::check(&res.log).unwrap_or_else(|v| panic!("{protocol:?}: {v:?}"));
+        assert_eq!(res.stats.memops, 8, "{protocol:?}: 5 + 3 ops");
+    }
+}
+
+#[test]
+fn tardis_is_not_slower_than_msi_on_case_study() {
+    // The case study is constructed so MSI pays two invalidation
+    // round-trips that Tardis avoids (§V-B "the cycle saving of Tardis
+    // mainly comes from the removal of invalidations").
+    let w = litmus::case_study();
+    let msi = run_workload(SystemConfig::small(2, ProtocolKind::Msi), &w).unwrap();
+    let tardis = run_workload(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
+    assert!(
+        tardis.stats.cycles <= msi.stats.cycles,
+        "tardis {} vs msi {}",
+        tardis.stats.cycles,
+        msi.stats.cycles
+    );
+}
+
+#[test]
+fn tardis_assigns_paper_like_timestamps() {
+    // Check the physiological signature: core 1's store to B jumps
+    // ahead of core 0's lease on B (Listing 2 step: pts jumps to
+    // rts + 1 = lease + 1), i.e., some store commits with ts > lease
+    // while core 0's first load keeps ts 0.
+    let w = litmus::case_study();
+    let res = run_workload(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
+    let lease = SystemConfig::small(2, ProtocolKind::Tardis).tardis.lease;
+    let first_load = res
+        .log
+        .records
+        .iter()
+        .find(|r| r.core == 0 && r.pc == 0)
+        .expect("core 0 L(B)");
+    // Initial timestamps start at mts = 1 (the paper initializes all
+    // timestamps to 1), so the first load binds near the epoch.
+    assert!(first_load.ts <= 2, "first load binds near ts 1, got {}", first_load.ts);
+    let jumped = res
+        .log
+        .records
+        .iter()
+        .any(|r| r.value_written.is_some() && r.ts >= lease + 1);
+    assert!(jumped, "some store should jump past the lease (rts + 1)");
+}
+
+#[test]
+fn tardis_allows_time_travel_interleaving() {
+    // Core 0's second L(B) (pc 3) may read B = 0 (the initial value)
+    // even after core 1 stored B = 2 in physical time — it is ordered
+    // before the stores in physiological time (paper Listing 4).  The
+    // checker already proved the outcome SC; here we document which
+    // interleaving happened and require the load to see either 0
+    // (time travel) or a real stored value.
+    let w = litmus::case_study();
+    let res = run_workload(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
+    let l_b = res
+        .log
+        .records
+        .iter()
+        .find(|r| r.core == 0 && r.pc == 3 && r.value_read.is_some())
+        .expect("core 0 second L(B)");
+    let v = l_b.value_read.unwrap();
+    assert!(
+        v == 0 || v == 2 || v == 4,
+        "L(B) must be one of the program's values, got {v}"
+    );
+}

@@ -1,0 +1,108 @@
+//! End-to-end: the experiment harness produces paper-shaped tables on
+//! scaled-down sweeps — trace generation (PJRT or mirror) -> parallel
+//! coordinator -> normalized tables.
+
+use tardis_dsm::config::ProtocolKind;
+use tardis_dsm::coordinator::experiments::{self, base_cfg, fig4_variants, EvalCtx};
+use tardis_dsm::coordinator::{run_points, SimPoint};
+use tardis_dsm::runtime::TraceRuntime;
+use tardis_dsm::trace::synth_workload;
+use tardis_dsm::workloads;
+
+fn quick_ctx() -> EvalCtx {
+    let mut ctx = EvalCtx::new(TraceRuntime::open_default().ok(), 0);
+    ctx.scale_down = 8; // tiny traces for CI speed
+    ctx
+}
+
+#[test]
+fn fig4_table_has_twelve_workloads_and_average() {
+    let mut ctx = quick_ctx();
+    let t = experiments::fig4(&mut ctx).unwrap();
+    assert_eq!(t.rows.len(), 13); // 12 workloads + AVG
+    assert_eq!(t.rows[12][0], "AVG(geo)");
+    // Throughput columns parse as positive ratios.
+    for row in &t.rows {
+        for cell in &row[1..] {
+            let v: f64 = cell.parse().expect("numeric cell");
+            assert!(v > 0.0, "non-positive ratio {cell}");
+        }
+    }
+    // MSI normalized to itself is exactly 1.
+    for row in &t.rows[..12] {
+        assert_eq!(row[1], "1.000");
+    }
+}
+
+#[test]
+fn table7_is_exactly_the_papers() {
+    let t = experiments::table7();
+    assert_eq!(t.rows[0], vec!["16", "16 bits", "16 bits", "40 bits"]);
+    assert_eq!(t.rows[1], vec!["64", "64 bits", "24 bits", "40 bits"]);
+    assert_eq!(t.rows[2], vec!["256", "256 bits", "64 bits", "40 bits"]);
+}
+
+#[test]
+fn sweep_runs_all_points_in_parallel() {
+    let mut ctx = quick_ctx();
+    let stats = experiments::sweep(&mut ctx, 16, &fig4_variants(16)).unwrap();
+    assert_eq!(stats.len(), 12 * 4);
+    for ((w, v), s) in &stats {
+        assert!(s.cycles > 0, "{w}/{v} empty run");
+        assert!(s.memops > 0, "{w}/{v} no ops");
+    }
+}
+
+#[test]
+fn tardis_within_reasonable_band_of_msi() {
+    // The paper's headline: Tardis ~ MSI.  On the scaled-down traces
+    // we accept a generous band, but the geometric mean must be in the
+    // same ballpark (> 0.5x) and traffic within 2x.
+    let mut ctx = quick_ctx();
+    let stats = experiments::sweep(&mut ctx, 16, &fig4_variants(16)).unwrap();
+    let mut thr = Vec::new();
+    let mut traf = Vec::new();
+    for spec in workloads::all() {
+        let msi = &stats[&(spec.name.to_string(), "msi".to_string())];
+        let tar = &stats[&(spec.name.to_string(), "tardis".to_string())];
+        thr.push(msi.cycles as f64 / tar.cycles as f64);
+        traf.push(tar.traffic.total() as f64 / msi.traffic.total().max(1) as f64);
+    }
+    let geo = |xs: &[f64]| (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp();
+    let g_thr = geo(&thr);
+    let g_traf = geo(&traf);
+    assert!(g_thr > 0.5, "tardis throughput collapsed: {g_thr:.3}");
+    assert!(g_traf < 2.0, "tardis traffic exploded: {g_traf:.3}");
+}
+
+#[test]
+fn coordinator_handles_mixed_configs() {
+    use std::sync::Arc;
+    let spec = workloads::by_name("fft").unwrap();
+    let w = Arc::new(synth_workload(&spec.params, 16, 256));
+    let mut points = Vec::new();
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        for lease in [5u64, 10] {
+            let mut cfg = base_cfg(16, protocol);
+            cfg.tardis.lease = lease;
+            points.push(SimPoint {
+                label: format!("{}-l{lease}", protocol.name()),
+                cfg,
+                workload: Arc::clone(&w),
+            });
+        }
+    }
+    let results = run_points(points, 3).unwrap();
+    assert_eq!(results.len(), 6);
+    // Lease only affects Tardis.
+    let get = |label: &str| results.iter().find(|r| r.label == label).unwrap().stats.cycles;
+    assert_eq!(get("msi-l5"), get("msi-l10"));
+    assert_eq!(get("ackwise-l5"), get("ackwise-l10"));
+}
+
+#[test]
+fn ooo_sweep_completes() {
+    let mut ctx = quick_ctx();
+    let t = experiments::fig6(&mut ctx).unwrap();
+    assert_eq!(t.rows.len(), 13);
+}

@@ -1,0 +1,138 @@
+//! Litmus tests under all three protocols and both core models:
+//! forbidden SC outcomes must never appear, and the full SC witness
+//! checker must pass, across many interleaving perturbations.
+
+use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::prog::{checker, litmus, Op, Workload};
+use tardis_dsm::sim::{run_workload, SimResult};
+use tardis_dsm::testutil::Rng;
+
+/// Jitter compute gaps to explore interleavings (deterministic per
+/// seed).
+fn jitter(w: &Workload, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+    let mut w = w.clone();
+    for p in &mut w.programs {
+        for op in &mut p.ops {
+            match op {
+                Op::Load { gap, .. } | Op::Store { gap, .. } => *gap = rng.below(12) as u32,
+                _ => {}
+            }
+        }
+    }
+    w
+}
+
+fn observed(res: &SimResult, keys: &[(u32, u32)]) -> Vec<u64> {
+    keys.iter()
+        .map(|&(core, pc)| {
+            res.log
+                .records
+                .iter()
+                .find(|r| r.valid && r.core == core && r.pc == pc && r.value_read.is_some())
+                .map(|r| r.value_read.unwrap())
+                .unwrap_or(u64::MAX)
+        })
+        .collect()
+}
+
+fn run_litmus(protocol: ProtocolKind, model: CoreModel, seeds: u64) {
+    for lt in litmus::all() {
+        for seed in 0..seeds {
+            let w = jitter(&lt.workload, seed);
+            let mut cfg = SystemConfig::small(w.n_cores(), protocol);
+            cfg.core_model = model;
+            let res = run_workload(cfg, &w)
+                .unwrap_or_else(|e| panic!("{} seed {seed}: {e}", lt.name));
+            let out = observed(&res, &lt.observed);
+            assert!(
+                (lt.allowed)(&out),
+                "{} under {:?}/{:?} seed {seed}: forbidden outcome {:?}",
+                lt.name,
+                protocol,
+                model,
+                out
+            );
+            checker::check(&res.log).unwrap_or_else(|v| {
+                panic!("{} under {:?}/{:?} seed {seed}: SC violation {v:?}", lt.name, protocol, model)
+            });
+        }
+    }
+}
+
+#[test]
+fn litmus_tardis_inorder() {
+    run_litmus(ProtocolKind::Tardis, CoreModel::InOrder, 40);
+}
+
+#[test]
+fn litmus_tardis_ooo() {
+    run_litmus(ProtocolKind::Tardis, CoreModel::OutOfOrder, 40);
+}
+
+#[test]
+fn litmus_msi_inorder() {
+    run_litmus(ProtocolKind::Msi, CoreModel::InOrder, 40);
+}
+
+#[test]
+fn litmus_msi_ooo() {
+    run_litmus(ProtocolKind::Msi, CoreModel::OutOfOrder, 40);
+}
+
+#[test]
+fn litmus_ackwise_inorder() {
+    run_litmus(ProtocolKind::Ackwise, CoreModel::InOrder, 40);
+}
+
+#[test]
+fn litmus_ackwise_ooo() {
+    run_litmus(ProtocolKind::Ackwise, CoreModel::OutOfOrder, 40);
+}
+
+/// The paper's §III-C3/§III-D2 claim: A=B=0 is impossible for the
+/// store-buffering program even on out-of-order cores, because the
+/// commit-time timestamp check forces at least one load to observe the
+/// other core's store.
+#[test]
+fn store_buffering_never_zero_zero_tardis_ooo_wide_sweep() {
+    let lt = litmus::store_buffering();
+    for seed in 0..200u64 {
+        let w = jitter(&lt.workload, seed);
+        let mut cfg = SystemConfig::small(2, ProtocolKind::Tardis);
+        cfg.core_model = CoreModel::OutOfOrder;
+        cfg.ooo_window = 8;
+        let res = run_workload(cfg, &w).unwrap();
+        let out = observed(&res, &lt.observed);
+        assert!(!(out[0] == 0 && out[1] == 0), "A=B=0 observed at seed {seed}");
+    }
+}
+
+/// Tardis litmus under speculation pressure: shared traffic before the
+/// message-passing pair forces expired lines and live renewals.
+#[test]
+fn litmus_with_speculation_pressure() {
+    use tardis_dsm::prog::{load, store, Program};
+    use tardis_dsm::types::SHARED_BASE;
+    for seed in 0..20u64 {
+        let mut p0 = vec![];
+        let mut p1 = vec![];
+        let mut rng = Rng::new(seed + 1);
+        for i in 0..30 {
+            p0.push(load(SHARED_BASE + 100 + (i % 5)));
+            p1.push(store(SHARED_BASE + 100 + rng.below(5), i));
+        }
+        p0.push(store(litmus::A, 1));
+        p0.push(store(litmus::F, 1));
+        p1.push(load(litmus::F));
+        p1.push(load(litmus::A));
+        let w = Workload::new(vec![Program::new(p0), Program::new(p1)]);
+        let cfg = SystemConfig::small(2, ProtocolKind::Tardis);
+        let res = run_workload(cfg, &w).unwrap();
+        checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed}: {v:?}"));
+        // MP outcome: F=1 implies A=1.
+        let f = observed(&res, &[(1, 30)])[0];
+        let a = observed(&res, &[(1, 31)])[0];
+        assert!(!(f == 1 && a == 0), "MP violation at seed {seed}");
+    }
+}

@@ -1,0 +1,185 @@
+//! Property tests (in-tree harness — proptest is unavailable in this
+//! image): random multi-core programs with locks and barriers must
+//! satisfy the SC witness checker under every protocol and core model,
+//! and protocol-independent functional invariants must hold.
+
+use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::prog::checker;
+use tardis_dsm::sim::run_workload;
+use tardis_dsm::testutil::{prop_check, ProgGen};
+
+fn run_all_protocols(gen: &ProgGen, seed: u64, rng: &mut tardis_dsm::testutil::Rng, model: CoreModel) {
+    let w = gen.generate(rng);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        let mut cfg = SystemConfig::small(gen.n_cores, protocol);
+        cfg.core_model = model;
+        let res = run_workload(cfg, &w)
+            .unwrap_or_else(|e| panic!("seed {seed:#x} {protocol:?}/{model:?}: {e}"));
+        checker::check(&res.log)
+            .unwrap_or_else(|v| panic!("seed {seed:#x} {protocol:?}/{model:?}: {v:?}"));
+        // Functional invariants.
+        let s = &res.stats;
+        assert!(s.cycles > 0);
+        assert_eq!(s.barriers_passed % gen.n_cores as u64, 0, "unbalanced barriers");
+    }
+}
+
+#[test]
+fn prop_random_programs_sc_inorder() {
+    let gen = ProgGen { n_cores: 4, ops_per_core: 60, ..Default::default() };
+    prop_check(25, 0xDEAD_BEEF, |seed, rng| {
+        run_all_protocols(&gen, seed, rng, CoreModel::InOrder);
+    });
+}
+
+#[test]
+fn prop_random_programs_sc_ooo() {
+    let gen = ProgGen { n_cores: 4, ops_per_core: 60, ..Default::default() };
+    prop_check(25, 0xFACE_FEED, |seed, rng| {
+        run_all_protocols(&gen, seed, rng, CoreModel::OutOfOrder);
+    });
+}
+
+#[test]
+fn prop_lock_heavy_sc() {
+    let gen = ProgGen {
+        n_cores: 4,
+        ops_per_core: 50,
+        lock_pct: 40,
+        n_shared: 3,
+        store_pct: 60,
+        ..Default::default()
+    };
+    prop_check(20, 0x1234_5678, |seed, rng| {
+        run_all_protocols(&gen, seed, rng, CoreModel::InOrder);
+    });
+}
+
+#[test]
+fn prop_barrier_heavy_sc() {
+    let gen = ProgGen {
+        n_cores: 8,
+        ops_per_core: 48,
+        barrier_every: 12,
+        lock_pct: 0,
+        ..Default::default()
+    };
+    prop_check(15, 0x0BAD_F00D, |seed, rng| {
+        run_all_protocols(&gen, seed, rng, CoreModel::InOrder);
+    });
+}
+
+#[test]
+fn prop_hot_contention_sc() {
+    // Few addresses, many writers: maximum invalidation / jump-ahead
+    // churn.
+    let gen = ProgGen {
+        n_cores: 6,
+        ops_per_core: 40,
+        n_shared: 2,
+        store_pct: 70,
+        lock_pct: 5,
+        max_gap: 1,
+        ..Default::default()
+    };
+    prop_check(20, 0xCAFE_D00D, |seed, rng| {
+        run_all_protocols(&gen, seed, rng, CoreModel::InOrder);
+        run_all_protocols(&gen, seed, rng, CoreModel::OutOfOrder);
+    });
+}
+
+#[test]
+fn prop_tardis_determinism() {
+    // Identical inputs must give identical stats (event-order
+    // determinism is what makes the experiments reproducible).
+    let gen = ProgGen { n_cores: 4, ops_per_core: 50, ..Default::default() };
+    prop_check(10, 0x5EED, |_seed, rng| {
+        let w = gen.generate(rng);
+        let cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        let a = run_workload(cfg.clone(), &w).unwrap();
+        let b = run_workload(cfg, &w).unwrap();
+        assert_eq!(a.stats.cycles, b.stats.cycles);
+        assert_eq!(a.stats.memops, b.stats.memops);
+        assert_eq!(a.stats.traffic.total(), b.stats.traffic.total());
+        assert_eq!(a.stats.renew_requests, b.stats.renew_requests);
+    });
+}
+
+#[test]
+fn prop_tardis_monotonic_timestamps() {
+    // Rule 1 directly: per-core logged timestamps never decrease.
+    let gen = ProgGen { n_cores: 4, ops_per_core: 60, store_pct: 50, ..Default::default() };
+    prop_check(15, 0xA11CE, |seed, rng| {
+        let w = gen.generate(rng);
+        let cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        let res = run_workload(cfg, &w).unwrap();
+        let mut last = vec![0u64; 4];
+        for r in res.log.records.iter().filter(|r| r.valid) {
+            assert!(
+                r.ts >= last[r.core as usize],
+                "seed {seed:#x}: core {} ts {} < {}",
+                r.core,
+                r.ts,
+                last[r.core as usize]
+            );
+            last[r.core as usize] = r.ts;
+        }
+    });
+}
+
+#[test]
+fn prop_protocols_agree_on_final_memory() {
+    // For programs where each shared address has a single writer (no
+    // cross-core write races), the final value per address is the
+    // writer's last store — identical across protocols.  (Racy
+    // programs may legitimately end differently per protocol: lock
+    // acquisition order is timing-dependent.)
+    use tardis_dsm::prog::{load, store, Program, Workload};
+    use tardis_dsm::types::SHARED_BASE;
+
+    prop_check(10, 0xD15C0, |seed, rng| {
+        let n_cores = 4u32;
+        let mut progs = Vec::new();
+        for c in 0..n_cores {
+            let mut ops = Vec::new();
+            for i in 0..40u64 {
+                if rng.chance(40, 100) {
+                    // Only core c writes SHARED_BASE + c.
+                    ops.push(store(SHARED_BASE + c as u64, c as u64 * 1000 + i));
+                } else {
+                    ops.push(load(SHARED_BASE + rng.below(n_cores as u64)));
+                }
+            }
+            progs.push(Program::new(ops));
+        }
+        let w = Workload::new(progs);
+        let mut finals = Vec::new();
+        for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+            let cfg = SystemConfig::small(n_cores, protocol);
+            let res = run_workload(cfg, &w).unwrap();
+            checker::check(&res.log)
+                .unwrap_or_else(|v| panic!("seed {seed:#x} {protocol:?}: {v:?}"));
+            use std::collections::HashMap;
+            let mut per_addr: HashMap<u64, (u64, (u64, u64, u64))> = HashMap::new();
+            for r in res.log.records.iter().filter(|r| r.valid) {
+                if let Some(wr) = r.value_written {
+                    let key = r.key();
+                    per_addr
+                        .entry(r.addr)
+                        .and_modify(|e| {
+                            if key > e.1 {
+                                *e = (wr, key);
+                            }
+                        })
+                        .or_insert((wr, key));
+                }
+            }
+            let mut v: Vec<(u64, u64)> =
+                per_addr.into_iter().map(|(a, (val, _))| (a, val)).collect();
+            v.sort();
+            finals.push(v);
+        }
+        assert_eq!(finals[0], finals[1], "seed {seed:#x}: tardis vs msi final memory");
+        assert_eq!(finals[1], finals[2], "seed {seed:#x}: msi vs ackwise final memory");
+    });
+}

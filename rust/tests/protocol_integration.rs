@@ -1,0 +1,371 @@
+//! Protocol-level integration tests: Tardis mechanism observability
+//! (renewals, jump-ahead, leases, self-increment, compression),
+//! directory behaviour (invalidations, broadcasts), and cross-protocol
+//! sanity on the synthetic workloads.
+
+use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::coordinator::experiments::base_cfg;
+use tardis_dsm::prog::{checker, load, lock, store, unlock, Program, Workload};
+use tardis_dsm::proto::{Coherence, ackwise::Ackwise, msi::Msi, tardis::Tardis};
+use tardis_dsm::sim::run_workload;
+use tardis_dsm::trace::{synth_workload, TraceParams};
+use tardis_dsm::types::SHARED_BASE;
+use tardis_dsm::workloads;
+
+fn small(protocol: ProtocolKind) -> SystemConfig {
+    SystemConfig::small(4, protocol)
+}
+
+/// Re-reading an expired shared line triggers a renewal that succeeds
+/// when nobody wrote (§III-F1 data renewal).
+#[test]
+fn tardis_renewals_mostly_succeed_on_read_shared_data() {
+    // All cores read the same lines; one core's writes to OTHER lines
+    // advance its pts so its cached copies expire.
+    let mut progs = Vec::new();
+    for c in 0..4u32 {
+        let mut ops = vec![];
+        for i in 0..200 {
+            ops.push(load(SHARED_BASE + (i % 4)));
+            if c == 0 {
+                // Writer to a private-ish shared line: jumps its own pts.
+                ops.push(store(SHARED_BASE + 100 + c as u64, i));
+            }
+        }
+        progs.push(Program::new(ops));
+    }
+    let mut cfg = small(ProtocolKind::Tardis);
+    // Let the writer's pts advance every store so reader leases expire.
+    cfg.tardis.private_write_opt = false;
+    let res = run_workload(cfg, &Workload::new(progs)).unwrap();
+    let s = res.stats;
+    assert!(s.renew_requests > 0, "expected renewals, got none");
+    assert!(
+        s.renew_success * 10 >= s.renew_requests * 9,
+        "read-shared renewals should mostly succeed: {}/{}",
+        s.renew_success,
+        s.renew_requests
+    );
+    checker::check(&res.log).unwrap();
+}
+
+/// Writes to shared lines proceed without invalidations (§III-F1):
+/// Tardis sends zero invalidation flits while MSI sends plenty.
+#[test]
+fn tardis_eliminates_invalidations() {
+    let params = TraceParams { pct_shared: 500, pct_write_shared: 300, ..Default::default() };
+    let w = synth_workload(&params, 4, 512);
+    let tardis = run_workload(small(ProtocolKind::Tardis), &w).unwrap().stats;
+    let msi = run_workload(small(ProtocolKind::Msi), &w).unwrap().stats;
+    assert_eq!(tardis.invalidations_sent, 0, "Tardis must not invalidate");
+    assert!(msi.invalidations_sent > 0, "MSI should invalidate under write sharing");
+    assert!(msi.traffic.invalidation_flits > 0);
+}
+
+/// The private-write optimization (§IV-C) slows timestamp growth for
+/// write-heavy private workloads.
+#[test]
+fn private_write_opt_slows_pts_growth() {
+    let params = TraceParams {
+        pct_shared: 50,
+        pct_write_priv: 700,
+        priv_lines: 8, // hot private lines, rewritten constantly
+        ..Default::default()
+    };
+    let w = synth_workload(&params, 4, 512);
+    let mut on = small(ProtocolKind::Tardis);
+    on.tardis.private_write_opt = true;
+    let mut off = small(ProtocolKind::Tardis);
+    off.tardis.private_write_opt = false;
+    let s_on = run_workload(on, &w).unwrap().stats;
+    let s_off = run_workload(off, &w).unwrap().stats;
+    assert!(
+        s_on.ts.pts_increase_total < s_off.ts.pts_increase_total,
+        "opt on: {} vs off: {}",
+        s_on.ts.pts_increase_total,
+        s_off.ts.pts_increase_total
+    );
+}
+
+/// Self-increment drives expiration: disabling it (period = 0) must
+/// not deadlock plain data workloads, and larger periods mean fewer
+/// renewals (Fig. 7 mechanism).
+#[test]
+fn self_increment_period_controls_renewals() {
+    let spec = workloads::by_name("volrend").unwrap();
+    let w = synth_workload(&spec.params, 8, 1024);
+    let mut renewals = Vec::new();
+    for period in [10u64, 1000] {
+        let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
+        cfg.tardis.self_inc_period = period;
+        let s = run_workload(cfg, &w).unwrap().stats;
+        renewals.push(s.renew_requests);
+    }
+    assert!(
+        renewals[0] > renewals[1],
+        "renewals should fall with a longer period: {renewals:?}"
+    );
+}
+
+/// Lease sweep: longer leases reduce renewals (Fig. 10 mechanism).
+#[test]
+fn longer_lease_reduces_renewals() {
+    let spec = workloads::by_name("volrend").unwrap();
+    let w = synth_workload(&spec.params, 4, 512);
+    let mut renewals = Vec::new();
+    for lease in [5u64, 20, 80] {
+        let mut cfg = small(ProtocolKind::Tardis);
+        cfg.tardis.lease = lease;
+        let s = run_workload(cfg, &w).unwrap().stats;
+        renewals.push(s.renew_requests);
+    }
+    assert!(
+        renewals[0] > renewals[2],
+        "renewals should fall with lease: {renewals:?}"
+    );
+}
+
+/// Small delta-timestamp widths trigger rebases (§IV-B); 64-bit never
+/// rolls over (Fig. 9 mechanism).
+#[test]
+fn small_delta_width_triggers_rebases() {
+    let spec = workloads::by_name("lu-nc").unwrap();
+    let w = synth_workload(&spec.params, 4, 1024);
+    let mut cfg = small(ProtocolKind::Tardis);
+    cfg.tardis.delta_ts_bits = 8; // tiny: rolls over quickly
+    let s_small = run_workload(cfg, &w).unwrap().stats;
+    let mut cfg64 = small(ProtocolKind::Tardis);
+    cfg64.tardis.delta_ts_bits = 64;
+    let s_big = run_workload(cfg64, &w).unwrap().stats;
+    assert!(s_small.ts.l1_rebases > 0, "8-bit deltas must rebase");
+    assert_eq!(s_big.ts.l1_rebases, 0, "64-bit deltas never rebase");
+    // Rebasing is modeled but must not break consistency.
+}
+
+/// Rebase-heavy runs still satisfy SC (rebase invalidations + clamps
+/// are the §IV-B safety argument).
+#[test]
+fn rebase_preserves_sc() {
+    let gen = tardis_dsm::testutil::ProgGen {
+        n_cores: 4,
+        ops_per_core: 80,
+        store_pct: 50,
+        ..Default::default()
+    };
+    tardis_dsm::testutil::prop_check(10, 0xBA5E, |seed, rng| {
+        let w = gen.generate(rng);
+        let mut cfg = small(ProtocolKind::Tardis);
+        cfg.tardis.delta_ts_bits = 7;
+        let res = run_workload(cfg, &w).unwrap();
+        checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed:#x}: {v:?}"));
+    });
+}
+
+/// Ackwise broadcasts once sharers exceed the pointer budget; full-map
+/// MSI never broadcasts.
+#[test]
+fn ackwise_broadcasts_on_pointer_overflow() {
+    // 8 cores all read one line, then one writes it.
+    let mut progs = Vec::new();
+    for c in 0..8u32 {
+        let mut ops = vec![load(SHARED_BASE)];
+        for i in 0..20 {
+            ops.push(load(SHARED_BASE + 1 + (i + c as u64) % 4));
+        }
+        if c == 0 {
+            ops.push(store(SHARED_BASE, 9));
+        }
+        progs.push(Program::new(ops));
+    }
+    let w = Workload::new(progs);
+    let mut cfg = SystemConfig::small(8, ProtocolKind::Ackwise);
+    cfg.ackwise.num_pointers = 2;
+    let ack = run_workload(cfg, &w).unwrap().stats;
+    let msi = run_workload(SystemConfig::small(8, ProtocolKind::Msi), &w).unwrap().stats;
+    assert!(ack.broadcasts > 0, "expected a broadcast invalidation");
+    assert_eq!(msi.broadcasts, 0);
+}
+
+/// Storage-overhead model matches the paper's Table VII.
+#[test]
+fn storage_bits_match_table7() {
+    for (n, msi_bits, ack_bits) in [(16u32, 16u64, 16u64), (64, 64, 24), (256, 256, 64)] {
+        let cfg = base_cfg(n, ProtocolKind::Msi);
+        assert_eq!(Msi::new(&cfg).llc_storage_bits(n), msi_bits, "msi at {n}");
+        assert_eq!(Ackwise::new(&cfg).llc_storage_bits(n), ack_bits, "ackwise at {n}");
+        assert_eq!(Tardis::new(&cfg).llc_storage_bits(n), 40, "tardis at {n}");
+    }
+}
+
+/// Locks serialize critical sections on every protocol (mutual
+/// exclusion check is part of the SC checker).
+#[test]
+fn lock_mutual_exclusion_all_protocols() {
+    use tardis_dsm::types::LOCK_BASE;
+    let mut progs = Vec::new();
+    for c in 0..4u32 {
+        let mut ops = vec![];
+        for i in 0..10 {
+            ops.push(lock(LOCK_BASE));
+            ops.push(load(SHARED_BASE + 50));
+            ops.push(store(SHARED_BASE + 50, (c as u64) * 100 + i));
+            ops.push(unlock(LOCK_BASE));
+        }
+        progs.push(Program::new(ops));
+    }
+    let w = Workload::new(progs);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        let res = run_workload(small(protocol), &w).unwrap();
+        assert_eq!(res.stats.locks_acquired, 40, "{protocol:?}");
+        checker::check(&res.log).unwrap();
+    }
+}
+
+/// The OoO window hides renewal latency: no-speculation OoO Tardis is
+/// closer to MSI than no-speculation in-order (Fig. 6 observation).
+#[test]
+fn ooo_hides_renewal_latency_without_speculation() {
+    // On a read-mostly workload (renewals succeed), speculation hides
+    // renewal latency for the in-order core (paper §VI-B1: 7% gap).
+    let spec = workloads::by_name("barnes").unwrap();
+    let w = synth_workload(&spec.params, 8, 1024);
+    let run = |model: CoreModel, spec_on: bool| {
+        let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
+        cfg.record_accesses = false;
+        cfg.core_model = model;
+        cfg.tardis.speculation = spec_on;
+        run_workload(cfg, &w).unwrap().stats.cycles
+    };
+    let inorder_nospec = run(CoreModel::InOrder, false) as f64;
+    let inorder_spec = run(CoreModel::InOrder, true) as f64;
+    assert!(
+        inorder_spec <= inorder_nospec * 1.02,
+        "speculation should not slow the in-order core materially: {inorder_spec} vs {inorder_nospec}"
+    );
+}
+
+/// DRAM path: working sets beyond the LLC drive mts-mediated refetches
+/// without breaking consistency.
+#[test]
+fn llc_eviction_and_mts_path() {
+    let params = TraceParams {
+        priv_lines: 4096, // exceeds the small test LLC
+        pct_shared: 100,
+        ..Default::default()
+    };
+    let w = synth_workload(&params, 2, 1024);
+    let mut cfg = SystemConfig::small(2, ProtocolKind::Tardis);
+    cfg.l2_sets = 16;
+    cfg.l2_ways = 4;
+    let res = run_workload(cfg, &w).unwrap();
+    assert!(res.stats.dram_accesses > 100, "expected DRAM traffic");
+    checker::check(&res.log).unwrap();
+}
+
+/// Every synthetic workload runs clean on every protocol at 8 cores
+/// (the full matrix smoke — the heavy version of the dev loop).
+#[test]
+fn workload_matrix_smoke() {
+    for spec in workloads::all() {
+        let w = synth_workload(&spec.params, 8, 256);
+        for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+            let cfg = SystemConfig::small(8, protocol);
+            let res = run_workload(cfg, &w)
+                .unwrap_or_else(|e| panic!("{} {protocol:?}: {e}", spec.name));
+            checker::check(&res.log)
+                .unwrap_or_else(|v| panic!("{} {protocol:?}: {v:?}", spec.name));
+        }
+    }
+}
+
+/// §IV-D E-state extension: untouched lines are granted exclusively on
+/// a shared request, so single-reader data never expires — renewals
+/// drop versus baseline Tardis on private-heavy workloads.
+#[test]
+fn e_state_extension_reduces_renewals() {
+    let spec = workloads::by_name("fft").unwrap();
+    let w = synth_workload(&spec.params, 8, 1024);
+    let base = {
+        let cfg = SystemConfig::small(8, ProtocolKind::Tardis);
+        run_workload(cfg, &w).unwrap().stats
+    };
+    let estate = {
+        let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
+        cfg.tardis.exclusive_state = true;
+        let res = run_workload(cfg, &w).unwrap();
+        checker::check(&res.log).unwrap();
+        res.stats
+    };
+    assert!(
+        estate.renew_requests < base.renew_requests,
+        "E state should cut renewals: {} vs {}",
+        estate.renew_requests,
+        base.renew_requests
+    );
+}
+
+/// E-state runs must stay sequentially consistent even under write
+/// sharing (the grant can race with other readers).
+#[test]
+fn e_state_extension_preserves_sc() {
+    let gen = tardis_dsm::testutil::ProgGen {
+        n_cores: 4,
+        ops_per_core: 60,
+        store_pct: 50,
+        lock_pct: 10,
+        ..Default::default()
+    };
+    tardis_dsm::testutil::prop_check(15, 0xE57A7E, |seed, rng| {
+        let w = gen.generate(rng);
+        let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        cfg.tardis.exclusive_state = true;
+        let res = run_workload(cfg, &w).unwrap();
+        checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed:#x}: {v:?}"));
+    });
+}
+
+/// §VI-C5 dynamic leases: read-mostly lines earn exponentially longer
+/// leases, cutting renewals versus the static lease, without breaking
+/// SC.
+#[test]
+fn dynamic_lease_reduces_renewals() {
+    let spec = workloads::by_name("volrend").unwrap();
+    let w = synth_workload(&spec.params, 8, 1024);
+    let stat = {
+        let cfg = SystemConfig::small(8, ProtocolKind::Tardis);
+        run_workload(cfg, &w).unwrap().stats
+    };
+    let dynamic = {
+        let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
+        cfg.tardis.dynamic_lease = true;
+        let res = run_workload(cfg, &w).unwrap();
+        checker::check(&res.log).unwrap();
+        res.stats
+    };
+    assert!(
+        dynamic.renew_requests < stat.renew_requests,
+        "dynamic leases should cut renewals: {} vs {}",
+        dynamic.renew_requests,
+        stat.renew_requests
+    );
+}
+
+/// Dynamic leases under write churn must reset (writes invalidate the
+/// read-mostly assumption) and stay consistent.
+#[test]
+fn dynamic_lease_preserves_sc_under_writes() {
+    let gen = tardis_dsm::testutil::ProgGen {
+        n_cores: 4,
+        ops_per_core: 60,
+        store_pct: 60,
+        n_shared: 3,
+        ..Default::default()
+    };
+    tardis_dsm::testutil::prop_check(15, 0xD11A, |seed, rng| {
+        let w = gen.generate(rng);
+        let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        cfg.tardis.dynamic_lease = true;
+        let res = run_workload(cfg, &w).unwrap();
+        checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed:#x}: {v:?}"));
+    });
+}

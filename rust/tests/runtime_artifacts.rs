@@ -1,0 +1,90 @@
+//! PJRT runtime integration: the AOT-compiled tracegen artifacts must
+//! load, execute, and produce bit-identical traces to the pure-rust
+//! mirror (which itself is pytest-verified against the jnp oracle) —
+//! closing the cross-language loop python -> HLO -> PJRT -> rust.
+//!
+//! These tests are skipped when artifacts/ has not been built (run
+//! `make artifacts`).
+
+use tardis_dsm::runtime::TraceRuntime;
+use tardis_dsm::trace::{synth_raw, TraceParams};
+use tardis_dsm::workloads;
+
+fn runtime() -> Option<TraceRuntime> {
+    match TraceRuntime::open_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping artifact tests ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_paper_core_counts() {
+    let Some(rt) = runtime() else { return };
+    let configs = rt.configs();
+    for n in [16u32, 64, 256] {
+        assert!(
+            configs.iter().any(|&(c, _)| c == n),
+            "missing artifact for {n} cores: {configs:?}"
+        );
+    }
+}
+
+#[test]
+fn artifact_matches_rust_mirror_bit_exact() {
+    let Some(mut rt) = runtime() else { return };
+    let (n_cores, trace_len) = rt.config_for(2).expect("2-core artifact");
+    let params = TraceParams::default();
+    let pjrt = rt.generate_raw(n_cores, trace_len, &params.to_vec()).unwrap();
+    let mirror = synth_raw(&params, n_cores, trace_len);
+    assert_eq!(pjrt.len(), mirror.len());
+    for (i, (a, b)) in pjrt.iter().zip(mirror.iter()).enumerate() {
+        assert_eq!(a, b, "first divergence at flat index {i}");
+    }
+}
+
+#[test]
+fn artifact_matches_mirror_for_every_workload() {
+    let Some(mut rt) = runtime() else { return };
+    let (n_cores, trace_len) = rt.config_for(4).expect("4-core artifact");
+    for spec in workloads::all() {
+        let pjrt = rt.generate_raw(n_cores, trace_len, &spec.params.to_vec()).unwrap();
+        let mirror = synth_raw(&spec.params, n_cores, trace_len);
+        assert_eq!(pjrt, mirror, "workload {} diverges", spec.name);
+    }
+}
+
+#[test]
+fn artifact_decodes_into_runnable_workload() {
+    use tardis_dsm::config::{ProtocolKind, SystemConfig};
+    use tardis_dsm::sim::run_workload;
+
+    let Some(mut rt) = runtime() else { return };
+    let spec = workloads::by_name("fft").unwrap();
+    let (n_cores, trace_len) = rt.config_for(4).expect("4-core artifact");
+    let w = rt.generate_workload(n_cores, trace_len, &spec.params).unwrap();
+    assert_eq!(w.n_cores(), n_cores);
+    assert_eq!(w.total_ops(), (n_cores * trace_len) as usize);
+    let res = run_workload(SystemConfig::small(n_cores, ProtocolKind::Tardis), &w).unwrap();
+    assert!(res.stats.cycles > 0);
+    tardis_dsm::prog::checker::check(&res.log).unwrap();
+}
+
+#[test]
+fn executables_are_cached_across_calls() {
+    let Some(mut rt) = runtime() else { return };
+    let (n_cores, trace_len) = rt.config_for(2).expect("2-core artifact");
+    let p = TraceParams { seed: 1, ..Default::default() };
+    let a = rt.generate_raw(n_cores, trace_len, &p.to_vec()).unwrap();
+    // Second call exercises the compiled-executable cache.
+    let b = rt.generate_raw(n_cores, trace_len, &p.to_vec()).unwrap();
+    assert_eq!(a, b);
+    // Different params produce different traces through the same
+    // executable.
+    let c = rt
+        .generate_raw(n_cores, trace_len, &TraceParams { seed: 2, ..Default::default() }.to_vec())
+        .unwrap();
+    assert_ne!(a, c);
+}
