@@ -2,11 +2,11 @@
 //! at a time, on a renewal-heavy workload — speculation (§IV-A),
 //! private-write optimization (§IV-C), E state (§IV-D), and dynamic
 //! leases (§VI-C5 future work).
+use tardis_dsm::api::SimBuilder;
 use tardis_dsm::benchutil::bench;
 use tardis_dsm::config::{ProtocolKind, SystemConfig};
 use tardis_dsm::coordinator::experiments::base_cfg;
 use tardis_dsm::coordinator::report::Table;
-use tardis_dsm::sim::run_workload;
 use tardis_dsm::trace::synth_workload;
 use tardis_dsm::workloads;
 
@@ -14,7 +14,7 @@ fn main() {
     let spec = workloads::by_name("volrend").unwrap();
     let w = synth_workload(&spec.params, 16, 2048);
     let base = base_cfg(16, ProtocolKind::Msi);
-    let msi = run_workload(base, &w).unwrap().stats;
+    let msi = SimBuilder::from_config(base).workload(&w).run().unwrap().stats;
 
     let mut table = Table::new(
         "Ablations — VOLREND, 16 cores (normalized to MSI)",
@@ -35,12 +35,12 @@ fn main() {
         let s = bench(&format!("ablation/{name}"), 2, || {
             let mut cfg = base_cfg(16, ProtocolKind::Tardis);
             tweak(&mut cfg);
-            run_workload(cfg, &w).unwrap().stats
+            SimBuilder::from_config(cfg).workload(&w).run().unwrap().stats
         });
         let _ = s;
         let mut cfg = base_cfg(16, ProtocolKind::Tardis);
         tweak(&mut cfg);
-        let st = run_workload(cfg, &w).unwrap().stats;
+        let st = SimBuilder::from_config(cfg).workload(&w).run().unwrap().stats;
         let ok = if st.renew_requests == 0 {
             100.0
         } else {

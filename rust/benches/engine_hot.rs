@@ -1,10 +1,12 @@
 //! Engine micro-benchmarks: the §Perf hot paths — raw simulation
-//! throughput (memops/s) per protocol, trace generation, and the
-//! event-queue core.
+//! throughput (memops/s) per protocol, dispatch style (monomorphized
+//! enum vs boxed trait object), trace generation, and the event-queue
+//! core.
+use tardis_dsm::api::SimBuilder;
 use tardis_dsm::benchutil::bench;
 use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
 use tardis_dsm::coordinator::experiments::base_cfg;
-use tardis_dsm::sim::run_workload;
+use tardis_dsm::proto::{Coherence, ProtocolDispatch};
 use tardis_dsm::trace::{synth_raw, synth_workload};
 use tardis_dsm::workloads;
 
@@ -15,22 +17,33 @@ fn main() {
 
     for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
         let r = bench(&format!("engine/64c barnes {}", protocol.name()), 3, || {
-            let mut cfg = base_cfg(64, protocol);
-            cfg.record_accesses = false;
-            run_workload(cfg, &w64).unwrap().stats.cycles
+            SimBuilder::from_config(base_cfg(64, protocol))
+                .workload(&w64)
+                .run()
+                .unwrap()
+                .stats
+                .cycles
         });
         let mops = ops as f64 / r.mean.as_secs_f64() / 1e6;
         println!("  -> {:.2} M trace-ops/s ({} ops)", mops, ops);
     }
 
     let r = bench("engine/64c barnes tardis OoO", 2, || {
-        let mut cfg = base_cfg(64, ProtocolKind::Tardis);
-        cfg.record_accesses = false;
-        cfg.core_model = CoreModel::OutOfOrder;
-        run_workload(cfg, &w64).unwrap().stats.cycles
+        SimBuilder::from_config(base_cfg(64, ProtocolKind::Tardis))
+            .core_model(CoreModel::OutOfOrder)
+            .workload(&w64)
+            .run()
+            .unwrap()
+            .stats
+            .cycles
     });
     let mops = ops as f64 / r.mean.as_secs_f64() / 1e6;
     println!("  -> {:.2} M trace-ops/s", mops);
+
+    // Dispatch-style microbench: the engine's hottest protocol call
+    // (`probe`) through the monomorphized enum vs the old
+    // `Box<dyn Coherence>` path.  The enum must be no slower.
+    dispatch_style_bench();
 
     bench("tracegen/rust-mirror 64x2048", 5, || synth_raw(&spec.params, 64, 2048));
 
@@ -51,8 +64,45 @@ fn main() {
     // SC-checking overhead (record + check).
     let w8 = synth_workload(&spec.params, 8, 512);
     bench("engine/8c with SC checking", 3, || {
-        let cfg = SystemConfig::small(8, ProtocolKind::Tardis);
-        let res = run_workload(cfg, &w8).unwrap();
-        tardis_dsm::prog::checker::check(&res.log).unwrap().loads_checked
+        let res = SimBuilder::small(8, ProtocolKind::Tardis).workload(&w8).run().unwrap();
+        res.check_sc().unwrap().loads_checked
     });
+}
+
+/// Hammer `probe` (the protocol call the in-order core makes while a
+/// speculation window is open) through both dispatch styles on the
+/// identical protocol state.
+fn dispatch_style_bench() {
+    use tardis_dsm::proto::tardis::Tardis;
+    use tardis_dsm::types::SHARED_BASE;
+
+    const CALLS: u64 = 2_000_000;
+    let cfg = SystemConfig { protocol: ProtocolKind::Tardis, ..SystemConfig::default() };
+
+    let enum_proto = ProtocolDispatch::new(&cfg);
+    let r_static = bench("dispatch/enum probe 2M", 5, || {
+        let mut acc = 0u64;
+        for i in 0..CALLS {
+            let p = enum_proto.probe((i % 64) as u32, SHARED_BASE + (i % 257));
+            acc = acc.wrapping_add(p as u64);
+        }
+        acc
+    });
+
+    let dyn_proto: Box<dyn Coherence> = Box::new(Tardis::new(&cfg));
+    let r_dyn = bench("dispatch/boxed-dyn probe 2M", 5, || {
+        let mut acc = 0u64;
+        for i in 0..CALLS {
+            let p = dyn_proto.probe((i % 64) as u32, SHARED_BASE + (i % 257));
+            acc = acc.wrapping_add(p as u64);
+        }
+        acc
+    });
+
+    let ratio = r_static.mean.as_secs_f64() / r_dyn.mean.as_secs_f64();
+    println!(
+        "  -> enum/dyn time ratio {:.3} ({} = static dispatch at least as fast)",
+        ratio,
+        if ratio <= 1.05 { "OK" } else { "REGRESSION?" }
+    );
 }

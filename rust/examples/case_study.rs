@@ -5,9 +5,9 @@
 //! operation that commits later in physical time lands earlier in
 //! physiological order.
 
-use tardis_dsm::config::{ProtocolKind, SystemConfig};
+use tardis_dsm::api::SimBuilder;
+use tardis_dsm::config::ProtocolKind;
 use tardis_dsm::prog::litmus;
-use tardis_dsm::sim::run_workload;
 
 fn main() -> anyhow::Result<()> {
     let w = litmus::case_study();
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
     println!("  A = 3\n");
 
     for protocol in [ProtocolKind::Msi, ProtocolKind::Tardis] {
-        let res = run_workload(SystemConfig::small(2, protocol), &w)?;
+        let res = SimBuilder::small(2, protocol).workload(&w).run()?;
         println!("== {} == finished in {} cycles", protocol.name(), res.stats.cycles);
         println!("  {:>5}  {:>4}  {:>2}  {:>9}  {:>10}  {:>3}", "cycle", "core", "pc", "op", "value", "ts");
         for r in res.log.records.iter().filter(|r| r.valid) {

@@ -4,9 +4,9 @@
 
 use std::collections::HashMap;
 
-use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::api::SimBuilder;
+use tardis_dsm::config::{CoreModel, ProtocolKind};
 use tardis_dsm::prog::{checker, litmus, Op, Workload};
-use tardis_dsm::sim::run_workload;
 use tardis_dsm::testutil::Rng;
 
 fn jitter(w: &Workload, seed: u64) -> Workload {
@@ -33,9 +33,10 @@ fn main() -> anyhow::Result<()> {
                 let mut forbidden = 0;
                 for seed in 0..RUNS {
                     let w = jitter(&lt.workload, seed);
-                    let mut cfg = SystemConfig::small(w.n_cores(), protocol);
-                    cfg.core_model = model;
-                    let res = run_workload(cfg, &w)?;
+                    let res = SimBuilder::small(w.n_cores(), protocol)
+                        .core_model(model)
+                        .workload(&w)
+                        .run()?;
                     checker::check(&res.log)
                         .map_err(|v| anyhow::anyhow!("{}: SC violation {v:?}", lt.name))?;
                     let out: Vec<u64> = lt

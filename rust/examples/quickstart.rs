@@ -1,42 +1,35 @@
 //! Quickstart: run one synthetic workload under Tardis and print the
-//! headline statistics.
+//! headline statistics — the `SimBuilder` API in its smallest form.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
+use tardis_dsm::api::SimBuilder;
 use tardis_dsm::config::ProtocolKind;
 use tardis_dsm::coordinator::experiments::base_cfg;
 use tardis_dsm::runtime::{workload_or_synth, TraceRuntime};
-use tardis_dsm::sim::run_workload;
 use tardis_dsm::workloads;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Pick a workload (the 12 SPLASH-2-signature benchmarks live in
-    //    `workloads::all()`).
+    // The 12 SPLASH-2-signature benchmarks live in `workloads::all()`.
+    // Materialize the trace once — through the AOT-compiled PJRT
+    // artifact when available (`make artifacts` + `--features pjrt`),
+    // else the bit-exact rust mirror — then run it under both
+    // protocols through the builder.
     let spec = workloads::by_name("fft").expect("known workload");
-
-    // 2. Materialize its trace: through the AOT-compiled PJRT artifact
-    //    when available (`make artifacts`), else the bit-exact rust
-    //    mirror.
     let mut runtime = TraceRuntime::open_default().ok();
     if runtime.is_none() {
-        eprintln!("note: artifacts not found; using the rust mirror (run `make artifacts`)");
+        eprintln!("note: artifacts not found; using the rust mirror");
     }
     let n_cores = 16;
-    let workload = workload_or_synth(&mut runtime, n_cores, 2048, &spec.params);
-    println!(
-        "workload {} on {n_cores} cores: {} operations",
-        spec.name,
-        workload.total_ops()
-    );
-
-    // 3. Configure the system (paper Table V defaults) and run.
+    let w = workload_or_synth(&mut runtime, n_cores, 2048, &spec.params);
+    println!("workload fft on {n_cores} cores: {} operations", w.total_ops());
     for protocol in [ProtocolKind::Msi, ProtocolKind::Tardis] {
-        let cfg = base_cfg(n_cores, protocol);
-        let res = run_workload(cfg, &workload)?;
+        let session = SimBuilder::from_config(base_cfg(n_cores, protocol)).workload(&w).build()?;
+        println!("\n== {} ==", session.cfg().protocol.name());
+        let res = session.run()?;
         let s = res.stats;
-        println!("\n== {} ==", protocol.name());
         println!("  cycles          {}", s.cycles);
         println!("  throughput      {:.4} memops/cycle", s.throughput());
         println!("  L1 miss rate    {:.2}%", s.l1_miss_rate() * 100.0);
@@ -44,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         println!("  renewals        {} ({} ok)", s.renew_requests, s.renew_success);
         println!("  invalidations   {}", s.invalidations_sent);
         println!("  ts incr rate    {:.0} cycles/ts", s.ts_incr_rate());
+        println!("  wall time       {:.3?}", res.elapsed);
     }
     Ok(())
 }

@@ -3,10 +3,10 @@
 //! show how the renewal machinery behaves as the self-increment period
 //! and lease vary, with and without speculation.
 
+use tardis_dsm::api::SimBuilder;
 use tardis_dsm::config::ProtocolKind;
 use tardis_dsm::coordinator::experiments::base_cfg;
 use tardis_dsm::runtime::{workload_or_synth, TraceRuntime};
-use tardis_dsm::sim::run_workload;
 use tardis_dsm::workloads;
 
 fn main() -> anyhow::Result<()> {
@@ -18,7 +18,10 @@ fn main() -> anyhow::Result<()> {
     println!("VOLREND signature on {n_cores} cores — the paper's renewal outlier");
     println!("(65.8% of its LLC requests are renewals at 64 cores)\n");
 
-    let msi = run_workload(base_cfg(n_cores, ProtocolKind::Msi), &w)?.stats;
+    let msi = SimBuilder::from_config(base_cfg(n_cores, ProtocolKind::Msi))
+        .workload(&w)
+        .run()?
+        .stats;
     println!("MSI baseline: {} cycles, {} flits\n", msi.cycles, msi.traffic.total());
 
     println!(
@@ -28,11 +31,15 @@ fn main() -> anyhow::Result<()> {
     for period in [10u64, 100, 1000] {
         for lease in [5u64, 10, 40] {
             for speculation in [true, false] {
-                let mut cfg = base_cfg(n_cores, ProtocolKind::Tardis);
-                cfg.tardis.self_inc_period = period;
-                cfg.tardis.lease = lease;
-                cfg.tardis.speculation = speculation;
-                let s = run_workload(cfg, &w)?.stats;
+                let s = SimBuilder::from_config(base_cfg(n_cores, ProtocolKind::Tardis))
+                    .tardis(|t| {
+                        t.self_inc_period = period;
+                        t.lease = lease;
+                        t.speculation = speculation;
+                    })
+                    .workload(&w)
+                    .run()?
+                    .stats;
                 let ok = if s.renew_requests == 0 {
                     100.0
                 } else {

@@ -1,0 +1,477 @@
+//! The fluent `SimBuilder -> SimSession -> SimReport` pipeline — the
+//! one way to construct and run a simulation.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{CoreModel, ProtocolKind, SystemConfig, TardisConfig};
+use crate::prog::checker::{AccessLog, CheckReport, Violation};
+use crate::prog::{Program, Workload};
+use crate::runtime::TraceRuntime;
+use crate::sim::engine::Engine;
+use crate::stats::SimStats;
+use crate::trace::TraceParams;
+use crate::types::Cycle;
+use crate::workloads;
+
+use super::observer::{Observer, Observers, ProgressObserver};
+
+/// Default trace length per core count (mirrors aot.py CONFIGS and the
+/// artifact manifest).
+pub fn default_trace_len(n_cores: u32) -> u32 {
+    match n_cores {
+        0..=2 => 256,
+        3..=4 => 512,
+        5..=16 => 2048,
+        17..=64 => 4096,
+        _ => 1024,
+    }
+}
+
+/// [`default_trace_len`] divided by a sweep scale-down factor, clamped
+/// so 0 (or huge) factors stay safe.  The single source of truth for
+/// the CLI and the experiment harness.
+pub fn scaled_trace_len(n_cores: u32, scale_down: u32) -> u32 {
+    (default_trace_len(n_cores) / scale_down.max(1)).max(64)
+}
+
+/// Where a session's workload comes from.
+enum WorkloadSource {
+    /// Nothing configured yet; `build` fails with a pointer to the
+    /// source methods.
+    Unset,
+    /// Inline programs, one per core.
+    Inline(Arc<Workload>),
+    /// A named SPLASH-2-signature spec from [`crate::workloads`].
+    Named(String),
+    /// Raw synthetic-trace parameters.
+    Synth(TraceParams),
+}
+
+/// Fluent builder for one simulation run.
+///
+/// ```no_run
+/// use tardis_dsm::api::SimBuilder;
+/// use tardis_dsm::config::ProtocolKind;
+///
+/// let report = SimBuilder::new()
+///     .protocol(ProtocolKind::Tardis)
+///     .cores(16)
+///     .named_workload("fft")
+///     .record_accesses(true)
+///     .run()
+///     .unwrap();
+/// println!("{} cycles", report.stats.cycles);
+/// ```
+pub struct SimBuilder {
+    cfg: SystemConfig,
+    source: WorkloadSource,
+    observers: Observers,
+    trace_len: Option<u32>,
+    runtime: Option<TraceRuntime>,
+}
+
+impl Default for SimBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimBuilder {
+    /// Paper Table V defaults (64 in-order cores, Tardis).
+    pub fn new() -> Self {
+        Self::from_config(SystemConfig::default())
+    }
+
+    /// Start from an existing configuration.
+    pub fn from_config(cfg: SystemConfig) -> Self {
+        Self {
+            cfg,
+            source: WorkloadSource::Unset,
+            observers: Observers::none(),
+            trace_len: None,
+            runtime: None,
+        }
+    }
+
+    /// Small test system (tiny caches, short deadlock cap) with the
+    /// SC-checker log enabled — the litmus/unit-test shape.
+    pub fn small(n_cores: u32, protocol: ProtocolKind) -> Self {
+        Self::from_config(SystemConfig::small(n_cores, protocol)).record_accesses(true)
+    }
+
+    // ------------------------------------------------- configuration
+
+    /// Inspect the configuration assembled so far.
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub fn protocol(mut self, protocol: ProtocolKind) -> Self {
+        self.cfg.protocol = protocol;
+        self
+    }
+
+    pub fn cores(mut self, n_cores: u32) -> Self {
+        self.cfg.n_cores = n_cores;
+        self
+    }
+
+    pub fn core_model(mut self, model: CoreModel) -> Self {
+        self.cfg.core_model = model;
+        self
+    }
+
+    /// Tweak the Tardis knobs (lease, self-increment, speculation...).
+    pub fn tardis(mut self, f: impl FnOnce(&mut TardisConfig)) -> Self {
+        f(&mut self.cfg.tardis);
+        self
+    }
+
+    /// Escape hatch: arbitrary [`SystemConfig`] edits.
+    pub fn configure(mut self, f: impl FnOnce(&mut SystemConfig)) -> Self {
+        f(&mut self.cfg);
+        self
+    }
+
+    /// Private L1 geometry override.
+    pub fn l1_geometry(mut self, sets: u32, ways: u32) -> Self {
+        self.cfg.l1_sets = sets;
+        self.cfg.l1_ways = ways;
+        self
+    }
+
+    /// Shared-LLC slice geometry override.
+    pub fn l2_geometry(mut self, sets: u32, ways: u32) -> Self {
+        self.cfg.l2_sets = sets;
+        self.cfg.l2_ways = ways;
+        self
+    }
+
+    pub fn max_cycles(mut self, cap: Cycle) -> Self {
+        self.cfg.max_cycles = cap;
+        self
+    }
+
+    // ----------------------------------------------- workload source
+
+    /// Inline workload (cloned).
+    pub fn workload(self, w: &Workload) -> Self {
+        self.workload_arc(Arc::new(w.clone()))
+    }
+
+    /// Inline workload, shared (the sweep path — no clone per point).
+    pub fn workload_arc(mut self, w: Arc<Workload>) -> Self {
+        self.source = WorkloadSource::Inline(w);
+        self
+    }
+
+    /// Inline programs, one per core.
+    pub fn programs(self, programs: Vec<Program>) -> Self {
+        self.workload_arc(Arc::new(Workload::new(programs)))
+    }
+
+    /// One of the 12 named SPLASH-2-signature workloads
+    /// ([`crate::workloads::all`]); materialized at `build` time.
+    pub fn named_workload(mut self, name: impl Into<String>) -> Self {
+        self.source = WorkloadSource::Named(name.into());
+        self
+    }
+
+    /// Synthesize a trace from raw parameters at `build` time.
+    pub fn synth_workload(mut self, params: TraceParams) -> Self {
+        self.source = WorkloadSource::Synth(params);
+        self
+    }
+
+    /// Trace length for named/synth sources (defaults to
+    /// [`default_trace_len`] for the configured core count).
+    pub fn trace_len(mut self, len: u32) -> Self {
+        self.trace_len = Some(len);
+        self
+    }
+
+    /// Resolve named/synth sources through a PJRT trace runtime
+    /// (AOT-compiled artifacts); generation falls back to the
+    /// bit-exact rust mirror when the artifact is missing.
+    pub fn trace_runtime(mut self, rt: TraceRuntime) -> Self {
+        self.runtime = Some(rt);
+        self
+    }
+
+    // ---------------------------------------------- instrumentation
+
+    /// Record every committed access for the SC witness checker
+    /// (memory-heavy; off by default, on under [`SimBuilder::small`]).
+    pub fn record_accesses(mut self, on: bool) -> Self {
+        if on {
+            self.observers.enable_sc_log();
+        } else {
+            self.observers.disable_sc_log();
+        }
+        self
+    }
+
+    /// Register an instrumentation plugin.
+    pub fn observe(mut self, plugin: impl Observer + 'static) -> Self {
+        self.observers.register(Box::new(plugin));
+        self
+    }
+
+    /// Fire every observer's `on_sample` each `period` simulated
+    /// cycles (0 disables sampling).
+    pub fn sample_every(mut self, period: Cycle) -> Self {
+        self.observers.set_sample_period(period);
+        self
+    }
+
+    /// Built-in cycle-sampled progress reporter on stderr.
+    pub fn progress_every(self, period: Cycle) -> Self {
+        self.sample_every(period).observe(ProgressObserver::default())
+    }
+
+    // ------------------------------------------------------- launch
+
+    /// Resolve the workload and validate the configuration.
+    pub fn build(mut self) -> Result<SimSession> {
+        let n_cores = self.cfg.n_cores;
+        let trace_len = self.trace_len.unwrap_or_else(|| default_trace_len(n_cores));
+        let workload: Arc<Workload> = match self.source {
+            WorkloadSource::Unset => bail!(
+                "SimBuilder: no workload source (use .workload / .programs / \
+                 .named_workload / .synth_workload)"
+            ),
+            WorkloadSource::Inline(w) => w,
+            WorkloadSource::Named(name) => {
+                let spec = workloads::by_name(&name).ok_or_else(|| {
+                    anyhow!(
+                        "unknown workload {name:?} (known: {})",
+                        workloads::all().iter().map(|w| w.name).collect::<Vec<_>>().join(", ")
+                    )
+                })?;
+                Arc::new(crate::runtime::workload_or_synth(
+                    &mut self.runtime,
+                    n_cores,
+                    trace_len,
+                    &spec.params,
+                ))
+            }
+            WorkloadSource::Synth(params) => Arc::new(crate::runtime::workload_or_synth(
+                &mut self.runtime,
+                n_cores,
+                trace_len,
+                &params,
+            )),
+        };
+        if workload.n_cores() != n_cores {
+            bail!(
+                "workload provides {} cores but the configuration asks for {n_cores} \
+                 (call .cores({}) to match)",
+                workload.n_cores(),
+                workload.n_cores()
+            );
+        }
+        Ok(SimSession { cfg: self.cfg, workload, observers: self.observers })
+    }
+
+    /// `build()` + `run()` in one call.
+    pub fn run(self) -> Result<SimReport> {
+        self.build()?.run()
+    }
+}
+
+/// A fully resolved simulation, ready to run.
+pub struct SimSession {
+    cfg: SystemConfig,
+    workload: Arc<Workload>,
+    observers: Observers,
+}
+
+impl std::fmt::Debug for SimSession {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SimSession")
+            .field("protocol", &self.cfg.protocol)
+            .field("n_cores", &self.cfg.n_cores)
+            .field("total_ops", &self.workload.total_ops())
+            .field("observers", &self.observers)
+            .finish_non_exhaustive()
+    }
+}
+
+impl SimSession {
+    pub fn cfg(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub fn workload(&self) -> &Arc<Workload> {
+        &self.workload
+    }
+
+    /// Run to completion.
+    pub fn run(self) -> Result<SimReport> {
+        let t0 = Instant::now();
+        let res = Engine::build(self.cfg, &self.workload, self.observers).run()?;
+        Ok(SimReport {
+            stats: res.stats,
+            log: res.log,
+            core_finish: res.core_finish,
+            elapsed: t0.elapsed(),
+        })
+    }
+}
+
+/// Result of a completed simulation.
+pub struct SimReport {
+    pub stats: SimStats,
+    /// SC-checker access log (empty unless `.record_accesses(true)`).
+    pub log: AccessLog,
+    /// Per-core completion cycles.
+    pub core_finish: Vec<Cycle>,
+    /// Host wall-clock time of the run.
+    pub elapsed: Duration,
+}
+
+impl SimReport {
+    /// Run the sequential-consistency witness checker over the log.
+    pub fn check_sc(&self) -> std::result::Result<CheckReport, Violation> {
+        crate::prog::checker::check(&self.log)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prog::{load, store};
+    use crate::types::SHARED_BASE;
+
+    fn two_core_programs() -> Vec<Program> {
+        vec![
+            Program::new(vec![store(SHARED_BASE, 7), load(SHARED_BASE)]),
+            Program::new(vec![load(SHARED_BASE)]),
+        ]
+    }
+
+    #[test]
+    fn builder_runs_inline_programs() {
+        for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+            let report = SimBuilder::small(2, protocol)
+                .programs(two_core_programs())
+                .run()
+                .unwrap();
+            assert_eq!(report.core_finish.len(), 2);
+            assert!(report.stats.cycles > 0);
+            assert_eq!(report.stats.memops, 3);
+            report.check_sc().unwrap();
+        }
+    }
+
+    #[test]
+    fn builder_requires_a_workload() {
+        let err = SimBuilder::new().build().unwrap_err().to_string();
+        assert!(err.contains("no workload source"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_core_count_mismatch() {
+        let err = SimBuilder::small(4, ProtocolKind::Tardis)
+            .programs(two_core_programs())
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("2 cores"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_unknown_named_workload() {
+        let err = SimBuilder::small(4, ProtocolKind::Tardis)
+            .named_workload("nope")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown workload"), "{err}");
+    }
+
+    #[test]
+    fn named_workload_resolves_via_synth_mirror() {
+        let session = SimBuilder::from_config(SystemConfig::small(4, ProtocolKind::Msi))
+            .named_workload("fft")
+            .trace_len(64)
+            .build()
+            .unwrap();
+        assert_eq!(session.workload().n_cores(), 4);
+        assert_eq!(session.workload().total_ops(), 4 * 64);
+        let report = session.run().unwrap();
+        assert!(report.stats.cycles > 0);
+        // No SC log requested -> empty log.
+        assert!(report.log.is_empty());
+    }
+
+    #[test]
+    fn record_accesses_toggles_the_log() {
+        let on = SimBuilder::small(2, ProtocolKind::Tardis)
+            .programs(two_core_programs())
+            .run()
+            .unwrap();
+        assert!(!on.log.is_empty());
+        let off = SimBuilder::small(2, ProtocolKind::Tardis)
+            .record_accesses(false)
+            .programs(two_core_programs())
+            .run()
+            .unwrap();
+        assert!(off.log.is_empty());
+        assert_eq!(on.stats.cycles, off.stats.cycles, "logging must not change timing");
+    }
+
+    #[test]
+    fn observers_see_commits_and_finish() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        #[derive(Default)]
+        struct Spy {
+            commits: u64,
+            finished: bool,
+        }
+        struct SpyObs(Rc<RefCell<Spy>>);
+        impl Observer for SpyObs {
+            fn on_commit(&mut self, _rec: &crate::prog::checker::LogRecord) {
+                self.0.borrow_mut().commits += 1;
+            }
+            fn on_finish(&mut self, _stats: &SimStats, _core_finish: &[Cycle]) {
+                self.0.borrow_mut().finished = true;
+            }
+        }
+        let spy: Rc<RefCell<Spy>> = Rc::default();
+        let report = SimBuilder::small(2, ProtocolKind::Msi)
+            .record_accesses(false)
+            .programs(two_core_programs())
+            .observe(SpyObs(Rc::clone(&spy)))
+            .run()
+            .unwrap();
+        // Plugins fire even with the SC log disabled; sync microcode
+        // may add accesses beyond the 3 trace ops.
+        assert!(spy.borrow().commits >= report.stats.memops);
+        assert!(spy.borrow().finished);
+    }
+
+    #[test]
+    fn synth_workload_source_runs() {
+        let report = SimBuilder::small(4, ProtocolKind::Tardis)
+            .synth_workload(TraceParams::default())
+            .trace_len(128)
+            .run()
+            .unwrap();
+        assert!(report.stats.memops > 0);
+        report.check_sc().unwrap();
+    }
+
+    #[test]
+    fn default_trace_len_matches_aot_configs() {
+        assert_eq!(default_trace_len(2), 256);
+        assert_eq!(default_trace_len(4), 512);
+        assert_eq!(default_trace_len(16), 2048);
+        assert_eq!(default_trace_len(64), 4096);
+        assert_eq!(default_trace_len(256), 1024);
+    }
+}

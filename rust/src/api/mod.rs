@@ -1,0 +1,38 @@
+//! The public simulation API: `SimBuilder -> SimSession -> SimReport`
+//! (DESIGN.md §3).
+//!
+//! Every binary, test, bench, and example constructs simulations
+//! through this module — the engine itself is crate-private.  The
+//! builder composes:
+//!
+//! * **protocol** — Tardis / MSI / Ackwise, instantiated behind the
+//!   monomorphized [`ProtocolDispatch`](crate::proto::ProtocolDispatch)
+//!   enum (no vtable on the hot loop);
+//! * **core model** — in-order or out-of-order;
+//! * **workload source** — inline [`Program`](crate::prog::Program)s,
+//!   a named SPLASH-2-signature spec, raw synthetic-trace parameters,
+//!   or the PJRT artifact runtime;
+//! * **cache geometry** and any other [`SystemConfig`
+//!   ](crate::config::SystemConfig) override;
+//! * **instrumentation** — the pluggable [`Observer`] registry (SC
+//!   log, stats taps, cycle-sampled progress, custom plugins).
+//!
+//! ```no_run
+//! use tardis_dsm::api::SimBuilder;
+//! use tardis_dsm::config::ProtocolKind;
+//!
+//! let report = SimBuilder::new()
+//!     .protocol(ProtocolKind::Tardis)
+//!     .cores(64)
+//!     .named_workload("volrend")
+//!     .progress_every(1_000_000)
+//!     .run()
+//!     .unwrap();
+//! println!("{:.3} ops/cycle", report.stats.throughput());
+//! ```
+
+pub mod builder;
+pub mod observer;
+
+pub use builder::{default_trace_len, scaled_trace_len, SimBuilder, SimReport, SimSession};
+pub use observer::{Observer, Observers, ProgressObserver, StatsTap};

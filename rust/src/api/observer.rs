@@ -1,0 +1,340 @@
+//! Pluggable simulation instrumentation.
+//!
+//! The engine used to hard-wire one instrument: an [`AccessLog`]
+//! toggled by a `record_accesses` flag on the system configuration.
+//! Instrumentation is now a set of plugins behind the [`Observer`]
+//! trait, assembled into an [`Observers`] registry by the
+//! [`SimBuilder`](super::SimBuilder):
+//!
+//! * the **SC-checker log** (the old `AccessLog`) is one plugin slot,
+//!   enabled with `.record_accesses(true)`;
+//! * **stats taps** ([`StatsTap`]) run a closure over the final (and
+//!   optionally sampled) statistics;
+//! * the **progress observer** ([`ProgressObserver`]) prints
+//!   cycle-sampled progress lines for long sweeps.
+//!
+//! Custom plugins implement [`Observer`] (all hooks default to no-ops)
+//! and register with `.observe(..)`.
+
+use crate::prog::checker::{AccessLog, LogRecord};
+use crate::stats::SimStats;
+use crate::types::Cycle;
+
+/// A simulation instrumentation plugin.  Hooks are called by the
+/// engine on the simulation thread; all have empty defaults so a
+/// plugin only implements what it cares about.
+pub trait Observer {
+    /// A memory operation committed (including spin re-loads and sync
+    /// microcode accesses).
+    fn on_commit(&mut self, _rec: &LogRecord) {}
+
+    /// A previously committed record was squashed by a speculation
+    /// rollback; `seq` is the global commit sequence of the squashed
+    /// record (matching an earlier `on_commit`'s `rec.seq`).
+    fn on_squash(&mut self, _seq: u64) {}
+
+    /// Periodic sample, fired every `sample_every` simulated cycles
+    /// (see [`Observers::set_sample_period`]).
+    fn on_sample(&mut self, _now: Cycle, _stats: &SimStats) {}
+
+    /// The simulation finished; `core_finish` holds per-core
+    /// completion cycles.
+    fn on_finish(&mut self, _stats: &SimStats, _core_finish: &[Cycle]) {}
+}
+
+/// Cycle-sampled progress reporter: one stderr line per sample window
+/// plus a completion line.  Enable with
+/// `SimBuilder::progress_every(cycles)`.
+#[derive(Debug, Default)]
+pub struct ProgressObserver {
+    /// Prefix for every line (e.g. the run label); empty means bare.
+    pub label: String,
+}
+
+impl ProgressObserver {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into() }
+    }
+
+    fn prefix(&self) -> String {
+        if self.label.is_empty() {
+            "[sim]".to_string()
+        } else {
+            format!("[sim {}]", self.label)
+        }
+    }
+}
+
+impl Observer for ProgressObserver {
+    fn on_sample(&mut self, now: Cycle, stats: &SimStats) {
+        // `stats.cycles` is only written when the run completes, so
+        // mid-run throughput must be derived from `now`.
+        let thr = if now == 0 { 0.0 } else { stats.memops as f64 / now as f64 };
+        eprintln!(
+            "{} cycle {now}: {} memops, {thr:.4} ops/cycle, {} flits",
+            self.prefix(),
+            stats.memops,
+            stats.traffic.total()
+        );
+    }
+
+    fn on_finish(&mut self, stats: &SimStats, core_finish: &[Cycle]) {
+        eprintln!(
+            "{} finished: {} cycles, {} memops across {} cores",
+            self.prefix(),
+            stats.cycles,
+            stats.memops,
+            core_finish.len()
+        );
+    }
+}
+
+/// Adapter turning a closure into a finish-time (and sample-time)
+/// stats tap: `SimBuilder::observe(StatsTap::new(|s| ...))`.
+pub struct StatsTap<F: FnMut(&SimStats)> {
+    f: F,
+    /// Also invoke the closure on every sample (default: finish only).
+    pub on_samples: bool,
+}
+
+impl<F: FnMut(&SimStats)> StatsTap<F> {
+    pub fn new(f: F) -> Self {
+        Self { f, on_samples: false }
+    }
+
+    pub fn sampled(f: F) -> Self {
+        Self { f, on_samples: true }
+    }
+}
+
+impl<F: FnMut(&SimStats)> Observer for StatsTap<F> {
+    fn on_sample(&mut self, _now: Cycle, stats: &SimStats) {
+        if self.on_samples {
+            (self.f)(stats);
+        }
+    }
+
+    fn on_finish(&mut self, stats: &SimStats, _core_finish: &[Cycle]) {
+        (self.f)(stats);
+    }
+}
+
+/// The engine-side registry: the optional SC log plus every registered
+/// plugin, with the shared sampling clock.  Built by `SimBuilder`;
+/// consumed by the engine.
+#[derive(Default)]
+pub struct Observers {
+    /// SC-checker log; `Some` iff access recording is enabled.
+    log: Option<AccessLog>,
+    plugins: Vec<Box<dyn Observer>>,
+    /// Cycles between `on_sample` firings; 0 disables sampling.
+    sample_period: Cycle,
+    next_sample: Cycle,
+}
+
+impl std::fmt::Debug for Observers {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Observers")
+            .field("sc_log", &self.log.is_some())
+            .field("plugins", &self.plugins.len())
+            .field("sample_period", &self.sample_period)
+            .finish()
+    }
+}
+
+impl Observers {
+    /// No instrumentation at all (the sweep default).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// SC logging only (the test/litmus default).
+    pub fn with_sc_log() -> Self {
+        let mut obs = Self::default();
+        obs.enable_sc_log();
+        obs
+    }
+
+    pub fn enable_sc_log(&mut self) {
+        if self.log.is_none() {
+            self.log = Some(AccessLog::default());
+        }
+    }
+
+    pub fn disable_sc_log(&mut self) {
+        self.log = None;
+    }
+
+    pub fn sc_log_enabled(&self) -> bool {
+        self.log.is_some()
+    }
+
+    pub fn register(&mut self, plugin: Box<dyn Observer>) {
+        self.plugins.push(plugin);
+    }
+
+    /// Fire `on_sample` every `period` simulated cycles (0 disables).
+    pub fn set_sample_period(&mut self, period: Cycle) {
+        self.sample_period = period;
+        self.next_sample = period;
+    }
+
+    /// Record a committed access.  Returns the squash handle the
+    /// cores pass back to [`Observers::squash`]: the SC-log index
+    /// when logging is on, the commit `seq` when only plugins are
+    /// attached, and `usize::MAX` (no squash needed) when nothing
+    /// observes.
+    #[inline]
+    pub fn commit(&mut self, rec: LogRecord) -> usize {
+        for p in &mut self.plugins {
+            p.on_commit(&rec);
+        }
+        match &mut self.log {
+            Some(log) => log.push(rec),
+            None if self.plugins.is_empty() => usize::MAX,
+            None => rec.seq as usize,
+        }
+    }
+
+    /// Squash a previously committed access (speculation rollback
+    /// re-executed the operation).  `handle` is whatever
+    /// [`Observers::commit`] returned for it.
+    pub fn squash(&mut self, handle: usize) {
+        if handle == usize::MAX {
+            return;
+        }
+        match &mut self.log {
+            Some(log) => {
+                let seq = log.records[handle].seq;
+                log.squash(handle);
+                for p in &mut self.plugins {
+                    p.on_squash(seq);
+                }
+            }
+            None => {
+                for p in &mut self.plugins {
+                    p.on_squash(handle as u64);
+                }
+            }
+        }
+    }
+
+    /// Hot-loop sampling check: a single branch when sampling is off.
+    #[inline]
+    pub fn maybe_sample(&mut self, now: Cycle, stats: &SimStats) {
+        if self.sample_period != 0 && now >= self.next_sample {
+            while self.next_sample <= now {
+                self.next_sample += self.sample_period;
+            }
+            for p in &mut self.plugins {
+                p.on_sample(now, stats);
+            }
+        }
+    }
+
+    pub fn finish(&mut self, stats: &SimStats, core_finish: &[Cycle]) {
+        for p in &mut self.plugins {
+            p.on_finish(stats, core_finish);
+        }
+    }
+
+    /// Extract the SC log (empty when logging was disabled).
+    pub fn take_log(&mut self) -> AccessLog {
+        self.log.take().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(seq: u64) -> LogRecord {
+        LogRecord {
+            core: 0,
+            pc: 0,
+            addr: 1,
+            value_read: Some(0),
+            value_written: None,
+            ts: 0,
+            commit_cycle: seq,
+            seq,
+            valid: true,
+        }
+    }
+
+    #[test]
+    fn commit_indexes_only_with_log() {
+        let mut off = Observers::none();
+        assert_eq!(off.commit(rec(1)), usize::MAX);
+        assert!(off.take_log().is_empty());
+
+        let mut on = Observers::with_sc_log();
+        assert_eq!(on.commit(rec(1)), 0);
+        assert_eq!(on.commit(rec(2)), 1);
+        assert_eq!(on.take_log().len(), 2);
+    }
+
+    #[test]
+    fn squash_marks_record_invalid_and_notifies() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        struct SquashSpy(Rc<RefCell<Vec<u64>>>);
+        impl Observer for SquashSpy {
+            fn on_squash(&mut self, seq: u64) {
+                self.0.borrow_mut().push(seq);
+            }
+        }
+        let seen: Rc<RefCell<Vec<u64>>> = Rc::new(RefCell::new(Vec::new()));
+        let mut obs = Observers::with_sc_log();
+        obs.register(Box::new(SquashSpy(Rc::clone(&seen))));
+        let idx = obs.commit(rec(7));
+        obs.squash(idx);
+        assert_eq!(seen.borrow().as_slice(), &[7]);
+        let log = obs.take_log();
+        assert!(!log.records[idx].valid);
+
+        // Plugins also hear squashes when the SC log is disabled: the
+        // handle degrades to the commit seq.
+        seen.borrow_mut().clear();
+        let mut obs = Observers::none();
+        obs.register(Box::new(SquashSpy(Rc::clone(&seen))));
+        let handle = obs.commit(rec(9));
+        assert_eq!(handle, 9);
+        obs.squash(handle);
+        assert_eq!(seen.borrow().as_slice(), &[9]);
+    }
+
+    #[test]
+    fn sampling_fires_on_period_boundaries() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+        struct Counter(Rc<RefCell<u32>>);
+        impl Observer for Counter {
+            fn on_sample(&mut self, _now: Cycle, _stats: &SimStats) {
+                *self.0.borrow_mut() += 1;
+            }
+        }
+        let fired: Rc<RefCell<u32>> = Rc::new(RefCell::new(0));
+        let mut obs = Observers::none();
+        obs.register(Box::new(Counter(Rc::clone(&fired))));
+        obs.set_sample_period(100);
+        let stats = SimStats::default();
+        obs.maybe_sample(50, &stats); // below the first boundary
+        obs.maybe_sample(100, &stats); // fires
+        obs.maybe_sample(150, &stats); // below the next boundary
+        obs.maybe_sample(450, &stats); // fires once, catches up past 450
+        assert_eq!(*fired.borrow(), 2);
+        assert_eq!(obs.next_sample, 500);
+    }
+
+    #[test]
+    fn stats_tap_sees_final_stats() {
+        let mut cycles_seen = 0;
+        {
+            let mut tap = StatsTap::new(|s: &SimStats| cycles_seen = s.cycles);
+            let stats = SimStats { cycles: 42, ..SimStats::default() };
+            tap.on_finish(&stats, &[]);
+        }
+        assert_eq!(cycles_seen, 42);
+    }
+}

@@ -145,10 +145,11 @@ pub struct SystemConfig {
     /// still-valid line (test-and-test-and-set backoff).
     pub spin_poll_cycles: Cycle,
 
-    /// Record a full access log for the sequential-consistency checker
-    /// (memory-heavy; enabled by tests/litmus, off for big sweeps).
-    pub record_accesses: bool,
     /// Hard cap on simulated cycles (deadlock guard).
+    ///
+    /// (Access-log recording moved off this struct: instrumentation is
+    /// configured on [`crate::api::SimBuilder`] via `record_accesses`
+    /// and the `Observer` plugins.)
     pub max_cycles: Cycle,
 }
 
@@ -175,7 +176,6 @@ impl Default for SystemConfig {
             flit_bits: 128,
             rollback_penalty: 8,
             spin_poll_cycles: 1,
-            record_accesses: false,
             max_cycles: 2_000_000_000,
         }
     }
@@ -191,7 +191,6 @@ impl SystemConfig {
             l1_ways: 4,
             l2_sets: 64,
             l2_ways: 8,
-            record_accesses: true,
             max_cycles: 200_000_000,
             ..Self::default()
         }

@@ -33,16 +33,10 @@ impl EvalCtx {
         Self { runtime, threads, scale_down: 1, cache: HashMap::new() }
     }
 
-    /// Default trace length per core count (matches aot.py CONFIGS).
+    /// Default trace length per core count (matches aot.py CONFIGS),
+    /// divided by the sweep's scale-down factor.
     pub fn trace_len(&self, n_cores: u32) -> u32 {
-        let base = match n_cores {
-            0..=2 => 256,
-            3..=4 => 512,
-            5..=16 => 2048,
-            17..=64 => 4096,
-            _ => 1024,
-        };
-        (base / self.scale_down).max(64)
+        crate::api::scaled_trace_len(n_cores, self.scale_down)
     }
 
     /// Generate (and cache) the trace for a workload at a core count.

@@ -16,9 +16,9 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::api::SimBuilder;
 use crate::config::SystemConfig;
 use crate::prog::Workload;
-use crate::sim::run_workload;
 use crate::stats::SimStats;
 
 /// One simulation to run.
@@ -62,7 +62,10 @@ pub fn run_points(points: Vec<SimPoint>, threads: usize) -> Result<Vec<SimPointR
                     break;
                 }
                 let p = &points[i];
-                match run_workload(p.cfg.clone(), &p.workload) {
+                let run = SimBuilder::from_config(p.cfg.clone())
+                    .workload_arc(Arc::clone(&p.workload))
+                    .run();
+                match run {
                     Ok(res) => {
                         results.lock().unwrap()[i] =
                             Some(SimPointResult { label: p.label.clone(), stats: res.stats });

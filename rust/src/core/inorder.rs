@@ -6,7 +6,7 @@ use std::collections::HashMap;
 
 use super::{barrier, CoreAction, CoreEnv};
 use crate::prog::{Op, Program, Workload};
-use crate::proto::{AccessDone, AccessOutcome, Completion, CompletionKind, MemOp};
+use crate::proto::{AccessDone, AccessOutcome, Coherence, Completion, CompletionKind, MemOp};
 use crate::types::{
     CoreId, Cycle, LineAddr, BARRIER_COUNTER_LINE, BARRIER_SENSE_LINE,
 };
@@ -433,7 +433,7 @@ impl InOrderCore {
                     self.penalty += env.rollback_penalty;
                     for &(_, idx) in &self.window {
                         if idx != usize::MAX {
-                            env.log.squash(idx);
+                            env.obs.squash(idx);
                         }
                     }
                     // Re-executed ops do not recount toward memops.

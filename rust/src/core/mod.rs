@@ -8,8 +8,9 @@
 pub mod inorder;
 pub mod ooo;
 
-use crate::proto::{Coherence, Completion, ProtoCtx};
-use crate::prog::checker::{AccessLog, LogRecord};
+use crate::api::observer::Observers;
+use crate::prog::checker::LogRecord;
+use crate::proto::{Completion, ProtoCtx, ProtocolDispatch};
 use crate::types::{CoreId, Cycle, LineAddr, Ts};
 
 /// What the engine should do with a core after a step/completion.
@@ -23,16 +24,16 @@ pub enum CoreAction {
     Finished,
 }
 
-/// Everything a core needs while stepping: the protocol, the protocol
-/// side-effect context, and the access log.
+/// Everything a core needs while stepping: the (statically
+/// dispatched) protocol, the protocol side-effect context, and the
+/// observer registry.
 pub struct CoreEnv<'a, 'b> {
-    pub proto: &'a mut dyn Coherence,
+    pub proto: &'a mut ProtocolDispatch,
     pub pctx: &'a mut ProtoCtx<'b>,
-    pub log: &'a mut AccessLog,
+    /// Instrumentation plugins + optional SC log.
+    pub obs: &'a mut Observers,
     /// Global commit sequence (state-mutation order).
     pub seq: &'a mut u64,
-    /// Record accesses into the log (SC checking enabled)?
-    pub record: bool,
     pub n_cores: u32,
     pub spin_poll: Cycle,
     pub rollback_penalty: Cycle,
@@ -40,8 +41,10 @@ pub struct CoreEnv<'a, 'b> {
 }
 
 impl<'a, 'b> CoreEnv<'a, 'b> {
-    /// Append a committed access to the log; returns its index (or
-    /// usize::MAX when recording is off).
+    /// Report a committed access to the observers; returns an opaque
+    /// squash handle to pass back to `obs.squash` (usize::MAX means
+    /// nothing observes and no squash is needed).  The handle is NOT
+    /// guaranteed to be an SC-log index — see [`Observers::commit`].
     #[allow(clippy::too_many_arguments)]
     pub fn log_access(
         &mut self,
@@ -54,10 +57,7 @@ impl<'a, 'b> CoreEnv<'a, 'b> {
         cycle: Cycle,
     ) -> usize {
         *self.seq += 1;
-        if !self.record {
-            return usize::MAX;
-        }
-        self.log.push(LogRecord {
+        self.obs.commit(LogRecord {
             core,
             pc,
             addr,

@@ -17,7 +17,7 @@ use std::collections::VecDeque;
 
 use super::{barrier, CoreAction, CoreEnv};
 use crate::prog::{Op, Program, Workload};
-use crate::proto::{AccessDone, AccessOutcome, Completion, CompletionKind, MemOp};
+use crate::proto::{AccessDone, AccessOutcome, Coherence, Completion, CompletionKind, MemOp};
 use crate::types::{CoreId, Cycle, LineAddr, BARRIER_COUNTER_LINE, BARRIER_SENSE_LINE};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

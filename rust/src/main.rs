@@ -6,23 +6,27 @@
 //! ```text
 //! tardis run   --workload fft --protocol tardis --cores 64 [--ooo]
 //!              [--lease N] [--self-inc N] [--no-spec] [--delta-bits N]
+//!              [--progress N]
 //! tardis sweep --figure fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7
 //!              [--threads N] [--scale-down N] [--out results/]
 //! tardis litmus
 //! tardis case-study
-//! tardis reproduce [--threads N] [--out results/]
+//! tardis reproduce [--threads N] [--scale-down N] [--out results/]
+//! tardis help
 //! ```
-
-use std::sync::Arc;
+//!
+//! Unknown flags and stray positional arguments are rejected with an
+//! error naming the offender; every simulation is constructed through
+//! [`tardis_dsm::api::SimBuilder`].
 
 use anyhow::{anyhow, bail, Result};
 
-use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::api::SimBuilder;
+use tardis_dsm::config::{CoreModel, ProtocolKind};
 use tardis_dsm::coordinator::experiments::{self, EvalCtx};
 use tardis_dsm::coordinator::report::Table;
 use tardis_dsm::prog::litmus;
 use tardis_dsm::runtime::TraceRuntime;
-use tardis_dsm::sim::run_workload;
 use tardis_dsm::workloads;
 
 struct Args {
@@ -30,23 +34,52 @@ struct Args {
 }
 
 impl Args {
-    fn parse(raw: &[String]) -> Self {
+    /// Parse `--flag [value]` pairs; stray positional tokens are an
+    /// error (they used to be silently ignored).
+    fn parse(raw: &[String]) -> Result<Self> {
         let mut flags = Vec::new();
         let mut i = 0;
         while i < raw.len() {
-            if let Some(name) = raw[i].strip_prefix("--") {
-                let value = raw
-                    .get(i + 1)
-                    .filter(|v| !v.starts_with("--"))
-                    .cloned();
-                if value.is_some() {
-                    i += 1;
-                }
-                flags.push((name.to_string(), value));
+            let Some(name) = raw[i].strip_prefix("--") else {
+                bail!(
+                    "unexpected argument {:?} (flags look like --name [value]; try `tardis help`)",
+                    raw[i]
+                );
+            };
+            let value = raw.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
+            if value.is_some() {
+                i += 1;
             }
+            if flags.iter().any(|(n, _)| n == name) {
+                bail!("duplicate flag --{name}");
+            }
+            flags.push((name.to_string(), value));
             i += 1;
         }
-        Self { flags }
+        Ok(Self { flags })
+    }
+
+    /// Reject any flag outside the command's spec with a clear error,
+    /// and reject values attached to boolean flags (otherwise
+    /// `tardis run --ooo barnes` would silently swallow `barnes`).
+    fn expect_only(&self, cmd: &str, value_flags: &[&str], bool_flags: &[&str]) -> Result<()> {
+        let allowed = || {
+            let all: Vec<String> =
+                value_flags.iter().chain(bool_flags).map(|f| format!("--{f}")).collect();
+            if all.is_empty() { "none".to_string() } else { all.join(", ") }
+        };
+        for (name, value) in &self.flags {
+            let n = name.as_str();
+            if !value_flags.contains(&n) && !bool_flags.contains(&n) {
+                bail!("unknown flag --{name} for `tardis {cmd}` (allowed: {})", allowed());
+            }
+            if bool_flags.contains(&n) {
+                if let Some(v) = value {
+                    bail!("--{name} does not take a value (got {v:?})");
+                }
+            }
+        }
+        Ok(())
     }
 
     fn get(&self, name: &str) -> Option<&str> {
@@ -60,9 +93,24 @@ impl Args {
         self.flags.iter().any(|(n, _)| n == name)
     }
 
-    fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+    /// Value of a string flag, or `default` when the flag is absent;
+    /// error when the flag is present without a value.
+    fn get_str<'a>(&'a self, name: &str, default: &'a str) -> Result<&'a str> {
+        if !self.has(name) {
+            return Ok(default);
+        }
         match self.get(name) {
-            None => Ok(default),
+            Some(v) => Ok(v),
+            None => bail!("--{name} expects a value"),
+        }
+    }
+
+    fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        if !self.has(name) {
+            return Ok(default);
+        }
+        match self.get(name) {
+            None => bail!("--{name} expects a number"),
             Some(v) => v.parse().map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
         }
     }
@@ -74,12 +122,18 @@ fn main() -> Result<()> {
         print_usage();
         return Ok(());
     };
-    let args = Args::parse(&argv[1..]);
+    let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&args),
         "sweep" => cmd_sweep(&args),
-        "litmus" => cmd_litmus(),
-        "case-study" => cmd_case_study(),
+        "litmus" => {
+            args.expect_only("litmus", &[], &[])?;
+            cmd_litmus()
+        }
+        "case-study" => {
+            args.expect_only("case-study", &[], &[])?;
+            cmd_case_study()
+        }
         "reproduce" => cmd_reproduce(&args),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -96,52 +150,81 @@ fn print_usage() {
 USAGE:
   tardis run --workload <name> [--protocol tardis|msi|ackwise] [--cores N]
              [--ooo] [--lease N] [--self-inc N] [--no-spec] [--delta-bits N]
+             [--scale-down N] [--progress N]
   tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7>
              [--threads N] [--scale-down N] [--out DIR]
   tardis litmus           run the litmus suite under all three protocols
   tardis case-study       cycle-by-cycle §V example, Tardis vs MSI
   tardis reproduce        regenerate every table and figure
+  tardis help             this message
   workloads: {}",
         workloads::all().iter().map(|w| w.name).collect::<Vec<_>>().join(", ")
     );
 }
 
-fn build_cfg(args: &Args) -> Result<SystemConfig> {
-    let protocol = match args.get("protocol").unwrap_or("tardis") {
-        p => ProtocolKind::parse(p).ok_or_else(|| anyhow!("unknown protocol {p:?}"))?,
+/// Assemble the `run` subcommand's builder from its flags.
+fn run_builder(args: &Args) -> Result<SimBuilder> {
+    let protocol = {
+        let p = args.get_str("protocol", "tardis")?;
+        ProtocolKind::parse(p).ok_or_else(|| anyhow!("unknown protocol {p:?}"))?
     };
     let n_cores = args.get_u64("cores", 64)? as u32;
-    let mut cfg = experiments::base_cfg(n_cores, protocol);
+    let mut b = SimBuilder::from_config(experiments::base_cfg(n_cores, protocol));
     if args.has("ooo") {
-        cfg.core_model = CoreModel::OutOfOrder;
+        b = b.core_model(CoreModel::OutOfOrder);
     }
-    cfg.tardis.lease = args.get_u64("lease", cfg.tardis.lease)?;
-    cfg.tardis.self_inc_period = args.get_u64("self-inc", cfg.tardis.self_inc_period)?;
-    cfg.tardis.delta_ts_bits = args.get_u64("delta-bits", cfg.tardis.delta_ts_bits as u64)? as u32;
-    if args.has("no-spec") {
-        cfg.tardis.speculation = false;
+    let lease = args.get_u64("lease", 0)?;
+    let self_inc = args.get_u64("self-inc", 0)?;
+    let delta_bits = args.get_u64("delta-bits", 0)? as u32;
+    let no_spec = args.has("no-spec");
+    b = b.tardis(|t| {
+        if args.has("lease") {
+            t.lease = lease;
+        }
+        if args.has("self-inc") {
+            t.self_inc_period = self_inc;
+        }
+        if args.has("delta-bits") {
+            t.delta_ts_bits = delta_bits;
+        }
+        if no_spec {
+            t.speculation = false;
+        }
+    });
+    let progress = args.get_u64("progress", 0)?;
+    if progress > 0 {
+        b = b.progress_every(progress);
     }
-    Ok(cfg)
+    Ok(b)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let name = args.get("workload").unwrap_or("fft");
-    let spec = workloads::by_name(name).ok_or_else(|| anyhow!("unknown workload {name:?}"))?;
-    let cfg = build_cfg(args)?;
-    let mut runtime = TraceRuntime::open_default().ok();
-    let mut ctx = EvalCtx::new(None, 1);
-    ctx.scale_down = args.get_u64("scale-down", 1)? as u32;
-    let trace_len = ctx.trace_len(cfg.n_cores);
-    let workload =
-        tardis_dsm::runtime::workload_or_synth(&mut runtime, cfg.n_cores, trace_len, &spec.params);
+    args.expect_only(
+        "run",
+        &["workload", "protocol", "cores", "lease", "self-inc", "delta-bits", "scale-down", "progress"],
+        &["ooo", "no-spec"],
+    )?;
+    let name = args.get_str("workload", "fft")?;
+    let mut b = run_builder(args)?;
+    let n_cores = b.cfg().n_cores;
+    let scale_down = args.get_u64("scale-down", 1)? as u32;
+    b = b
+        .named_workload(name)
+        .trace_len(tardis_dsm::api::scaled_trace_len(n_cores, scale_down));
+    if let Ok(rt) = TraceRuntime::open_default() {
+        b = b.trace_runtime(rt);
+    } else {
+        eprintln!("note: artifacts not found, using rust synth fallback (run `make artifacts`)");
+    }
+    let session = b.build()?;
     println!(
         "running {} on {} x{} cores ({} ops)...",
-        spec.name,
-        cfg.protocol.name(),
-        cfg.n_cores,
-        workload.total_ops()
+        name,
+        session.cfg().protocol.name(),
+        n_cores,
+        session.workload().total_ops()
     );
-    let res = run_workload(cfg, &workload)?;
+    let res = session.run()?;
     let s = &res.stats;
     println!("cycles            {}", s.cycles);
     println!("memops            {}", s.memops);
@@ -156,6 +239,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("barriers passed   {}", s.barriers_passed);
     println!("ts incr rate      {:.0} cycles/ts", s.ts_incr_rate());
     println!("self incr share   {:.1}%", s.self_inc_fraction() * 100.0);
+    println!("wall time         {:.3?}", res.elapsed);
     Ok(())
 }
 
@@ -176,8 +260,9 @@ fn emit(table: &Table, out: &str, stem: &str) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let fig = args.get("figure").unwrap_or("fig4");
-    let out = args.get("out").unwrap_or("results");
+    args.expect_only("sweep", &["figure", "threads", "scale-down", "out"], &[])?;
+    let fig = args.get_str("figure", "fig4")?;
+    let out = args.get_str("out", "results")?;
     let mut ctx = eval_ctx(args)?;
     match fig {
         "fig4" => emit(&experiments::fig4(&mut ctx)?, out, "fig4"),
@@ -206,14 +291,12 @@ fn cmd_litmus() -> Result<()> {
             // Perturb interleavings with per-run gap jitter.
             for seed in 0..50u64 {
                 let w = jitter(&lt.workload, seed);
-                let cfg = SystemConfig::small(n, proto);
-                let res = run_workload(cfg, &w)?;
+                let res = SimBuilder::small(n, proto).workload(&w).run()?;
                 let outcome = extract_outcome(&res, &lt.observed);
                 if !(lt.allowed)(&outcome) {
                     forbidden += 1;
                 }
-                tardis_dsm::prog::checker::check(&res.log)
-                    .map_err(|v| anyhow!("{}: SC violation {v:?}", lt.name))?;
+                res.check_sc().map_err(|v| anyhow!("{}: SC violation {v:?}", lt.name))?;
             }
             println!(
                 "  {:<6} {:>3} runs, forbidden outcomes: {}",
@@ -248,7 +331,7 @@ fn jitter(w: &tardis_dsm::prog::Workload, seed: u64) -> tardis_dsm::prog::Worklo
     w
 }
 
-fn extract_outcome(res: &tardis_dsm::sim::SimResult, observed: &[(u32, u32)]) -> Vec<u64> {
+fn extract_outcome(res: &tardis_dsm::api::SimReport, observed: &[(u32, u32)]) -> Vec<u64> {
     observed
         .iter()
         .map(|&(core, pc)| {
@@ -265,8 +348,7 @@ fn extract_outcome(res: &tardis_dsm::sim::SimResult, observed: &[(u32, u32)]) ->
 fn cmd_case_study() -> Result<()> {
     let w = litmus::case_study();
     for proto in [ProtocolKind::Msi, ProtocolKind::Tardis] {
-        let cfg = SystemConfig::small(2, proto);
-        let res = run_workload(cfg, &w)?;
+        let res = SimBuilder::small(2, proto).workload(&w).run()?;
         println!("== {} == finished in {} cycles", proto.name(), res.stats.cycles);
         for r in &res.log.records {
             println!(
@@ -285,7 +367,8 @@ fn cmd_case_study() -> Result<()> {
 }
 
 fn cmd_reproduce(args: &Args) -> Result<()> {
-    let out = args.get("out").unwrap_or("results");
+    args.expect_only("reproduce", &["threads", "scale-down", "out"], &[])?;
+    let out = args.get_str("out", "results")?;
     let mut ctx = eval_ctx(args)?;
     println!("Reproducing all paper tables and figures into {out}/ ...");
     emit(&experiments::fig4(&mut ctx)?, out, "fig4")?;
@@ -302,8 +385,3 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
     println!("done.");
     Ok(())
 }
-
-// Arc is used by experiments through coordinator; silence unused import
-// when compiled without it.
-#[allow(unused)]
-fn _keep(_: Arc<()>) {}

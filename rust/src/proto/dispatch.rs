@@ -1,0 +1,135 @@
+//! Monomorphized protocol dispatch.
+//!
+//! The engine used to hold a `Box<dyn Coherence>`, paying an indirect
+//! vtable call on every event in the hot loop.  [`ProtocolDispatch`]
+//! replaces it with a three-variant enum: every call site becomes a
+//! match over concrete types, which the compiler can inline and the
+//! branch predictor resolves in the common single-protocol run.
+//! `benches/engine_hot.rs` compares both dispatch styles directly.
+
+use crate::config::{ProtocolKind, SystemConfig};
+use crate::net::Message;
+use crate::types::{CoreId, LineAddr, Ts};
+
+use super::ackwise::Ackwise;
+use super::msi::Msi;
+use super::tardis::Tardis;
+use super::{AccessOutcome, Coherence, MemOp, Probe, ProtoCtx, SpinHint};
+
+/// The statically dispatched union of the coherence protocols.  Adding
+/// a protocol variant (MESI, Tardis 2.0 leases) means adding an enum
+/// arm here and a constructor case in [`ProtocolDispatch::new`] — the
+/// engine, cores, and API are untouched.
+pub enum ProtocolDispatch {
+    Tardis(Tardis),
+    Msi(Msi),
+    Ackwise(Ackwise),
+}
+
+/// Expand `match self { variant(p) => body }` once per protocol.
+macro_rules! for_each_protocol {
+    ($self:expr, $p:ident => $body:expr) => {
+        match $self {
+            ProtocolDispatch::Tardis($p) => $body,
+            ProtocolDispatch::Msi($p) => $body,
+            ProtocolDispatch::Ackwise($p) => $body,
+        }
+    };
+}
+
+impl ProtocolDispatch {
+    /// Instantiate the protocol selected by `cfg.protocol`.
+    pub fn new(cfg: &SystemConfig) -> Self {
+        match cfg.protocol {
+            ProtocolKind::Tardis => Self::Tardis(Tardis::new(cfg)),
+            ProtocolKind::Msi => Self::Msi(Msi::new(cfg)),
+            ProtocolKind::Ackwise => Self::Ackwise(Ackwise::new(cfg)),
+        }
+    }
+
+    /// Which protocol this dispatcher wraps.
+    pub fn kind(&self) -> ProtocolKind {
+        match self {
+            Self::Tardis(_) => ProtocolKind::Tardis,
+            Self::Msi(_) => ProtocolKind::Msi,
+            Self::Ackwise(_) => ProtocolKind::Ackwise,
+        }
+    }
+}
+
+impl Coherence for ProtocolDispatch {
+    #[inline]
+    fn core_access(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        op: MemOp,
+        spec_ok: bool,
+        ctx: &mut ProtoCtx,
+    ) -> AccessOutcome {
+        for_each_protocol!(self, p => p.core_access(core, addr, op, spec_ok, ctx))
+    }
+
+    #[inline]
+    fn on_message(&mut self, msg: Message, ctx: &mut ProtoCtx) {
+        for_each_protocol!(self, p => p.on_message(msg, ctx))
+    }
+
+    #[inline]
+    fn spin_hint(&mut self, core: CoreId, addr: LineAddr, ctx: &mut ProtoCtx) -> SpinHint {
+        for_each_protocol!(self, p => p.spin_hint(core, addr, ctx))
+    }
+
+    #[inline]
+    fn probe(&self, core: CoreId, addr: LineAddr) -> Probe {
+        for_each_protocol!(self, p => p.probe(core, addr))
+    }
+
+    #[inline]
+    fn commit_check(
+        &mut self,
+        core: CoreId,
+        addr: LineAddr,
+        early: bool,
+        bound: u64,
+    ) -> Option<Ts> {
+        for_each_protocol!(self, p => p.commit_check(core, addr, early, bound))
+    }
+
+    fn llc_storage_bits(&self, n_cores: u32) -> u64 {
+        for_each_protocol!(self, p => p.llc_storage_bits(n_cores))
+    }
+
+    fn l1_storage_bits(&self) -> u64 {
+        for_each_protocol!(self, p => p.l1_storage_bits())
+    }
+
+    fn name(&self) -> &'static str {
+        for_each_protocol!(self, p => p.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructs_the_configured_protocol() {
+        for kind in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+            let cfg = SystemConfig { protocol: kind, ..SystemConfig::default() };
+            let d = ProtocolDispatch::new(&cfg);
+            assert_eq!(d.kind(), kind);
+            assert_eq!(d.name(), kind.name());
+        }
+    }
+
+    #[test]
+    fn dispatch_matches_direct_protocol_calls() {
+        let cfg = SystemConfig { protocol: ProtocolKind::Tardis, ..SystemConfig::default() };
+        let enum_proto = ProtocolDispatch::new(&cfg);
+        let direct = Tardis::new(&cfg);
+        assert_eq!(enum_proto.llc_storage_bits(64), direct.llc_storage_bits(64));
+        assert_eq!(enum_proto.l1_storage_bits(), direct.l1_storage_bits());
+        assert_eq!(enum_proto.probe(0, 0), direct.probe(0, 0));
+    }
+}

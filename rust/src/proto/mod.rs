@@ -3,8 +3,11 @@
 //! [`Coherence`] and run on the identical substrate.
 
 pub mod ackwise;
+pub mod dispatch;
 pub mod msi;
 pub mod tardis;
+
+pub use dispatch::ProtocolDispatch;
 
 use crate::net::Message;
 use crate::stats::SimStats;

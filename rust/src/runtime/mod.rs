@@ -3,120 +3,200 @@
 //! workload traces.  Python never runs here — the artifacts are
 //! compiled once by `make artifacts` and this module only loads and
 //! executes them through the XLA PJRT C API (`xla` crate).
+//!
+//! The `xla` dependency is unavailable in offline registries, so the
+//! real runtime sits behind the off-by-default `pjrt` cargo feature.
+//! Without it, [`TraceRuntime`] is an API-compatible stub whose
+//! constructors fail, and every consumer falls back to the bit-exact
+//! rust mirror of the generator ([`crate::trace::synth`]) through
+//! [`workload_or_synth`].
 
 mod manifest;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, Context, Result};
-
 pub use manifest::{parse_manifest, ManifestEntry};
 
-/// Loads artifacts lazily and caches compiled executables per
-/// (n_cores, trace_len) configuration.
-pub struct TraceRuntime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    configs: Vec<ManifestEntry>,
-    execs: HashMap<(u32, u32), xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_runtime {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl TraceRuntime {
-    /// Open the artifact directory (reads manifest.json).
-    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts` first"))?;
-        let configs = parse_manifest(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        Ok(Self { client, dir, configs, execs: HashMap::new() })
+    use anyhow::{anyhow, Context, Result};
+
+    use super::manifest::{parse_manifest, ManifestEntry};
+
+    /// Loads artifacts lazily and caches compiled executables per
+    /// (n_cores, trace_len) configuration.
+    pub struct TraceRuntime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        configs: Vec<ManifestEntry>,
+        execs: HashMap<(u32, u32), xla::PjRtLoadedExecutable>,
     }
 
-    /// Default artifact directory (repo-root/artifacts), overridable
-    /// via TARDIS_ARTIFACTS.
-    pub fn open_default() -> Result<Self> {
-        let dir = std::env::var("TARDIS_ARTIFACTS").unwrap_or_else(|_| {
-            concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
-        });
-        Self::open(dir)
-    }
-
-    /// Available (n_cores, trace_len) configurations.
-    pub fn configs(&self) -> Vec<(u32, u32)> {
-        self.configs.iter().map(|c| (c.n_cores, c.trace_len)).collect()
-    }
-
-    /// Pick the artifact for `n_cores` (trace length is baked per
-    /// config).
-    pub fn config_for(&self, n_cores: u32) -> Option<(u32, u32)> {
-        self.configs
-            .iter()
-            .find(|c| c.n_cores == n_cores)
-            .map(|c| (c.n_cores, c.trace_len))
-    }
-
-    fn executable(&mut self, n_cores: u32, trace_len: u32) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.execs.contains_key(&(n_cores, trace_len)) {
-            let entry = self
-                .configs
-                .iter()
-                .find(|c| c.n_cores == n_cores && c.trace_len == trace_len)
-                .ok_or_else(|| {
-                    anyhow!("no artifact for n_cores={n_cores} trace_len={trace_len}")
-                })?;
-            let path = self.dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe =
-                self.client.compile(&comp).map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
-            self.execs.insert((n_cores, trace_len), exe);
+    impl TraceRuntime {
+        /// Open the artifact directory (reads manifest.json).
+        pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest_path = dir.join("manifest.json");
+            let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+                format!("reading {manifest_path:?} — run `make artifacts` first")
+            })?;
+            let configs = parse_manifest(&text)?;
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+            Ok(Self { client, dir, configs, execs: HashMap::new() })
         }
-        Ok(&self.execs[&(n_cores, trace_len)])
-    }
 
-    /// Execute the tracegen artifact: params int32[16] -> flat
-    /// int32[n_cores * trace_len * 3] trace tensor.
-    pub fn generate_raw(
-        &mut self,
-        n_cores: u32,
-        trace_len: u32,
-        params: &[i32; 16],
-    ) -> Result<Vec<i32>> {
-        let exe = self.executable(n_cores, trace_len)?;
-        let input = xla::Literal::vec1(params.as_slice());
-        let result = exe
-            .execute::<xla::Literal>(&[input])
-            .map_err(|e| anyhow!("executing tracegen: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))?;
-        let flat = out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        anyhow::ensure!(
-            flat.len() == (n_cores * trace_len * 3) as usize,
-            "artifact returned {} values, expected {}",
-            flat.len(),
-            n_cores * trace_len * 3
-        );
-        Ok(flat)
-    }
+        /// Default artifact directory (repo-root/artifacts),
+        /// overridable via TARDIS_ARTIFACTS.
+        pub fn open_default() -> Result<Self> {
+            let dir = std::env::var("TARDIS_ARTIFACTS").unwrap_or_else(|_| {
+                concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+            });
+            Self::open(dir)
+        }
 
-    /// Execute + decode into a workload.
-    pub fn generate_workload(
-        &mut self,
-        n_cores: u32,
-        trace_len: u32,
-        params: &crate::trace::TraceParams,
-    ) -> Result<crate::prog::Workload> {
-        let raw = self.generate_raw(n_cores, trace_len, &params.to_vec())?;
-        Ok(crate::trace::decode_workload(&raw, n_cores, trace_len))
+        /// Available (n_cores, trace_len) configurations.
+        pub fn configs(&self) -> Vec<(u32, u32)> {
+            self.configs.iter().map(|c| (c.n_cores, c.trace_len)).collect()
+        }
+
+        /// Pick the artifact for `n_cores` (trace length is baked per
+        /// config).
+        pub fn config_for(&self, n_cores: u32) -> Option<(u32, u32)> {
+            self.configs
+                .iter()
+                .find(|c| c.n_cores == n_cores)
+                .map(|c| (c.n_cores, c.trace_len))
+        }
+
+        fn executable(
+            &mut self,
+            n_cores: u32,
+            trace_len: u32,
+        ) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.execs.contains_key(&(n_cores, trace_len)) {
+                let entry = self
+                    .configs
+                    .iter()
+                    .find(|c| c.n_cores == n_cores && c.trace_len == trace_len)
+                    .ok_or_else(|| {
+                        anyhow!("no artifact for n_cores={n_cores} trace_len={trace_len}")
+                    })?;
+                let path = self.dir.join(&entry.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {path:?}: {e:?}"))?;
+                self.execs.insert((n_cores, trace_len), exe);
+            }
+            Ok(&self.execs[&(n_cores, trace_len)])
+        }
+
+        /// Execute the tracegen artifact: params int32[16] -> flat
+        /// int32[n_cores * trace_len * 3] trace tensor.
+        pub fn generate_raw(
+            &mut self,
+            n_cores: u32,
+            trace_len: u32,
+            params: &[i32; 16],
+        ) -> Result<Vec<i32>> {
+            let exe = self.executable(n_cores, trace_len)?;
+            let input = xla::Literal::vec1(params.as_slice());
+            let result = exe
+                .execute::<xla::Literal>(&[input])
+                .map_err(|e| anyhow!("executing tracegen: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = result.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))?;
+            let flat = out.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            anyhow::ensure!(
+                flat.len() == (n_cores * trace_len * 3) as usize,
+                "artifact returned {} values, expected {}",
+                flat.len(),
+                n_cores * trace_len * 3
+            );
+            Ok(flat)
+        }
+
+        /// Execute + decode into a workload.
+        pub fn generate_workload(
+            &mut self,
+            n_cores: u32,
+            trace_len: u32,
+            params: &crate::trace::TraceParams,
+        ) -> Result<crate::prog::Workload> {
+            let raw = self.generate_raw(n_cores, trace_len, &params.to_vec())?;
+            Ok(crate::trace::decode_workload(&raw, n_cores, trace_len))
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_runtime::TraceRuntime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_runtime {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    const UNAVAILABLE: &str =
+        "PJRT trace runtime unavailable: tardis-dsm was built without the `pjrt` feature \
+         (traces come from the rust synth mirror instead)";
+
+    /// API-compatible stand-in for the PJRT runtime when the `pjrt`
+    /// feature is off.  Constructors fail, so callers holding an
+    /// `Option<TraceRuntime>` (the common pattern) transparently fall
+    /// back to the synth mirror.
+    pub struct TraceRuntime {
+        _sealed: (),
+    }
+
+    impl TraceRuntime {
+        pub fn open(_dir: impl AsRef<Path>) -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn open_default() -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn configs(&self) -> Vec<(u32, u32)> {
+            Vec::new()
+        }
+
+        pub fn config_for(&self, _n_cores: u32) -> Option<(u32, u32)> {
+            None
+        }
+
+        pub fn generate_raw(
+            &mut self,
+            _n_cores: u32,
+            _trace_len: u32,
+            _params: &[i32; 16],
+        ) -> Result<Vec<i32>> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn generate_workload(
+            &mut self,
+            _n_cores: u32,
+            _trace_len: u32,
+            _params: &crate::trace::TraceParams,
+        ) -> Result<crate::prog::Workload> {
+            bail!(UNAVAILABLE)
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_runtime::TraceRuntime;
 
 /// Generate a workload from artifacts when available, falling back to
 /// the bit-exact rust mirror (tests, artifact-less environments).
@@ -132,4 +212,25 @@ pub fn workload_or_synth(
         }
     }
     crate::trace::synth_workload(params, n_cores, trace_len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_or_synth_falls_back_without_runtime() {
+        let mut rt: Option<TraceRuntime> = None;
+        let params = crate::trace::TraceParams::default();
+        let w = workload_or_synth(&mut rt, 2, 64, &params);
+        assert_eq!(w.n_cores(), 2);
+        assert_eq!(w.total_ops(), 2 * 64);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_refuses_to_open() {
+        let err = TraceRuntime::open_default().err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
 }

@@ -3,5 +3,7 @@
 pub mod engine;
 pub mod event;
 
-pub use engine::{run_workload, Engine, SimResult};
+#[allow(deprecated)]
+pub use engine::run_workload;
+pub use engine::SimResult;
 pub use event::{Event, EventQueue};

@@ -2,8 +2,17 @@
 //! image's crate registry): a deterministic PRNG and random program
 //! generators used by the SC property tests.
 
+use crate::api::{SimBuilder, SimReport};
+use crate::config::SystemConfig;
 use crate::prog::{Op, Program, Workload};
 use crate::types::{LineAddr, LOCK_BASE, SHARED_BASE};
+
+/// Run `w` under `cfg` with the SC access log enabled — the canonical
+/// integration-test shape (what the pre-builder `run_workload` +
+/// `SystemConfig::small` combination used to do).
+pub fn run_logged(cfg: SystemConfig, w: &Workload) -> anyhow::Result<SimReport> {
+    SimBuilder::from_config(cfg).record_accesses(true).workload(w).run()
+}
 
 /// xorshift64* — deterministic, seedable, no dependencies.
 #[derive(Debug, Clone)]

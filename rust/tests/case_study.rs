@@ -6,13 +6,13 @@
 
 use tardis_dsm::config::{ProtocolKind, SystemConfig};
 use tardis_dsm::prog::{checker, litmus};
-use tardis_dsm::sim::run_workload;
+use tardis_dsm::testutil::run_logged;
 
 #[test]
 fn case_study_runs_clean_on_both_protocols() {
     let w = litmus::case_study();
     for protocol in [ProtocolKind::Msi, ProtocolKind::Tardis] {
-        let res = run_workload(SystemConfig::small(2, protocol), &w).unwrap();
+        let res = run_logged(SystemConfig::small(2, protocol), &w).unwrap();
         checker::check(&res.log).unwrap_or_else(|v| panic!("{protocol:?}: {v:?}"));
         assert_eq!(res.stats.memops, 8, "{protocol:?}: 5 + 3 ops");
     }
@@ -24,8 +24,8 @@ fn tardis_is_not_slower_than_msi_on_case_study() {
     // round-trips that Tardis avoids (§V-B "the cycle saving of Tardis
     // mainly comes from the removal of invalidations").
     let w = litmus::case_study();
-    let msi = run_workload(SystemConfig::small(2, ProtocolKind::Msi), &w).unwrap();
-    let tardis = run_workload(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
+    let msi = run_logged(SystemConfig::small(2, ProtocolKind::Msi), &w).unwrap();
+    let tardis = run_logged(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
     assert!(
         tardis.stats.cycles <= msi.stats.cycles,
         "tardis {} vs msi {}",
@@ -41,7 +41,7 @@ fn tardis_assigns_paper_like_timestamps() {
     // rts + 1 = lease + 1), i.e., some store commits with ts > lease
     // while core 0's first load keeps ts 0.
     let w = litmus::case_study();
-    let res = run_workload(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
+    let res = run_logged(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
     let lease = SystemConfig::small(2, ProtocolKind::Tardis).tardis.lease;
     let first_load = res
         .log
@@ -69,7 +69,7 @@ fn tardis_allows_time_travel_interleaving() {
     // interleaving happened and require the load to see either 0
     // (time travel) or a real stored value.
     let w = litmus::case_study();
-    let res = run_workload(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
+    let res = run_logged(SystemConfig::small(2, ProtocolKind::Tardis), &w).unwrap();
     let l_b = res
         .log
         .records

@@ -2,10 +2,10 @@
 //! forbidden SC outcomes must never appear, and the full SC witness
 //! checker must pass, across many interleaving perturbations.
 
+use tardis_dsm::api::SimReport;
 use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
 use tardis_dsm::prog::{checker, litmus, Op, Workload};
-use tardis_dsm::sim::{run_workload, SimResult};
-use tardis_dsm::testutil::Rng;
+use tardis_dsm::testutil::{run_logged, Rng};
 
 /// Jitter compute gaps to explore interleavings (deterministic per
 /// seed).
@@ -23,7 +23,7 @@ fn jitter(w: &Workload, seed: u64) -> Workload {
     w
 }
 
-fn observed(res: &SimResult, keys: &[(u32, u32)]) -> Vec<u64> {
+fn observed(res: &SimReport, keys: &[(u32, u32)]) -> Vec<u64> {
     keys.iter()
         .map(|&(core, pc)| {
             res.log
@@ -42,7 +42,7 @@ fn run_litmus(protocol: ProtocolKind, model: CoreModel, seeds: u64) {
             let w = jitter(&lt.workload, seed);
             let mut cfg = SystemConfig::small(w.n_cores(), protocol);
             cfg.core_model = model;
-            let res = run_workload(cfg, &w)
+            let res = run_logged(cfg, &w)
                 .unwrap_or_else(|e| panic!("{} seed {seed}: {e}", lt.name));
             let out = observed(&res, &lt.observed);
             assert!(
@@ -102,7 +102,7 @@ fn store_buffering_never_zero_zero_tardis_ooo_wide_sweep() {
         let mut cfg = SystemConfig::small(2, ProtocolKind::Tardis);
         cfg.core_model = CoreModel::OutOfOrder;
         cfg.ooo_window = 8;
-        let res = run_workload(cfg, &w).unwrap();
+        let res = run_logged(cfg, &w).unwrap();
         let out = observed(&res, &lt.observed);
         assert!(!(out[0] == 0 && out[1] == 0), "A=B=0 observed at seed {seed}");
     }
@@ -128,7 +128,7 @@ fn litmus_with_speculation_pressure() {
         p1.push(load(litmus::A));
         let w = Workload::new(vec![Program::new(p0), Program::new(p1)]);
         let cfg = SystemConfig::small(2, ProtocolKind::Tardis);
-        let res = run_workload(cfg, &w).unwrap();
+        let res = run_logged(cfg, &w).unwrap();
         checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed}: {v:?}"));
         // MP outcome: F=1 implies A=1.
         let f = observed(&res, &[(1, 30)])[0];

@@ -5,15 +5,14 @@
 
 use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
 use tardis_dsm::prog::checker;
-use tardis_dsm::sim::run_workload;
-use tardis_dsm::testutil::{prop_check, ProgGen};
+use tardis_dsm::testutil::{prop_check, run_logged, ProgGen};
 
 fn run_all_protocols(gen: &ProgGen, seed: u64, rng: &mut tardis_dsm::testutil::Rng, model: CoreModel) {
     let w = gen.generate(rng);
     for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
         let mut cfg = SystemConfig::small(gen.n_cores, protocol);
         cfg.core_model = model;
-        let res = run_workload(cfg, &w)
+        let res = run_logged(cfg, &w)
             .unwrap_or_else(|e| panic!("seed {seed:#x} {protocol:?}/{model:?}: {e}"));
         checker::check(&res.log)
             .unwrap_or_else(|v| panic!("seed {seed:#x} {protocol:?}/{model:?}: {v:?}"));
@@ -96,8 +95,8 @@ fn prop_tardis_determinism() {
     prop_check(10, 0x5EED, |_seed, rng| {
         let w = gen.generate(rng);
         let cfg = SystemConfig::small(4, ProtocolKind::Tardis);
-        let a = run_workload(cfg.clone(), &w).unwrap();
-        let b = run_workload(cfg, &w).unwrap();
+        let a = run_logged(cfg.clone(), &w).unwrap();
+        let b = run_logged(cfg, &w).unwrap();
         assert_eq!(a.stats.cycles, b.stats.cycles);
         assert_eq!(a.stats.memops, b.stats.memops);
         assert_eq!(a.stats.traffic.total(), b.stats.traffic.total());
@@ -112,7 +111,7 @@ fn prop_tardis_monotonic_timestamps() {
     prop_check(15, 0xA11CE, |seed, rng| {
         let w = gen.generate(rng);
         let cfg = SystemConfig::small(4, ProtocolKind::Tardis);
-        let res = run_workload(cfg, &w).unwrap();
+        let res = run_logged(cfg, &w).unwrap();
         let mut last = vec![0u64; 4];
         for r in res.log.records.iter().filter(|r| r.valid) {
             assert!(
@@ -156,7 +155,7 @@ fn prop_protocols_agree_on_final_memory() {
         let mut finals = Vec::new();
         for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
             let cfg = SystemConfig::small(n_cores, protocol);
-            let res = run_workload(cfg, &w).unwrap();
+            let res = run_logged(cfg, &w).unwrap();
             checker::check(&res.log)
                 .unwrap_or_else(|v| panic!("seed {seed:#x} {protocol:?}: {v:?}"));
             use std::collections::HashMap;

@@ -7,7 +7,8 @@ use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
 use tardis_dsm::coordinator::experiments::base_cfg;
 use tardis_dsm::prog::{checker, load, lock, store, unlock, Program, Workload};
 use tardis_dsm::proto::{Coherence, ackwise::Ackwise, msi::Msi, tardis::Tardis};
-use tardis_dsm::sim::run_workload;
+use tardis_dsm::api::SimBuilder;
+use tardis_dsm::testutil::run_logged;
 use tardis_dsm::trace::{synth_workload, TraceParams};
 use tardis_dsm::types::SHARED_BASE;
 use tardis_dsm::workloads;
@@ -37,7 +38,7 @@ fn tardis_renewals_mostly_succeed_on_read_shared_data() {
     let mut cfg = small(ProtocolKind::Tardis);
     // Let the writer's pts advance every store so reader leases expire.
     cfg.tardis.private_write_opt = false;
-    let res = run_workload(cfg, &Workload::new(progs)).unwrap();
+    let res = run_logged(cfg, &Workload::new(progs)).unwrap();
     let s = res.stats;
     assert!(s.renew_requests > 0, "expected renewals, got none");
     assert!(
@@ -55,8 +56,8 @@ fn tardis_renewals_mostly_succeed_on_read_shared_data() {
 fn tardis_eliminates_invalidations() {
     let params = TraceParams { pct_shared: 500, pct_write_shared: 300, ..Default::default() };
     let w = synth_workload(&params, 4, 512);
-    let tardis = run_workload(small(ProtocolKind::Tardis), &w).unwrap().stats;
-    let msi = run_workload(small(ProtocolKind::Msi), &w).unwrap().stats;
+    let tardis = run_logged(small(ProtocolKind::Tardis), &w).unwrap().stats;
+    let msi = run_logged(small(ProtocolKind::Msi), &w).unwrap().stats;
     assert_eq!(tardis.invalidations_sent, 0, "Tardis must not invalidate");
     assert!(msi.invalidations_sent > 0, "MSI should invalidate under write sharing");
     assert!(msi.traffic.invalidation_flits > 0);
@@ -77,8 +78,8 @@ fn private_write_opt_slows_pts_growth() {
     on.tardis.private_write_opt = true;
     let mut off = small(ProtocolKind::Tardis);
     off.tardis.private_write_opt = false;
-    let s_on = run_workload(on, &w).unwrap().stats;
-    let s_off = run_workload(off, &w).unwrap().stats;
+    let s_on = run_logged(on, &w).unwrap().stats;
+    let s_off = run_logged(off, &w).unwrap().stats;
     assert!(
         s_on.ts.pts_increase_total < s_off.ts.pts_increase_total,
         "opt on: {} vs off: {}",
@@ -98,7 +99,7 @@ fn self_increment_period_controls_renewals() {
     for period in [10u64, 1000] {
         let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
         cfg.tardis.self_inc_period = period;
-        let s = run_workload(cfg, &w).unwrap().stats;
+        let s = run_logged(cfg, &w).unwrap().stats;
         renewals.push(s.renew_requests);
     }
     assert!(
@@ -116,7 +117,7 @@ fn longer_lease_reduces_renewals() {
     for lease in [5u64, 20, 80] {
         let mut cfg = small(ProtocolKind::Tardis);
         cfg.tardis.lease = lease;
-        let s = run_workload(cfg, &w).unwrap().stats;
+        let s = run_logged(cfg, &w).unwrap().stats;
         renewals.push(s.renew_requests);
     }
     assert!(
@@ -133,10 +134,10 @@ fn small_delta_width_triggers_rebases() {
     let w = synth_workload(&spec.params, 4, 1024);
     let mut cfg = small(ProtocolKind::Tardis);
     cfg.tardis.delta_ts_bits = 8; // tiny: rolls over quickly
-    let s_small = run_workload(cfg, &w).unwrap().stats;
+    let s_small = run_logged(cfg, &w).unwrap().stats;
     let mut cfg64 = small(ProtocolKind::Tardis);
     cfg64.tardis.delta_ts_bits = 64;
-    let s_big = run_workload(cfg64, &w).unwrap().stats;
+    let s_big = run_logged(cfg64, &w).unwrap().stats;
     assert!(s_small.ts.l1_rebases > 0, "8-bit deltas must rebase");
     assert_eq!(s_big.ts.l1_rebases, 0, "64-bit deltas never rebase");
     // Rebasing is modeled but must not break consistency.
@@ -156,7 +157,7 @@ fn rebase_preserves_sc() {
         let w = gen.generate(rng);
         let mut cfg = small(ProtocolKind::Tardis);
         cfg.tardis.delta_ts_bits = 7;
-        let res = run_workload(cfg, &w).unwrap();
+        let res = run_logged(cfg, &w).unwrap();
         checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed:#x}: {v:?}"));
     });
 }
@@ -180,8 +181,8 @@ fn ackwise_broadcasts_on_pointer_overflow() {
     let w = Workload::new(progs);
     let mut cfg = SystemConfig::small(8, ProtocolKind::Ackwise);
     cfg.ackwise.num_pointers = 2;
-    let ack = run_workload(cfg, &w).unwrap().stats;
-    let msi = run_workload(SystemConfig::small(8, ProtocolKind::Msi), &w).unwrap().stats;
+    let ack = run_logged(cfg, &w).unwrap().stats;
+    let msi = run_logged(SystemConfig::small(8, ProtocolKind::Msi), &w).unwrap().stats;
     assert!(ack.broadcasts > 0, "expected a broadcast invalidation");
     assert_eq!(msi.broadcasts, 0);
 }
@@ -215,7 +216,7 @@ fn lock_mutual_exclusion_all_protocols() {
     }
     let w = Workload::new(progs);
     for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
-        let res = run_workload(small(protocol), &w).unwrap();
+        let res = run_logged(small(protocol), &w).unwrap();
         assert_eq!(res.stats.locks_acquired, 40, "{protocol:?}");
         checker::check(&res.log).unwrap();
     }
@@ -231,10 +232,10 @@ fn ooo_hides_renewal_latency_without_speculation() {
     let w = synth_workload(&spec.params, 8, 1024);
     let run = |model: CoreModel, spec_on: bool| {
         let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
-        cfg.record_accesses = false;
         cfg.core_model = model;
         cfg.tardis.speculation = spec_on;
-        run_workload(cfg, &w).unwrap().stats.cycles
+        // Timing-only comparison: skip the SC log.
+        SimBuilder::from_config(cfg).workload(&w).run().unwrap().stats.cycles
     };
     let inorder_nospec = run(CoreModel::InOrder, false) as f64;
     let inorder_spec = run(CoreModel::InOrder, true) as f64;
@@ -257,7 +258,7 @@ fn llc_eviction_and_mts_path() {
     let mut cfg = SystemConfig::small(2, ProtocolKind::Tardis);
     cfg.l2_sets = 16;
     cfg.l2_ways = 4;
-    let res = run_workload(cfg, &w).unwrap();
+    let res = run_logged(cfg, &w).unwrap();
     assert!(res.stats.dram_accesses > 100, "expected DRAM traffic");
     checker::check(&res.log).unwrap();
 }
@@ -270,7 +271,7 @@ fn workload_matrix_smoke() {
         let w = synth_workload(&spec.params, 8, 256);
         for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
             let cfg = SystemConfig::small(8, protocol);
-            let res = run_workload(cfg, &w)
+            let res = run_logged(cfg, &w)
                 .unwrap_or_else(|e| panic!("{} {protocol:?}: {e}", spec.name));
             checker::check(&res.log)
                 .unwrap_or_else(|v| panic!("{} {protocol:?}: {v:?}", spec.name));
@@ -287,12 +288,12 @@ fn e_state_extension_reduces_renewals() {
     let w = synth_workload(&spec.params, 8, 1024);
     let base = {
         let cfg = SystemConfig::small(8, ProtocolKind::Tardis);
-        run_workload(cfg, &w).unwrap().stats
+        run_logged(cfg, &w).unwrap().stats
     };
     let estate = {
         let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
         cfg.tardis.exclusive_state = true;
-        let res = run_workload(cfg, &w).unwrap();
+        let res = run_logged(cfg, &w).unwrap();
         checker::check(&res.log).unwrap();
         res.stats
     };
@@ -319,7 +320,7 @@ fn e_state_extension_preserves_sc() {
         let w = gen.generate(rng);
         let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
         cfg.tardis.exclusive_state = true;
-        let res = run_workload(cfg, &w).unwrap();
+        let res = run_logged(cfg, &w).unwrap();
         checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed:#x}: {v:?}"));
     });
 }
@@ -333,12 +334,12 @@ fn dynamic_lease_reduces_renewals() {
     let w = synth_workload(&spec.params, 8, 1024);
     let stat = {
         let cfg = SystemConfig::small(8, ProtocolKind::Tardis);
-        run_workload(cfg, &w).unwrap().stats
+        run_logged(cfg, &w).unwrap().stats
     };
     let dynamic = {
         let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
         cfg.tardis.dynamic_lease = true;
-        let res = run_workload(cfg, &w).unwrap();
+        let res = run_logged(cfg, &w).unwrap();
         checker::check(&res.log).unwrap();
         res.stats
     };
@@ -365,7 +366,7 @@ fn dynamic_lease_preserves_sc_under_writes() {
         let w = gen.generate(rng);
         let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
         cfg.tardis.dynamic_lease = true;
-        let res = run_workload(cfg, &w).unwrap();
+        let res = run_logged(cfg, &w).unwrap();
         checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed:#x}: {v:?}"));
     });
 }

@@ -58,8 +58,8 @@ fn artifact_matches_mirror_for_every_workload() {
 
 #[test]
 fn artifact_decodes_into_runnable_workload() {
-    use tardis_dsm::config::{ProtocolKind, SystemConfig};
-    use tardis_dsm::sim::run_workload;
+    use tardis_dsm::api::SimBuilder;
+    use tardis_dsm::config::ProtocolKind;
 
     let Some(mut rt) = runtime() else { return };
     let spec = workloads::by_name("fft").unwrap();
@@ -67,9 +67,9 @@ fn artifact_decodes_into_runnable_workload() {
     let w = rt.generate_workload(n_cores, trace_len, &spec.params).unwrap();
     assert_eq!(w.n_cores(), n_cores);
     assert_eq!(w.total_ops(), (n_cores * trace_len) as usize);
-    let res = run_workload(SystemConfig::small(n_cores, ProtocolKind::Tardis), &w).unwrap();
+    let res = SimBuilder::small(n_cores, ProtocolKind::Tardis).workload(&w).run().unwrap();
     assert!(res.stats.cycles > 0);
-    tardis_dsm::prog::checker::check(&res.log).unwrap();
+    res.check_sc().unwrap();
 }
 
 #[test]
