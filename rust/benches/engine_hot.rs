@@ -1,12 +1,16 @@
 //! Engine micro-benchmarks: the §Perf hot paths — raw simulation
-//! throughput (memops/s) per protocol, dispatch style (monomorphized
-//! enum vs boxed trait object), trace generation, and the event-queue
-//! core.
+//! throughput (memops/s) per protocol, the calendar event queue vs the
+//! legacy binary heap, dispatch style (monomorphized enum vs boxed
+//! trait object), trace generation, and the fig-4 macro sweep the
+//! `tardis bench` pipeline records into `BENCH_*.json`.
 use tardis_dsm::api::SimBuilder;
 use tardis_dsm::benchutil::bench;
 use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
-use tardis_dsm::coordinator::experiments::base_cfg;
+use tardis_dsm::coordinator::bench::run_macro_bench;
+use tardis_dsm::coordinator::experiments::{base_cfg, EvalCtx};
+use tardis_dsm::net::{Message, MsgKind, Node};
 use tardis_dsm::proto::{Coherence, ProtocolDispatch};
+use tardis_dsm::sim::{Event, EventQueue};
 use tardis_dsm::trace::{synth_raw, synth_workload};
 use tardis_dsm::workloads;
 
@@ -47,19 +51,13 @@ fn main() {
 
     bench("tracegen/rust-mirror 64x2048", 5, || synth_raw(&spec.params, 64, 2048));
 
-    // Event-queue microbench.
-    bench("event-queue/push-pop 100k", 10, || {
-        use tardis_dsm::sim::{Event, EventQueue};
-        let mut q = EventQueue::new();
-        for i in 0..100_000u64 {
-            q.push(i ^ 0x5555, Event::CoreWake((i % 64) as u32));
-        }
-        let mut n = 0;
-        while q.pop().is_some() {
-            n += 1;
-        }
-        n
-    });
+    // Queue-level microbenches: the calendar ring vs the legacy heap
+    // on an engine-shaped schedule (§Perf; the calendar must win).
+    queue_bench();
+
+    // Protocol-level microbench: L1-hit `core_access` (the per-memop
+    // fast path: set-assoc probe + timestamp bookkeeping, no network).
+    l1_hit_bench();
 
     // SC-checking overhead (record + check).
     let w8 = synth_workload(&spec.params, 8, 512);
@@ -67,6 +65,144 @@ fn main() {
         let res = SimBuilder::small(8, ProtocolKind::Tardis).workload(&w8).run().unwrap();
         res.check_sc().unwrap().loads_checked
     });
+
+    // The tracked macro bench: one quick fig-4 sweep iteration (the
+    // full-length record is `tardis bench`, which writes BENCH_*.json).
+    let mut ctx = EvalCtx::new(None, 1);
+    ctx.scale_down = 4;
+    let report = run_macro_bench(&mut ctx, 16, 1).unwrap();
+    println!("{}", report.summary());
+}
+
+/// Drive both queue implementations with an identical engine-shaped
+/// schedule: a rolling now-cursor, mostly short deltas (hop + L2
+/// latencies), ~3% DRAM-distance pushes, and a Deliver:Wake mix of
+/// about 2:1 so the message slab is on the measured path.
+fn queue_bench() {
+    fn drive(mut q: EventQueue) -> u64 {
+        let mut rng = tardis_dsm::testutil::Rng::new(0x2545_F491_4F6C_DD1D);
+        let mut rand = move || rng.next_u64();
+        let mut pops = 0u64;
+        // Keep ~192 events in flight (64 cores + in-flight messages).
+        for i in 0..192u64 {
+            q.push(i % 16, Event::CoreWake((i % 64) as u32));
+        }
+        for _ in 0..400_000u64 {
+            let (now, _ev) = q.pop().unwrap();
+            pops += 1;
+            let r = rand();
+            let dt = if r % 32 == 0 { 100 + (r >> 8) % 60 } else { 1 + (r >> 8) % 24 };
+            if r % 3 == 0 {
+                q.push(now + dt, Event::CoreWake((r % 64) as u32));
+            } else {
+                q.push(
+                    now + dt,
+                    Event::Deliver(Message {
+                        src: Node::Core((r % 64) as u32),
+                        dst: Node::Slice(((r >> 6) % 64) as u32),
+                        addr: r % 4096,
+                        requester: (r % 64) as u32,
+                        kind: MsgKind::ShRep { wts: now, rts: now + 10, value: r },
+                    }),
+                );
+            }
+        }
+        while q.pop().is_some() {
+            pops += 1;
+        }
+        pops
+    }
+
+    let r_cal = bench("queue/calendar 400k churn", 10, || drive(EventQueue::new()));
+    let r_leg = bench("queue/legacy-heap 400k churn", 10, || drive(EventQueue::legacy_heap()));
+    let speedup = r_leg.mean.as_secs_f64() / r_cal.mean.as_secs_f64();
+    println!(
+        "  -> calendar speedup {:.2}x over legacy heap ({})",
+        speedup,
+        if speedup >= 1.0 { "OK" } else { "REGRESSION?" }
+    );
+}
+
+/// Hammer `core_access` — the call every committed memop makes — over
+/// a line set that fits the L1: after warm-up this is the hit path
+/// (masked set-assoc probe + Tardis lease/pts bookkeeping, §Perf).
+/// Misses and renewals are resolved through a zero-latency message
+/// loop standing in for the NoC + DRAM, so the protocol state machine
+/// runs for real without an engine.
+fn l1_hit_bench() {
+    use tardis_dsm::proto::{AccessOutcome, MemOp, ProtoCtx};
+    use tardis_dsm::stats::SimStats;
+    use tardis_dsm::types::PRIV_BASE;
+
+    const CALLS: u64 = 1_000_000;
+    const LINES: u64 = 64; // well inside a 128x4 L1
+    let cfg = SystemConfig { protocol: ProtocolKind::Tardis, ..SystemConfig::default() };
+    let mut proto = ProtocolDispatch::new(&cfg);
+    let mut stats = SimStats::default();
+    let mut comps = Vec::new();
+
+    // Deliver every outstanding message instantly; memory controllers
+    // answer loads with zeros and swallow stores.
+    fn resolve(
+        proto: &mut ProtocolDispatch,
+        now: u64,
+        msgs: &mut Vec<Message>,
+        comps: &mut Vec<tardis_dsm::proto::Completion>,
+        stats: &mut SimStats,
+    ) {
+        while let Some(m) = msgs.pop() {
+            match m.dst {
+                Node::Mc(mc) => {
+                    if matches!(m.kind, MsgKind::DramLdReq) {
+                        msgs.push(Message {
+                            src: Node::Mc(mc),
+                            dst: m.src,
+                            addr: m.addr,
+                            requester: m.requester,
+                            kind: MsgKind::DramLdRep { value: 0 },
+                        });
+                    }
+                }
+                _ => {
+                    // Explicit reborrows: field init would move the
+                    // `&mut` params and kill the next loop iteration.
+                    let mut ctx = ProtoCtx {
+                        now,
+                        msgs: &mut *msgs,
+                        completions: &mut *comps,
+                        stats: &mut *stats,
+                    };
+                    proto.on_message(m, &mut ctx);
+                }
+            }
+        }
+        comps.clear();
+    }
+
+    let mut msgs: Vec<Message> = Vec::new();
+    bench("proto/core_access warm-L1 1M", 5, || {
+        let mut hits = 0u64;
+        for i in 0..CALLS {
+            let op = if i % 4 == 0 { MemOp::Store { value: i } } else { MemOp::Load };
+            let out = {
+                let mut ctx = ProtoCtx {
+                    now: i,
+                    msgs: &mut msgs,
+                    completions: &mut comps,
+                    stats: &mut stats,
+                };
+                proto.core_access(0, PRIV_BASE + i % LINES, op, false, &mut ctx)
+            };
+            if matches!(out, AccessOutcome::Done(_)) {
+                hits += 1;
+            }
+            if !msgs.is_empty() {
+                resolve(&mut proto, i, &mut msgs, &mut comps, &mut stats);
+            }
+        }
+        hits
+    });
+    println!("  -> note: hit fraction includes cold misses on the first iteration only");
 }
 
 /// Hammer `probe` (the protocol call the in-order core makes while a

@@ -71,6 +71,8 @@ pub struct SimBuilder {
     observers: Observers,
     trace_len: Option<u32>,
     runtime: Option<TraceRuntime>,
+    #[cfg(any(test, feature = "legacy-queue"))]
+    legacy_queue: bool,
 }
 
 impl Default for SimBuilder {
@@ -93,6 +95,8 @@ impl SimBuilder {
             observers: Observers::none(),
             trace_len: None,
             runtime: None,
+            #[cfg(any(test, feature = "legacy-queue"))]
+            legacy_queue: false,
         }
     }
 
@@ -232,6 +236,15 @@ impl SimBuilder {
         self.sample_every(period).observe(ProgressObserver::default())
     }
 
+    /// Run on the pre-calendar all-heap event queue (§Perf determinism
+    /// regression tests and old-vs-new benchmarking; needs the
+    /// `legacy-queue` feature outside the crate's own tests).
+    #[cfg(any(test, feature = "legacy-queue"))]
+    pub fn legacy_event_queue(mut self, on: bool) -> Self {
+        self.legacy_queue = on;
+        self
+    }
+
     // ------------------------------------------------------- launch
 
     /// Resolve the workload and validate the configuration.
@@ -273,7 +286,13 @@ impl SimBuilder {
                 workload.n_cores()
             );
         }
-        Ok(SimSession { cfg: self.cfg, workload, observers: self.observers })
+        Ok(SimSession {
+            cfg: self.cfg,
+            workload,
+            observers: self.observers,
+            #[cfg(any(test, feature = "legacy-queue"))]
+            legacy_queue: self.legacy_queue,
+        })
     }
 
     /// `build()` + `run()` in one call.
@@ -287,6 +306,8 @@ pub struct SimSession {
     cfg: SystemConfig,
     workload: Arc<Workload>,
     observers: Observers,
+    #[cfg(any(test, feature = "legacy-queue"))]
+    legacy_queue: bool,
 }
 
 impl std::fmt::Debug for SimSession {
@@ -309,10 +330,22 @@ impl SimSession {
         &self.workload
     }
 
+    /// Apply the (test/feature-gated) event-queue override.
+    #[cfg(any(test, feature = "legacy-queue"))]
+    fn configure_queue(legacy: bool, eng: &mut Engine) {
+        if legacy {
+            eng.set_legacy_queue();
+        }
+    }
+
     /// Run to completion.
     pub fn run(self) -> Result<SimReport> {
         let t0 = Instant::now();
-        let res = Engine::build(self.cfg, &self.workload, self.observers).run()?;
+        #[allow(unused_mut)]
+        let mut eng = Engine::build(self.cfg, &self.workload, self.observers);
+        #[cfg(any(test, feature = "legacy-queue"))]
+        Self::configure_queue(self.legacy_queue, &mut eng);
+        let res = eng.run()?;
         Ok(SimReport {
             stats: res.stats,
             log: res.log,

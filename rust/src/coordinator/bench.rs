@@ -1,0 +1,260 @@
+//! The tracked benchmark pipeline (`tardis bench`, DESIGN.md §6).
+//!
+//! Runs the paper's Fig-4 sweep shape (all 12 signature workloads x
+//! the 4 protocol variants) at a fixed core count and records **host**
+//! throughput — events/sec and simulated cycles/sec — into a
+//! machine-readable `BENCH_<n>.json` (schema [`SCHEMA`], validated by
+//! `tools/validate_bench.py` and the CI `bench-smoke` job).  Every
+//! perf-relevant PR appends a new `BENCH_<n>.json`, so the repo
+//! carries its own performance trajectory.
+//!
+//! Timing protocol: each sweep point runs `iters` times; the reported
+//! wall time is the minimum (least-noise estimator for a deterministic
+//! computation), and simulated results are asserted identical across
+//! iterations — the bench doubles as a determinism check.
+
+use std::fmt::Write as _;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{ensure, Context, Result};
+
+use super::experiments::{fig4_variants, EvalCtx};
+use crate::api::SimBuilder;
+use crate::workloads::all as all_workloads;
+
+/// Schema identifier stamped into every report.
+pub const SCHEMA: &str = "tardis-bench-v1";
+
+/// One (workload, variant) sweep point.
+#[derive(Debug, Clone)]
+pub struct BenchPoint {
+    pub workload: String,
+    pub variant: String,
+    /// Simulated completion time.
+    pub sim_cycles: u64,
+    /// Committed memory operations.
+    pub memops: u64,
+    /// Discrete events the engine dispatched.
+    pub events: u64,
+    /// Best host wall time over the iterations, seconds.
+    pub wall_s: f64,
+}
+
+impl BenchPoint {
+    pub fn events_per_sec(&self) -> f64 {
+        self.events as f64 / self.wall_s.max(1e-9)
+    }
+
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        self.sim_cycles as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+/// A full macro-bench run, serializable to the `BENCH_*.json` schema.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub label: String,
+    /// "measured" for reports emitted by this pipeline; other values
+    /// flag numbers that did not come from a local run.
+    pub provenance: String,
+    pub unix_time: u64,
+    pub n_cores: u32,
+    pub iters: u32,
+    pub scale_down: u32,
+    pub points: Vec<BenchPoint>,
+}
+
+impl BenchReport {
+    pub fn total_wall_s(&self) -> f64 {
+        self.points.iter().map(|p| p.wall_s).sum()
+    }
+
+    pub fn total_events(&self) -> u64 {
+        self.points.iter().map(|p| p.events).sum()
+    }
+
+    pub fn total_sim_cycles(&self) -> u64 {
+        self.points.iter().map(|p| p.sim_cycles).sum()
+    }
+
+    /// Aggregate host throughput (total events / total wall time).
+    pub fn events_per_sec(&self) -> f64 {
+        self.total_events() as f64 / self.total_wall_s().max(1e-9)
+    }
+
+    pub fn sim_cycles_per_sec(&self) -> f64 {
+        self.total_sim_cycles() as f64 / self.total_wall_s().max(1e-9)
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary(&self) -> String {
+        format!(
+            "bench {}: {} points, {:.2}s wall, {:.2} M events/s, {:.2} M sim-cycles/s",
+            self.label,
+            self.points.len(),
+            self.total_wall_s(),
+            self.events_per_sec() / 1e6,
+            self.sim_cycles_per_sec() / 1e6,
+        )
+    }
+
+    /// Serialize to the `tardis-bench-v1` JSON schema (hand-rolled;
+    /// serde is not in this image's offline registry).  All string
+    /// fields are known-ASCII labels, so no escaping is needed beyond
+    /// the assertion below.
+    pub fn to_json(&self) -> String {
+        fn lit(s: &str) -> String {
+            assert!(
+                s.chars().all(|c| c.is_ascii_alphanumeric() || "-_. /".contains(c)),
+                "label {s:?} needs JSON escaping"
+            );
+            format!("\"{s}\"")
+        }
+        let mut j = String::new();
+        j.push_str("{\n");
+        let _ = writeln!(j, "  \"schema\": {},", lit(SCHEMA));
+        let _ = writeln!(j, "  \"label\": {},", lit(&self.label));
+        let _ = writeln!(j, "  \"provenance\": {},", lit(&self.provenance));
+        let _ = writeln!(j, "  \"unix_time\": {},", self.unix_time);
+        let _ = writeln!(j, "  \"n_cores\": {},", self.n_cores);
+        let _ = writeln!(j, "  \"iters\": {},", self.iters);
+        let _ = writeln!(j, "  \"scale_down\": {},", self.scale_down);
+        j.push_str("  \"points\": [\n");
+        for (i, p) in self.points.iter().enumerate() {
+            let _ = write!(
+                j,
+                "    {{\"workload\": {}, \"variant\": {}, \"sim_cycles\": {}, \
+                 \"memops\": {}, \"events\": {}, \"wall_s\": {:.6}, \
+                 \"events_per_sec\": {:.1}, \"sim_cycles_per_sec\": {:.1}}}",
+                lit(&p.workload),
+                lit(&p.variant),
+                p.sim_cycles,
+                p.memops,
+                p.events,
+                p.wall_s,
+                p.events_per_sec(),
+                p.sim_cycles_per_sec(),
+            );
+            j.push_str(if i + 1 < self.points.len() { ",\n" } else { "\n" });
+        }
+        j.push_str("  ],\n");
+        let _ = writeln!(
+            j,
+            "  \"aggregate\": {{\"wall_s\": {:.6}, \"events\": {}, \"sim_cycles\": {}, \
+             \"events_per_sec\": {:.1}, \"sim_cycles_per_sec\": {:.1}}}",
+            self.total_wall_s(),
+            self.total_events(),
+            self.total_sim_cycles(),
+            self.events_per_sec(),
+            self.sim_cycles_per_sec(),
+        );
+        j.push_str("}\n");
+        j
+    }
+
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json()).with_context(|| format!("writing {path}"))
+    }
+}
+
+/// Run the fig-4-shaped macro bench at `n_cores` (the trajectory
+/// default is 16, the paper's smallest sweep point — big enough to
+/// stress the queue, small enough to iterate).
+pub fn run_macro_bench(ctx: &mut EvalCtx, n_cores: u32, iters: u32) -> Result<BenchReport> {
+    ensure!(iters > 0, "bench needs at least one iteration");
+    let variants = fig4_variants(n_cores);
+    let mut points = Vec::new();
+    for spec in &all_workloads() {
+        let w = ctx.workload(spec, n_cores);
+        for v in &variants {
+            let mut best_wall = f64::INFINITY;
+            let mut first: Option<crate::stats::SimStats> = None;
+            for _ in 0..iters {
+                let report = SimBuilder::from_config(v.cfg.clone())
+                    .workload_arc(std::sync::Arc::clone(&w))
+                    .run()?;
+                match &first {
+                    None => first = Some(report.stats.clone()),
+                    Some(f) => ensure!(
+                        *f == report.stats,
+                        "nondeterministic bench point {}/{}: {:?} vs {:?}",
+                        spec.name,
+                        v.label,
+                        f,
+                        report.stats
+                    ),
+                }
+                best_wall = best_wall.min(report.elapsed.as_secs_f64());
+            }
+            let stats = first.unwrap();
+            let (sim_cycles, memops, events) = (stats.cycles, stats.memops, stats.events);
+            points.push(BenchPoint {
+                workload: spec.name.to_string(),
+                variant: v.label.clone(),
+                sim_cycles,
+                memops,
+                events,
+                wall_s: best_wall,
+            });
+        }
+    }
+    Ok(BenchReport {
+        label: format!("fig4-{n_cores}c"),
+        provenance: "measured".to_string(),
+        unix_time: SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0),
+        n_cores,
+        iters,
+        scale_down: ctx.scale_down,
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiments::EvalCtx;
+
+    fn tiny_report() -> BenchReport {
+        let mut ctx = EvalCtx::new(None, 1);
+        ctx.scale_down = 32; // 64-op traces: fast enough for a unit test
+        run_macro_bench(&mut ctx, 2, 1).unwrap()
+    }
+
+    #[test]
+    fn macro_bench_covers_the_fig4_grid() {
+        let r = tiny_report();
+        assert_eq!(r.points.len(), 12 * 4);
+        assert!(r.points.iter().all(|p| p.sim_cycles > 0 && p.events > 0));
+        assert!(r.events_per_sec() > 0.0);
+        assert_eq!(r.label, "fig4-2c");
+    }
+
+    #[test]
+    fn json_matches_the_v1_schema_shape() {
+        let r = tiny_report();
+        let j = r.to_json();
+        for key in [
+            "\"schema\": \"tardis-bench-v1\"",
+            "\"label\"",
+            "\"provenance\": \"measured\"",
+            "\"unix_time\"",
+            "\"n_cores\"",
+            "\"iters\"",
+            "\"scale_down\"",
+            "\"points\"",
+            "\"workload\"",
+            "\"variant\"",
+            "\"sim_cycles\"",
+            "\"memops\"",
+            "\"events\"",
+            "\"wall_s\"",
+            "\"events_per_sec\"",
+            "\"aggregate\"",
+        ] {
+            assert!(j.contains(key), "missing {key} in:\n{j}");
+        }
+        // Balanced braces/brackets (cheap well-formedness probe).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+}

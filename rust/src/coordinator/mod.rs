@@ -8,6 +8,7 @@
 //! (executables are not Sync), then workers pull points off a shared
 //! queue.
 
+pub mod bench;
 pub mod experiments;
 pub mod report;
 

@@ -2,9 +2,8 @@
 //! per cycle, blocking on demand misses, with Tardis speculation
 //! continuing through expired-load renewals (§IV-A).
 
-use std::collections::HashMap;
-
 use super::{barrier, CoreAction, CoreEnv};
+use crate::hashing::FxHashMap;
 use crate::prog::{Op, Program, Workload};
 use crate::proto::{AccessDone, AccessOutcome, Coherence, Completion, CompletionKind, MemOp};
 use crate::types::{
@@ -64,7 +63,7 @@ pub struct InOrderCore {
     /// Accumulated rollback penalty to charge before the next issue.
     penalty: Cycle,
     /// Unresolved speculative renewals per address (window gate).
-    spec_unresolved: HashMap<LineAddr, u32>,
+    spec_unresolved: FxHashMap<LineAddr, u32>,
     /// Speculation window: (pc, log idx) of every op executed since the
     /// first unresolved speculative load — all re-executable (hit or
     /// spec loads only).  Squashed + re-executed on misspeculation.
@@ -89,7 +88,7 @@ impl InOrderCore {
             state: State::Ready,
             barrier_count: 0,
             penalty: 0,
-            spec_unresolved: HashMap::new(),
+            spec_unresolved: FxHashMap::default(),
             window: Vec::new(),
             window_start: None,
             spin_since: None,

@@ -135,6 +135,7 @@ fn main() -> Result<()> {
             cmd_case_study()
         }
         "reproduce" => cmd_reproduce(&args),
+        "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -156,6 +157,9 @@ USAGE:
   tardis litmus           run the litmus suite under all three protocols
   tardis case-study       cycle-by-cycle §V example, Tardis vs MSI
   tardis reproduce        regenerate every table and figure
+  tardis bench [--cores N] [--iters N] [--scale-down N] [--out FILE]
+                          macro benchmark (fig-4 sweep, timed serially);
+                          writes the machine-readable BENCH_*.json record
   tardis help             this message
   workloads: {}",
         workloads::all().iter().map(|w| w.name).collect::<Vec<_>>().join(", ")
@@ -363,6 +367,25 @@ fn cmd_case_study() -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `tardis bench`: the tracked perf pipeline (DESIGN.md §6).  Runs
+/// the fig-4 macro sweep and writes a `tardis-bench-v1` JSON record.
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.expect_only("bench", &["cores", "iters", "scale-down", "out"], &[])?;
+    let n_cores = args.get_u64("cores", 16)? as u32;
+    let iters = args.get_u64("iters", 3)? as u32;
+    let out = args.get_str("out", "BENCH_local.json")?;
+    let mut ctx = eval_ctx(args)?;
+    println!(
+        "benchmarking fig-4 sweep at {n_cores} cores ({iters} iters, scale-down {})...",
+        ctx.scale_down
+    );
+    let report = tardis_dsm::coordinator::bench::run_macro_bench(&mut ctx, n_cores, iters)?;
+    println!("{}", report.summary());
+    report.write(out)?;
+    println!("wrote {out}");
     Ok(())
 }
 

@@ -16,10 +16,18 @@ struct Entry<T> {
 
 /// A set-associative array of `sets * ways` lines indexed by line
 /// address.  `T` is the protocol's per-line state.
+///
+/// Probing is on the engine's hot path (§Perf): the set index uses a
+/// precomputed mask when `sets` is a power of two (every paper
+/// geometry), and the lookup family is `#[inline]` so the tag loop
+/// unrolls to `ways` compares at the call site.
 #[derive(Debug, Clone)]
 pub struct SetAssoc<T> {
     sets: u32,
     ways: u32,
+    /// `sets - 1` when `sets` is a power of two; `u64::MAX` sentinel
+    /// selects the generic modulo path otherwise.
+    set_mask: u64,
     tick: u64,
     entries: Vec<Entry<T>>,
 }
@@ -33,6 +41,7 @@ impl<T> SetAssoc<T> {
         Self {
             sets,
             ways,
+            set_mask: if sets.is_power_of_two() { sets as u64 - 1 } else { u64::MAX },
             tick: 0,
             entries: vec![
                 Entry { tag: 0, valid: false, lru: 0, data: T::default() };
@@ -45,21 +54,25 @@ impl<T> SetAssoc<T> {
     /// trace format's 64 KiB private regions) would otherwise collide
     /// whole working sets into a handful of sets; real LLCs hash the
     /// index for the same reason.
-    #[inline]
+    #[inline(always)]
     fn set_of(&self, addr: LineAddr) -> u32 {
         let mut x = addr;
         x ^= x >> 33;
         x = x.wrapping_mul(0xFF51AFD7ED558CCD);
         x ^= x >> 33;
-        (x % self.sets as u64) as u32
+        if self.set_mask != u64::MAX {
+            (x & self.set_mask) as u32
+        } else {
+            (x % self.sets as u64) as u32
+        }
     }
 
-    #[inline]
+    #[inline(always)]
     fn tag_of(&self, addr: LineAddr) -> u64 {
         addr
     }
 
-    #[inline]
+    #[inline(always)]
     fn set_range(&self, set: u32) -> std::ops::Range<usize> {
         let base = (set * self.ways) as usize;
         base..base + self.ways as usize
@@ -71,6 +84,7 @@ impl<T> SetAssoc<T> {
     }
 
     /// Look up a line, updating LRU on hit.
+    #[inline]
     pub fn get_mut(&mut self, addr: LineAddr) -> Option<&mut T> {
         let (set, tag) = (self.set_of(addr), self.tag_of(addr));
         self.tick += 1;
@@ -86,6 +100,7 @@ impl<T> SetAssoc<T> {
     }
 
     /// Look up without touching LRU (for snoops / external requests).
+    #[inline]
     pub fn peek_mut(&mut self, addr: LineAddr) -> Option<&mut T> {
         let (set, tag) = (self.set_of(addr), self.tag_of(addr));
         let range = self.set_range(set);
@@ -95,6 +110,7 @@ impl<T> SetAssoc<T> {
             .map(|e| &mut e.data)
     }
 
+    #[inline]
     pub fn peek(&self, addr: LineAddr) -> Option<&T> {
         let (set, tag) = (self.set_of(addr), self.tag_of(addr));
         self.entries[self.set_range(set)]
@@ -289,6 +305,19 @@ mod tests {
         assert_eq!(c.occupancy(), 6);
         assert!(c.peek(4).is_some());
         assert!(c.peek(5).is_none());
+    }
+
+    #[test]
+    fn non_power_of_two_sets_still_probe_correctly() {
+        // Exercises the modulo fallback behind the pow2 mask path.
+        // Two inserts cannot evict from a 2-way cache, so both lines
+        // must be retrievable wherever they hash.
+        let mut c: SetAssoc<u64> = SetAssoc::new(3, 2);
+        c.insert(1_000, 1);
+        c.insert(2_000, 2);
+        assert_eq!(c.peek(1_000), Some(&1));
+        assert_eq!(c.get_mut(2_000), Some(&mut 2));
+        assert_eq!(c.peek(3_000), None);
     }
 
     #[test]

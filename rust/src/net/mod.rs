@@ -4,4 +4,4 @@ pub mod mesh;
 pub mod message;
 
 pub use mesh::Mesh;
-pub use message::{Message, MsgClass, MsgKind, Node};
+pub use message::{Message, MsgClass, MsgKind, MsgSlab, Node};

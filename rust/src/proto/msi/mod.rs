@@ -7,9 +7,8 @@ mod dir;
 mod l1;
 mod sharers;
 
-use std::collections::HashMap;
-
 use crate::config::SystemConfig;
+use crate::hashing::FxHashMap;
 use crate::mem::addr::home_slice;
 use crate::mem::SetAssoc;
 use crate::net::{Message, MsgKind, Node};
@@ -39,7 +38,7 @@ pub struct Demand {
 
 pub struct MsiL1 {
     pub cache: SetAssoc<MsiL1Line>,
-    pub demand: HashMap<LineAddr, Demand>,
+    pub demand: FxHashMap<LineAddr, Demand>,
     pub watch: Option<LineAddr>,
 }
 
@@ -93,7 +92,7 @@ pub struct DirReq {
 
 pub struct DirSlice {
     pub cache: SetAssoc<DirLine>,
-    pub pending: HashMap<LineAddr, DirPending>,
+    pub pending: FxHashMap<LineAddr, DirPending>,
 }
 
 /// The directory protocol (MSI full map, or Ackwise-k when
@@ -118,14 +117,14 @@ impl Msi {
             l1: (0..sys.n_cores)
                 .map(|_| MsiL1 {
                     cache: SetAssoc::new(sys.l1_sets, sys.l1_ways),
-                    demand: HashMap::new(),
+                    demand: FxHashMap::default(),
                     watch: None,
                 })
                 .collect(),
             dir: (0..sys.n_cores)
                 .map(|_| DirSlice {
                     cache: SetAssoc::new(sys.l2_sets, sys.l2_ways),
-                    pending: HashMap::new(),
+                    pending: FxHashMap::default(),
                 })
                 .collect(),
         }

@@ -11,9 +11,8 @@
 mod l1;
 mod tm;
 
-use std::collections::HashMap;
-
 use crate::config::{SystemConfig, TardisConfig};
+use crate::hashing::FxHashMap;
 use crate::mem::addr::home_slice;
 use crate::mem::SetAssoc;
 use crate::net::{Message, MsgKind, Node};
@@ -69,8 +68,8 @@ pub struct L1 {
     pub bts: Ts,
     /// L1 data accesses since the last self increment.
     pub accesses_since_inc: u64,
-    pub demand: HashMap<LineAddr, Demand>,
-    pub renewals: HashMap<LineAddr, Renewal>,
+    pub demand: FxHashMap<LineAddr, Demand>,
+    pub renewals: FxHashMap<LineAddr, Renewal>,
     /// Line a spinning core is parked on (SpinWake on invalidate).
     pub watch: Option<LineAddr>,
 }
@@ -102,7 +101,7 @@ pub struct Tm {
     /// Running max of timestamps assigned in this slice (incremental —
     /// the rebase trigger must not scan the array per request).
     pub max_ts: Ts,
-    pub pending: HashMap<LineAddr, Pending>,
+    pub pending: FxHashMap<LineAddr, Pending>,
 }
 
 /// The full protocol: all L1s + all timestamp managers.
@@ -135,8 +134,8 @@ impl Tardis {
                     pts: 0,
                     bts: 0,
                     accesses_since_inc: 0,
-                    demand: HashMap::new(),
-                    renewals: HashMap::new(),
+                    demand: FxHashMap::default(),
+                    renewals: FxHashMap::default(),
                     watch: None,
                 })
                 .collect(),
@@ -150,7 +149,7 @@ impl Tardis {
                     mts: 1,
                     bts: 0,
                     max_ts: 1,
-                    pending: HashMap::new(),
+                    pending: FxHashMap::default(),
                 })
                 .collect(),
             ts_range,

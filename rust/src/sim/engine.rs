@@ -9,13 +9,12 @@
 //! below is a match over concrete types rather than a `Box<dyn
 //! Coherence>` vtable call (§Perf; `benches/engine_hot.rs`).
 
-use std::collections::HashMap;
-
 use anyhow::{bail, Result};
 
 use crate::api::observer::Observers;
 use crate::config::{CoreModel, SystemConfig};
 use crate::core::{inorder::InOrderCore, ooo::OooCore, CoreAction, CoreEnv, CoreUnit};
+use crate::hashing::FxHashMap;
 use crate::mem::Dram;
 use crate::net::{Mesh, Message, MsgClass, MsgKind, Node};
 use crate::prog::checker::AccessLog;
@@ -32,7 +31,43 @@ use super::event::{Event, EventQueue};
 /// 5-flit data messages and classic protocol races appear (an Inv
 /// passing the DataS it chases, a WbReq passing the ExRep that created
 /// the owner).
-type ChannelClock = HashMap<(Node, Node), Cycle>;
+///
+/// Stored as a dense `n_nodes x n_nodes` matrix over the flat node
+/// index space (cores, then LLC slices, then memory controllers):
+/// O(1) un-hashed lookup on every delivery, and — unlike the old
+/// per-pair `HashMap`, which grew with every channel ever used and
+/// was never pruned — memory is fixed at construction (§Perf; ~2 MiB
+/// at 256 cores).
+#[derive(Debug)]
+struct ChannelClock {
+    clocks: Vec<Cycle>,
+    n_cores: u32,
+    n_nodes: u32,
+}
+
+impl ChannelClock {
+    fn new(n_cores: u32, n_mcs: u32) -> Self {
+        let n_nodes = 2 * n_cores + n_mcs;
+        Self { clocks: vec![0; (n_nodes as usize) * (n_nodes as usize)], n_cores, n_nodes }
+    }
+
+    #[inline]
+    fn node_index(&self, n: Node) -> u32 {
+        match n {
+            Node::Core(c) => c,
+            Node::Slice(s) => self.n_cores + s,
+            Node::Mc(m) => 2 * self.n_cores + m,
+        }
+    }
+
+    /// Mutable earliest-delivery slot for the (src, dst) channel.
+    #[inline]
+    fn slot(&mut self, src: Node, dst: Node) -> &mut Cycle {
+        let i = self.node_index(src) as usize * self.n_nodes as usize
+            + self.node_index(dst) as usize;
+        &mut self.clocks[i]
+    }
+}
 
 /// Result of a completed simulation.
 pub struct SimResult {
@@ -47,8 +82,9 @@ pub(crate) struct Engine {
     queue: EventQueue,
     mesh: Mesh,
     dram: Dram,
-    /// DRAM backing image (line values; absent = 0).
-    memory: HashMap<LineAddr, u64>,
+    /// DRAM backing image (line values; absent = 0).  Fx-hashed: the
+    /// SipHash default cost showed up in every DRAM endpoint access.
+    memory: FxHashMap<LineAddr, u64>,
     proto: ProtocolDispatch,
     cores: Vec<CoreUnit>,
     obs: Observers,
@@ -80,18 +116,27 @@ impl Engine {
             mesh: Mesh::new(cfg.n_cores, cfg.n_mcs, cfg.hop_cycles, cfg.flit_bits),
             dram: Dram::new(cfg.n_mcs, cfg.dram_latency, cfg.dram_service_cycles),
             queue: EventQueue::new(),
-            memory: HashMap::new(),
+            memory: FxHashMap::default(),
             proto,
             cores,
             obs,
             stats: SimStats { n_cores: cfg.n_cores, ..SimStats::default() },
             seq: 0,
             finished: 0,
-            channel_clock: ChannelClock::new(),
+            channel_clock: ChannelClock::new(cfg.n_cores, cfg.n_mcs),
             scratch_msgs: Vec::with_capacity(16),
             scratch_comps: Vec::with_capacity(16),
             cfg,
         }
+    }
+
+    /// Swap in the pre-calendar all-heap event queue (determinism
+    /// regression tests and old-vs-new benchmarking only; must be
+    /// called before [`Engine::run`] schedules anything).
+    #[cfg(any(test, feature = "legacy-queue"))]
+    pub(crate) fn set_legacy_queue(&mut self) {
+        assert!(self.queue.is_empty(), "queue already in use");
+        self.queue = EventQueue::legacy_heap();
     }
 
     /// Run to completion.
@@ -104,6 +149,7 @@ impl Engine {
         while let Some((now, ev)) = self.queue.pop() {
             debug_assert!(now >= last_now, "time went backwards");
             last_now = now;
+            self.stats.events += 1;
             self.obs.maybe_sample(now, &self.stats);
             if now > self.cfg.max_cycles {
                 let dump: Vec<String> = self
@@ -257,7 +303,7 @@ impl Engine {
 
     /// Enqueue a delivery, enforcing per-channel FIFO order.
     fn deliver_at(&mut self, t: Cycle, msg: Message) {
-        let slot = self.channel_clock.entry((msg.src, msg.dst)).or_insert(0);
+        let slot = self.channel_clock.slot(msg.src, msg.dst);
         let t = t.max(*slot);
         *slot = t;
         self.queue.push(t, Event::Deliver(msg));
@@ -291,19 +337,6 @@ impl Engine {
         }
         let _ = msgs;
     }
-}
-
-/// Convenience: build + run in one call.
-///
-/// Unlike the old behaviour (which followed the removed
-/// `SystemConfig::record_accesses` flag), this shim always records the
-/// SC access log.
-#[deprecated(
-    since = "0.2.0",
-    note = "construct runs through api::SimBuilder; this shim always records accesses"
-)]
-pub fn run_workload(cfg: SystemConfig, workload: &Workload) -> Result<SimResult> {
-    Engine::build(cfg, workload, Observers::with_sc_log()).run()
 }
 
 #[cfg(test)]
@@ -518,14 +551,35 @@ mod tests {
         .is_err());
     }
 
+    /// The §Perf determinism regression: the calendar queue must
+    /// reproduce the legacy heap's execution bit-for-bit — identical
+    /// stats (including the event count), access log, and per-core
+    /// finish times — for every protocol and both core models.
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_run_workload_shim_still_works() {
-        let (cfg, w) = tiny(ProtocolKind::Tardis);
-        let res = run_workload(cfg, &w).unwrap();
-        assert_eq!(res.stats.memops, 3);
-        // The shim records accesses unconditionally.
-        assert!(!res.log.is_empty());
-        crate::prog::checker::check(&res.log).unwrap();
+    fn calendar_queue_matches_legacy_heap_bit_for_bit() {
+        let spec = crate::workloads::by_name("fft").unwrap();
+        let w = crate::trace::synth_workload(&spec.params, 8, 256);
+        for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+            for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+                let run = |legacy: bool| {
+                    SimBuilder::from_config(SystemConfig::small(8, protocol))
+                        .core_model(model)
+                        .record_accesses(true)
+                        .workload(&w)
+                        .legacy_event_queue(legacy)
+                        .run()
+                        .unwrap()
+                };
+                let new = run(false);
+                let old = run(true);
+                assert_eq!(new.stats, old.stats, "{protocol:?}/{model:?} stats diverged");
+                assert_eq!(
+                    new.log.records, old.log.records,
+                    "{protocol:?}/{model:?} access logs diverged"
+                );
+                assert_eq!(new.core_finish, old.core_finish);
+                assert!(new.stats.events > 0);
+            }
+        }
     }
 }

@@ -1,9 +1,7 @@
-//! Discrete-event simulation: event queue and engine.
+//! Discrete-event simulation: calendar event queue and engine.
 
 pub mod engine;
 pub mod event;
 
-#[allow(deprecated)]
-pub use engine::run_workload;
 pub use engine::SimResult;
 pub use event::{Event, EventQueue};

@@ -60,12 +60,20 @@ pub struct TimestampStats {
 }
 
 /// Everything measured by one simulation run.
-#[derive(Debug, Clone, Default)]
+///
+/// `PartialEq` is derived so determinism regression tests can require
+/// bit-identical runs (every field is an exact integer counter).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SimStats {
     /// Cores in the simulated system (for per-core normalizations).
     pub n_cores: u32,
     /// Benchmark completion time (cycle when the last core finished).
     pub cycles: Cycle,
+    /// Discrete events the engine dispatched (queue pops).  The
+    /// denominator of the host-side events/sec throughput metric the
+    /// bench pipeline tracks (`BENCH_*.json`); deterministic for a
+    /// given config + workload.
+    pub events: u64,
     /// Completed memory operations (loads + stores + atomics),
     /// including spin re-loads.
     pub memops: u64,

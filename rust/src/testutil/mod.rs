@@ -8,8 +8,7 @@ use crate::prog::{Op, Program, Workload};
 use crate::types::{LineAddr, LOCK_BASE, SHARED_BASE};
 
 /// Run `w` under `cfg` with the SC access log enabled — the canonical
-/// integration-test shape (what the pre-builder `run_workload` +
-/// `SystemConfig::small` combination used to do).
+/// integration-test shape.
 pub fn run_logged(cfg: SystemConfig, w: &Workload) -> anyhow::Result<SimReport> {
     SimBuilder::from_config(cfg).record_accesses(true).workload(w).run()
 }

@@ -1,0 +1,64 @@
+//! Determinism regression suite (§Perf): the simulator must be a pure
+//! function of (config, workload).  Repeated runs of the same session
+//! shape yield bit-identical statistics, access logs, and per-core
+//! finish times — the property the calendar event queue, the message
+//! slab, and the fixed-seed Fx hash maps are all required to preserve.
+//! (The old-vs-new queue cross-check lives in `sim::engine`'s unit
+//! tests, where the legacy-heap hook is compiled in.)
+
+use tardis_dsm::api::{SimBuilder, SimReport};
+use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::testutil::{ProgGen, Rng};
+use tardis_dsm::trace::synth_workload;
+use tardis_dsm::workloads;
+
+fn assert_identical(a: &SimReport, b: &SimReport, what: &str) {
+    assert_eq!(a.stats, b.stats, "{what}: stats diverged");
+    assert_eq!(a.log.records, b.log.records, "{what}: access logs diverged");
+    assert_eq!(a.core_finish, b.core_finish, "{what}: finish times diverged");
+}
+
+#[test]
+fn repeated_runs_are_bit_identical_across_protocols_and_core_models() {
+    let spec = workloads::by_name("barnes").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+            let run = || {
+                SimBuilder::from_config(SystemConfig::small(8, protocol))
+                    .core_model(model)
+                    .record_accesses(true)
+                    .workload(&w)
+                    .run()
+                    .unwrap()
+            };
+            let a = run();
+            let b = run();
+            assert!(a.stats.events > 0, "event counter must be populated");
+            assert_identical(&a, &b, &format!("{protocol:?}/{model:?}"));
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_are_bit_identical_on_sync_heavy_programs() {
+    // Lock/barrier microcode exercises spin wakes, parked cores, and
+    // the channel-clock FIFO harder than plain traces.
+    let mut rng = Rng::new(0xD37E_2217);
+    let gen = ProgGen { lock_pct: 25, barrier_every: 11, ..ProgGen::default() };
+    for trial in 0..3 {
+        let w = gen.generate(&mut rng);
+        for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+            let run = || {
+                SimBuilder::small(gen.n_cores, protocol)
+                    .workload(&w)
+                    .run()
+                    .unwrap()
+            };
+            let a = run();
+            let b = run();
+            assert_identical(&a, &b, &format!("trial {trial} {protocol:?}"));
+            a.check_sc().unwrap();
+        }
+    }
+}

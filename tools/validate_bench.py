@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_*.json perf record against the tardis-bench-v1 schema.
+
+Usage: validate_bench.py FILE [FILE...]
+
+Emitted by `tardis bench` (rust/src/coordinator/bench.rs) and checked
+by the CI bench-smoke job for both freshly generated reports and the
+BENCH_*.json trajectory files committed at the repo root.  Exits
+non-zero with a diagnostic on the first schema violation.
+"""
+
+import json
+import sys
+
+# "measured" = emitted by a local `tardis bench` run; "estimate" =
+# projected numbers committed from an environment that could not run
+# the pipeline (allowed, but warned on so estimates never silently
+# read as real trajectory points).
+PROVENANCE_VALUES = {"measured", "estimate"}
+
+TOP_KEYS = {
+    "schema": str,
+    "label": str,
+    "provenance": str,
+    "unix_time": int,
+    "n_cores": int,
+    "iters": int,
+    "scale_down": int,
+    "points": list,
+    "aggregate": dict,
+}
+
+POINT_KEYS = {
+    "workload": str,
+    "variant": str,
+    "sim_cycles": int,
+    "memops": int,
+    "events": int,
+    "wall_s": (int, float),
+    "events_per_sec": (int, float),
+    "sim_cycles_per_sec": (int, float),
+}
+
+AGGREGATE_KEYS = {
+    "wall_s": (int, float),
+    "events": int,
+    "sim_cycles": int,
+    "events_per_sec": (int, float),
+    "sim_cycles_per_sec": (int, float),
+}
+
+
+def check_keys(obj, spec, where):
+    for key, typ in spec.items():
+        if key not in obj:
+            raise ValueError(f"{where}: missing key {key!r}")
+        if not isinstance(obj[key], typ):
+            raise ValueError(
+                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
+                f"expected {typ}"
+            )
+    extra = set(obj) - set(spec)
+    if extra:
+        raise ValueError(f"{where}: unknown keys {sorted(extra)}")
+
+
+def validate(path):
+    with open(path) as f:
+        doc = json.load(f)
+    check_keys(doc, TOP_KEYS, "top level")
+    if doc["schema"] != "tardis-bench-v1":
+        raise ValueError(f"unknown schema {doc['schema']!r}")
+    if doc["provenance"] not in PROVENANCE_VALUES:
+        raise ValueError(
+            f"unknown provenance {doc['provenance']!r} "
+            f"(expected one of {sorted(PROVENANCE_VALUES)})"
+        )
+    if doc["provenance"] != "measured":
+        print(
+            f"WARNING {path}: provenance is {doc['provenance']!r} — these "
+            "numbers were not produced by a local `tardis bench` run; "
+            "regenerate with `cargo run --release -- bench --out <file>`",
+            file=sys.stderr,
+        )
+    if not doc["points"]:
+        raise ValueError("points must be non-empty")
+    if doc["iters"] < 1 or doc["n_cores"] < 1 or doc["scale_down"] < 1:
+        raise ValueError("iters, n_cores, and scale_down must be >= 1")
+    for i, point in enumerate(doc["points"]):
+        where = f"points[{i}]"
+        if not isinstance(point, dict):
+            raise ValueError(f"{where}: not an object")
+        check_keys(point, POINT_KEYS, where)
+        for key in ("sim_cycles", "memops", "events"):
+            if point[key] <= 0:
+                raise ValueError(f"{where}: {key} must be positive")
+        if point["wall_s"] < 0:
+            raise ValueError(f"{where}: wall_s must be non-negative")
+    check_keys(doc["aggregate"], AGGREGATE_KEYS, "aggregate")
+    if doc["aggregate"]["events"] != sum(p["events"] for p in doc["points"]):
+        raise ValueError("aggregate.events != sum of point events")
+    if doc["aggregate"]["sim_cycles"] != sum(p["sim_cycles"] for p in doc["points"]):
+        raise ValueError("aggregate.sim_cycles != sum of point sim_cycles")
+    return len(doc["points"])
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    for path in argv[1:]:
+        try:
+            n = validate(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}", file=sys.stderr)
+            return 1
+        print(f"ok {path}: {n} points")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
