@@ -4,7 +4,7 @@
 //! leases (§VI-C5 future work).
 use tardis_dsm::api::SimBuilder;
 use tardis_dsm::benchutil::bench;
-use tardis_dsm::config::{ProtocolKind, SystemConfig};
+use tardis_dsm::config::{LeasePolicyKind, ProtocolKind, SystemConfig, DEFAULT_MAX_LEASE};
 use tardis_dsm::coordinator::experiments::base_cfg;
 use tardis_dsm::coordinator::report::Table;
 use tardis_dsm::trace::synth_workload;
@@ -25,10 +25,15 @@ fn main() {
         ("no speculation", Box::new(|c| c.tardis.speculation = false)),
         ("no private-write opt", Box::new(|c| c.tardis.private_write_opt = false)),
         ("+ E state", Box::new(|c| c.tardis.exclusive_state = true)),
-        ("+ dynamic lease", Box::new(|c| c.tardis.dynamic_lease = true)),
-        ("+ both extensions", Box::new(|c| {
+        ("+ dynamic lease", Box::new(|c| {
+            c.tardis.lease_policy = LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE };
+        })),
+        ("+ predictive lease", Box::new(|c| {
+            c.tardis.lease_policy = LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE };
+        })),
+        ("+ E state + predictive", Box::new(|c| {
             c.tardis.exclusive_state = true;
-            c.tardis.dynamic_lease = true;
+            c.tardis.lease_policy = LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE };
         })),
     ];
     for (name, tweak) in variants {

@@ -6,7 +6,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{CoreModel, ProtocolKind, SystemConfig, TardisConfig};
+use crate::config::{
+    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SystemConfig, TardisConfig,
+};
 use crate::prog::checker::{AccessLog, CheckReport, Violation};
 use crate::prog::{Program, Workload};
 use crate::runtime::TraceRuntime;
@@ -125,6 +127,21 @@ impl SimBuilder {
 
     pub fn core_model(mut self, model: CoreModel) -> Self {
         self.cfg.core_model = model;
+        self
+    }
+
+    /// Memory consistency model (default [`Consistency::Sc`]; `Tso`
+    /// adds per-core store buffers with forwarding and switches the
+    /// report's checker to the TSO rules).
+    pub fn consistency(mut self, model: Consistency) -> Self {
+        self.cfg.consistency = model;
+        self
+    }
+
+    /// Tardis lease-assignment policy (the [`crate::proto::ts`]
+    /// layer): static, dynamic, or predictive.
+    pub fn lease_policy(mut self, policy: LeasePolicyKind) -> Self {
+        self.cfg.tardis.lease_policy = policy;
         self
     }
 
@@ -341,6 +358,7 @@ impl SimSession {
     /// Run to completion.
     pub fn run(self) -> Result<SimReport> {
         let t0 = Instant::now();
+        let consistency = self.cfg.consistency;
         #[allow(unused_mut)]
         let mut eng = Engine::build(self.cfg, &self.workload, self.observers);
         #[cfg(any(test, feature = "legacy-queue"))]
@@ -350,6 +368,7 @@ impl SimSession {
             stats: res.stats,
             log: res.log,
             core_finish: res.core_finish,
+            consistency,
             elapsed: t0.elapsed(),
         })
     }
@@ -358,18 +377,34 @@ impl SimSession {
 /// Result of a completed simulation.
 pub struct SimReport {
     pub stats: SimStats,
-    /// SC-checker access log (empty unless `.record_accesses(true)`).
+    /// Consistency-checker access log (empty unless
+    /// `.record_accesses(true)`).
     pub log: AccessLog,
     /// Per-core completion cycles.
     pub core_finish: Vec<Cycle>,
+    /// Consistency model the run enforced (selects the checker rules).
+    pub consistency: Consistency,
     /// Host wall-clock time of the run.
     pub elapsed: Duration,
 }
 
 impl SimReport {
     /// Run the sequential-consistency witness checker over the log.
+    ///
+    /// Only meaningful for runs configured with [`Consistency::Sc`]:
+    /// a TSO run's log legitimately reorders store commits past later
+    /// loads, which this checker cannot see as program order — use
+    /// [`SimReport::check_consistency`] to apply the rules matching
+    /// the run's model.
     pub fn check_sc(&self) -> std::result::Result<CheckReport, Violation> {
         crate::prog::checker::check(&self.log)
+    }
+
+    /// Run the witness checker matching the consistency model this
+    /// run was configured with (SC rules under `Sc`, the relaxed
+    /// store-buffer rules under `Tso`).
+    pub fn check_consistency(&self) -> std::result::Result<CheckReport, Violation> {
+        crate::prog::checker::check_model(&self.log, self.consistency)
     }
 }
 

@@ -259,6 +259,7 @@ mod tests {
             commit_cycle: seq,
             seq,
             valid: true,
+            forwarded: false,
         }
     }
 

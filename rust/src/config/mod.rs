@@ -42,6 +42,84 @@ pub enum CoreModel {
     OutOfOrder,
 }
 
+/// Memory consistency model the cores enforce (Tardis 2.0,
+/// arXiv:1511.08774 §5: the physiological order supports relaxed
+/// models directly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Consistency {
+    /// Sequential consistency: every memory operation completes before
+    /// the next issues (stores block).
+    Sc,
+    /// Total store order: stores retire into a per-core FIFO store
+    /// buffer with store-to-load forwarding; loads need not bump `pts`
+    /// past buffered stores (the relaxed Tardis 2.0 `pts` rule).
+    /// Store-load reordering becomes architecturally visible (the SB
+    /// litmus outcome); all other orders are preserved.
+    Tso,
+}
+
+impl Consistency {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sc" => Some(Self::Sc),
+            "tso" => Some(Self::Tso),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sc => "sc",
+            Self::Tso => "tso",
+        }
+    }
+}
+
+/// Lease-assignment policy for the Tardis timestamp managers
+/// ([`crate::proto::ts`] layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeasePolicyKind {
+    /// The paper's fixed lease: every shared grant extends `rts` by the
+    /// static `TardisConfig::lease`.
+    Static,
+    /// §VI-C5 dynamic leases: a line's lease doubles on each successful
+    /// renewal (read-mostly data earns long leases) and resets on
+    /// writes, capped at `max_lease`.
+    Dynamic { max_lease: u64 },
+    /// Tardis-2.0-style predictive leases: the manager tracks each
+    /// line's read run (shared grants since the last write) and its
+    /// write-to-write timestamp interval, growing the lease with the
+    /// read run but never past the observed write interval (a lease
+    /// outliving the next write only buys misspeculations).
+    Predictive { max_lease: u64 },
+}
+
+impl LeasePolicyKind {
+    /// Parse a policy name; `dynamic`/`predictive` use the default cap.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "static" => Some(Self::Static),
+            "dynamic" => Some(Self::Dynamic { max_lease: DEFAULT_MAX_LEASE }),
+            "predictive" => Some(Self::Predictive { max_lease: DEFAULT_MAX_LEASE }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Static => "static",
+            Self::Dynamic { .. } => "dynamic",
+            Self::Predictive { .. } => "predictive",
+        }
+    }
+}
+
+/// Default cap for adaptive lease policies.  Kept moderate: spinners
+/// wait ~lease x self-inc-period cycles per recheck, so long leases on
+/// synchronization lines collapse spin-heavy workloads (the paper's
+/// Fig. 10 tension — "intelligent leasing" must avoid sync data).
+pub const DEFAULT_MAX_LEASE: u64 = 80;
+
 /// Tardis-specific knobs (paper Table V, §IV).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TardisConfig {
@@ -63,19 +141,29 @@ pub struct TardisConfig {
     /// E-state extension: grant exclusive on SH_REQ to untouched lines
     /// (§IV-D).  Off by default (paper evaluates MSI-equivalent Tardis).
     pub exclusive_state: bool,
-    /// Dynamic leases (paper §VI-C5 future work): per-line leases
-    /// double on successful renewals (read-mostly data earns long
-    /// leases) and reset on writes.  Off by default.
+    /// Lease-assignment policy ([`crate::proto::ts::LeasePolicy`]).
+    pub lease_policy: LeasePolicyKind,
+    /// Consecutive failed renewals on one line before the livelock
+    /// detector escalates that core's next expired load to a blocking
+    /// (non-speculative) demand, bounding rollback churn under write
+    /// storms.  0 (the default) disables the detector — like the other
+    /// beyond-the-paper extensions, it is opt-in so the evaluated
+    /// protocol and the bench trajectory keep their semantics.
+    pub livelock_threshold: u32,
+    #[deprecated(
+        note = "set `lease_policy = LeasePolicyKind::Dynamic { max_lease }` instead; \
+                this alias is honored for one release (like the run_workload sunset)"
+    )]
     pub dynamic_lease: bool,
-    /// Cap for dynamic leases.  Kept moderate: spinners wait
-    /// ~lease x self-inc-period cycles per recheck, so long leases on
-    /// synchronization lines collapse spin-heavy workloads (the
-    /// paper's Fig. 10 tension — "intelligent leasing" must avoid
-    /// sync data).
+    #[deprecated(
+        note = "the cap now lives on LeasePolicyKind::{Dynamic, Predictive}; \
+                this alias is honored for one release"
+    )]
     pub max_lease: u64,
 }
 
 impl Default for TardisConfig {
+    #[allow(deprecated)] // the sunset aliases still need defaults
     fn default() -> Self {
         Self {
             lease: 10,
@@ -86,8 +174,24 @@ impl Default for TardisConfig {
             l2_rebase_cycles: 1024,
             private_write_opt: true,
             exclusive_state: false,
+            lease_policy: LeasePolicyKind::Static,
+            livelock_threshold: 0,
             dynamic_lease: false,
-            max_lease: 80,
+            max_lease: DEFAULT_MAX_LEASE,
+        }
+    }
+}
+
+impl TardisConfig {
+    /// The lease policy to instantiate, honoring the deprecated
+    /// `dynamic_lease`/`max_lease` aliases when `lease_policy` was
+    /// left at its default (existing experiment specs keep parsing).
+    #[allow(deprecated)]
+    pub fn effective_lease_policy(&self) -> LeasePolicyKind {
+        if self.lease_policy == LeasePolicyKind::Static && self.dynamic_lease {
+            LeasePolicyKind::Dynamic { max_lease: self.max_lease }
+        } else {
+            self.lease_policy
         }
     }
 }
@@ -113,6 +217,11 @@ pub struct SystemConfig {
     pub core_model: CoreModel,
     /// Out-of-order issue-window depth (outstanding memory ops).
     pub ooo_window: u32,
+    /// Memory consistency model the cores enforce (Sc default).
+    pub consistency: Consistency,
+    /// TSO store-buffer depth per core (ignored under Sc; 0 is
+    /// treated as 1).
+    pub sb_entries: u32,
     pub protocol: ProtocolKind,
     pub tardis: TardisConfig,
     pub ackwise: AckwiseConfig,
@@ -159,6 +268,8 @@ impl Default for SystemConfig {
             n_cores: 64,
             core_model: CoreModel::InOrder,
             ooo_window: 16,
+            consistency: Consistency::Sc,
+            sb_entries: 8,
             protocol: ProtocolKind::Tardis,
             tardis: TardisConfig::default(),
             ackwise: AckwiseConfig::default(),
@@ -233,5 +344,41 @@ mod tests {
             assert_eq!(ProtocolKind::parse(p.name()), Some(p));
         }
         assert_eq!(ProtocolKind::parse("mesi"), None);
+    }
+
+    #[test]
+    fn consistency_parse_roundtrip() {
+        for c in [Consistency::Sc, Consistency::Tso] {
+            assert_eq!(Consistency::parse(c.name()), Some(c));
+        }
+        assert_eq!(Consistency::parse("rmo"), None);
+        assert_eq!(SystemConfig::default().consistency, Consistency::Sc);
+    }
+
+    #[test]
+    fn lease_policy_parse_roundtrip() {
+        for k in [
+            LeasePolicyKind::Static,
+            LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE },
+            LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE },
+        ] {
+            assert_eq!(LeasePolicyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(LeasePolicyKind::parse("oracle"), None);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_dynamic_lease_alias_still_resolves() {
+        assert_eq!(TardisConfig::default().effective_lease_policy(), LeasePolicyKind::Static);
+        let mut t =
+            TardisConfig { dynamic_lease: true, max_lease: 40, ..TardisConfig::default() };
+        assert_eq!(t.effective_lease_policy(), LeasePolicyKind::Dynamic { max_lease: 40 });
+        // An explicit policy wins over the alias.
+        t.lease_policy = LeasePolicyKind::Predictive { max_lease: 160 };
+        assert_eq!(
+            t.effective_lease_policy(),
+            LeasePolicyKind::Predictive { max_lease: 160 }
+        );
     }
 }

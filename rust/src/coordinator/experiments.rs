@@ -11,7 +11,9 @@ use anyhow::Result;
 
 use super::report::{geomean, pct, r3, Table};
 use super::{run_points, SimPoint, SimPointResult};
-use crate::config::{CoreModel, ProtocolKind, SystemConfig};
+use crate::config::{
+    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SystemConfig, DEFAULT_MAX_LEASE,
+};
 use crate::prog::Workload;
 use crate::runtime::TraceRuntime;
 use crate::stats::SimStats;
@@ -328,6 +330,70 @@ pub fn fig9(ctx: &mut EvalCtx) -> Result<Table> {
         &["tardis-10b", "tardis-12b", "tardis-14b", "tardis-20b", "tardis-64b"],
         "msi",
     ))
+}
+
+/// Tardis 2.0 design space: every lease policy crossed with both
+/// consistency models, 64 cores, normalized to the MSI/SC baseline.
+/// One table reads off both follow-up claims — smarter leases cut
+/// renewal traffic, and TSO's store buffers buy throughput on top.
+pub fn lease_matrix(ctx: &mut EvalCtx) -> Result<Table> {
+    let mut variants =
+        vec![Variant { label: "msi".into(), cfg: base_cfg(64, ProtocolKind::Msi) }];
+    let policies = [
+        ("static", LeasePolicyKind::Static),
+        ("dynamic", LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE }),
+        ("predictive", LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE }),
+    ];
+    // The Tardis variant labels, built in the same loop that builds
+    // the variants so the two can never drift apart.
+    let mut labels: Vec<String> = Vec::new();
+    for (pname, policy) in policies {
+        for model in [Consistency::Sc, Consistency::Tso] {
+            let mut cfg = base_cfg(64, ProtocolKind::Tardis);
+            cfg.tardis.lease_policy = policy;
+            cfg.consistency = model;
+            let label = format!("{pname}-{}", model.name());
+            labels.push(label.clone());
+            variants.push(Variant { label, cfg });
+        }
+    }
+    let stats = sweep(ctx, 64, &variants)?;
+    // Flat layout: one row per (workload, variant) — six variants x
+    // five metrics would not fit a readable wide table.
+    let mut table = Table::new(
+        "Lease policy x consistency (64 cores; throughput vs MSI/SC)",
+        &["workload", "variant", "thr", "renew%", "misspec%", "avg lease", "sb fwd"],
+    );
+    let mut thr_acc: HashMap<&str, Vec<f64>> = HashMap::new();
+    for spec in all_workloads() {
+        let base = &stats[&(spec.name.to_string(), "msi".to_string())];
+        for v in &labels {
+            let s = &stats[&(spec.name.to_string(), v.clone())];
+            let thr = base.cycles as f64 / s.cycles as f64;
+            thr_acc.entry(v.as_str()).or_default().push(thr);
+            table.row(vec![
+                spec.name.to_string(),
+                v.clone(),
+                r3(thr),
+                pct(s.renew_rate()),
+                pct(s.misspeculation_rate()),
+                format!("{:.1}", s.avg_lease()),
+                s.sb_forwards.to_string(),
+            ]);
+        }
+    }
+    for v in &labels {
+        table.row(vec![
+            "AVG(geo)".into(),
+            v.clone(),
+            r3(geomean(&thr_acc[v.as_str()])),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+    }
+    Ok(table)
 }
 
 /// Fig. 10: lease sweep {5, 10, 20, 40, 80}.

@@ -1,8 +1,18 @@
 //! In-order, single-issue core (paper Table V): one memory operation
 //! per cycle, blocking on demand misses, with Tardis speculation
 //! continuing through expired-load renewals (§IV-A).
+//!
+//! Under [`Consistency::Tso`] plain stores retire into a FIFO store
+//! buffer and drain to the protocol in the background; loads forward
+//! from the buffer and — per the relaxed Tardis 2.0 `pts` rule — need
+//! not bump their timestamp past buffered stores, making store→load
+//! reordering architecturally visible.  Synchronization (locks,
+//! barriers, atomics, spins) fences: the buffer drains first.
+//!
+//! [`Consistency::Tso`]: crate::config::Consistency::Tso
 
-use super::{barrier, CoreAction, CoreEnv};
+use super::{barrier, sb_cap, CoreAction, CoreEnv, SbEntry, StoreBuffer};
+use crate::config::Consistency;
 use crate::hashing::FxHashMap;
 use crate::prog::{Op, Program, Workload};
 use crate::proto::{AccessDone, AccessOutcome, Coherence, Completion, CompletionKind, MemOp};
@@ -47,8 +57,9 @@ enum State {
     SpinPoll { addr: LineAddr, goal: SpinGoal },
     /// Spinning but parked (protocol will push SpinWake).
     SpinPark { addr: LineAddr, goal: SpinGoal },
-    /// Waiting for outstanding speculative renewals to resolve before
-    /// issuing a non-re-executable op (store/atomic/sync/miss).
+    /// Waiting for outstanding speculative renewals to resolve (and,
+    /// under TSO, the store buffer to drain) before issuing a
+    /// non-re-executable op (store/atomic/sync/miss) or retiring.
     WaitDrain,
     Done,
 }
@@ -73,6 +84,11 @@ pub struct InOrderCore {
     spin_since: Option<Cycle>,
     /// Spin context preserved across a Pending spin load.
     pending_spin: Option<(LineAddr, SpinGoal)>,
+    /// TSO store buffer (empty under Sc).
+    sb: StoreBuffer,
+    /// Stalled on a full store buffer (WaitDrain resumes as soon as
+    /// one slot frees, not on full drain).
+    sb_stalled: bool,
     /// Dedup token for CoreWake events.
     pub next_wake: Option<Cycle>,
     pub finished_at: Option<Cycle>,
@@ -93,6 +109,8 @@ impl InOrderCore {
             window_start: None,
             spin_since: None,
             pending_spin: None,
+            sb: StoreBuffer::default(),
+            sb_stalled: false,
             next_wake: None,
             finished_at: None,
             committed_ops: 0,
@@ -106,8 +124,12 @@ impl InOrderCore {
             State::Done => CoreAction::Park,
             State::WaitDemand(_) | State::SpinPark { .. } => CoreAction::Park, // spurious
             State::WaitDrain => {
-                if self.spec_unresolved.is_empty() {
-                    self.state = State::Ready;
+                if self.drain_satisfied(env) {
+                    self.sb_stalled = false;
+                    // WaitDrain is only ever entered after the op's
+                    // compute gap was served; resume as Gap so the gap
+                    // is not charged a second time.
+                    self.state = State::Gap;
                     self.issue_current(now, env)
                 } else {
                     CoreAction::Park
@@ -126,11 +148,13 @@ impl InOrderCore {
             env.pctx.stats.rollback_cycles += p;
             return self.wake_at(now + p);
         }
+        // Keep the store buffer draining in the background.
+        self.pump_sb(now, env);
         let Some(&op) = self.program.ops.get(self.pc) else {
             // The final instruction cannot retire under an open
-            // speculation window: drain outstanding renewals first (a
-            // failure rolls the window back and re-executes).
-            if !self.spec_unresolved.is_empty() {
+            // speculation window (a failure rolls the window back and
+            // re-executes) or with undrained buffered stores.
+            if !self.spec_unresolved.is_empty() || !self.sb.is_empty() {
                 self.state = State::WaitDrain;
                 return CoreAction::Park;
             }
@@ -162,7 +186,16 @@ impl InOrderCore {
             const WINDOW_CAP: usize = 16;
             let drain = self.window.len() >= WINDOW_CAP
                 || match op {
-                    Op::Load { addr, .. } => env.proto.probe(self.id, addr) == Probe::Miss,
+                    // A store-buffer hit is re-executable (forwarding
+                    // repeats or the drained value is re-read).
+                    Op::Load { addr, .. } => {
+                        self.sb.forward(addr).is_none()
+                            && env.proto.probe(self.id, addr) == Probe::Miss
+                    }
+                    // TSO: a plain store retires into the buffer
+                    // without touching protocol state, but it is not
+                    // re-executable — a rollback past it would replay
+                    // the (already retired) store.  Drain first.
                     _ => true,
                 };
             if drain {
@@ -170,14 +203,32 @@ impl InOrderCore {
                 return CoreAction::Park;
             }
         }
+        // TSO: synchronization is a fence — the store buffer drains
+        // before lock/unlock/barrier microcode touches the protocol.
+        if matches!(op, Op::Lock { .. } | Op::Unlock { .. } | Op::Barrier) && !self.sb.is_empty()
+        {
+            self.state = State::WaitDrain;
+            return CoreAction::Park;
+        }
         self.state = State::Ready;
         match op {
             Op::Load { addr, .. } => {
+                // TSO store-to-load forwarding: the youngest buffered
+                // store wins; the load completes locally and — per the
+                // relaxed Tardis 2.0 pts rule — advances no timestamp.
+                if env.consistency == Consistency::Tso {
+                    if let Some(v) = self.sb.forward(addr) {
+                        return self.finish_forwarded_load(now, addr, v, env);
+                    }
+                }
                 let outcome = env.proto.core_access(self.id, addr, MemOp::Load, true, env.pctx);
                 self.resolve_access(now, addr, MemOp::Load, Cont::Plain, outcome, env)
             }
             Op::Store { addr, value, .. } => {
                 let v = value.unwrap_or_else(|| unique_store_value(self.id, self.pc));
+                if env.consistency == Consistency::Tso {
+                    return self.retire_store_to_sb(now, addr, v, env);
+                }
                 let mem = MemOp::Store { value: v };
                 let outcome = env.proto.core_access(self.id, addr, mem, true, env.pctx);
                 self.resolve_access(now, addr, mem, Cont::Plain, outcome, env)
@@ -198,6 +249,82 @@ impl InOrderCore {
                 self.resolve_access(now, BARRIER_COUNTER_LINE, mem, Cont::BarrierArrive, outcome, env)
             }
         }
+    }
+
+    /// TSO: retire a plain store into the store buffer (or stall on a
+    /// full buffer until one slot frees).
+    fn retire_store_to_sb(
+        &mut self,
+        now: Cycle,
+        addr: LineAddr,
+        value: u64,
+        env: &mut CoreEnv,
+    ) -> CoreAction {
+        if self.sb.len() >= sb_cap(env) {
+            // Full: wait for the drain (pump_sb already left the head
+            // in flight); the next drain completion frees a slot and
+            // resumes this store.
+            env.pctx.stats.sb_full_stalls += 1;
+            self.sb_stalled = true;
+            self.state = State::WaitDrain;
+            return CoreAction::Park;
+        }
+        self.sb.push(SbEntry { addr, value, pc: self.pc as u32 });
+        env.pctx.stats.sb_stores += 1;
+        self.committed_ops += 1;
+        self.pc += 1;
+        self.state = State::Ready;
+        self.pump_sb(now, env);
+        self.wake_at(now + 1)
+    }
+
+    /// TSO: complete a load from the store buffer (no protocol access,
+    /// no timestamp movement — the relaxed Tardis 2.0 pts rule).
+    fn finish_forwarded_load(
+        &mut self,
+        now: Cycle,
+        addr: LineAddr,
+        value: u64,
+        env: &mut CoreEnv,
+    ) -> CoreAction {
+        env.pctx.stats.sb_forwards += 1;
+        let idx = env.log_forwarded_load(self.id, self.pc as u32, addr, value, now);
+        if self.window_start.is_some() {
+            self.window.push((self.pc, idx));
+        }
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.loads += 1;
+        self.committed_ops += 1;
+        self.pc += 1;
+        self.state = State::Ready;
+        self.wake_at(now + 1)
+    }
+
+    /// Drain the store buffer: issue the oldest store and keep going
+    /// while stores complete synchronously.  Postcondition: the buffer
+    /// is empty or its head is in flight (drains never silently
+    /// stall).
+    fn pump_sb(&mut self, now: Cycle, env: &mut CoreEnv) {
+        while !self.sb.inflight() {
+            let Some(e) = self.sb.head() else { return };
+            let mem = MemOp::Store { value: e.value };
+            match env.proto.core_access(self.id, e.addr, mem, false, env.pctx) {
+                AccessOutcome::Done(d) => {
+                    self.log_drained(now, e, d.ts, env);
+                    self.sb.pop_head();
+                }
+                AccessOutcome::Pending => self.sb.set_inflight(),
+                AccessOutcome::SpecDone(_) => unreachable!("stores never speculate"),
+            }
+        }
+    }
+
+    /// A buffered store became globally visible: log it at its drain
+    /// point (its position in the global memory order).
+    fn log_drained(&mut self, now: Cycle, e: SbEntry, ts: crate::types::Ts, env: &mut CoreEnv) {
+        env.log_access(self.id, e.pc, e.addr, None, Some(e.value), ts, now);
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.stores += 1;
     }
 
     /// Handle the outcome of an access issued with continuation `cont`.
@@ -421,6 +548,16 @@ impl InOrderCore {
 
     /// Protocol completion for this core.
     pub fn on_completion(&mut self, c: &Completion, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        // TSO drain completion, matched by address against the
+        // in-flight buffered store.  Never ambiguous with a blocking
+        // demand: a load to a buffered address forwards instead of
+        // issuing, and sync microcode runs with the buffer empty.
+        if c.kind == CompletionKind::Demand && self.sb.owns_completion(c.addr) {
+            let e = self.sb.pop_head();
+            self.log_drained(now, e, c.ts, env);
+            self.pump_sb(now, env);
+            return self.maybe_resume_drain(now, env);
+        }
         match c.kind {
             CompletionKind::Misspec => {
                 // Failed renewal: roll the speculation window back —
@@ -445,7 +582,7 @@ impl InOrderCore {
                     self.wake_at(now + 1)
                 } else {
                     // Already rolled back by an earlier failure.
-                    self.maybe_resume_drain(now)
+                    self.maybe_resume_drain(now, env)
                 }
             }
             CompletionKind::SpecOk => {
@@ -455,7 +592,7 @@ impl InOrderCore {
                     self.window.clear();
                     self.window_start = None;
                 }
-                self.maybe_resume_drain(now)
+                self.maybe_resume_drain(now, env)
             }
             CompletionKind::SpinWake => match self.state {
                 State::SpinPark { addr, goal } if addr == c.addr => {
@@ -528,12 +665,13 @@ impl InOrderCore {
     /// Diagnostic snapshot for deadlock reports.
     pub fn state_string(&self) -> String {
         format!(
-            "core {} pc {}/{} state {:?} specs {:?} next_wake {:?}",
+            "core {} pc {}/{} state {:?} specs {:?} sb {} next_wake {:?}",
             self.id,
             self.pc,
             self.program.len(),
             self.state,
             self.spec_unresolved,
+            self.sb.len(),
             self.next_wake
         )
     }
@@ -548,9 +686,25 @@ impl InOrderCore {
         }
     }
 
-    /// Wake the core if it was draining and the window just emptied.
-    fn maybe_resume_drain(&mut self, now: Cycle) -> CoreAction {
-        if self.state == State::WaitDrain && self.spec_unresolved.is_empty() {
+    /// Is the condition WaitDrain is parked on satisfied?  Fences and
+    /// retirement need the speculation window and the buffer fully
+    /// drained; a full-buffer stall only needs one free slot.
+    fn drain_satisfied(&self, env: &CoreEnv) -> bool {
+        self.spec_unresolved.is_empty()
+            && if self.sb_stalled {
+                self.sb.len() < sb_cap(env)
+            } else {
+                self.sb.is_empty()
+            }
+    }
+
+    /// Wake the core if it was draining and its drain condition just
+    /// became satisfied.  (`sb_stalled` is cleared by the WaitDrain
+    /// step arm, which re-evaluates the same condition at the wake —
+    /// clearing it here would demote a one-slot stall back to a
+    /// full-drain wait.)
+    fn maybe_resume_drain(&mut self, now: Cycle, env: &CoreEnv) -> CoreAction {
+        if self.state == State::WaitDrain && self.drain_satisfied(env) {
             self.wake_at(now + 1)
         } else {
             CoreAction::Park

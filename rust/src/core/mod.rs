@@ -9,6 +9,7 @@ pub mod inorder;
 pub mod ooo;
 
 use crate::api::observer::Observers;
+use crate::config::Consistency;
 use crate::prog::checker::LogRecord;
 use crate::proto::{Completion, ProtoCtx, ProtocolDispatch};
 use crate::types::{CoreId, Cycle, LineAddr, Ts};
@@ -38,6 +39,10 @@ pub struct CoreEnv<'a, 'b> {
     pub spin_poll: Cycle,
     pub rollback_penalty: Cycle,
     pub ooo_window: u32,
+    /// Memory consistency model (Sc = no store buffer).
+    pub consistency: Consistency,
+    /// TSO store-buffer depth.
+    pub sb_entries: u32,
 }
 
 impl<'a, 'b> CoreEnv<'a, 'b> {
@@ -56,6 +61,36 @@ impl<'a, 'b> CoreEnv<'a, 'b> {
         ts: Ts,
         cycle: Cycle,
     ) -> usize {
+        self.log_access_inner(core, pc, addr, value_read, value_written, ts, cycle, false)
+    }
+
+    /// [`Self::log_access`] for a load served by TSO store-to-load
+    /// forwarding (the checker validates it against program order
+    /// instead of the global key order).
+    #[allow(clippy::too_many_arguments)]
+    pub fn log_forwarded_load(
+        &mut self,
+        core: CoreId,
+        pc: u32,
+        addr: LineAddr,
+        value: u64,
+        cycle: Cycle,
+    ) -> usize {
+        self.log_access_inner(core, pc, addr, Some(value), None, 0, cycle, true)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn log_access_inner(
+        &mut self,
+        core: CoreId,
+        pc: u32,
+        addr: LineAddr,
+        value_read: Option<u64>,
+        value_written: Option<u64>,
+        ts: Ts,
+        cycle: Cycle,
+        forwarded: bool,
+    ) -> usize {
         *self.seq += 1;
         self.obs.commit(LogRecord {
             core,
@@ -67,7 +102,91 @@ impl<'a, 'b> CoreEnv<'a, 'b> {
             commit_cycle: cycle,
             seq: *self.seq,
             valid: true,
+            forwarded,
         })
+    }
+}
+
+/// Effective TSO store-buffer capacity (0 is treated as 1 so a
+/// misconfigured depth can never wedge the drain state machines).
+pub(crate) fn sb_cap(env: &CoreEnv) -> usize {
+    env.sb_entries.max(1) as usize
+}
+
+/// One retired store awaiting global visibility (TSO).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct SbEntry {
+    pub addr: LineAddr,
+    pub value: u64,
+    /// Program counter of the trace store (checker program order).
+    pub pc: u32,
+}
+
+/// The per-core TSO store buffer: a FIFO of retired stores draining
+/// to the protocol in the background, with store-to-load forwarding.
+/// Under `Consistency::Sc` it stays empty and costs one branch.
+///
+/// Invariant maintained by the cores: after any `pump`, either the
+/// buffer is empty or its head is in flight at the protocol — drains
+/// never silently stall.
+#[derive(Debug, Default)]
+pub(crate) struct StoreBuffer {
+    entries: std::collections::VecDeque<SbEntry>,
+    /// The head entry has been issued to the protocol; its Demand
+    /// completion (matched by address) pops it.
+    inflight: bool,
+}
+
+impl StoreBuffer {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn push(&mut self, e: SbEntry) {
+        self.entries.push_back(e);
+    }
+
+    pub fn head(&self) -> Option<SbEntry> {
+        self.entries.front().copied()
+    }
+
+    pub fn inflight(&self) -> bool {
+        self.inflight
+    }
+
+    pub fn set_inflight(&mut self) {
+        self.inflight = true;
+    }
+
+    /// Address of the in-flight drain, if any.
+    pub fn inflight_addr(&self) -> Option<LineAddr> {
+        if self.inflight {
+            self.entries.front().map(|e| e.addr)
+        } else {
+            None
+        }
+    }
+
+    /// Does this Demand completion belong to the in-flight drain?
+    pub fn owns_completion(&self, addr: LineAddr) -> bool {
+        self.inflight_addr() == Some(addr)
+    }
+
+    /// Pop the drained head (clears the in-flight mark).
+    pub fn pop_head(&mut self) -> SbEntry {
+        self.inflight = false;
+        self.entries.pop_front().expect("pop on empty store buffer")
+    }
+
+    /// Store-to-load forwarding: the youngest buffered value for
+    /// `addr` (in-flight head included — it is still not globally
+    /// visible until its completion).
+    pub fn forward(&self, addr: LineAddr) -> Option<u64> {
+        self.entries.iter().rev().find(|e| e.addr == addr).map(|e| e.value)
     }
 }
 

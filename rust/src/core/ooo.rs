@@ -12,10 +12,22 @@
 //! Synchronization ops (lock/unlock/barrier) serialize: the window
 //! drains, then the same TTAS / sense-reversing-barrier microcode as
 //! the in-order core runs, one access at a time.
+//!
+//! Under [`Consistency::Tso`] stores no longer execute at the ROB
+//! head: they retire into a FIFO store buffer (committing
+//! immediately) and drain to the protocol in the background, while
+//! loads forward from older in-flight stores (ROB or buffer) — the
+//! store-queue forwarding real TSO machines do.  Forwarded loads skip
+//! the commit-time timestamp check (their value never touched the
+//! coherence substrate) and, per the relaxed Tardis 2.0 `pts` rule,
+//! advance no timestamp.
+//!
+//! [`Consistency::Tso`]: crate::config::Consistency::Tso
 
 use std::collections::VecDeque;
 
-use super::{barrier, CoreAction, CoreEnv};
+use super::{barrier, sb_cap, CoreAction, CoreEnv, SbEntry, StoreBuffer};
+use crate::config::Consistency;
 use crate::prog::{Op, Program, Workload};
 use crate::proto::{AccessDone, AccessOutcome, Coherence, Completion, CompletionKind, MemOp};
 use crate::types::{CoreId, Cycle, LineAddr, BARRIER_COUNTER_LINE, BARRIER_SENSE_LINE};
@@ -40,6 +52,9 @@ struct RobEntry {
     speculative: bool,
     /// Value bound before this entry reached the ROB head.
     early: bool,
+    /// Load served by store-to-load forwarding (TSO): commits without
+    /// a timestamp check.
+    forwarded: bool,
 }
 
 /// Sync microcode state (mirrors the in-order core's spin machinery).
@@ -72,6 +87,12 @@ pub struct OooCore {
     drain_mode: bool,
     /// Consecutive commit-check failures at the current head.
     head_retries: u32,
+    /// TSO store buffer (empty under Sc).
+    sb: StoreBuffer,
+    /// The current head-store stall episode was already counted in
+    /// `sb_full_stalls` (one count per episode, like the in-order
+    /// core).
+    sb_stall_counted: bool,
     pub next_wake: Option<Cycle>,
     pub finished_at: Option<Cycle>,
     pub committed_ops: u64,
@@ -90,6 +111,8 @@ impl OooCore {
             spin_since: None,
             drain_mode: false,
             head_retries: 0,
+            sb: StoreBuffer::default(),
+            sb_stall_counted: false,
             next_wake: None,
             finished_at: None,
             committed_ops: 0,
@@ -122,17 +145,57 @@ impl OooCore {
     /// One cycle of the load/store pipeline: commit the head if ready,
     /// issue what can issue, fetch into the window.
     fn pipeline_step(&mut self, now: Cycle, env: &mut CoreEnv) -> CoreAction {
-        // 1. Commit the head if ready (one per cycle).  Speculative
-        // heads wait for their renewal to resolve (SpecOk / Misspec).
+        // 0. Keep the store buffer draining in the background (TSO).
+        self.pump_sb(now, env);
+
         let mut progressed = false;
+
+        // 1a. TSO: a store at the ROB head retires into the store
+        // buffer — it commits now and becomes globally visible at its
+        // drain.  (Stores never carry Ready status under TSO.)
+        if env.consistency == Consistency::Tso {
+            if let Some(head) = self.rob.front() {
+                if let MemOp::Store { value } = head.mem {
+                    if self.sb.len() < sb_cap(env) {
+                        let head = self.rob.pop_front().unwrap();
+                        self.sb.push(SbEntry {
+                            addr: head.addr,
+                            value,
+                            pc: head.pc as u32,
+                        });
+                        env.pctx.stats.sb_stores += 1;
+                        self.committed_ops += 1;
+                        self.sb_stall_counted = false;
+                        self.pump_sb(now, env);
+                        progressed = true;
+                    } else {
+                        // Wait for a drain completion to free a slot;
+                        // count the episode once.
+                        if !self.sb_stall_counted {
+                            env.pctx.stats.sb_full_stalls += 1;
+                            self.sb_stall_counted = true;
+                        }
+                    }
+                }
+            }
+        }
+
+        // 1b. Commit the head if ready (one per cycle).  Speculative
+        // heads wait for their renewal to resolve (SpecOk / Misspec).
         if let Some(head) = self.rob.front().copied() {
             if let Status::Ready(mut d) = head.status {
-                if !head.speculative {
-                    let decision = match head.mem {
-                        MemOp::Load => {
-                            env.proto.commit_check(self.id, head.addr, head.early, d.value)
+                if !head.speculative && !progressed {
+                    let decision = if head.forwarded {
+                        // Forwarded loads carry their own store's value;
+                        // there is no protocol state to re-validate.
+                        Some(d.ts)
+                    } else {
+                        match head.mem {
+                            MemOp::Load => {
+                                env.proto.commit_check(self.id, head.addr, head.early, d.value)
+                            }
+                            _ => Some(d.ts),
                         }
-                        _ => Some(d.ts),
                     };
                     match decision {
                         Some(ts) => {
@@ -164,8 +227,11 @@ impl OooCore {
             }
         }
 
-        // 2. Issue: loads anywhere in the window, writes only at head.
-        // In drain mode only the head may issue (replay safeguard).
+        // 2. Issue: loads anywhere in the window; writes only at head
+        // (SC) or never from the ROB (TSO — they retire into the store
+        // buffer instead).  In drain mode only the head may issue
+        // (replay safeguard).
+        let tso = env.consistency == Consistency::Tso;
         let mut issued = false;
         for i in 0..self.rob.len() {
             let e = self.rob[i];
@@ -176,18 +242,48 @@ impl OooCore {
             if self.drain_mode && !is_head {
                 break;
             }
-            // One outstanding access per line across the whole window:
-            // protocol completions are matched by address, so a second
-            // in-flight access to the same line would steal the first
-            // one's completion (worst case: a store adopting a load's
-            // fill without exclusivity).
+            if tso && e.mem.is_write() {
+                continue; // retires via the store buffer at the head
+            }
+            // TSO store-to-load forwarding: the youngest older store
+            // to the same address — in the ROB first (younger than
+            // anything buffered), then the store buffer — satisfies
+            // the load locally.
+            if tso && e.mem == MemOp::Load {
+                let fwd = self
+                    .rob
+                    .iter()
+                    .take(i)
+                    .rev()
+                    .find_map(|p| match p.mem {
+                        MemOp::Store { value } if p.addr == e.addr => Some(value),
+                        _ => None,
+                    })
+                    .or_else(|| self.sb.forward(e.addr));
+                if let Some(value) = fwd {
+                    let entry = &mut self.rob[i];
+                    entry.status =
+                        Status::Ready(AccessDone { value, ts: 0, extra_cycles: 0 });
+                    entry.forwarded = true;
+                    env.pctx.stats.sb_forwards += 1;
+                    issued = true;
+                    break;
+                }
+            }
+            // One outstanding access per line across the whole window
+            // (and the store-buffer drain): protocol completions are
+            // matched by address, so a second in-flight access to the
+            // same line would steal the first one's completion (worst
+            // case: a store adopting a load's fill without
+            // exclusivity).
             let line_busy = self
                 .rob
                 .iter()
                 .enumerate()
-                .any(|(j, p)| j != i && p.addr == e.addr && p.status == Status::Issued);
-            // A load must not bypass an older, not-yet-committed write
-            // to the same address (no store-to-load forwarding).
+                .any(|(j, p)| j != i && p.addr == e.addr && p.status == Status::Issued)
+                || self.sb.inflight_addr() == Some(e.addr);
+            // SC: a load must not bypass an older, not-yet-committed
+            // write to the same address (no forwarding).
             let older_write = self
                 .rob
                 .iter()
@@ -195,7 +291,7 @@ impl OooCore {
                 .any(|p| p.addr == e.addr && p.mem.is_write());
             let can_issue = !line_busy
                 && match e.mem {
-                    MemOp::Load => !older_write,
+                    MemOp::Load => tso || !older_write,
                     _ => is_head,
                 };
             if !can_issue {
@@ -228,6 +324,7 @@ impl OooCore {
                         status: Status::NotIssued,
                         speculative: false,
                         early: false,
+                        forwarded: false,
                     });
                     self.fetch_pc += 1;
                     fetched = true;
@@ -241,17 +338,19 @@ impl OooCore {
                         status: Status::NotIssued,
                         speculative: false,
                         early: false,
+                        forwarded: false,
                     });
                     self.fetch_pc += 1;
                     fetched = true;
                 }
-                Some(sync_op) if self.rob.is_empty() => {
-                    // Serialize: start the sync microcode.
+                Some(sync_op) if self.rob.is_empty() && self.sb.is_empty() => {
+                    // Serialize: start the sync microcode (a fence —
+                    // the window and the store buffer are both empty).
                     return self.start_sync(now, sync_op, env);
                 }
-                Some(_) => {} // sync op waits for the window to drain
+                Some(_) => {} // sync op waits for the window + buffer to drain
                 None => {
-                    if self.rob.is_empty() {
+                    if self.rob.is_empty() && self.sb.is_empty() {
                         self.finished_at = Some(now);
                         return CoreAction::Finished;
                     }
@@ -268,6 +367,13 @@ impl OooCore {
 
     fn commit_head(&mut self, now: Cycle, d: AccessDone, env: &mut CoreEnv) {
         let head = self.rob.pop_front().unwrap();
+        if head.forwarded {
+            env.log_forwarded_load(self.id, head.pc as u32, head.addr, d.value, now);
+            env.pctx.stats.memops += 1;
+            env.pctx.stats.loads += 1;
+            self.committed_ops += 1;
+            return;
+        }
         let (read, written) = match head.mem {
             MemOp::Load => (Some(d.value), None),
             MemOp::Store { value } => (None, Some(value)),
@@ -282,6 +388,40 @@ impl OooCore {
             _ => env.pctx.stats.atomics += 1,
         }
         self.committed_ops += 1;
+    }
+
+    /// Drain the store buffer: issue the oldest buffered store unless
+    /// an in-flight ROB access to the same line would collide (its
+    /// completion re-steps the pipeline and the pump retries).
+    /// Postcondition otherwise: buffer empty or head in flight.
+    fn pump_sb(&mut self, now: Cycle, env: &mut CoreEnv) {
+        while !self.sb.inflight() {
+            let Some(e) = self.sb.head() else { return };
+            if self
+                .rob
+                .iter()
+                .any(|p| p.addr == e.addr && p.status == Status::Issued)
+            {
+                return;
+            }
+            let mem = MemOp::Store { value: e.value };
+            match env.proto.core_access(self.id, e.addr, mem, false, env.pctx) {
+                AccessOutcome::Done(d) => {
+                    self.log_drained(now, e, d.ts, env);
+                    self.sb.pop_head();
+                }
+                AccessOutcome::Pending => self.sb.set_inflight(),
+                AccessOutcome::SpecDone(_) => unreachable!("stores never speculate"),
+            }
+        }
+    }
+
+    /// A buffered store became globally visible: log it at its drain
+    /// point.
+    fn log_drained(&mut self, now: Cycle, e: SbEntry, ts: crate::types::Ts, env: &mut CoreEnv) {
+        env.log_access(self.id, e.pc, e.addr, None, Some(e.value), ts, now);
+        env.pctx.stats.memops += 1;
+        env.pctx.stats.stores += 1;
     }
 
     // ------------------------------------------------ sync microcode
@@ -491,6 +631,17 @@ impl OooCore {
     // ------------------------------------------------ completions
 
     pub fn on_completion(&mut self, c: &Completion, now: Cycle, env: &mut CoreEnv) -> CoreAction {
+        // TSO drain completion, matched by address against the
+        // in-flight buffered store.  Never ambiguous with a ROB or
+        // sync access: loads to buffered addresses forward, the pump
+        // refuses to chase an issued ROB access to the same line, and
+        // sync microcode runs with the buffer empty.
+        if c.kind == CompletionKind::Demand && self.sb.owns_completion(c.addr) {
+            let e = self.sb.pop_head();
+            self.log_drained(now, e, c.ts, env);
+            self.pump_sb(now, env);
+            return self.wake_at_if_parked(now + 1);
+        }
         match c.kind {
             CompletionKind::SpecOk => {
                 // Renewal succeeded: the ROB entry's value was current;
@@ -611,12 +762,13 @@ impl OooCore {
             .map(|e| format!("pc{} {:#x} {:?} spec={} early={}", e.pc, e.addr, e.status, e.speculative, e.early))
             .collect();
         format!(
-            "core {} fetch_pc {}/{} sync {:?} drain {} next_wake {:?} rob [{}]",
+            "core {} fetch_pc {}/{} sync {:?} drain {} sb {} next_wake {:?} rob [{}]",
             self.id,
             self.fetch_pc,
             self.program.len(),
             self.sync,
             self.drain_mode,
+            self.sb.len(),
             self.next_wake,
             rob.join("; ")
         )

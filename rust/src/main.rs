@@ -22,7 +22,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use tardis_dsm::api::SimBuilder;
-use tardis_dsm::config::{CoreModel, ProtocolKind};
+use tardis_dsm::config::{Consistency, CoreModel, LeasePolicyKind, ProtocolKind};
 use tardis_dsm::coordinator::experiments::{self, EvalCtx};
 use tardis_dsm::coordinator::report::Table;
 use tardis_dsm::prog::litmus;
@@ -150,14 +150,16 @@ fn print_usage() {
 
 USAGE:
   tardis run --workload <name> [--protocol tardis|msi|ackwise] [--cores N]
-             [--ooo] [--lease N] [--self-inc N] [--no-spec] [--delta-bits N]
-             [--scale-down N] [--progress N]
-  tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7>
+             [--ooo] [--consistency sc|tso] [--lease N]
+             [--lease-policy static|dynamic|predictive] [--self-inc N]
+             [--no-spec] [--delta-bits N] [--scale-down N] [--progress N]
+  tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7|lease>
              [--threads N] [--scale-down N] [--out DIR]
   tardis litmus           run the litmus suite under all three protocols
   tardis case-study       cycle-by-cycle §V example, Tardis vs MSI
   tardis reproduce        regenerate every table and figure
   tardis bench [--cores N] [--iters N] [--scale-down N] [--out FILE]
+               [--lease-policy static|dynamic|predictive]
                           macro benchmark (fig-4 sweep, timed serially);
                           writes the machine-readable BENCH_*.json record
   tardis help             this message
@@ -176,6 +178,18 @@ fn run_builder(args: &Args) -> Result<SimBuilder> {
     let mut b = SimBuilder::from_config(experiments::base_cfg(n_cores, protocol));
     if args.has("ooo") {
         b = b.core_model(CoreModel::OutOfOrder);
+    }
+    if args.has("consistency") {
+        let c = args.get_str("consistency", "sc")?;
+        let model = Consistency::parse(c)
+            .ok_or_else(|| anyhow!("unknown consistency model {c:?} (sc|tso)"))?;
+        b = b.consistency(model);
+    }
+    if args.has("lease-policy") {
+        let p = args.get_str("lease-policy", "static")?;
+        let policy = LeasePolicyKind::parse(p)
+            .ok_or_else(|| anyhow!("unknown lease policy {p:?} (static|dynamic|predictive)"))?;
+        b = b.lease_policy(policy);
     }
     let lease = args.get_u64("lease", 0)?;
     let self_inc = args.get_u64("self-inc", 0)?;
@@ -205,7 +219,18 @@ fn run_builder(args: &Args) -> Result<SimBuilder> {
 fn cmd_run(args: &Args) -> Result<()> {
     args.expect_only(
         "run",
-        &["workload", "protocol", "cores", "lease", "self-inc", "delta-bits", "scale-down", "progress"],
+        &[
+            "workload",
+            "protocol",
+            "cores",
+            "consistency",
+            "lease",
+            "lease-policy",
+            "self-inc",
+            "delta-bits",
+            "scale-down",
+            "progress",
+        ],
         &["ooo", "no-spec"],
     )?;
     let name = args.get_str("workload", "fft")?;
@@ -282,6 +307,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "fig10" => emit(&experiments::fig10(&mut ctx)?, out, "fig10"),
         "table6" => emit(&experiments::table6(&mut ctx)?, out, "table6"),
         "table7" => emit(&experiments::table7(), out, "table7"),
+        "lease" => emit(&experiments::lease_matrix(&mut ctx)?, out, "lease_matrix"),
         other => bail!("unknown figure {other:?}"),
     }
 }
@@ -373,16 +399,27 @@ fn cmd_case_study() -> Result<()> {
 /// `tardis bench`: the tracked perf pipeline (DESIGN.md §6).  Runs
 /// the fig-4 macro sweep and writes a `tardis-bench-v1` JSON record.
 fn cmd_bench(args: &Args) -> Result<()> {
-    args.expect_only("bench", &["cores", "iters", "scale-down", "out"], &[])?;
+    args.expect_only("bench", &["cores", "iters", "scale-down", "out", "lease-policy"], &[])?;
     let n_cores = args.get_u64("cores", 16)? as u32;
     let iters = args.get_u64("iters", 3)? as u32;
     let out = args.get_str("out", "BENCH_local.json")?;
+    let policy = if args.has("lease-policy") {
+        let p = args.get_str("lease-policy", "static")?;
+        Some(
+            LeasePolicyKind::parse(p)
+                .ok_or_else(|| anyhow!("unknown lease policy {p:?} (static|dynamic|predictive)"))?,
+        )
+    } else {
+        None
+    };
     let mut ctx = eval_ctx(args)?;
     println!(
         "benchmarking fig-4 sweep at {n_cores} cores ({iters} iters, scale-down {})...",
         ctx.scale_down
     );
-    let report = tardis_dsm::coordinator::bench::run_macro_bench(&mut ctx, n_cores, iters)?;
+    let report = tardis_dsm::coordinator::bench::run_macro_bench_with_policy(
+        &mut ctx, n_cores, iters, policy,
+    )?;
     println!("{}", report.summary());
     report.write(out)?;
     println!("wrote {out}");
@@ -405,6 +442,7 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
     emit(&experiments::table7(), out, "table7")?;
     emit(&experiments::fig9(&mut ctx)?, out, "fig9")?;
     emit(&experiments::fig10(&mut ctx)?, out, "fig10")?;
+    emit(&experiments::lease_matrix(&mut ctx)?, out, "lease_matrix")?;
     println!("done.");
     Ok(())
 }

@@ -34,8 +34,13 @@ impl Mesh {
     }
 
     /// Memory controller `m`'s tile: spread evenly across the tiles.
+    /// Multiply before dividing — the old `m * (n_tiles / n_mcs)`
+    /// truncated the stride first, clustering every controller into
+    /// the low tiles whenever `n_tiles` was not divisible by `n_mcs`
+    /// (and wrapping several controllers onto tile 0 for small
+    /// meshes).
     pub fn mc_tile(&self, m: McId) -> u32 {
-        (m % self.n_mcs) * (self.n_tiles / self.n_mcs.min(self.n_tiles)).max(1) % self.n_tiles
+        ((m % self.n_mcs) as u64 * self.n_tiles as u64 / self.n_mcs as u64) as u32
     }
 
     /// (x, y) coordinates of a tile.
@@ -141,5 +146,62 @@ mod tests {
         let m = mesh64();
         let tiles: Vec<u32> = (0..8).map(|i| m.mc_tile(i)).collect();
         assert_eq!(tiles, vec![0, 8, 16, 24, 32, 40, 48, 56]);
+    }
+
+    #[test]
+    fn mc_tiles_distinct_and_spread_at_paper_scales() {
+        // 4 controllers on the paper's 16/64/256-tile meshes: tiles
+        // must be pairwise distinct and spread across the full range
+        // (consecutive gaps of exactly n_tiles / n_mcs).
+        for n_tiles in [16u32, 64, 256] {
+            let mesh = Mesh::new(n_tiles, 4, 2, 128);
+            let tiles: Vec<u32> = (0..4).map(|i| mesh.mc_tile(i)).collect();
+            let expected_gap = n_tiles / 4;
+            for (i, pair) in tiles.windows(2).enumerate() {
+                assert!(
+                    pair[1] > pair[0],
+                    "{n_tiles} tiles: mc {} and {} collide or invert: {tiles:?}",
+                    i,
+                    i + 1
+                );
+                assert_eq!(
+                    pair[1] - pair[0],
+                    expected_gap,
+                    "{n_tiles} tiles: uneven spread {tiles:?}"
+                );
+            }
+            assert!(tiles.iter().all(|&t| t < n_tiles));
+        }
+    }
+
+    #[test]
+    fn mc_tiles_stay_distinct_when_not_divisible() {
+        // 4 MCs on meshes whose tile count is NOT divisible by the
+        // controller count: the old truncate-then-multiply formula
+        // clustered these (e.g. 10 tiles -> 0, 2, 4, 6, all in the
+        // low quarter); they must stay distinct and span the range.
+        for n_tiles in [6u32, 10, 12, 18] {
+            let mesh = Mesh::new(n_tiles, 4, 2, 128);
+            let tiles: Vec<u32> = (0..4).map(|i| mesh.mc_tile(i)).collect();
+            let mut sorted = tiles.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4, "{n_tiles} tiles: collision in {tiles:?}");
+            // The last controller sits in the top quarter, not the
+            // low half.
+            assert!(
+                tiles[3] >= 3 * n_tiles / 4,
+                "{n_tiles} tiles: clustered placement {tiles:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn mc_tiles_wrap_when_fewer_tiles_than_mcs() {
+        // Degenerate small meshes (2 tiles, 8 MCs) still map into
+        // range and use both tiles.
+        let mesh = Mesh::new(2, 8, 2, 128);
+        let tiles: Vec<u32> = (0..8).map(|i| mesh.mc_tile(i)).collect();
+        assert!(tiles.iter().all(|&t| t < 2));
+        assert!(tiles.contains(&0) && tiles.contains(&1));
     }
 }

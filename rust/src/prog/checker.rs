@@ -1,4 +1,4 @@
-//! Sequential-consistency witness checker.
+//! Consistency witness checker (SC and TSO).
 //!
 //! The simulator logs every committed memory operation with its
 //! physiological key — (logical timestamp, commit cycle, commit
@@ -13,9 +13,25 @@
 //!
 //! Plus two synchronization invariants: spin-lock acquire/release
 //! alternation and balanced barrier episodes.
+//!
+//! Under [`Consistency::Tso`] the rules relax exactly where TSO does
+//! (Tardis 2.0 §5; cf. the lazy-coherence-vs-weak-memory verification
+//! of arXiv:1705.08262 — the checker must evolve with the model):
+//!
+//! * Rule 1 splits per access type: load→load and store→store order
+//!   are preserved (each type's keys are non-decreasing in commit
+//!   order, which equals its program order), a store's key must
+//!   dominate every *program-order-earlier* load (load→store), and
+//!   atomics fence everything — but a load may carry a key *smaller*
+//!   than a program-order-earlier store's (the store-buffer
+//!   reordering TSO permits).
+//! * Loads served by store-to-load forwarding (`forwarded`) are
+//!   exempt from the global key order; instead each must observe its
+//!   own core's latest program-order-earlier store to that address.
 
 use std::collections::HashMap;
 
+use crate::config::Consistency;
 use crate::types::{CoreId, Cycle, LineAddr, Ts};
 
 /// One committed memory operation.
@@ -38,6 +54,11 @@ pub struct LogRecord {
     /// False for records squashed by a speculation rollback (the core
     /// re-executed them; checks skip squashed records).
     pub valid: bool,
+    /// The load was served by store-to-load forwarding from the core's
+    /// own store buffer (TSO): its value never touched the coherence
+    /// substrate, so it is checked against program order instead of
+    /// the global key order.  Always false under SC.
+    pub forwarded: bool,
 }
 
 impl LogRecord {
@@ -95,6 +116,9 @@ pub enum Violation {
     StaleRead { core: CoreId, addr: LineAddr, expected: u64, got: u64, at_seq: u64 },
     /// Two successful lock acquires without an intervening release.
     LockOverlap { addr: LineAddr, first: CoreId, second: CoreId },
+    /// TSO: a forwarded load did not observe its own core's latest
+    /// program-order-earlier store to that address.
+    BadForward { core: CoreId, addr: LineAddr, got: u64, expected: Option<u64>, at_seq: u64 },
 }
 
 /// Summary of a clean check.
@@ -113,6 +137,123 @@ pub fn check(log: &AccessLog) -> Result<CheckReport, Violation> {
     check_program_order(log)?;
     check_lock_alternation(log)?;
     check_value_order(log)
+}
+
+/// Run the checks appropriate to the consistency model the run was
+/// configured with (module docs describe the TSO relaxations).
+pub fn check_model(log: &AccessLog, model: Consistency) -> Result<CheckReport, Violation> {
+    match model {
+        Consistency::Sc => check(log),
+        Consistency::Tso => {
+            check_tso_program_order(log)?;
+            check_tso_forwarding(log)?;
+            check_lock_alternation(log)?;
+            check_value_order(log)
+        }
+    }
+}
+
+/// TSO Rule 1: per core, load keys and store keys are each
+/// non-decreasing in commit order (loads execute / stores drain in
+/// program order, so commit order per type *is* program order); every
+/// store's key dominates all program-order-earlier loads (found via
+/// the records' pc); atomics fence everything before them.  The one
+/// order deliberately *not* required is store→load — that is the
+/// store-buffer relaxation.  Forwarded loads are exempt (validated by
+/// [`check_tso_forwarding`]).
+fn check_tso_program_order(log: &AccessLog) -> Result<(), Violation> {
+    #[derive(Default)]
+    struct CoreState {
+        last_load: (Ts, Cycle, u64),
+        last_store: (Ts, Cycle, u64),
+        /// (pc, running max load key) in arrival order; pc
+        /// non-decreasing, so the prefix max for "loads earlier than
+        /// pc" is a binary search away.
+        loads: Vec<(u32, (Ts, Cycle, u64))>,
+        max_key: (Ts, Cycle, u64),
+    }
+    let mut cores: HashMap<CoreId, CoreState> = HashMap::new();
+    for r in log.records.iter().filter(|r| r.valid && !r.forwarded) {
+        let key = r.key();
+        let st = cores.entry(r.core).or_default();
+        let is_load = r.value_read.is_some();
+        let is_store = r.value_written.is_some();
+        let fail = || Violation::ProgramOrder { core: r.core, at_seq: r.seq };
+        match (is_load, is_store) {
+            // Atomic: a full fence — nothing may pass it either way.
+            (true, true) => {
+                if key < st.max_key {
+                    return Err(fail());
+                }
+                st.last_load = key;
+                st.last_store = key;
+                push_load(&mut st.loads, r.pc, key);
+            }
+            (true, false) => {
+                if key < st.last_load {
+                    return Err(fail());
+                }
+                st.last_load = key;
+                push_load(&mut st.loads, r.pc, key);
+            }
+            (false, true) => {
+                if key < st.last_store {
+                    return Err(fail());
+                }
+                // Load→store order: the store may not slip under any
+                // load that precedes it in *program* order.
+                let earlier = st.loads.partition_point(|&(pc, _)| pc < r.pc);
+                if earlier > 0 && key < st.loads[earlier - 1].1 {
+                    return Err(fail());
+                }
+                st.last_store = key;
+            }
+            (false, false) => {} // no observable value: nothing to order
+        }
+        st.max_key = st.max_key.max(key);
+    }
+    Ok(())
+}
+
+/// Append a load to the per-core (pc, prefix-max key) index.  pcs are
+/// clamped monotone so `partition_point` stays valid even if a
+/// rollback replays an earlier pc.
+fn push_load(loads: &mut Vec<(u32, (Ts, Cycle, u64))>, pc: u32, key: (Ts, Cycle, u64)) {
+    let (last_pc, last_max) = loads.last().copied().unwrap_or((0, (0, 0, 0)));
+    loads.push((pc.max(last_pc), key.max(last_max)));
+}
+
+/// TSO forwarding rule: walking each core's records in program order
+/// (pc, tie-broken by commit sequence), every forwarded load observes
+/// the latest value its own core wrote to that address.
+fn check_tso_forwarding(log: &AccessLog) -> Result<(), Violation> {
+    let mut by_core: HashMap<CoreId, Vec<&LogRecord>> = HashMap::new();
+    for r in log.records.iter().filter(|r| r.valid) {
+        by_core.entry(r.core).or_default().push(r);
+    }
+    for (core, mut recs) in by_core {
+        recs.sort_by_key(|r| (r.pc, r.seq));
+        let mut written: HashMap<LineAddr, u64> = HashMap::new();
+        for r in recs {
+            if r.forwarded {
+                let got = r.value_read.unwrap_or(0);
+                let expected = written.get(&r.addr).copied();
+                if expected != Some(got) {
+                    return Err(Violation::BadForward {
+                        core,
+                        addr: r.addr,
+                        got,
+                        expected,
+                        at_seq: r.seq,
+                    });
+                }
+            }
+            if let Some(w) = r.value_written {
+                written.insert(r.addr, w);
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Rule 1: per-core monotonic physiological keys in program order
@@ -144,7 +285,9 @@ fn check_value_order(log: &AccessLog) -> Result<CheckReport, Violation> {
         recs.sort_by_key(|r| r.key());
         let mut current: u64 = 0;
         for r in recs {
-            if let Some(read) = r.value_read {
+            // Forwarded loads never touched the coherence substrate;
+            // they are validated against program order instead.
+            if let Some(read) = r.value_read.filter(|_| !r.forwarded) {
                 if read != current {
                     return Err(Violation::StaleRead {
                         core: r.core,
@@ -201,7 +344,33 @@ mod tests {
     use crate::types::LOCK_BASE;
 
     fn rec(core: CoreId, addr: LineAddr, rd: Option<u64>, wr: Option<u64>, ts: Ts, cyc: Cycle, seq: u64) -> LogRecord {
-        LogRecord { core, pc: 0, addr, value_read: rd, value_written: wr, ts, commit_cycle: cyc, seq, valid: true }
+        LogRecord {
+            core,
+            pc: seq as u32,
+            addr,
+            value_read: rd,
+            value_written: wr,
+            ts,
+            commit_cycle: cyc,
+            seq,
+            valid: true,
+            forwarded: false,
+        }
+    }
+
+    /// Same, with an explicit program counter (the TSO checks order by
+    /// pc, not arrival).
+    fn rec_pc(
+        core: CoreId,
+        pc: u32,
+        addr: LineAddr,
+        rd: Option<u64>,
+        wr: Option<u64>,
+        ts: Ts,
+        cyc: Cycle,
+        seq: u64,
+    ) -> LogRecord {
+        LogRecord { pc, ..rec(core, addr, rd, wr, ts, cyc, seq) }
     }
 
     #[test]
@@ -283,5 +452,117 @@ mod tests {
         log.fix_speculation(idx, 9, 3, 5, 3);
         assert!(check(&log).is_ok());
         assert_eq!(log.records[idx].value_read, Some(9));
+    }
+
+    // ------------------------------------------------------ TSO rules
+
+    /// The store-buffering execution: each core's store drains *after*
+    /// its program-order-later load committed.  SC must reject it once
+    /// program order is visible; TSO must accept it.
+    fn sb_relaxed_log() -> AccessLog {
+        let (a, b) = (1u64, 2u64);
+        let mut log = AccessLog::default();
+        // Core 0: st A (pc 0) drains late; ld B (pc 1) reads 0 early.
+        log.push(rec_pc(0, 1, b, Some(0), None, 1, 5, 1));
+        log.push(rec_pc(1, 1, a, Some(0), None, 1, 6, 2));
+        log.push(rec_pc(0, 0, a, None, Some(1), 3, 20, 3));
+        log.push(rec_pc(1, 0, b, None, Some(1), 3, 21, 4));
+        log
+    }
+
+    #[test]
+    fn tso_accepts_the_store_buffering_relaxation() {
+        let log = sb_relaxed_log();
+        assert!(check_model(&log, Consistency::Tso).is_ok());
+    }
+
+    #[test]
+    fn tso_still_requires_store_store_order() {
+        let mut log = AccessLog::default();
+        log.push(rec_pc(0, 0, 1, None, Some(1), 9, 9, 1));
+        // Program-order-later store drains with a smaller key.
+        log.push(rec_pc(0, 1, 2, None, Some(1), 3, 10, 2));
+        assert!(matches!(
+            check_model(&log, Consistency::Tso),
+            Err(Violation::ProgramOrder { core: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn tso_still_requires_load_load_order() {
+        let mut log = AccessLog::default();
+        log.push(rec_pc(0, 0, 1, Some(0), None, 9, 9, 1));
+        log.push(rec_pc(0, 1, 2, Some(0), None, 3, 10, 2));
+        assert!(matches!(
+            check_model(&log, Consistency::Tso),
+            Err(Violation::ProgramOrder { core: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn tso_still_requires_load_to_store_order() {
+        let mut log = AccessLog::default();
+        // Load at pc 0, then a store at pc 1 whose key is *earlier*.
+        log.push(rec_pc(0, 0, 1, Some(0), None, 9, 9, 1));
+        log.push(rec_pc(0, 1, 2, None, Some(1), 3, 10, 2));
+        assert!(matches!(
+            check_model(&log, Consistency::Tso),
+            Err(Violation::ProgramOrder { core: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn tso_atomics_fence_everything() {
+        let mut log = AccessLog::default();
+        log.push(rec_pc(0, 0, 1, None, Some(1), 9, 9, 1));
+        // An atomic (read + write) with a smaller key than the store.
+        log.push(rec_pc(0, 1, 2, Some(0), Some(1), 3, 10, 2));
+        assert!(matches!(
+            check_model(&log, Consistency::Tso),
+            Err(Violation::ProgramOrder { core: 0, .. })
+        ));
+    }
+
+    #[test]
+    fn forwarded_load_must_match_own_store() {
+        let mut log = AccessLog::default();
+        let mut fwd = rec_pc(0, 1, 1, Some(7), None, 0, 2, 1);
+        fwd.forwarded = true;
+        log.push(fwd);
+        // The store it forwarded from drains later but sits earlier in
+        // program order (pc 0).
+        log.push(rec_pc(0, 0, 1, None, Some(7), 5, 9, 2));
+        assert!(check_model(&log, Consistency::Tso).is_ok());
+
+        // A forwarded value with no matching earlier store is flagged.
+        let mut bad = AccessLog::default();
+        let mut fwd = rec_pc(0, 1, 1, Some(7), None, 0, 2, 1);
+        fwd.forwarded = true;
+        bad.push(fwd);
+        assert!(matches!(
+            check_model(&bad, Consistency::Tso),
+            Err(Violation::BadForward { core: 0, got: 7, expected: None, .. })
+        ));
+    }
+
+    #[test]
+    fn forwarded_loads_are_exempt_from_global_value_order() {
+        let mut log = AccessLog::default();
+        // Another core owns the line's global history...
+        log.push(rec_pc(1, 0, 1, None, Some(99), 1, 1, 1));
+        // ...while core 0 forwards its own (not yet drained) store.
+        let mut fwd = rec_pc(0, 1, 1, Some(7), None, 2, 2, 2);
+        fwd.forwarded = true;
+        log.push(fwd);
+        log.push(rec_pc(0, 0, 1, None, Some(7), 5, 9, 3));
+        assert!(check_model(&log, Consistency::Tso).is_ok());
+    }
+
+    #[test]
+    fn check_model_sc_matches_plain_check() {
+        let mut log = AccessLog::default();
+        log.push(rec(0, 1, None, Some(7), 1, 10, 1));
+        log.push(rec(1, 1, Some(7), None, 2, 20, 2));
+        assert_eq!(check(&log), check_model(&log, Consistency::Sc));
     }
 }

@@ -2,8 +2,18 @@
 //! SC-allowed outcomes.  Includes the paper's Listing 1 (store
 //! buffering — the A=B=0 outcome Tardis must forbid, §III-C3/§III-D2)
 //! and the §V case-study program (Listing 2).
+//!
+//! Each test also carries its TSO verdict (`allowed_tso`).  The two
+//! models split exactly once in this suite: **SB** admits the relaxed
+//! r0 = r1 = 0 outcome under TSO (store buffers delay the stores past
+//! the loads) while SC forbids it.  Everything else — MP, LB, CO, and
+//! notably **IRIW** — keeps its SC verdict: TSO is multi-copy atomic,
+//! so two readers may never disagree on the order of independent
+//! writes even though each writer's own store buffer reorders
+//! store→load.
 
 use super::{load, store, Op, Program, Workload};
+use crate::config::Consistency;
 use crate::types::{LineAddr, SHARED_BASE};
 
 /// Addresses used by the litmus programs (distinct shared lines).
@@ -11,9 +21,9 @@ pub const A: LineAddr = SHARED_BASE + 0x10;
 pub const B: LineAddr = SHARED_BASE + 0x21;
 pub const F: LineAddr = SHARED_BASE + 0x32;
 
-/// A named litmus test: programs plus a predicate over the observed
-/// load values (keyed by (core, pc)) deciding whether an outcome is
-/// SC-legal.
+/// A named litmus test: programs plus per-model predicates over the
+/// observed load values (keyed by (core, pc)) deciding whether an
+/// outcome is legal.
 pub struct Litmus {
     pub name: &'static str,
     pub workload: Workload,
@@ -21,11 +31,35 @@ pub struct Litmus {
     pub observed: Vec<(u32, u32)>,
     /// SC-legality of an outcome tuple (same order as `observed`).
     pub allowed: fn(&[u64]) -> bool,
+    /// TSO-legality of an outcome tuple.
+    pub allowed_tso: fn(&[u64]) -> bool,
+}
+
+impl Litmus {
+    /// A test whose verdict is the same under SC and TSO (everything
+    /// here except SB — TSO relaxes only store→load order).
+    fn model_independent(
+        name: &'static str,
+        workload: Workload,
+        observed: Vec<(u32, u32)>,
+        allowed: fn(&[u64]) -> bool,
+    ) -> Self {
+        Self { name, workload, observed, allowed, allowed_tso: allowed }
+    }
+
+    /// The predicate for a consistency model.
+    pub fn allowed_under(&self, model: Consistency) -> fn(&[u64]) -> bool {
+        match model {
+            Consistency::Sc => self.allowed,
+            Consistency::Tso => self.allowed_tso,
+        }
+    }
 }
 
 /// Store buffering (paper Listing 1):
 ///   C0: A = 1; r0 = B          C1: B = 1; r1 = A
-/// SC forbids r0 = r1 = 0.
+/// SC forbids r0 = r1 = 0; TSO admits it (each store waits in its
+/// core's buffer while the other core's load reads the old value).
 pub fn store_buffering() -> Litmus {
     Litmus {
         name: "SB",
@@ -35,6 +69,7 @@ pub fn store_buffering() -> Litmus {
         ]),
         observed: vec![(0, 1), (1, 1)],
         allowed: |v| !(v[0] == 0 && v[1] == 0),
+        allowed_tso: |_| true,
     }
 }
 
@@ -42,72 +77,74 @@ pub fn store_buffering() -> Litmus {
 ///   C0: A = 1; F = 1           C1: r0 = F; r1 = A
 /// SC forbids r0 = 1 && r1 = 0.
 pub fn message_passing() -> Litmus {
-    Litmus {
-        name: "MP",
-        workload: Workload::new(vec![
+    Litmus::model_independent(
+        "MP",
+        Workload::new(vec![
             Program::new(vec![store(A, 1), store(F, 1)]),
             Program::new(vec![load(F), load(A)]),
         ]),
-        observed: vec![(1, 0), (1, 1)],
-        allowed: |v| !(v[0] == 1 && v[1] == 0),
-    }
+        vec![(1, 0), (1, 1)],
+        |v| !(v[0] == 1 && v[1] == 0),
+    )
 }
 
 /// Load buffering:
 ///   C0: r0 = A; B = 1          C1: r1 = B; A = 1
 /// SC forbids r0 = r1 = 1.
 pub fn load_buffering() -> Litmus {
-    Litmus {
-        name: "LB",
-        workload: Workload::new(vec![
+    Litmus::model_independent(
+        "LB",
+        Workload::new(vec![
             Program::new(vec![load(A), store(B, 1)]),
             Program::new(vec![load(B), store(A, 1)]),
         ]),
-        observed: vec![(0, 0), (1, 0)],
-        allowed: |v| !(v[0] == 1 && v[1] == 1),
-    }
+        vec![(0, 0), (1, 0)],
+        |v| !(v[0] == 1 && v[1] == 1),
+    )
 }
 
 /// Independent reads of independent writes (4 cores).
 /// SC forbids the two readers disagreeing on the write order:
 /// r0=1,r1=0 together with r2=1,r3=0.
 pub fn iriw() -> Litmus {
-    Litmus {
-        name: "IRIW",
-        workload: Workload::new(vec![
+    // TSO is multi-copy atomic: the readers (which never write) still
+    // may not disagree on the independent-write order, so the verdict
+    // is model-independent.
+    Litmus::model_independent(
+        "IRIW",
+        Workload::new(vec![
             Program::new(vec![store(A, 1)]),
             Program::new(vec![store(B, 1)]),
             Program::new(vec![load(A), load(B)]),
             Program::new(vec![load(B), load(A)]),
         ]),
-        observed: vec![(2, 0), (2, 1), (3, 0), (3, 1)],
-        allowed: |v| {
-            // v = [rA@c2, rB@c2, rB@c3, rA@c3]
-            !(v[0] == 1 && v[1] == 0 && v[2] == 1 && v[3] == 0)
-        },
-    }
+        vec![(2, 0), (2, 1), (3, 0), (3, 1)],
+        // v = [rA@c2, rB@c2, rB@c3, rA@c3]
+        |v| !(v[0] == 1 && v[1] == 0 && v[2] == 1 && v[3] == 0),
+    )
 }
 
 /// Coherence (same-location) test: both readers of one location must
 /// agree with some single write order — reading 2-then-1 on one core
 /// and 1-then-2 on another is forbidden.
 pub fn coherence_co() -> Litmus {
-    Litmus {
-        name: "CO",
-        workload: Workload::new(vec![
+    // Same-location coherence is untouched by store buffering.
+    Litmus::model_independent(
+        "CO",
+        Workload::new(vec![
             Program::new(vec![store(A, 1)]),
             Program::new(vec![store(A, 2)]),
             Program::new(vec![load(A), load(A)]),
             Program::new(vec![load(A), load(A)]),
         ]),
-        observed: vec![(2, 0), (2, 1), (3, 0), (3, 1)],
-        allowed: |v| {
+        vec![(2, 0), (2, 1), (3, 0), (3, 1)],
+        |v| {
             let fwd = |x: u64, y: u64| !(x == 2 && y == 1);
             let rev = |x: u64, y: u64| !(x == 1 && y == 2);
             // Both readers must be consistent with a single order.
             (fwd(v[0], v[1]) && fwd(v[2], v[3])) || (rev(v[0], v[1]) && rev(v[2], v[3]))
         },
-    }
+    )
 }
 
 /// The §V case-study program (Listing 2):
@@ -169,5 +206,26 @@ mod tests {
         assert_ne!(A, B);
         assert_ne!(B, F);
         assert_ne!(A, F);
+    }
+
+    #[test]
+    fn tso_relaxes_exactly_store_buffering() {
+        // SB: the relaxed outcome flips from forbidden to allowed.
+        let sb = store_buffering();
+        assert!(!(sb.allowed)(&[0, 0]));
+        assert!((sb.allowed_tso)(&[0, 0]));
+        assert!(sb.allowed_under(Consistency::Tso)(&[0, 0]));
+        assert!(!sb.allowed_under(Consistency::Sc)(&[0, 0]));
+        // Every other test keeps its SC verdict on its signature
+        // outcome (TSO preserves L→L, S→S, L→S, and store atomicity).
+        for (lt, forbidden) in [
+            (message_passing(), vec![1, 0]),
+            (load_buffering(), vec![1, 1]),
+            (iriw(), vec![1, 0, 1, 0]),
+            (coherence_co(), vec![2, 1, 1, 2]),
+        ] {
+            assert!(!(lt.allowed)(&forbidden), "{} SC", lt.name);
+            assert!(!(lt.allowed_tso)(&forbidden), "{} TSO", lt.name);
+        }
     }
 }

@@ -6,6 +6,7 @@ pub mod ackwise;
 pub mod dispatch;
 pub mod msi;
 pub mod tardis;
+pub mod ts;
 
 pub use dispatch::ProtocolDispatch;
 

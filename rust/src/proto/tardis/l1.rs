@@ -122,8 +122,12 @@ impl Tardis {
         let c = core as usize;
         let spec_outstanding: u32 =
             self.l1[c].renewals.values().map(|r| r.spec_count).sum();
-        let speculate =
-            spec_ok && self.cfg.speculation && (spec_outstanding as usize) < self.max_spec;
+        // The livelock guard (proto/ts) demotes speculation to blocking
+        // demands on lines whose renewals keep failing for this core.
+        let speculate = spec_ok
+            && self.cfg.speculation
+            && (spec_outstanding as usize) < self.max_spec
+            && self.guard.allow_speculation(core, addr);
 
         if let Some(r) = self.l1[c].renewals.get_mut(&addr) {
             // Renewal already in flight.
@@ -238,6 +242,9 @@ impl Tardis {
         // Renewal outcome: a ShRep for an outstanding renewal means the
         // lease could not be extended at the old version — new data.
         if let Some(renewal) = self.l1[c].renewals.remove(&addr) {
+            if self.guard.on_renew_failed(core, addr) {
+                ctx.stats.ts.livelock_escalations += 1;
+            }
             if let Some(line) = self.l1[c].cache.get_mut(addr) {
                 line.excl = false;
                 line.wts = wts;
@@ -280,6 +287,7 @@ impl Tardis {
     fn l1_renew_rep(&mut self, core: CoreId, addr: LineAddr, rts: Ts, ctx: &mut ProtoCtx) {
         let c = core as usize;
         ctx.stats.renew_success += 1;
+        self.guard.on_renew_success(core, addr);
         let Some(renewal) = self.l1[c].renewals.remove(&addr) else {
             return;
         };
@@ -335,11 +343,15 @@ impl Tardis {
             match data {
                 None => {
                     ctx.stats.renew_success += 1;
+                    self.guard.on_renew_success(core, addr);
                     for _ in 0..renewal.spec_count {
                         ctx.complete(completion(core, addr, CompletionKind::SpecOk, 0, 0));
                     }
                 }
                 Some((new_wts, new_value)) => {
+                    if self.guard.on_renew_failed(core, addr) {
+                        ctx.stats.ts.livelock_escalations += 1;
+                    }
                     if renewal.spec_count > 0 {
                         ctx.stats.misspeculations += 1;
                         for _ in 0..renewal.spec_count {

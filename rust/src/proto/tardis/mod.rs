@@ -16,6 +16,7 @@ use crate::hashing::FxHashMap;
 use crate::mem::addr::home_slice;
 use crate::mem::SetAssoc;
 use crate::net::{Message, MsgKind, Node};
+use crate::proto::ts::{LeasePolicy, LineLease, LivelockGuard};
 use crate::proto::{
     AccessOutcome, Coherence, Completion, CompletionKind, MemOp, ProtoCtx, SpinHint,
 };
@@ -88,8 +89,8 @@ pub struct TmLine {
     pub dirty: bool,
     /// Any sharer since fill (E-state extension heuristic, §IV-D).
     pub touched: bool,
-    /// Dynamic-lease multiplier (lease << lease_exp), §VI-C5.
-    pub lease_exp: u8,
+    /// Per-line lease-policy state ([`crate::proto::ts`]).
+    pub lease: LineLease,
 }
 
 /// Per-slice timestamp-manager state.
@@ -110,6 +111,10 @@ pub struct Tardis {
     pub(crate) n_cores: u32,
     pub(crate) l1: Vec<L1>,
     pub(crate) tm: Vec<Tm>,
+    /// Lease-assignment policy (timestamp-policy layer, proto/ts).
+    pub(crate) lease_policy: LeasePolicy,
+    /// Renewal-starvation detector (proto/ts).
+    pub(crate) guard: LivelockGuard,
     /// 2^delta_ts_bits (saturating); timestamps must satisfy
     /// ts - bts < range or a rebase fires.
     pub(crate) ts_range: u64,
@@ -126,6 +131,8 @@ impl Tardis {
             1u64 << cfg.delta_ts_bits
         };
         Self {
+            lease_policy: LeasePolicy::new(&cfg),
+            guard: LivelockGuard::new(cfg.livelock_threshold),
             cfg,
             n_cores: sys.n_cores,
             l1: (0..sys.n_cores)

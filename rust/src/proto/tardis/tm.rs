@@ -98,6 +98,9 @@ impl Tardis {
     fn tm_process(&mut self, slice: SliceId, addr: LineAddr, req: Req, ctx: &mut ProtoCtx) {
         let s = slice as usize;
         let lease = self.cfg.lease;
+        // The policy is Copy: take it by value so it can update the
+        // line's lease state while the line borrows the cache array.
+        let policy = self.lease_policy;
         let line = match self.tm[s].cache.get_mut(addr) {
             None => {
                 // Invalid: load from DRAM (Table III column 1/2, row 1).
@@ -137,19 +140,16 @@ impl Tardis {
                     ));
                     return;
                 }
-                // Dynamic leases (§VI-C5): successful renewals signal
-                // read-mostly data — double the line's lease up to the
-                // cap; writes reset it (see the Ex arm).
-                let eff_lease = if self.cfg.dynamic_lease {
-                    let l = (lease << line.lease_exp).min(self.cfg.max_lease);
-                    if renew && wts == line.wts {
-                        let max_exp = 63 - self.cfg.max_lease.leading_zeros() as u8;
-                        line.lease_exp = (line.lease_exp + 1).min(max_exp);
-                    }
-                    l
-                } else {
-                    lease
-                };
+                // Lease assignment is delegated to the timestamp-policy
+                // layer (proto/ts): static, dynamic (§VI-C5), or
+                // Tardis-2.0 predictive, all over the same per-line
+                // `LineLease` state.
+                let eff_lease = policy.shared_lease(
+                    &mut line.lease,
+                    crate::proto::ts::SharedReq { renew, version_match: wts == line.wts },
+                );
+                ctx.stats.ts.leases_granted += 1;
+                ctx.stats.ts.lease_total += eff_lease;
                 line.rts = line.rts.max(line.wts + eff_lease).max(pts + eff_lease);
                 line.touched = true;
                 let (l_wts, l_rts, l_val) = (line.wts, line.rts, line.value);
@@ -174,7 +174,10 @@ impl Tardis {
                 let (l_wts, l_rts, l_val) = (line.wts, line.rts, line.value);
                 line.owner = Some(req.core);
                 line.touched = true;
-                line.lease_exp = 0; // writes reset the dynamic lease
+                // A write is coming: the policy resets its read-run /
+                // dynamic-exponent state (the write interval is learned
+                // at the owner's return, when the new wts is known).
+                policy.on_write(&mut line.lease, 0);
                 if wts == l_wts {
                     ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::UpgradeRep { rts: l_rts }));
                 } else {
@@ -218,8 +221,14 @@ impl Tardis {
         ctx: &mut ProtoCtx,
     ) {
         let s = slice as usize;
+        let policy = self.lease_policy;
         match self.tm[s].cache.peek_mut(addr) {
             Some(line) => {
+                if dirty {
+                    // The owner wrote: feed the policy the observed
+                    // write-to-write timestamp interval.
+                    policy.on_write(&mut line.lease, wts.saturating_sub(line.wts));
+                }
                 line.owner = None;
                 line.busy = false;
                 line.wts = wts;
@@ -274,8 +283,16 @@ impl Tardis {
     fn tm_install(&mut self, slice: SliceId, addr: LineAddr, value: u64, ctx: &mut ProtoCtx) {
         let s = slice as usize;
         let mts = self.tm[s].mts;
-        let new_line =
-            TmLine { owner: None, busy: false, wts: mts, rts: mts, value, dirty: false, touched: false, lease_exp: 0 };
+        let new_line = TmLine {
+            owner: None,
+            busy: false,
+            wts: mts,
+            rts: mts,
+            value,
+            dirty: false,
+            touched: false,
+            lease: LineLease::default(),
+        };
 
         // Preferred victims: unowned, non-busy lines (silent except for
         // the mts fold + dirty writeback).

@@ -1,0 +1,119 @@
+//! Renewal-starvation (livelock) detection.
+//!
+//! A core speculating through expired loads on a write-hot line can
+//! starve: every renewal comes back as fresh data (a misspeculation),
+//! the speculation window rolls back, and the core re-executes —
+//! paying the rollback penalty in a loop while the writer races ahead
+//! (the §III-E concern, generalized to speculation; see also the lazy
+//! cache-coherence verification literature, arXiv:1705.08262, on why
+//! liveness needs an explicit argument under lazy invalidation).
+//!
+//! [`LivelockGuard`] tracks consecutive failed renewals per
+//! (core, line).  Once a streak crosses the configured threshold the
+//! line is *escalated* for that core: subsequent expired loads issue
+//! as blocking demands instead of speculating, so the core stalls one
+//! round-trip, adopts the fresh value, and is guaranteed forward
+//! progress.  A successful renewal clears the streak (the line is
+//! read-mostly again).
+
+use crate::hashing::FxHashMap;
+use crate::types::{CoreId, LineAddr};
+
+#[derive(Debug)]
+pub struct LivelockGuard {
+    /// Consecutive failed renewals before escalation; 0 disables.
+    threshold: u32,
+    /// Active failure streaks.  Entries exist only while a line is
+    /// failing for a core (cleared on success), so the map stays tiny.
+    streaks: FxHashMap<(CoreId, LineAddr), u32>,
+}
+
+impl LivelockGuard {
+    pub fn new(threshold: u32) -> Self {
+        Self { threshold, streaks: FxHashMap::default() }
+    }
+
+    /// Bound on tracked streaks: past this, sub-threshold entries are
+    /// forgotten (their streaks restart from zero — safe, merely less
+    /// eager) so the map can never grow with the address space the
+    /// way the old per-channel clock map did (§Perf lesson).
+    const MAX_TRACKED: usize = 1 << 16;
+
+    /// A renewal failed (answered with fresh data).  Returns true when
+    /// this failure crosses the threshold — the moment of escalation
+    /// (counted once per streak in the stats).
+    pub fn on_renew_failed(&mut self, core: CoreId, addr: LineAddr) -> bool {
+        if self.threshold == 0 {
+            return false;
+        }
+        if self.streaks.len() >= Self::MAX_TRACKED {
+            let t = self.threshold;
+            self.streaks.retain(|_, s| *s >= t);
+        }
+        let streak = self.streaks.entry((core, addr)).or_insert(0);
+        *streak += 1;
+        *streak == self.threshold
+    }
+
+    /// A renewal succeeded: the line is behaving read-mostly again.
+    pub fn on_renew_success(&mut self, core: CoreId, addr: LineAddr) {
+        self.streaks.remove(&(core, addr));
+    }
+
+    /// May this core still speculate through an expired load on
+    /// `addr`, or has the line been escalated to blocking demands?
+    pub fn allow_speculation(&self, core: CoreId, addr: LineAddr) -> bool {
+        if self.threshold == 0 {
+            return true;
+        }
+        match self.streaks.get(&(core, addr)) {
+            Some(streak) => *streak < self.threshold,
+            None => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalates_exactly_at_the_threshold() {
+        let mut g = LivelockGuard::new(3);
+        assert!(g.allow_speculation(0, 7));
+        assert!(!g.on_renew_failed(0, 7));
+        assert!(!g.on_renew_failed(0, 7));
+        assert!(g.allow_speculation(0, 7), "below threshold still speculates");
+        assert!(g.on_renew_failed(0, 7), "third failure escalates");
+        assert!(!g.allow_speculation(0, 7));
+        // Further failures do not re-report the escalation.
+        assert!(!g.on_renew_failed(0, 7));
+    }
+
+    #[test]
+    fn success_clears_the_streak() {
+        let mut g = LivelockGuard::new(2);
+        g.on_renew_failed(0, 7);
+        g.on_renew_success(0, 7);
+        assert!(!g.on_renew_failed(0, 7), "streak restarted from zero");
+        assert!(g.allow_speculation(0, 7));
+    }
+
+    #[test]
+    fn streaks_are_per_core_and_per_line() {
+        let mut g = LivelockGuard::new(1);
+        assert!(g.on_renew_failed(0, 7));
+        assert!(!g.allow_speculation(0, 7));
+        assert!(g.allow_speculation(1, 7), "other cores unaffected");
+        assert!(g.allow_speculation(0, 8), "other lines unaffected");
+    }
+
+    #[test]
+    fn zero_threshold_disables_the_guard() {
+        let mut g = LivelockGuard::new(0);
+        for _ in 0..100 {
+            assert!(!g.on_renew_failed(0, 7));
+        }
+        assert!(g.allow_speculation(0, 7));
+    }
+}

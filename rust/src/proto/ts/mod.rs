@@ -1,0 +1,293 @@
+//! The timestamp-policy layer: lease assignment and renewal-starvation
+//! handling, factored out of the Tardis protocol controllers.
+//!
+//! The paper treats the lease as a single static constant (Table V:
+//! 10); its follow-up (*Tardis 2.0*, arXiv:1511.08774) shows the
+//! protocol's renewal traffic and misspeculation rate hinge on smarter
+//! per-line lease assignment.  This module makes that a first-class,
+//! sweepable subsystem:
+//!
+//! * [`LeasePolicy`] — enum-dispatched (the [`ProtocolDispatch`]
+//!   pattern: no vtable on the per-request path) over
+//!   [`StaticLease`], [`DynamicLease`] (the old `dynamic_lease` flag),
+//!   and the Tardis-2.0-style [`PredictiveLease`];
+//! * [`LineLease`] — the compact per-line state each policy reads and
+//!   writes, embedded in every timestamp-manager line;
+//! * [`LivelockGuard`](livelock::LivelockGuard) — escalates starved
+//!   renewals (consecutive failures on one line) from speculative to
+//!   blocking, bounding rollback churn under write storms.
+//!
+//! The protocol controllers only ever call [`LeasePolicy::shared_lease`]
+//! on shared grants and [`LeasePolicy::on_write`] on exclusive grants /
+//! dirty owner returns; everything else is policy-internal.
+//!
+//! [`ProtocolDispatch`]: crate::proto::ProtocolDispatch
+
+pub mod livelock;
+
+pub use livelock::LivelockGuard;
+
+use crate::config::{LeasePolicyKind, TardisConfig};
+use crate::types::Ts;
+
+/// Per-line lease-policy state, embedded in each timestamp-manager
+/// line.  One compact struct shared by all policies so switching
+/// policies never changes the line layout (and the storage model).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LineLease {
+    /// Dynamic: lease multiplier exponent (`lease << exp`).
+    pub exp: u8,
+    /// Predictive: saturating count of shared grants since the last
+    /// observed write (the read run).
+    pub read_run: u8,
+    /// Predictive: timestamp distance between the two most recent
+    /// writes (0 = no interval observed yet), saturating.
+    pub write_gap: u32,
+}
+
+/// What a policy learns about one shared request.
+#[derive(Debug, Clone, Copy)]
+pub struct SharedReq {
+    /// The request is a renewal (lease-extension attempt).
+    pub renew: bool,
+    /// The requester's `wts` matches the line's (its copy is current).
+    pub version_match: bool,
+}
+
+/// The paper's fixed lease.
+#[derive(Debug, Clone, Copy)]
+pub struct StaticLease {
+    lease: u64,
+}
+
+impl StaticLease {
+    #[inline]
+    fn shared_lease(&self, _line: &mut LineLease, _req: SharedReq) -> u64 {
+        self.lease
+    }
+}
+
+/// §VI-C5 dynamic leases: double on successful renewals, reset on
+/// writes (read-mostly data earns exponentially longer leases).
+#[derive(Debug, Clone, Copy)]
+pub struct DynamicLease {
+    base: u64,
+    max: u64,
+    /// Largest exponent that keeps `base << exp` at or under `max`.
+    max_exp: u8,
+}
+
+impl DynamicLease {
+    #[inline]
+    fn shared_lease(&self, line: &mut LineLease, req: SharedReq) -> u64 {
+        let l = (self.base << line.exp.min(63)).min(self.max);
+        if req.renew && req.version_match {
+            line.exp = (line.exp + 1).min(self.max_exp);
+        }
+        l
+    }
+
+    #[inline]
+    fn on_write(&self, line: &mut LineLease) {
+        line.exp = 0;
+    }
+}
+
+/// Tardis-2.0-style predictive leases: track each line's read run and
+/// write-to-write timestamp interval, then lease proportionally to the
+/// read run but never past the observed write interval — a lease that
+/// outlives the next write only converts renewals into
+/// misspeculations.
+#[derive(Debug, Clone, Copy)]
+pub struct PredictiveLease {
+    base: u64,
+    max: u64,
+}
+
+impl PredictiveLease {
+    #[inline]
+    fn shared_lease(&self, line: &mut LineLease, _req: SharedReq) -> u64 {
+        let run = line.read_run as u64;
+        line.read_run = line.read_run.saturating_add(1);
+        let mut lease = self.base.saturating_mul(1 + run).min(self.max);
+        if line.write_gap > 0 {
+            // Self-tune down to the observed write interval.
+            lease = lease.min(line.write_gap as u64);
+        }
+        lease.max(1)
+    }
+
+    #[inline]
+    fn on_write(&self, line: &mut LineLease, gap: Ts) {
+        if gap > 0 {
+            line.write_gap = gap.min(u32::MAX as u64) as u32;
+        }
+        line.read_run = 0;
+    }
+}
+
+/// The statically dispatched union of the lease policies (mirror of
+/// [`crate::proto::ProtocolDispatch`]): adding a policy means adding
+/// an enum arm and a constructor case here — the protocol controllers
+/// are untouched.
+#[derive(Debug, Clone, Copy)]
+pub enum LeasePolicy {
+    Static(StaticLease),
+    Dynamic(DynamicLease),
+    Predictive(PredictiveLease),
+}
+
+impl LeasePolicy {
+    /// Instantiate the policy selected by the Tardis configuration
+    /// (honoring the deprecated `dynamic_lease` alias).
+    pub fn new(cfg: &TardisConfig) -> Self {
+        let base = cfg.lease;
+        match cfg.effective_lease_policy() {
+            LeasePolicyKind::Static => Self::Static(StaticLease { lease: base }),
+            LeasePolicyKind::Dynamic { max_lease } => {
+                let max = max_lease.max(base);
+                let max_exp = (0u8..63)
+                    .take_while(|&e| matches!(base.checked_shl(e as u32), Some(l) if l <= max))
+                    .last()
+                    .unwrap_or(0);
+                Self::Dynamic(DynamicLease { base, max, max_exp })
+            }
+            LeasePolicyKind::Predictive { max_lease } => {
+                Self::Predictive(PredictiveLease { base, max: max_lease.max(base) })
+            }
+        }
+    }
+
+    /// Which configured kind this policy implements.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Self::Static(_) => "static",
+            Self::Dynamic(_) => "dynamic",
+            Self::Predictive(_) => "predictive",
+        }
+    }
+
+    /// Lease to grant a shared request on `line`, updating the line's
+    /// policy state.
+    #[inline]
+    pub fn shared_lease(&self, line: &mut LineLease, req: SharedReq) -> u64 {
+        match self {
+            Self::Static(p) => p.shared_lease(line, req),
+            Self::Dynamic(p) => p.shared_lease(line, req),
+            Self::Predictive(p) => p.shared_lease(line, req),
+        }
+    }
+
+    /// A write to the line was observed (exclusive grant, or a dirty
+    /// owner return).  `gap` is the timestamp distance from the
+    /// previous write when known, 0 otherwise.
+    #[inline]
+    pub fn on_write(&self, line: &mut LineLease, gap: Ts) {
+        match self {
+            Self::Static(_) => {}
+            Self::Dynamic(p) => p.on_write(line),
+            Self::Predictive(p) => p.on_write(line, gap),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DEFAULT_MAX_LEASE;
+
+    fn cfg(kind: LeasePolicyKind) -> TardisConfig {
+        TardisConfig { lease_policy: kind, ..TardisConfig::default() }
+    }
+
+    fn renew_hit() -> SharedReq {
+        SharedReq { renew: true, version_match: true }
+    }
+
+    fn cold_read() -> SharedReq {
+        SharedReq { renew: false, version_match: false }
+    }
+
+    #[test]
+    fn static_policy_is_constant() {
+        let p = LeasePolicy::new(&cfg(LeasePolicyKind::Static));
+        let mut line = LineLease::default();
+        for _ in 0..5 {
+            assert_eq!(p.shared_lease(&mut line, renew_hit()), 10);
+        }
+        assert_eq!(line, LineLease::default(), "static policy keeps no state");
+    }
+
+    #[test]
+    fn dynamic_policy_doubles_on_renewals_and_resets_on_writes() {
+        let p = LeasePolicy::new(&cfg(LeasePolicyKind::Dynamic { max_lease: 80 }));
+        let mut line = LineLease::default();
+        assert_eq!(p.shared_lease(&mut line, renew_hit()), 10);
+        assert_eq!(p.shared_lease(&mut line, renew_hit()), 20);
+        assert_eq!(p.shared_lease(&mut line, renew_hit()), 40);
+        assert_eq!(p.shared_lease(&mut line, renew_hit()), 80);
+        // Capped.
+        assert_eq!(p.shared_lease(&mut line, renew_hit()), 80);
+        // Non-renewal reads do not grow the lease.
+        let exp = line.exp;
+        p.shared_lease(&mut line, cold_read());
+        assert_eq!(line.exp, exp);
+        // A write resets.
+        p.on_write(&mut line, 0);
+        assert_eq!(p.shared_lease(&mut line, renew_hit()), 10);
+    }
+
+    #[test]
+    fn predictive_policy_grows_with_read_run() {
+        let p = LeasePolicy::new(&cfg(LeasePolicyKind::Predictive {
+            max_lease: DEFAULT_MAX_LEASE,
+        }));
+        let mut line = LineLease::default();
+        assert_eq!(p.shared_lease(&mut line, cold_read()), 10);
+        assert_eq!(p.shared_lease(&mut line, cold_read()), 20);
+        assert_eq!(p.shared_lease(&mut line, cold_read()), 30);
+        for _ in 0..20 {
+            p.shared_lease(&mut line, cold_read());
+        }
+        // Capped at max_lease.
+        assert_eq!(p.shared_lease(&mut line, cold_read()), DEFAULT_MAX_LEASE);
+    }
+
+    #[test]
+    fn predictive_policy_bounds_lease_by_write_interval() {
+        let p = LeasePolicy::new(&cfg(LeasePolicyKind::Predictive {
+            max_lease: DEFAULT_MAX_LEASE,
+        }));
+        let mut line = LineLease::default();
+        for _ in 0..10 {
+            p.shared_lease(&mut line, cold_read());
+        }
+        // Two writes 7 timestamps apart: the line is write-churned.
+        p.on_write(&mut line, 0);
+        p.on_write(&mut line, 7);
+        assert_eq!(line.read_run, 0, "writes reset the read run");
+        // Leases now never exceed the observed write interval.
+        for _ in 0..20 {
+            assert!(p.shared_lease(&mut line, cold_read()) <= 7);
+        }
+    }
+
+    #[test]
+    fn dynamic_exponent_never_overflows_the_cap() {
+        // max_lease smaller than the base: the exponent stays 0.
+        let p = LeasePolicy::new(&cfg(LeasePolicyKind::Dynamic { max_lease: 5 }));
+        let mut line = LineLease::default();
+        for _ in 0..100 {
+            let l = p.shared_lease(&mut line, renew_hit());
+            assert!(l <= 10, "lease {l} escaped the cap");
+        }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_alias_constructs_the_dynamic_policy() {
+        let c = TardisConfig { dynamic_lease: true, ..TardisConfig::default() };
+        assert_eq!(LeasePolicy::new(&c).kind_name(), "dynamic");
+        assert_eq!(LeasePolicy::new(&TardisConfig::default()).kind_name(), "static");
+    }
+}

@@ -220,6 +220,8 @@ impl Engine {
                     spin_poll: self.cfg.spin_poll_cycles,
                     rollback_penalty: self.cfg.rollback_penalty,
                     ooo_window: self.cfg.ooo_window,
+                    consistency: self.cfg.consistency,
+                    sb_entries: self.cfg.sb_entries,
                 };
                 let action = self.cores[c as usize].step(now, &mut env);
                 drop(env);
@@ -265,6 +267,8 @@ impl Engine {
                     spin_poll: self.cfg.spin_poll_cycles,
                     rollback_penalty: self.cfg.rollback_penalty,
                     ooo_window: self.cfg.ooo_window,
+                    consistency: self.cfg.consistency,
+                    sb_entries: self.cfg.sb_entries,
                 };
                 let action = self.cores[comp.core as usize].on_completion(&comp, now, &mut env);
                 drop(env);

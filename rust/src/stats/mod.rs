@@ -57,6 +57,14 @@ pub struct TimestampStats {
     /// Shared L1 lines invalidated because delta_rts went negative
     /// during a rebase.
     pub rebase_invalidations: u64,
+    /// Shared grants the lease policy served ([`crate::proto::ts`]).
+    pub leases_granted: u64,
+    /// Sum of granted lease lengths (avg lease = this / leases_granted).
+    pub lease_total: u64,
+    /// Renewal-starvation escalations: streaks of failed renewals that
+    /// crossed the livelock threshold and demoted speculation on that
+    /// (core, line) to blocking demands.
+    pub livelock_escalations: u64,
 }
 
 /// Everything measured by one simulation run.
@@ -103,6 +111,19 @@ pub struct SimStats {
     /// Directory invalidations sent (MSI/Ackwise), and broadcasts.
     pub invalidations_sent: u64,
     pub broadcasts: u64,
+
+    /// TSO store buffer: stores retired into a core's buffer, loads
+    /// served by forwarding from the core's own *pending* stores
+    /// (store buffer, or — on the OoO core — an older in-ROB store,
+    /// the store-queue forwarding real TSO machines do; counting both
+    /// keeps the metric comparable with the in-order core, where
+    /// every pending store lives in the buffer), and issue stalls on
+    /// a full buffer.  All zero under `Consistency::Sc`.  Like
+    /// `loads`, `sb_forwards` counts events: a forwarded load inside
+    /// a squashed speculation window is re-executed and re-counted.
+    pub sb_stores: u64,
+    pub sb_forwards: u64,
+    pub sb_full_stalls: u64,
 
     /// Cycles cores spent spinning (lock/barrier waits).
     pub spin_cycles: u64,
@@ -162,6 +183,16 @@ impl SimStats {
             0.0
         } else {
             self.ts.pts_increase_self_inc as f64 / self.ts.pts_increase_total as f64
+        }
+    }
+
+    /// Average lease length the timestamp managers granted (the
+    /// lease-policy sweep's headline metric alongside renew_rate).
+    pub fn avg_lease(&self) -> f64 {
+        if self.ts.leases_granted == 0 {
+            0.0
+        } else {
+            self.ts.lease_total as f64 / self.ts.leases_granted as f64
         }
     }
 

@@ -7,7 +7,9 @@
 //! tests, where the legacy-heap hook is compiled in.)
 
 use tardis_dsm::api::{SimBuilder, SimReport};
-use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::config::{
+    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SystemConfig, DEFAULT_MAX_LEASE,
+};
 use tardis_dsm::testutil::{ProgGen, Rng};
 use tardis_dsm::trace::synth_workload;
 use tardis_dsm::workloads;
@@ -36,6 +38,54 @@ fn repeated_runs_are_bit_identical_across_protocols_and_core_models() {
             let b = run();
             assert!(a.stats.events > 0, "event counter must be populated");
             assert_identical(&a, &b, &format!("{protocol:?}/{model:?}"));
+        }
+    }
+}
+
+/// The timestamp-policy layer and the consistency generalization must
+/// both be pure functions of (config, workload): every lease policy x
+/// consistency model combination repeat-runs to bit-identical
+/// [`tardis_dsm::SimStats`], access logs, and finish times — on both
+/// core models (the TSO store buffer touches each differently).
+#[test]
+fn repeated_runs_are_bit_identical_across_lease_policies_and_consistency() {
+    let spec = workloads::by_name("volrend").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    let policies = [
+        LeasePolicyKind::Static,
+        LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE },
+        LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE },
+    ];
+    for policy in policies {
+        for model in [Consistency::Sc, Consistency::Tso] {
+            for core_model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+                let run = || {
+                    SimBuilder::from_config(SystemConfig::small(8, ProtocolKind::Tardis))
+                        .core_model(core_model)
+                        .consistency(model)
+                        .lease_policy(policy)
+                        .record_accesses(true)
+                        .workload(&w)
+                        .run()
+                        .unwrap()
+                };
+                let a = run();
+                let b = run();
+                assert_identical(
+                    &a,
+                    &b,
+                    &format!("{policy:?}/{model:?}/{core_model:?}"),
+                );
+                a.check_consistency().unwrap_or_else(|v| {
+                    panic!("{policy:?}/{model:?}/{core_model:?}: violation {v:?}")
+                });
+                if model == Consistency::Tso {
+                    assert!(
+                        a.stats.sb_stores > 0,
+                        "{policy:?}/{core_model:?}: TSO run never buffered a store"
+                    );
+                }
+            }
         }
     }
 }

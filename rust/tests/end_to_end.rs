@@ -35,6 +35,28 @@ fn fig4_table_has_twelve_workloads_and_average() {
 }
 
 #[test]
+fn lease_matrix_covers_every_policy_and_consistency() {
+    let mut ctx = quick_ctx();
+    let t = experiments::lease_matrix(&mut ctx).unwrap();
+    // 12 workloads x 6 variants, plus one AVG row per variant.
+    assert_eq!(t.rows.len(), 12 * 6 + 6);
+    for v in [
+        "static-sc",
+        "static-tso",
+        "dynamic-sc",
+        "dynamic-tso",
+        "predictive-sc",
+        "predictive-tso",
+    ] {
+        assert!(t.rows.iter().any(|r| r[1] == v), "missing variant {v}");
+    }
+    for row in &t.rows[..12 * 6] {
+        let thr: f64 = row[2].parse().expect("numeric throughput cell");
+        assert!(thr > 0.0, "non-positive throughput in {row:?}");
+    }
+}
+
+#[test]
 fn table7_is_exactly_the_papers() {
     let t = experiments::table7();
     assert_eq!(t.rows[0], vec!["16", "16 bits", "16 bits", "40 bits"]);

@@ -3,7 +3,9 @@
 //! directory behaviour (invalidations, broadcasts), and cross-protocol
 //! sanity on the synthetic workloads.
 
-use tardis_dsm::config::{CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::config::{
+    CoreModel, LeasePolicyKind, ProtocolKind, SystemConfig, DEFAULT_MAX_LEASE,
+};
 use tardis_dsm::coordinator::experiments::base_cfg;
 use tardis_dsm::prog::{checker, load, lock, store, unlock, Program, Workload};
 use tardis_dsm::proto::{Coherence, ackwise::Ackwise, msi::Msi, tardis::Tardis};
@@ -338,7 +340,7 @@ fn dynamic_lease_reduces_renewals() {
     };
     let dynamic = {
         let mut cfg = SystemConfig::small(8, ProtocolKind::Tardis);
-        cfg.tardis.dynamic_lease = true;
+        cfg.tardis.lease_policy = LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE };
         let res = run_logged(cfg, &w).unwrap();
         checker::check(&res.log).unwrap();
         res.stats
@@ -349,6 +351,27 @@ fn dynamic_lease_reduces_renewals() {
         dynamic.renew_requests,
         stat.renew_requests
     );
+}
+
+/// The deprecated `dynamic_lease` flag keeps working for one release:
+/// it must resolve to the same policy (and the same simulation) as
+/// the explicit `LeasePolicyKind::Dynamic`.
+#[test]
+#[allow(deprecated)]
+fn deprecated_dynamic_lease_alias_matches_explicit_policy() {
+    let spec = workloads::by_name("volrend").unwrap();
+    let w = synth_workload(&spec.params, 4, 512);
+    let explicit = {
+        let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        cfg.tardis.lease_policy = LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE };
+        run_logged(cfg, &w).unwrap()
+    };
+    let alias = {
+        let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        cfg.tardis.dynamic_lease = true;
+        run_logged(cfg, &w).unwrap()
+    };
+    assert_eq!(explicit.stats, alias.stats, "alias must be bit-identical");
 }
 
 /// Dynamic leases under write churn must reset (writes invalidate the
@@ -365,8 +388,111 @@ fn dynamic_lease_preserves_sc_under_writes() {
     tardis_dsm::testutil::prop_check(15, 0xD11A, |seed, rng| {
         let w = gen.generate(rng);
         let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
-        cfg.tardis.dynamic_lease = true;
+        cfg.tardis.lease_policy = LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE };
         let res = run_logged(cfg, &w).unwrap();
         checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed:#x}: {v:?}"));
     });
+}
+
+/// The spinning benchmark: cores hammer a small read-mostly working
+/// set (spin-style re-reads) whose leases keep expiring through self
+/// increment.  The Tardis-2.0-style predictive policy must grow those
+/// lines' leases and cut renewal traffic versus the static lease —
+/// the headline claim of the timestamp-policy layer.
+#[test]
+fn predictive_lease_cuts_renewals_on_spinning_reads() {
+    // Every core re-reads the same 4 shared lines; short leases and a
+    // fast self increment force continual renewals under Static.
+    let mut progs = Vec::new();
+    for _ in 0..4u32 {
+        let mut ops = vec![];
+        for i in 0..1500u64 {
+            ops.push(load(SHARED_BASE + (i % 4)));
+        }
+        progs.push(Program::new(ops));
+    }
+    let w = Workload::new(progs);
+    let run = |policy: LeasePolicyKind| {
+        let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        cfg.tardis.lease = 5;
+        cfg.tardis.self_inc_period = 5;
+        cfg.tardis.lease_policy = policy;
+        let res = run_logged(cfg, &w).unwrap();
+        checker::check(&res.log).unwrap();
+        res.stats
+    };
+    let stat = run(LeasePolicyKind::Static);
+    let pred = run(LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE });
+    assert!(stat.renew_requests > 0, "the benchmark must actually renew");
+    assert!(
+        pred.renew_requests * 2 < stat.renew_requests,
+        "predictive leases should at least halve renewals on spinning reads: {} vs {}",
+        pred.renew_requests,
+        stat.renew_requests
+    );
+    assert!(
+        pred.avg_lease() > stat.avg_lease(),
+        "predictive must grant longer leases: {} vs {}",
+        pred.avg_lease(),
+        stat.avg_lease()
+    );
+}
+
+/// Predictive leases under write churn self-tune *down* (the lease is
+/// bounded by the observed write interval) and preserve SC.
+#[test]
+fn predictive_lease_preserves_sc_under_writes() {
+    let gen = tardis_dsm::testutil::ProgGen {
+        n_cores: 4,
+        ops_per_core: 60,
+        store_pct: 60,
+        n_shared: 3,
+        ..Default::default()
+    };
+    tardis_dsm::testutil::prop_check(15, 0x9D1C7, |seed, rng| {
+        let w = gen.generate(rng);
+        let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        cfg.tardis.lease_policy = LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE };
+        let res = run_logged(cfg, &w).unwrap();
+        checker::check(&res.log).unwrap_or_else(|v| panic!("seed {seed:#x}: {v:?}"));
+    });
+}
+
+/// The livelock detector: a reader speculating through renewals on a
+/// write-hot line keeps misspeculating; once its failure streak
+/// crosses the threshold the line escalates to blocking demands
+/// (counted in the stats) — and the run stays consistent.
+#[test]
+fn livelock_guard_escalates_starved_renewals() {
+    let mut reader = vec![];
+    let mut writer = vec![];
+    for i in 0..600u64 {
+        reader.push(load(SHARED_BASE));
+        // Interleave reads of other lines so the reader's pts moves
+        // and its copy of SHARED_BASE keeps expiring.
+        reader.push(load(SHARED_BASE + 1 + (i % 3)));
+        writer.push(store(SHARED_BASE, i + 1));
+    }
+    let w = Workload::new(vec![Program::new(reader), Program::new(writer)]);
+    let mut cfg = SystemConfig::small(2, ProtocolKind::Tardis);
+    cfg.tardis.self_inc_period = 5;
+    cfg.tardis.livelock_threshold = 4;
+    let res = run_logged(cfg, &w).unwrap();
+    checker::check(&res.log).unwrap();
+    assert!(
+        res.stats.misspeculations > 0,
+        "the write storm should defeat some speculations"
+    );
+    assert!(
+        res.stats.ts.livelock_escalations > 0,
+        "repeated renewal failures must escalate (misspecs: {})",
+        res.stats.misspeculations
+    );
+
+    // With the guard disabled the same run never escalates.
+    let mut off = SystemConfig::small(2, ProtocolKind::Tardis);
+    off.tardis.self_inc_period = 5;
+    off.tardis.livelock_threshold = 0;
+    let res_off = run_logged(off, &w).unwrap();
+    assert_eq!(res_off.stats.ts.livelock_escalations, 0);
 }

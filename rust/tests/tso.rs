@@ -1,0 +1,239 @@
+//! TSO end-to-end tests: the store buffer must make exactly the
+//! store-buffering relaxation architecturally visible (SB's 0/0
+//! outcome appears and is checker-accepted), while everything SC and
+//! TSO agree on — MP, LB, CO, IRIW store atomicity, lock mutual
+//! exclusion — stays forbidden.  Runs both core models and both
+//! protocol families (Tardis timestamps and a physical-time
+//! directory), since the buffer lives in the cores.
+
+use tardis_dsm::api::{SimBuilder, SimReport};
+use tardis_dsm::config::{Consistency, CoreModel, ProtocolKind, SystemConfig};
+use tardis_dsm::prog::{litmus, load, store, Op, Program, Workload};
+use tardis_dsm::testutil::{ProgGen, Rng};
+use tardis_dsm::types::SHARED_BASE;
+
+/// Jitter compute gaps to explore interleavings (deterministic per
+/// seed).
+fn jitter(w: &Workload, seed: u64) -> Workload {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+    let mut w = w.clone();
+    for p in &mut w.programs {
+        for op in &mut p.ops {
+            match op {
+                Op::Load { gap, .. } | Op::Store { gap, .. } => *gap = rng.below(12) as u32,
+                _ => {}
+            }
+        }
+    }
+    w
+}
+
+fn observed(res: &SimReport, keys: &[(u32, u32)]) -> Vec<u64> {
+    keys.iter()
+        .map(|&(core, pc)| {
+            res.log
+                .records
+                .iter()
+                .find(|r| r.valid && r.core == core && r.pc == pc && r.value_read.is_some())
+                .map(|r| r.value_read.unwrap())
+                .unwrap_or(u64::MAX)
+        })
+        .collect()
+}
+
+fn run_litmus(
+    w: &Workload,
+    protocol: ProtocolKind,
+    model: CoreModel,
+    consistency: Consistency,
+) -> SimReport {
+    let mut cfg = SystemConfig::small(w.n_cores(), protocol);
+    cfg.core_model = model;
+    cfg.consistency = consistency;
+    SimBuilder::from_config(cfg)
+        .record_accesses(true)
+        .workload(w)
+        .run()
+        .unwrap()
+}
+
+/// The acceptance-criterion pair: the identical SB program admits the
+/// relaxed r0 = r1 = 0 outcome under TSO (observed and
+/// checker-accepted) and never shows it under SC.
+#[test]
+fn sb_relaxed_outcome_under_tso_but_never_under_sc() {
+    let lt = litmus::store_buffering();
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+        for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+            let mut relaxed_seen = false;
+            for seed in 0..40u64 {
+                let w = jitter(&lt.workload, seed);
+                // TSO: every outcome TSO-legal, checker clean.
+                let tso = run_litmus(&w, protocol, model, Consistency::Tso);
+                let out = observed(&tso, &lt.observed);
+                assert!(
+                    (lt.allowed_tso)(&out),
+                    "SB {protocol:?}/{model:?} seed {seed}: TSO-illegal outcome {out:?}"
+                );
+                tso.check_consistency().unwrap_or_else(|v| {
+                    panic!("SB {protocol:?}/{model:?} seed {seed}: TSO violation {v:?}")
+                });
+                relaxed_seen |= out == [0, 0];
+                // SC: the relaxed outcome must not appear.
+                let sc = run_litmus(&w, protocol, model, Consistency::Sc);
+                let out = observed(&sc, &lt.observed);
+                assert!(
+                    (lt.allowed)(&out),
+                    "SB {protocol:?}/{model:?} seed {seed}: SC-forbidden outcome {out:?}"
+                );
+                sc.check_consistency().unwrap();
+            }
+            assert!(
+                relaxed_seen,
+                "SB {protocol:?}/{model:?}: store buffering never produced 0/0 under TSO"
+            );
+        }
+    }
+}
+
+/// TSO is multi-copy atomic: IRIW's disagreeing-readers outcome stays
+/// forbidden even with store buffers, because a store becomes visible
+/// to all other cores at once (its drain).
+#[test]
+fn iriw_store_atomicity_holds_under_tso() {
+    let lt = litmus::iriw();
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+        for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+            for seed in 0..40u64 {
+                let w = jitter(&lt.workload, seed);
+                let res = run_litmus(&w, protocol, model, Consistency::Tso);
+                let out = observed(&res, &lt.observed);
+                assert!(
+                    (lt.allowed_tso)(&out),
+                    "IRIW {protocol:?}/{model:?} seed {seed}: atomicity broken {out:?}"
+                );
+                res.check_consistency().unwrap();
+            }
+        }
+    }
+}
+
+/// The full litmus suite under TSO: every outcome within the TSO
+/// predicate and every log accepted by the TSO checker.
+#[test]
+fn litmus_suite_clean_under_tso() {
+    for lt in litmus::all() {
+        for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+            for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+                for seed in 0..15u64 {
+                    let w = jitter(&lt.workload, seed);
+                    let res = run_litmus(&w, protocol, model, Consistency::Tso);
+                    let out = observed(&res, &lt.observed);
+                    assert!(
+                        (lt.allowed_tso)(&out),
+                        "{} {protocol:?}/{model:?} seed {seed}: {out:?}",
+                        lt.name
+                    );
+                    res.check_consistency().unwrap_or_else(|v| {
+                        panic!("{} {protocol:?}/{model:?} seed {seed}: {v:?}", lt.name)
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Store-to-load forwarding: a core reads its own buffered store (the
+/// youngest one) before it drains; other cores still read the old
+/// value until the drain.  The forwarded records are validated by the
+/// checker's program-order rule.
+#[test]
+fn forwarding_returns_the_youngest_own_store() {
+    let x = SHARED_BASE + 0x40;
+    let w = Workload::new(vec![
+        Program::new(vec![store(x, 1), store(x, 2), load(x)]),
+        Program::new(vec![load(x)]),
+    ]);
+    for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+        let res = run_litmus(&w, ProtocolKind::Tardis, model, Consistency::Tso);
+        res.check_consistency().unwrap();
+        // Core 0's load must see its own youngest store.
+        let own = observed(&res, &[(0, 2)]);
+        assert_eq!(own, [2], "{model:?}: forwarding missed the youngest store");
+        assert!(res.stats.sb_forwards > 0, "{model:?}: load was not forwarded");
+        assert_eq!(res.stats.sb_stores, 2, "{model:?}: both stores should buffer");
+    }
+}
+
+/// Synchronization fences the buffer: lock-protected increments stay
+/// mutually exclusive under TSO (the release store is not reordered
+/// into the critical section of the next owner).
+#[test]
+fn locks_remain_mutually_exclusive_under_tso() {
+    use tardis_dsm::prog::{lock, unlock};
+    use tardis_dsm::types::LOCK_BASE;
+    let mut progs = Vec::new();
+    for c in 0..4u32 {
+        let mut ops = vec![];
+        for i in 0..8 {
+            ops.push(lock(LOCK_BASE));
+            ops.push(load(SHARED_BASE + 50));
+            ops.push(store(SHARED_BASE + 50, (c as u64) * 100 + i));
+            ops.push(unlock(LOCK_BASE));
+        }
+        progs.push(Program::new(ops));
+    }
+    let w = Workload::new(progs);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+        for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+            let res = run_litmus(&w, protocol, model, Consistency::Tso);
+            assert_eq!(res.stats.locks_acquired, 32, "{protocol:?}/{model:?}");
+            res.check_consistency().unwrap_or_else(|v| {
+                panic!("{protocol:?}/{model:?}: violation {v:?}")
+            });
+        }
+    }
+}
+
+/// Random mixed programs (stores, loads, locks, barriers) stay
+/// TSO-consistent on every protocol and core model — the property
+/// net for the store-buffer state machines.
+#[test]
+fn random_programs_are_tso_consistent() {
+    let gen = ProgGen {
+        n_cores: 4,
+        ops_per_core: 60,
+        store_pct: 45,
+        lock_pct: 10,
+        barrier_every: 17,
+        ..Default::default()
+    };
+    tardis_dsm::testutil::prop_check(10, 0x7503AB, |seed, rng| {
+        let w = gen.generate(rng);
+        for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+            for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+                let res = run_litmus(&w, protocol, model, Consistency::Tso);
+                res.check_consistency().unwrap_or_else(|v| {
+                    panic!("seed {seed:#x} {protocol:?}/{model:?}: {v:?}")
+                });
+                assert!(res.stats.sb_stores > 0, "seed {seed:#x}: no stores buffered");
+            }
+        }
+    });
+}
+
+/// Under SC nothing touches the store buffer: the counters stay zero
+/// and the engine's behavior is exactly the pre-TSO machine.
+#[test]
+fn sc_runs_never_touch_the_store_buffer() {
+    let gen = ProgGen::default();
+    let mut rng = Rng::new(0x5C);
+    let w = gen.generate(&mut rng);
+    for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+        let res = run_litmus(&w, ProtocolKind::Tardis, model, Consistency::Sc);
+        assert_eq!(res.stats.sb_stores, 0);
+        assert_eq!(res.stats.sb_forwards, 0);
+        assert_eq!(res.stats.sb_full_stalls, 0);
+        res.check_consistency().unwrap();
+    }
+}
