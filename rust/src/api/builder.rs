@@ -7,7 +7,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{
-    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SystemConfig, TardisConfig,
+    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, SystemConfig,
+    TardisConfig,
 };
 use crate::prog::checker::{AccessLog, CheckReport, Violation};
 use crate::prog::{Program, Workload};
@@ -145,6 +146,28 @@ impl SimBuilder {
         self
     }
 
+    /// ccNUMA socket count (default 1 = the flat single-chip mesh).
+    /// Must divide the core and memory-controller counts; checked at
+    /// [`SimBuilder::build`].
+    pub fn sockets(mut self, sockets: u32) -> Self {
+        self.cfg.topology.sockets = sockets;
+        self
+    }
+
+    /// Remote-to-local cost multiplier on inter-socket links
+    /// (latency and bandwidth; no effect on a 1-socket system).
+    pub fn numa_ratio(mut self, ratio: u32) -> Self {
+        self.cfg.topology.numa_ratio = ratio;
+        self
+    }
+
+    /// Address -> home-socket interleaving policy for the LLC-slice
+    /// and memory-controller maps.
+    pub fn interleave(mut self, policy: SocketInterleave) -> Self {
+        self.cfg.topology.interleave = policy;
+        self
+    }
+
     /// Tweak the Tardis knobs (lease, self-increment, speculation...).
     pub fn tardis(mut self, f: impl FnOnce(&mut TardisConfig)) -> Self {
         f(&mut self.cfg.tardis);
@@ -267,6 +290,29 @@ impl SimBuilder {
     /// Resolve the workload and validate the configuration.
     pub fn build(mut self) -> Result<SimSession> {
         let n_cores = self.cfg.n_cores;
+        let topo = self.cfg.topology;
+        if topo.sockets == 0 {
+            bail!("topology needs at least one socket");
+        }
+        if topo.sockets > 1 {
+            if n_cores % topo.sockets != 0 {
+                bail!(
+                    "{} cores do not divide evenly into {} sockets",
+                    n_cores,
+                    topo.sockets
+                );
+            }
+            if self.cfg.n_mcs % topo.sockets != 0 {
+                bail!(
+                    "{} memory controllers do not divide evenly into {} sockets",
+                    self.cfg.n_mcs,
+                    topo.sockets
+                );
+            }
+            if topo.numa_ratio == 0 {
+                bail!("numa_ratio must be >= 1");
+            }
+        }
         let trace_len = self.trace_len.unwrap_or_else(|| default_trace_len(n_cores));
         let workload: Arc<Workload> = match self.source {
             WorkloadSource::Unset => bail!(

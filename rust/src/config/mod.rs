@@ -120,6 +120,73 @@ impl LeasePolicyKind {
 /// Fig. 10 tension — "intelligent leasing" must avoid sync data).
 pub const DEFAULT_MAX_LEASE: u64 = 80;
 
+/// Address -> home-socket interleaving policy for the LLC slice
+/// (timestamp-manager / directory) and memory-controller maps
+/// ([`crate::mem::addr::SliceMap`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SocketInterleave {
+    /// Global line interleave across all slices (`addr % n_slices`) —
+    /// the flat single-chip mapping, distance-blind.
+    Line,
+    /// Block interleave: consecutive 8-line blocks share one home
+    /// socket, and a line's LLC slice and memory controller both live
+    /// on that socket (lines interleave across the socket's own
+    /// slices/controllers).  On one socket this degenerates to `Line`.
+    Block,
+}
+
+impl SocketInterleave {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "line" => Some(Self::Line),
+            "block" => Some(Self::Block),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Line => "line",
+            Self::Block => "block",
+        }
+    }
+}
+
+/// Fabric topology knobs ([`crate::net::Topology`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopologyConfig {
+    /// ccNUMA sockets; 1 = the flat single-chip mesh (today's
+    /// behavior, bit-for-bit).  Must divide `n_cores` and `n_mcs`.
+    pub sockets: u32,
+    /// Remote-to-local cost multiplier on inter-socket links: link
+    /// latency and serialization both scale by it (slower *and*
+    /// narrower than on-chip wires).  Ignored when `sockets == 1`.
+    pub numa_ratio: u32,
+    /// Address -> home-socket interleaving for slice/MC maps.
+    pub interleave: SocketInterleave,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        Self { sockets: 1, numa_ratio: 4, interleave: SocketInterleave::Line }
+    }
+}
+
+impl TopologyConfig {
+    pub fn is_flat(&self) -> bool {
+        self.sockets <= 1
+    }
+
+    /// The topology name the bench schema records.
+    pub fn name(&self) -> &'static str {
+        if self.is_flat() {
+            "flat"
+        } else {
+            "numa"
+        }
+    }
+}
+
 /// Tardis-specific knobs (paper Table V, §IV).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TardisConfig {
@@ -149,21 +216,14 @@ pub struct TardisConfig {
     /// storms.  0 (the default) disables the detector — like the other
     /// beyond-the-paper extensions, it is opt-in so the evaluated
     /// protocol and the bench trajectory keep their semantics.
+    ///
+    /// (The PR-4 `dynamic_lease`/`max_lease` aliases served out their
+    /// one-release deprecation window and are gone; set
+    /// `lease_policy = LeasePolicyKind::Dynamic { max_lease }`.)
     pub livelock_threshold: u32,
-    #[deprecated(
-        note = "set `lease_policy = LeasePolicyKind::Dynamic { max_lease }` instead; \
-                this alias is honored for one release (like the run_workload sunset)"
-    )]
-    pub dynamic_lease: bool,
-    #[deprecated(
-        note = "the cap now lives on LeasePolicyKind::{Dynamic, Predictive}; \
-                this alias is honored for one release"
-    )]
-    pub max_lease: u64,
 }
 
 impl Default for TardisConfig {
-    #[allow(deprecated)] // the sunset aliases still need defaults
     fn default() -> Self {
         Self {
             lease: 10,
@@ -176,22 +236,6 @@ impl Default for TardisConfig {
             exclusive_state: false,
             lease_policy: LeasePolicyKind::Static,
             livelock_threshold: 0,
-            dynamic_lease: false,
-            max_lease: DEFAULT_MAX_LEASE,
-        }
-    }
-}
-
-impl TardisConfig {
-    /// The lease policy to instantiate, honoring the deprecated
-    /// `dynamic_lease`/`max_lease` aliases when `lease_policy` was
-    /// left at its default (existing experiment specs keep parsing).
-    #[allow(deprecated)]
-    pub fn effective_lease_policy(&self) -> LeasePolicyKind {
-        if self.lease_policy == LeasePolicyKind::Static && self.dynamic_lease {
-            LeasePolicyKind::Dynamic { max_lease: self.max_lease }
-        } else {
-            self.lease_policy
         }
     }
 }
@@ -246,6 +290,8 @@ pub struct SystemConfig {
     pub hop_cycles: Cycle,
     /// Flit width in bits.
     pub flit_bits: u32,
+    /// Fabric topology: flat single-chip mesh or multi-socket ccNUMA.
+    pub topology: TopologyConfig,
 
     /// Misspeculation rollback cost added on a failed renewal (pipeline
     /// flush, like a branch mispredict).
@@ -285,6 +331,7 @@ impl Default for SystemConfig {
             dram_service_cycles: 7,
             hop_cycles: 2,
             flit_bits: 128,
+            topology: TopologyConfig::default(),
             rollback_penalty: 8,
             spin_poll_cycles: 1,
             max_cycles: 2_000_000_000,
@@ -368,17 +415,21 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_dynamic_lease_alias_still_resolves() {
-        assert_eq!(TardisConfig::default().effective_lease_policy(), LeasePolicyKind::Static);
-        let mut t =
-            TardisConfig { dynamic_lease: true, max_lease: 40, ..TardisConfig::default() };
-        assert_eq!(t.effective_lease_policy(), LeasePolicyKind::Dynamic { max_lease: 40 });
-        // An explicit policy wins over the alias.
-        t.lease_policy = LeasePolicyKind::Predictive { max_lease: 160 };
-        assert_eq!(
-            t.effective_lease_policy(),
-            LeasePolicyKind::Predictive { max_lease: 160 }
-        );
+    fn topology_defaults_to_flat() {
+        let t = SystemConfig::default().topology;
+        assert!(t.is_flat());
+        assert_eq!(t.name(), "flat");
+        assert_eq!(t.interleave, SocketInterleave::Line);
+        let numa = TopologyConfig { sockets: 4, ..t };
+        assert!(!numa.is_flat());
+        assert_eq!(numa.name(), "numa");
+    }
+
+    #[test]
+    fn interleave_parse_roundtrip() {
+        for i in [SocketInterleave::Line, SocketInterleave::Block] {
+            assert_eq!(SocketInterleave::parse(i.name()), Some(i));
+        }
+        assert_eq!(SocketInterleave::parse("hash"), None);
     }
 }

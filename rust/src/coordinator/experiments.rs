@@ -12,7 +12,8 @@ use anyhow::Result;
 use super::report::{geomean, pct, r3, Table};
 use super::{run_points, SimPoint, SimPointResult};
 use crate::config::{
-    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SystemConfig, DEFAULT_MAX_LEASE,
+    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, SystemConfig,
+    TopologyConfig, DEFAULT_MAX_LEASE,
 };
 use crate::prog::Workload;
 use crate::runtime::TraceRuntime;
@@ -332,66 +333,183 @@ pub fn fig9(ctx: &mut EvalCtx) -> Result<Table> {
     ))
 }
 
-/// Tardis 2.0 design space: every lease policy crossed with both
-/// consistency models, 64 cores, normalized to the MSI/SC baseline.
-/// One table reads off both follow-up claims — smarter leases cut
-/// renewal traffic, and TSO's store buffers buy throughput on top.
-pub fn lease_matrix(ctx: &mut EvalCtx) -> Result<Table> {
-    let mut variants =
-        vec![Variant { label: "msi".into(), cfg: base_cfg(64, ProtocolKind::Msi) }];
-    let policies = [
+/// Core counts the lease matrix (and its BENCH_5 trajectory) crosses
+/// (ROADMAP: extend the 64-core matrix across 16/256).
+pub const LEASE_MATRIX_CORES: [u32; 3] = [16, 64, 256];
+
+/// The lease-policy grid shared by the matrix and the bench suite.
+pub fn lease_policies() -> [(&'static str, LeasePolicyKind); 3] {
+    [
         ("static", LeasePolicyKind::Static),
         ("dynamic", LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE }),
         ("predictive", LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE }),
-    ];
-    // The Tardis variant labels, built in the same loop that builds
-    // the variants so the two can never drift apart.
-    let mut labels: Vec<String> = Vec::new();
-    for (pname, policy) in policies {
+    ]
+}
+
+/// The Tardis lease-policy x consistency variant grid at one core
+/// count (labels `{policy}-{model}`) — the single construction shared
+/// by [`lease_matrix`] and the bench lease suite, so the sweep table
+/// and the BENCH trajectory can never desynchronize.
+pub fn tardis_lease_variants(n_cores: u32) -> Vec<Variant> {
+    let mut variants = Vec::new();
+    for (pname, policy) in lease_policies() {
         for model in [Consistency::Sc, Consistency::Tso] {
-            let mut cfg = base_cfg(64, ProtocolKind::Tardis);
+            let mut cfg = base_cfg(n_cores, ProtocolKind::Tardis);
             cfg.tardis.lease_policy = policy;
             cfg.consistency = model;
-            let label = format!("{pname}-{}", model.name());
-            labels.push(label.clone());
-            variants.push(Variant { label, cfg });
+            variants.push(Variant { label: format!("{pname}-{}", model.name()), cfg });
         }
     }
-    let stats = sweep(ctx, 64, &variants)?;
-    // Flat layout: one row per (workload, variant) — six variants x
-    // five metrics would not fit a readable wide table.
+    variants
+}
+
+/// Tardis 2.0 design space: every lease policy crossed with both
+/// consistency models at 16 / 64 / 256 cores, normalized to the
+/// MSI/SC baseline at the same core count.  One table reads off both
+/// follow-up claims at every scale — smarter leases cut renewal
+/// traffic, and TSO's store buffers buy throughput on top.
+pub fn lease_matrix(ctx: &mut EvalCtx) -> Result<Table> {
+    // Flat layout: one row per (cores, workload, variant) — six
+    // variants x five metrics would not fit a readable wide table.
     let mut table = Table::new(
-        "Lease policy x consistency (64 cores; throughput vs MSI/SC)",
-        &["workload", "variant", "thr", "renew%", "misspec%", "avg lease", "sb fwd"],
+        "Lease policy x consistency x core count (throughput vs MSI/SC at equal cores)",
+        &["cores", "workload", "variant", "thr", "renew%", "misspec%", "avg lease", "sb fwd"],
     );
-    let mut thr_acc: HashMap<&str, Vec<f64>> = HashMap::new();
-    for spec in all_workloads() {
-        let base = &stats[&(spec.name.to_string(), "msi".to_string())];
+    for &n_cores in &LEASE_MATRIX_CORES {
+        let tardis_variants = tardis_lease_variants(n_cores);
+        // Labels taken from the variants themselves so the two can
+        // never drift apart.
+        let labels: Vec<String> = tardis_variants.iter().map(|v| v.label.clone()).collect();
+        let mut variants =
+            vec![Variant { label: "msi".into(), cfg: base_cfg(n_cores, ProtocolKind::Msi) }];
+        variants.extend(tardis_variants);
+        let stats = sweep(ctx, n_cores, &variants)?;
+        let mut thr_acc: HashMap<&str, Vec<f64>> = HashMap::new();
+        for spec in all_workloads() {
+            let base = &stats[&(spec.name.to_string(), "msi".to_string())];
+            for v in &labels {
+                let s = &stats[&(spec.name.to_string(), v.clone())];
+                let thr = base.cycles as f64 / s.cycles as f64;
+                thr_acc.entry(v.as_str()).or_default().push(thr);
+                table.row(vec![
+                    n_cores.to_string(),
+                    spec.name.to_string(),
+                    v.clone(),
+                    r3(thr),
+                    pct(s.renew_rate()),
+                    pct(s.misspeculation_rate()),
+                    format!("{:.1}", s.avg_lease()),
+                    s.sb_forwards.to_string(),
+                ]);
+            }
+        }
         for v in &labels {
-            let s = &stats[&(spec.name.to_string(), v.clone())];
-            let thr = base.cycles as f64 / s.cycles as f64;
-            thr_acc.entry(v.as_str()).or_default().push(thr);
             table.row(vec![
-                spec.name.to_string(),
+                n_cores.to_string(),
+                "AVG(geo)".into(),
                 v.clone(),
-                r3(thr),
-                pct(s.renew_rate()),
-                pct(s.misspeculation_rate()),
-                format!("{:.1}", s.avg_lease()),
-                s.sb_forwards.to_string(),
+                r3(geomean(&thr_acc[v.as_str()])),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
             ]);
         }
     }
-    for v in &labels {
-        table.row(vec![
-            "AVG(geo)".into(),
-            v.clone(),
-            r3(geomean(&thr_acc[v.as_str()])),
-            String::new(),
-            String::new(),
-            String::new(),
-            String::new(),
-        ]);
+    Ok(table)
+}
+
+// ------------------------------------------------------------------
+// The ccNUMA sweep (paper §VII: Tardis in distributed shared memory).
+// ------------------------------------------------------------------
+
+/// Inter-socket cost ratios the numa sweep crosses.
+pub const NUMA_RATIOS: [u32; 4] = [1, 2, 4, 8];
+
+/// Socket count of the headline numa sweep (64 cores -> 16 per
+/// socket).
+pub const NUMA_SOCKETS: u32 = 4;
+
+/// The four protocol variants at one numa-ratio point: the directory
+/// baselines, distance-blind Tardis, and NUMA-aware predictive
+/// Tardis.
+pub fn numa_variants(n_cores: u32, sockets: u32, ratio: u32) -> Vec<Variant> {
+    let mk = |protocol| {
+        let mut cfg = base_cfg(n_cores, protocol);
+        cfg.topology = TopologyConfig {
+            sockets,
+            numa_ratio: ratio,
+            interleave: SocketInterleave::Line,
+        };
+        cfg
+    };
+    let mut tardis_pred = mk(ProtocolKind::Tardis);
+    tardis_pred.tardis.lease_policy =
+        LeasePolicyKind::Predictive { max_lease: DEFAULT_MAX_LEASE };
+    vec![
+        Variant { label: format!("msi-r{ratio}"), cfg: mk(ProtocolKind::Msi) },
+        Variant { label: format!("ackwise-r{ratio}"), cfg: mk(ProtocolKind::Ackwise) },
+        Variant { label: format!("tardis-static-r{ratio}"), cfg: mk(ProtocolKind::Tardis) },
+        Variant { label: format!("tardis-predictive-r{ratio}"), cfg: tardis_pred },
+    ]
+}
+
+/// Run the numa grid (`ratios` x the four variants x all workloads)
+/// at one (core count, socket count); stats indexed by
+/// (workload, variant label).
+pub fn numa_sweep_stats(
+    ctx: &mut EvalCtx,
+    n_cores: u32,
+    sockets: u32,
+    ratios: &[u32],
+) -> Result<HashMap<(String, String), SimStats>> {
+    let mut variants = Vec::new();
+    for &r in ratios {
+        variants.extend(numa_variants(n_cores, sockets, r));
+    }
+    sweep(ctx, n_cores, &variants)
+}
+
+/// The ccNUMA sweep: Tardis vs the directory baselines as the
+/// inter-socket cost grows (64 cores, 4 sockets).  The §VII claim to
+/// read off: directory invalidation multicasts keep paying the socket
+/// links at every ratio, while Tardis renews owner-free — and the
+/// NUMA-aware predictive policy stretches remote leases with the
+/// ratio, so its inter-socket message count *falls* as links get more
+/// expensive.
+pub fn numa_sweep(ctx: &mut EvalCtx) -> Result<Table> {
+    let stats = numa_sweep_stats(ctx, 64, NUMA_SOCKETS, &NUMA_RATIOS)?;
+    let mut table = Table::new(
+        "ccNUMA sweep — 64 cores, 4 sockets (throughput vs MSI at equal ratio; \
+         messages summed over all workloads)",
+        &["ratio", "variant", "thr", "inter msgs", "intra msgs", "inter%", "renew%"],
+    );
+    for &ratio in &NUMA_RATIOS {
+        let baseline = format!("msi-r{ratio}");
+        for variant in ["msi", "ackwise", "tardis-static", "tardis-predictive"] {
+            let label = format!("{variant}-r{ratio}");
+            let mut thr = Vec::new();
+            let (mut inter, mut intra, mut renew, mut llc) = (0u64, 0u64, 0u64, 0u64);
+            for spec in all_workloads() {
+                let base = &stats[&(spec.name.to_string(), baseline.clone())];
+                let s = &stats[&(spec.name.to_string(), label.clone())];
+                thr.push(base.cycles as f64 / s.cycles as f64);
+                inter += s.socket.inter_msgs;
+                intra += s.socket.intra_msgs;
+                renew += s.renew_requests;
+                llc += s.llc_accesses;
+            }
+            let total = (inter + intra).max(1);
+            table.row(vec![
+                ratio.to_string(),
+                variant.to_string(),
+                r3(geomean(&thr)),
+                inter.to_string(),
+                intra.to_string(),
+                pct(inter as f64 / total as f64),
+                pct(renew as f64 / llc.max(1) as f64),
+            ]);
+        }
     }
     Ok(table)
 }

@@ -265,3 +265,68 @@ pub(crate) mod barrier {
         assert_eq!(target_sense(2), 1);
     }
 }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(addr: LineAddr, value: u64, pc: u32) -> SbEntry {
+        SbEntry { addr, value, pc }
+    }
+
+    /// Forwarding picks the *newest* buffered store per address, even
+    /// with several stores to one line interleaved with other lines —
+    /// and the in-flight head still forwards (it is not globally
+    /// visible until its completion).
+    #[test]
+    fn forward_returns_newest_store_per_address() {
+        let mut sb = StoreBuffer::default();
+        sb.push(entry(10, 1, 0));
+        sb.push(entry(20, 9, 1));
+        sb.push(entry(10, 2, 2));
+        sb.push(entry(10, 3, 3));
+        assert_eq!(sb.forward(10), Some(3), "newest of three buffered stores");
+        assert_eq!(sb.forward(20), Some(9));
+        assert_eq!(sb.forward(30), None);
+        // Head in flight: still forwards.
+        sb.set_inflight();
+        assert_eq!(sb.forward(10), Some(3));
+        assert_eq!(sb.inflight_addr(), Some(10));
+    }
+
+    /// The drain is strictly FIFO: heads pop in push order regardless
+    /// of address, and popping clears the in-flight mark so the next
+    /// head can issue (retirement ordering under back-pressure).
+    #[test]
+    fn drain_pops_heads_in_retirement_order() {
+        let mut sb = StoreBuffer::default();
+        for (i, addr) in [30u64, 10, 20, 10].iter().enumerate() {
+            sb.push(entry(*addr, i as u64, i as u32));
+        }
+        let mut drained = Vec::new();
+        while !sb.is_empty() {
+            sb.set_inflight();
+            assert!(sb.owns_completion(sb.inflight_addr().unwrap()));
+            let e = sb.pop_head();
+            assert!(!sb.inflight(), "pop must clear the in-flight mark");
+            drained.push((e.addr, e.value));
+        }
+        assert_eq!(drained, vec![(30, 0), (10, 1), (20, 2), (10, 3)]);
+    }
+
+    /// Completion ownership is precise: only the in-flight head's
+    /// address claims a Demand completion — an identical address
+    /// deeper in the buffer (or no in-flight drain at all) does not.
+    #[test]
+    fn completion_ownership_tracks_only_the_inflight_head() {
+        let mut sb = StoreBuffer::default();
+        sb.push(entry(10, 1, 0));
+        sb.push(entry(20, 2, 1));
+        assert!(!sb.owns_completion(10), "nothing in flight yet");
+        sb.set_inflight();
+        assert!(sb.owns_completion(10));
+        assert!(!sb.owns_completion(20), "only the head drains");
+        sb.pop_head();
+        assert!(!sb.owns_completion(20), "pop cleared the in-flight mark");
+    }
+}

@@ -22,7 +22,9 @@
 use anyhow::{anyhow, bail, Result};
 
 use tardis_dsm::api::SimBuilder;
-use tardis_dsm::config::{Consistency, CoreModel, LeasePolicyKind, ProtocolKind};
+use tardis_dsm::config::{
+    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, TopologyConfig,
+};
 use tardis_dsm::coordinator::experiments::{self, EvalCtx};
 use tardis_dsm::coordinator::report::Table;
 use tardis_dsm::prog::litmus;
@@ -153,13 +155,15 @@ USAGE:
              [--ooo] [--consistency sc|tso] [--lease N]
              [--lease-policy static|dynamic|predictive] [--self-inc N]
              [--no-spec] [--delta-bits N] [--scale-down N] [--progress N]
-  tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7|lease>
+             [--sockets N] [--numa-ratio N] [--interleave line|block]
+  tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7|lease|numa>
              [--threads N] [--scale-down N] [--out DIR]
   tardis litmus           run the litmus suite under all three protocols
   tardis case-study       cycle-by-cycle §V example, Tardis vs MSI
   tardis reproduce        regenerate every table and figure
-  tardis bench [--cores N] [--iters N] [--scale-down N] [--out FILE]
-               [--lease-policy static|dynamic|predictive]
+  tardis bench [--suite fig4|lease] [--cores N] [--iters N] [--scale-down N]
+               [--out FILE] [--lease-policy static|dynamic|predictive]
+               [--sockets N] [--numa-ratio N]
                           macro benchmark (fig-4 sweep, timed serially);
                           writes the machine-readable BENCH_*.json record
   tardis help             this message
@@ -190,6 +194,27 @@ fn run_builder(args: &Args) -> Result<SimBuilder> {
         let policy = LeasePolicyKind::parse(p)
             .ok_or_else(|| anyhow!("unknown lease policy {p:?} (static|dynamic|predictive)"))?;
         b = b.lease_policy(policy);
+    }
+    if args.has("sockets") {
+        b = b.sockets(args.get_u64("sockets", 1)? as u32);
+    }
+    if args.has("numa-ratio") {
+        b = b.numa_ratio(args.get_u64("numa-ratio", 1)? as u32);
+    }
+    if args.has("interleave") {
+        let i = args.get_str("interleave", "line")?;
+        let policy = SocketInterleave::parse(i)
+            .ok_or_else(|| anyhow!("unknown interleave {i:?} (line|block)"))?;
+        b = b.interleave(policy);
+    }
+    // NUMA knobs are inert on a 1-socket system: reject them loudly
+    // instead of simulating flat and letting the flags look honored.
+    if b.cfg().topology.is_flat() {
+        for flag in ["numa-ratio", "interleave"] {
+            if args.has(flag) {
+                bail!("--{flag} has no effect without --sockets >= 2");
+            }
+        }
     }
     let lease = args.get_u64("lease", 0)?;
     let self_inc = args.get_u64("self-inc", 0)?;
@@ -230,6 +255,9 @@ fn cmd_run(args: &Args) -> Result<()> {
             "delta-bits",
             "scale-down",
             "progress",
+            "sockets",
+            "numa-ratio",
+            "interleave",
         ],
         &["ooo", "no-spec"],
     )?;
@@ -308,6 +336,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         "table6" => emit(&experiments::table6(&mut ctx)?, out, "table6"),
         "table7" => emit(&experiments::table7(), out, "table7"),
         "lease" => emit(&experiments::lease_matrix(&mut ctx)?, out, "lease_matrix"),
+        "numa" => emit(&experiments::numa_sweep(&mut ctx)?, out, "numa_sweep"),
         other => bail!("unknown figure {other:?}"),
     }
 }
@@ -399,7 +428,12 @@ fn cmd_case_study() -> Result<()> {
 /// `tardis bench`: the tracked perf pipeline (DESIGN.md §6).  Runs
 /// the fig-4 macro sweep and writes a `tardis-bench-v1` JSON record.
 fn cmd_bench(args: &Args) -> Result<()> {
-    args.expect_only("bench", &["cores", "iters", "scale-down", "out", "lease-policy"], &[])?;
+    args.expect_only(
+        "bench",
+        &["suite", "cores", "iters", "scale-down", "out", "lease-policy", "sockets", "numa-ratio"],
+        &[],
+    )?;
+    let suite = args.get_str("suite", "fig4")?;
     let n_cores = args.get_u64("cores", 16)? as u32;
     let iters = args.get_u64("iters", 3)? as u32;
     let out = args.get_str("out", "BENCH_local.json")?;
@@ -412,14 +446,46 @@ fn cmd_bench(args: &Args) -> Result<()> {
     } else {
         None
     };
+    let topology = TopologyConfig {
+        sockets: args.get_u64("sockets", 1)? as u32,
+        numa_ratio: args.get_u64("numa-ratio", 4)? as u32,
+        ..TopologyConfig::default()
+    };
+    if args.has("numa-ratio") && topology.is_flat() {
+        bail!("--numa-ratio has no effect without --sockets >= 2");
+    }
     let mut ctx = eval_ctx(args)?;
-    println!(
-        "benchmarking fig-4 sweep at {n_cores} cores ({iters} iters, scale-down {})...",
-        ctx.scale_down
-    );
-    let report = tardis_dsm::coordinator::bench::run_macro_bench_with_policy(
-        &mut ctx, n_cores, iters, policy,
-    )?;
+    let report = match suite {
+        "fig4" => {
+            println!(
+                "benchmarking fig-4 sweep at {n_cores} cores ({iters} iters, scale-down {})...",
+                ctx.scale_down
+            );
+            tardis_dsm::coordinator::bench::run_macro_bench_with_opts(
+                &mut ctx,
+                n_cores,
+                iters,
+                tardis_dsm::coordinator::bench::BenchOpts { policy, topology },
+            )?
+        }
+        "lease" => {
+            // The lease suite fixes its own grid (16/64/256 cores,
+            // every policy, flat fabric): reject knobs it would
+            // otherwise silently drop.
+            for flag in ["cores", "lease-policy", "sockets", "numa-ratio"] {
+                if args.has(flag) {
+                    bail!("--{flag} does not apply to `bench --suite lease` \
+                           (the suite sweeps its own fixed grid)");
+                }
+            }
+            println!(
+                "benchmarking lease matrix at 16/64/256 cores ({iters} iters, scale-down {})...",
+                ctx.scale_down
+            );
+            tardis_dsm::coordinator::bench::run_lease_matrix_bench(&mut ctx, iters)?
+        }
+        other => bail!("unknown bench suite {other:?} (fig4|lease)"),
+    };
     println!("{}", report.summary());
     report.write(out)?;
     println!("wrote {out}");
@@ -443,6 +509,7 @@ fn cmd_reproduce(args: &Args) -> Result<()> {
     emit(&experiments::fig9(&mut ctx)?, out, "fig9")?;
     emit(&experiments::fig10(&mut ctx)?, out, "fig10")?;
     emit(&experiments::lease_matrix(&mut ctx)?, out, "lease_matrix")?;
+    emit(&experiments::numa_sweep(&mut ctx)?, out, "numa_sweep")?;
     println!("done.");
     Ok(())
 }

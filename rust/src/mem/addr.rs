@@ -1,21 +1,118 @@
 //! Address-to-home mapping: LLC slices and memory controllers are
-//! line-interleaved across the chip.
+//! line-interleaved across the chip — or, on a multi-socket system,
+//! interleaved with a socket-aware policy ([`SliceMap`]).
 
+use crate::config::{SocketInterleave, SystemConfig};
 use crate::types::{LineAddr, McId, SliceId};
 
-/// Home LLC slice (timestamp-manager / directory slice) of a line.
+/// Lines per home block: the granularity at which both the MC
+/// interleave and the `Block` socket interleave rotate homes.
+pub const HOME_BLOCK_LINES: u64 = 8;
+
+/// Home LLC slice (timestamp-manager / directory slice) of a line
+/// under the flat global line interleave.
 pub fn home_slice(addr: LineAddr, n_slices: u32) -> SliceId {
     (addr % n_slices as u64) as SliceId
 }
 
-/// Memory controller serving a line.
+/// Memory controller serving a line under the flat block interleave.
 pub fn home_mc(addr: LineAddr, n_mcs: u32) -> McId {
-    ((addr / 8) % n_mcs as u64) as McId
+    ((addr / HOME_BLOCK_LINES) % n_mcs as u64) as McId
+}
+
+/// The address -> (LLC slice, memory controller) map a protocol homes
+/// requests through, configured once from [`SystemConfig`] (the
+/// protocols used to hard-code `home_mc(addr, 8)`).
+///
+/// With `SocketInterleave::Line` — or on any single-socket system —
+/// it is bit-for-bit the flat [`home_slice`]/[`home_mc`] maps.  With
+/// `Block` on a multi-socket system, consecutive 8-line blocks rotate
+/// across sockets and a line's slice *and* controller both live on
+/// its home socket, so a block's coherence and DRAM traffic stay
+/// socket-local.
+#[derive(Debug, Clone, Copy)]
+pub struct SliceMap {
+    n_slices: u32,
+    n_mcs: u32,
+    n_sockets: u32,
+    slices_per_socket: u32,
+    mcs_per_socket: u32,
+    interleave: SocketInterleave,
+}
+
+impl SliceMap {
+    pub fn new(cfg: &SystemConfig) -> Self {
+        let n_sockets = cfg.topology.sockets.max(1);
+        Self {
+            n_slices: cfg.n_cores,
+            n_mcs: cfg.n_mcs,
+            n_sockets,
+            slices_per_socket: (cfg.n_cores / n_sockets).max(1),
+            mcs_per_socket: (cfg.n_mcs / n_sockets).max(1),
+            interleave: cfg.topology.interleave,
+        }
+    }
+
+    /// Home socket of a line under `Block` interleave (its only
+    /// caller; `Line` homing does not rotate by block — a Line-homed
+    /// line's socket is wherever `addr % n_slices` happens to land).
+    fn home_socket(&self, addr: LineAddr) -> u64 {
+        (addr / HOME_BLOCK_LINES) % self.n_sockets as u64
+    }
+
+    /// Index of a line's block within its home socket's block
+    /// sequence.  Local slice/MC indices must derive from this — not
+    /// from raw address bits, which are correlated with the socket
+    /// selector and would leave a gcd-dependent subset of each
+    /// socket's slices/controllers permanently unhomed.
+    fn socket_block(&self, addr: LineAddr) -> u64 {
+        (addr / HOME_BLOCK_LINES) / self.n_sockets as u64
+    }
+
+    #[inline]
+    pub fn home_slice(&self, addr: LineAddr) -> SliceId {
+        match self.interleave {
+            SocketInterleave::Line => home_slice(addr, self.n_slices),
+            SocketInterleave::Block => {
+                let socket = self.home_socket(addr);
+                // The line's position in the socket's concatenated
+                // block sequence, line-interleaved over its slices
+                // (degenerates to the flat map at one socket).
+                let line_in_socket =
+                    self.socket_block(addr) * HOME_BLOCK_LINES + addr % HOME_BLOCK_LINES;
+                let local = line_in_socket % self.slices_per_socket as u64;
+                (socket * self.slices_per_socket as u64 + local) as SliceId
+            }
+        }
+    }
+
+    #[inline]
+    pub fn home_mc(&self, addr: LineAddr) -> McId {
+        match self.interleave {
+            SocketInterleave::Line => home_mc(addr, self.n_mcs),
+            SocketInterleave::Block => {
+                let socket = self.home_socket(addr);
+                let local = self.socket_block(addr) % self.mcs_per_socket as u64;
+                (socket * self.mcs_per_socket as u64 + local) as McId
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::TopologyConfig;
+
+    fn map(n_cores: u32, n_mcs: u32, sockets: u32, interleave: SocketInterleave) -> SliceMap {
+        let cfg = SystemConfig {
+            n_cores,
+            n_mcs,
+            topology: TopologyConfig { sockets, interleave, ..TopologyConfig::default() },
+            ..SystemConfig::default()
+        };
+        SliceMap::new(&cfg)
+    }
 
     #[test]
     fn slice_interleave_covers_all() {
@@ -31,5 +128,46 @@ mod tests {
         // 8-line blocks map to the same MC, consecutive blocks rotate.
         assert_eq!(home_mc(0, 8), home_mc(7, 8));
         assert_ne!(home_mc(0, 8), home_mc(8, 8));
+    }
+
+    #[test]
+    fn line_map_matches_flat_functions_exactly() {
+        // The default map is bit-for-bit the flat interleave, however
+        // many sockets the fabric has.
+        for sockets in [1u32, 2, 4] {
+            let m = map(64, 8, sockets, SocketInterleave::Line);
+            for addr in 0..512u64 {
+                assert_eq!(m.home_slice(addr), home_slice(addr, 64));
+                assert_eq!(m.home_mc(addr), home_mc(addr, 8));
+            }
+        }
+    }
+
+    #[test]
+    fn block_map_on_one_socket_degenerates_to_line() {
+        let m = map(64, 8, 1, SocketInterleave::Block);
+        for addr in 0..512u64 {
+            assert_eq!(m.home_slice(addr), home_slice(addr, 64));
+            assert_eq!(m.home_mc(addr), home_mc(addr, 8));
+        }
+    }
+
+    #[test]
+    fn block_map_keeps_slice_and_mc_on_the_home_socket() {
+        // 64 slices / 8 MCs over 4 sockets: 16 slices + 2 MCs each.
+        let m = map(64, 8, 4, SocketInterleave::Block);
+        for addr in 0..4096u64 {
+            let slice_socket = m.home_slice(addr) / 16;
+            let mc_socket = m.home_mc(addr) / 2;
+            assert_eq!(slice_socket, mc_socket, "addr {addr} split across sockets");
+            // An 8-line block never straddles sockets.
+            assert_eq!(slice_socket as u64, (addr / 8) % 4);
+        }
+        // All slices and controllers are reachable.
+        let slices: std::collections::BTreeSet<u32> =
+            (0..4096u64).map(|a| m.home_slice(a)).collect();
+        assert_eq!(slices.len(), 64);
+        let mcs: std::collections::BTreeSet<u32> = (0..4096u64).map(|a| m.home_mc(a)).collect();
+        assert_eq!(mcs.len(), 8);
     }
 }

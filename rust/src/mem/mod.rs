@@ -5,5 +5,6 @@ pub mod addr;
 pub mod cache;
 pub mod dram;
 
+pub use addr::SliceMap;
 pub use cache::SetAssoc;
 pub use dram::Dram;

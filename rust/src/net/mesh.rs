@@ -4,6 +4,7 @@
 //! counts are exact and drive the traffic statistics.
 
 use super::message::{Message, Node};
+use super::topology::RouteInfo;
 use crate::types::{Cycle, McId};
 
 /// The on-chip interconnect.  Core `i` and LLC slice `i` share tile
@@ -78,6 +79,17 @@ impl Mesh {
 
     pub fn dim(&self) -> u32 {
         self.dim
+    }
+
+    /// Latency + traffic + hops in one pass (the [`super::Topology`]
+    /// entry point — one hop computation instead of the separate
+    /// [`Mesh::latency`] / [`Mesh::traffic_flits`] calls; identical
+    /// arithmetic, asserted by `flat_route_matches_mesh_methods_*`).
+    #[inline]
+    pub fn route(&self, msg: &Message) -> RouteInfo {
+        super::topology::mesh_segment(self.hops(msg.src, msg.dst), self.hop_cycles, || {
+            msg.kind.flits(self.flit_bits)
+        })
     }
 }
 

@@ -1,7 +1,10 @@
-//! On-chip network: message formats and the 2-D mesh timing/traffic model.
+//! Interconnect: message formats, the flat 2-D mesh timing/traffic
+//! model, and the hierarchical ccNUMA topology layer above it.
 
 pub mod mesh;
 pub mod message;
+pub mod topology;
 
 pub use mesh::Mesh;
 pub use message::{Message, MsgClass, MsgKind, MsgSlab, Node};
+pub use topology::{NumaFabric, NumaView, RouteInfo, Topology};

@@ -1,0 +1,402 @@
+//! Hierarchical ccNUMA network topology (paper §VII: Tardis in
+//! *distributed* shared memory).
+//!
+//! The flat single-chip [`Mesh`] generalizes into a [`Topology`] enum
+//! dispatched like [`crate::proto::ProtocolDispatch`]: [`Topology::Flat`]
+//! wraps the unchanged `Mesh` (bit-for-bit the pre-topology behavior),
+//! and [`Topology::Numa`] models N sockets, each an intra-socket mesh
+//! of tiles with its own timestamp-manager / directory slices and
+//! memory controllers, joined by point-to-point inter-socket links
+//! that are both slower (`numa_ratio` x the per-hop latency) and
+//! narrower (`numa_ratio` x the per-flit serialization) than on-chip
+//! wires — the classic NUMA factor.
+//!
+//! Every message resolves to one [`RouteInfo`]: end-to-end latency,
+//! flits entering the network, mesh hops traversed inside sockets, and
+//! inter-socket links crossed.  The engine charges latency from it and
+//! splits the traffic statistics into intra- vs inter-socket classes
+//! ([`crate::stats::SocketStats`]), which the `numa` sweep reads off
+//! to show Tardis's owner-free renewals beating directory multicasts
+//! as the inter-socket cost grows.
+
+use super::mesh::Mesh;
+use super::message::{Message, Node};
+use crate::config::SystemConfig;
+use crate::types::{CoreId, Cycle, SliceId};
+
+/// The resolved path of one message through the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteInfo {
+    /// End-to-end delivery latency in cycles.
+    pub latency: Cycle,
+    /// Flits this message contributes to network traffic (0 when the
+    /// endpoints share a tile and the message never enters the mesh).
+    pub flits: u64,
+    /// Mesh hops traversed inside sockets (both end segments of a
+    /// cross-socket route).
+    pub mesh_hops: u32,
+    /// Inter-socket links crossed (0 = the route stayed on one socket).
+    pub socket_hops: u32,
+}
+
+/// One on-chip mesh segment resolved to a [`RouteInfo`] — the single
+/// source of the flat timing arithmetic, shared by [`Mesh::route`]
+/// and the intra-socket arm of [`NumaFabric::route`] so the two can
+/// never diverge.  A same-tile message is a 1-cycle controller
+/// hand-off that never enters the network; `flits` is lazy so the
+/// fast path skips the size computation.
+pub(crate) fn mesh_segment(
+    hops: u32,
+    hop_cycles: Cycle,
+    flits: impl FnOnce() -> u64,
+) -> RouteInfo {
+    if hops == 0 {
+        return RouteInfo { latency: 1, flits: 0, mesh_hops: 0, socket_hops: 0 };
+    }
+    let flits = flits();
+    RouteInfo {
+        latency: hop_cycles * hops as Cycle + flits,
+        flits,
+        mesh_hops: hops,
+        socket_hops: 0,
+    }
+}
+
+/// The statically dispatched interconnect (the [`ProtocolDispatch`]
+/// pattern): adding a fabric means adding an enum arm here — the
+/// engine and protocols are untouched.
+///
+/// [`ProtocolDispatch`]: crate::proto::ProtocolDispatch
+#[derive(Debug, Clone)]
+pub enum Topology {
+    /// Single-chip 2-D mesh (the pre-topology network, unchanged).
+    Flat(Mesh),
+    /// Multi-socket ccNUMA fabric.
+    Numa(NumaFabric),
+}
+
+impl Topology {
+    /// Instantiate the fabric selected by `cfg.topology` (1 socket =
+    /// the flat mesh).
+    pub fn new(cfg: &SystemConfig) -> Self {
+        if cfg.topology.is_flat() {
+            Self::Flat(Mesh::new(cfg.n_cores, cfg.n_mcs, cfg.hop_cycles, cfg.flit_bits))
+        } else {
+            Self::Numa(NumaFabric::new(
+                cfg.n_cores,
+                cfg.n_mcs,
+                cfg.topology.sockets,
+                cfg.topology.numa_ratio,
+                cfg.hop_cycles,
+                cfg.flit_bits,
+            ))
+        }
+    }
+
+    /// Resolve a message's route: latency, traffic flits, hop split.
+    #[inline]
+    pub fn route(&self, msg: &Message) -> RouteInfo {
+        match self {
+            Self::Flat(m) => m.route(msg),
+            Self::Numa(f) => f.route(msg),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Flat(_) => "flat",
+            Self::Numa(_) => "numa",
+        }
+    }
+}
+
+/// A multi-socket ccNUMA fabric: `n_sockets` sockets, each owning a
+/// contiguous block of `tiles_per_socket` tiles arranged as its own
+/// 2-D XY-routed mesh, fully connected socket-to-socket (UPI-style
+/// point-to-point links; one link crossing per remote message).
+///
+/// Tile numbering is global and socket-major: socket `s` owns tiles
+/// `[s * tiles_per_socket, (s + 1) * tiles_per_socket)`.  Memory
+/// controllers spread evenly over the global tile sequence (the
+/// [`Mesh::mc_tile`] formula), which lands `n_mcs / n_sockets` of them
+/// on each socket.
+#[derive(Debug, Clone)]
+pub struct NumaFabric {
+    n_tiles: u32,
+    n_mcs: u32,
+    tiles_per_socket: u32,
+    /// Per-socket mesh side length (ceil(sqrt(tiles_per_socket))).
+    dim: u32,
+    hop_cycles: Cycle,
+    flit_bits: u32,
+    numa_ratio: u32,
+}
+
+impl NumaFabric {
+    pub fn new(
+        n_tiles: u32,
+        n_mcs: u32,
+        n_sockets: u32,
+        numa_ratio: u32,
+        hop_cycles: Cycle,
+        flit_bits: u32,
+    ) -> Self {
+        assert!(n_sockets >= 1, "a fabric needs at least one socket");
+        assert_eq!(
+            n_tiles % n_sockets,
+            0,
+            "tile count {n_tiles} must divide evenly into {n_sockets} sockets"
+        );
+        let tiles_per_socket = n_tiles / n_sockets;
+        let dim = (tiles_per_socket as f64).sqrt().ceil() as u32;
+        Self {
+            n_tiles,
+            n_mcs,
+            tiles_per_socket,
+            dim,
+            hop_cycles,
+            flit_bits,
+            numa_ratio: numa_ratio.max(1),
+        }
+    }
+
+    /// Global tile index of a node (same mapping as [`Mesh::tile_of`]).
+    fn tile_of(&self, node: Node) -> u32 {
+        match node {
+            Node::Core(c) => c % self.n_tiles,
+            Node::Slice(s) => s % self.n_tiles,
+            // Spread controllers evenly over the global tile sequence
+            // (multiply before dividing, like Mesh::mc_tile).
+            Node::Mc(m) => {
+                ((m % self.n_mcs) as u64 * self.n_tiles as u64 / self.n_mcs as u64) as u32
+            }
+        }
+    }
+
+    fn socket_of(&self, tile: u32) -> u32 {
+        tile / self.tiles_per_socket
+    }
+
+    /// XY hop count between two tiles of the *same* socket.
+    fn local_hops(&self, a: u32, b: u32) -> u32 {
+        let (la, lb) = (a % self.tiles_per_socket, b % self.tiles_per_socket);
+        let (ax, ay) = (la % self.dim, la / self.dim);
+        let (bx, by) = (lb % self.dim, lb / self.dim);
+        ax.abs_diff(bx) + ay.abs_diff(by)
+    }
+
+    /// The socket's gateway tile (where its inter-socket link attaches):
+    /// the socket's first tile, mesh coordinate (0, 0).
+    fn gateway(&self, socket: u32) -> u32 {
+        socket * self.tiles_per_socket
+    }
+
+    pub fn route(&self, msg: &Message) -> RouteInfo {
+        let ta = self.tile_of(msg.src);
+        let tb = self.tile_of(msg.dst);
+        let (sa, sb) = (self.socket_of(ta), self.socket_of(tb));
+        if sa == sb {
+            // Intra-socket: the flat mesh arithmetic over the socket's
+            // sub-mesh (1-socket fabrics reproduce Flat bit-for-bit —
+            // see the equivalence test below).
+            return mesh_segment(self.local_hops(ta, tb), self.hop_cycles, || {
+                msg.kind.flits(self.flit_bits)
+            });
+        }
+        // Cross-socket: mesh to the local gateway, one socket link
+        // (numa_ratio x a mesh hop), mesh from the remote gateway —
+        // and the payload serializes at the link's 1/numa_ratio
+        // bandwidth instead of on-chip flit rate.
+        let ratio = self.numa_ratio as u64;
+        let mesh_hops = self.local_hops(ta, self.gateway(sa)) + self.local_hops(self.gateway(sb), tb);
+        let flits = msg.kind.flits(self.flit_bits);
+        RouteInfo {
+            latency: self.hop_cycles * mesh_hops as Cycle + self.hop_cycles * ratio + flits * ratio,
+            flits,
+            mesh_hops,
+            socket_hops: 1,
+        }
+    }
+}
+
+/// A compact, copyable view of the socket layout for protocol-side
+/// NUMA awareness (the timestamp managers ask it how far a requester
+/// sits so the lease policy can stretch leases on remote lines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NumaView {
+    pub n_sockets: u32,
+    pub tiles_per_socket: u32,
+    pub numa_ratio: u32,
+}
+
+impl NumaView {
+    pub fn from_config(cfg: &SystemConfig) -> Self {
+        let n_sockets = cfg.topology.sockets.max(1);
+        Self {
+            n_sockets,
+            tiles_per_socket: (cfg.n_cores / n_sockets).max(1),
+            numa_ratio: cfg.topology.numa_ratio.max(1),
+        }
+    }
+
+    /// Socket of a core's tile.
+    pub fn socket_of_core(&self, core: CoreId) -> u32 {
+        core / self.tiles_per_socket
+    }
+
+    /// Socket of an LLC slice's tile (core `i` and slice `i` share
+    /// tile `i`).
+    pub fn socket_of_slice(&self, slice: SliceId) -> u32 {
+        slice / self.tiles_per_socket
+    }
+
+    /// Lease-stretch factor for a shared grant from `slice` to `core`:
+    /// 1 on the local socket (and on flat systems), `numa_ratio` when
+    /// the grant crosses a socket link — a remote renewal costs
+    /// numa_ratio x as much, so a numa_ratio x longer lease amortizes
+    /// it (Tardis 2.0's self-tuning argument applied to distance).
+    pub fn lease_stretch(&self, slice: SliceId, core: CoreId) -> u64 {
+        if self.n_sockets > 1 && self.socket_of_slice(slice) != self.socket_of_core(core) {
+            self.numa_ratio as u64
+        } else {
+            1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TopologyConfig;
+    use crate::net::message::MsgKind;
+
+    fn msg(src: Node, dst: Node, kind: MsgKind) -> Message {
+        Message { src, dst, addr: 0, requester: 0, kind }
+    }
+
+    /// Every node of a 64-tile, 8-MC system.
+    fn all_nodes() -> Vec<Node> {
+        let mut v = Vec::new();
+        for i in 0..64 {
+            v.push(Node::Core(i));
+            v.push(Node::Slice(i));
+        }
+        for m in 0..8 {
+            v.push(Node::Mc(m));
+        }
+        v
+    }
+
+    /// `Topology::Flat` must reproduce the raw `Mesh` timing and
+    /// traffic arithmetic exactly, for every endpoint pair and both
+    /// message sizes (the flat-vs-legacy bit-for-bit guarantee).
+    #[test]
+    fn flat_route_matches_mesh_methods_exhaustively() {
+        let mesh = Mesh::new(64, 8, 2, 128);
+        let topo = Topology::Flat(mesh.clone());
+        for &a in &all_nodes() {
+            for &b in &all_nodes() {
+                for kind in [MsgKind::GetS, MsgKind::DataS { value: 0 }] {
+                    let m = msg(a, b, kind);
+                    let info = topo.route(&m);
+                    assert_eq!(info.latency, mesh.latency(&m), "{a:?}->{b:?}");
+                    assert_eq!(info.flits, mesh.traffic_flits(&m), "{a:?}->{b:?}");
+                    assert_eq!(info.socket_hops, 0);
+                    assert_eq!(info.mesh_hops > 0, info.flits > 0);
+                }
+            }
+        }
+    }
+
+    /// A 1-socket NumaFabric degenerates to the flat mesh: identical
+    /// RouteInfo for every pair — the hierarchical code path cannot
+    /// perturb flat results.
+    #[test]
+    fn single_socket_fabric_is_bit_identical_to_flat() {
+        let flat = Topology::Flat(Mesh::new(64, 8, 2, 128));
+        let numa = NumaFabric::new(64, 8, 1, 4, 2, 128);
+        for &a in &all_nodes() {
+            for &b in &all_nodes() {
+                for kind in [MsgKind::GetS, MsgKind::DataX { value: 0 }] {
+                    let m = msg(a, b, kind);
+                    assert_eq!(numa.route(&m), flat.route(&m), "{a:?}->{b:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cross_socket_routes_pay_the_numa_factor() {
+        // 64 tiles, 2 sockets of 32 (dim 6), ratio 4, hop 2.
+        let f = NumaFabric::new(64, 8, 2, 4, 2, 128);
+        // Core 0 (socket 0 gateway) -> slice 32 (socket 1 gateway):
+        // 0 mesh hops, 1 link.  Control: 2*4 link + 1*4 flit = 12.
+        let local_gw = msg(Node::Core(0), Node::Slice(32), MsgKind::GetS);
+        let info = f.route(&local_gw);
+        assert_eq!(info.socket_hops, 1);
+        assert_eq!(info.mesh_hops, 0);
+        assert_eq!(info.flits, 1);
+        assert_eq!(info.latency, 2 * 4 + 4);
+        // Data message: 5 flits serialize at 1/4 bandwidth.
+        let data = msg(Node::Slice(32), Node::Core(0), MsgKind::DataS { value: 0 });
+        assert_eq!(f.route(&data).latency, 2 * 4 + 5 * 4);
+        // Same-socket messages never cross a link and match mesh
+        // arithmetic: core 0 -> slice 1 is 1 hop.
+        let local = msg(Node::Core(0), Node::Slice(1), MsgKind::GetS);
+        assert_eq!(
+            f.route(&local),
+            RouteInfo { latency: 3, flits: 1, mesh_hops: 1, socket_hops: 0 }
+        );
+    }
+
+    #[test]
+    fn remote_latency_exceeds_local_and_grows_with_ratio() {
+        let data = msg(Node::Core(1), Node::Slice(40), MsgKind::DataS { value: 0 });
+        let mut last = 0;
+        for ratio in [1, 2, 4, 8] {
+            let f = NumaFabric::new(64, 8, 4, ratio, 2, 128);
+            let lat = f.route(&data).latency;
+            assert!(lat > last, "latency must grow with numa_ratio");
+            last = lat;
+        }
+        // At ratio 1 a remote route still pays the link crossing but
+        // at mesh cost (a 4-socket fabric is never faster than flat).
+        let flat = Mesh::new(64, 8, 2, 128);
+        let f1 = NumaFabric::new(64, 8, 4, 1, 2, 128);
+        assert!(f1.route(&data).latency >= 1 + flat.traffic_flits(&data));
+    }
+
+    #[test]
+    fn mcs_spread_across_sockets() {
+        // 8 MCs over 64 tiles in 4 sockets: 2 controllers per socket.
+        let f = NumaFabric::new(64, 8, 4, 4, 2, 128);
+        let mut per_socket = [0u32; 4];
+        for m in 0..8 {
+            per_socket[f.socket_of(f.tile_of(Node::Mc(m))) as usize] += 1;
+        }
+        assert_eq!(per_socket, [2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn numa_view_distance_and_stretch() {
+        let v = NumaView { n_sockets: 4, tiles_per_socket: 16, numa_ratio: 4 };
+        assert_eq!(v.socket_of_core(0), 0);
+        assert_eq!(v.socket_of_core(15), 0);
+        assert_eq!(v.socket_of_core(16), 1);
+        assert_eq!(v.socket_of_slice(63), 3);
+        // Local grant: no stretch.  Remote: numa_ratio.
+        assert_eq!(v.lease_stretch(3, 5), 1);
+        assert_eq!(v.lease_stretch(3, 21), 4);
+        // Flat systems never stretch, whatever the ratio says.
+        let flat = NumaView { n_sockets: 1, tiles_per_socket: 64, numa_ratio: 4 };
+        assert_eq!(flat.lease_stretch(0, 63), 1);
+    }
+
+    #[test]
+    fn topology_constructor_selects_by_socket_count() {
+        let mut cfg = SystemConfig::default();
+        assert_eq!(Topology::new(&cfg).name(), "flat");
+        cfg.topology = TopologyConfig { sockets: 2, ..cfg.topology };
+        assert_eq!(Topology::new(&cfg).name(), "numa");
+    }
+}

@@ -5,7 +5,6 @@ use std::collections::VecDeque;
 
 use super::sharers::InvTargets;
 use super::*;
-use crate::mem::addr::home_mc;
 
 impl Msi {
     pub(crate) fn dir_on_message(&mut self, slice: SliceId, msg: Message, ctx: &mut ProtoCtx) {
@@ -49,7 +48,7 @@ impl Msi {
             p.waiters.push_back(req);
             self.dir[s].pending.insert(addr, p);
             ctx.stats.dram_accesses += 1;
-            let mc = home_mc(addr, 8);
+            let mc = self.map.home_mc(addr);
             ctx.send(Message {
                 src: Node::Slice(slice),
                 dst: Node::Mc(mc),
@@ -236,7 +235,7 @@ impl Msi {
             let Some(line) = self.dir[s].cache.peek_mut(addr) else {
                 // Owned line fell out of the directory: write through.
                 ctx.stats.dram_accesses += 1;
-                let mc = home_mc(addr, 8);
+                let mc = self.map.home_mc(addr);
                 ctx.send(Message {
                     src: Node::Slice(slice),
                     dst: Node::Mc(mc),
@@ -377,7 +376,7 @@ impl Msi {
         debug_assert!(line.owner.is_none() && line.sharers.is_empty());
         if line.dirty {
             ctx.stats.dram_accesses += 1;
-            let mc = home_mc(addr, 8);
+            let mc = self.map.home_mc(addr);
             ctx.send(Message {
                 src: Node::Slice(slice),
                 dst: Node::Mc(mc),

@@ -9,8 +9,7 @@ mod sharers;
 
 use crate::config::SystemConfig;
 use crate::hashing::FxHashMap;
-use crate::mem::addr::home_slice;
-use crate::mem::SetAssoc;
+use crate::mem::{SetAssoc, SliceMap};
 use crate::net::{Message, MsgKind, Node};
 use crate::proto::{
     AccessOutcome, Coherence, Completion, CompletionKind, MemOp, ProtoCtx, SpinHint,
@@ -101,6 +100,8 @@ pub struct Msi {
     n_cores: u32,
     /// None = full-map bit vector; Some(k) = Ackwise-k pointers.
     ptr_limit: Option<u32>,
+    /// Address -> home slice / memory-controller map (socket-aware).
+    map: SliceMap,
     l1: Vec<MsiL1>,
     dir: Vec<DirSlice>,
 }
@@ -114,6 +115,7 @@ impl Msi {
         Self {
             n_cores: sys.n_cores,
             ptr_limit,
+            map: SliceMap::new(sys),
             l1: (0..sys.n_cores)
                 .map(|_| MsiL1 {
                     cache: SetAssoc::new(sys.l1_sets, sys.l1_ways),
@@ -131,7 +133,7 @@ impl Msi {
     }
 
     pub(crate) fn slice_of(&self, addr: LineAddr) -> SliceId {
-        home_slice(addr, self.n_cores)
+        self.map.home_slice(addr)
     }
 
     pub(crate) fn new_sharers(&self) -> Sharers {

@@ -13,9 +13,8 @@ mod tm;
 
 use crate::config::{SystemConfig, TardisConfig};
 use crate::hashing::FxHashMap;
-use crate::mem::addr::home_slice;
-use crate::mem::SetAssoc;
-use crate::net::{Message, MsgKind, Node};
+use crate::mem::{SetAssoc, SliceMap};
+use crate::net::{Message, MsgKind, Node, NumaView};
 use crate::proto::ts::{LeasePolicy, LineLease, LivelockGuard};
 use crate::proto::{
     AccessOutcome, Coherence, Completion, CompletionKind, MemOp, ProtoCtx, SpinHint,
@@ -113,6 +112,11 @@ pub struct Tardis {
     pub(crate) tm: Vec<Tm>,
     /// Lease-assignment policy (timestamp-policy layer, proto/ts).
     pub(crate) lease_policy: LeasePolicy,
+    /// Address -> home slice / memory-controller map (socket-aware).
+    pub(crate) map: SliceMap,
+    /// Socket layout view: lets the timestamp managers see how far a
+    /// requester sits so the lease policy can stretch remote leases.
+    pub(crate) numa: NumaView,
     /// Renewal-starvation detector (proto/ts).
     pub(crate) guard: LivelockGuard,
     /// 2^delta_ts_bits (saturating); timestamps must satisfy
@@ -132,6 +136,8 @@ impl Tardis {
         };
         Self {
             lease_policy: LeasePolicy::new(&cfg),
+            map: SliceMap::new(sys),
+            numa: NumaView::from_config(sys),
             guard: LivelockGuard::new(cfg.livelock_threshold),
             cfg,
             n_cores: sys.n_cores,
@@ -165,7 +171,7 @@ impl Tardis {
     }
 
     pub(crate) fn slice_of(&self, addr: LineAddr) -> SliceId {
-        home_slice(addr, self.n_cores)
+        self.map.home_slice(addr)
     }
 
     /// Raise a core's pts, attributing the increase in the stats.

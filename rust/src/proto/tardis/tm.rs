@@ -3,7 +3,6 @@
 use std::collections::VecDeque;
 
 use super::*;
-use crate::mem::addr::home_mc;
 
 /// A queued request at a TM line that is busy (DRAM fetch or owner
 /// round-trip in flight).
@@ -101,6 +100,10 @@ impl Tardis {
         // The policy is Copy: take it by value so it can update the
         // line's lease state while the line borrows the cache array.
         let policy = self.lease_policy;
+        // NUMA distance of the requester from this manager slice: a
+        // remote grant's renewals cross a socket link, so the lease
+        // policy may stretch the lease to amortize them (1 = local).
+        let stretch = self.numa.lease_stretch(slice, req.core);
         let line = match self.tm[s].cache.get_mut(addr) {
             None => {
                 // Invalid: load from DRAM (Table III column 1/2, row 1).
@@ -108,7 +111,7 @@ impl Tardis {
                 p.waiters.push_back(req);
                 self.tm[s].pending.insert(addr, p);
                 ctx.stats.dram_accesses += 1;
-                let mc = home_mc(addr, 8);
+                let mc = self.map.home_mc(addr);
                 ctx.send(Message {
                     src: Node::Slice(slice),
                     dst: Node::Mc(mc),
@@ -146,7 +149,11 @@ impl Tardis {
                 // `LineLease` state.
                 let eff_lease = policy.shared_lease(
                     &mut line.lease,
-                    crate::proto::ts::SharedReq { renew, version_match: wts == line.wts },
+                    crate::proto::ts::SharedReq {
+                        renew,
+                        version_match: wts == line.wts,
+                        numa_stretch: stretch,
+                    },
                 );
                 ctx.stats.ts.leases_granted += 1;
                 ctx.stats.ts.lease_total += eff_lease;
@@ -243,7 +250,7 @@ impl Tardis {
                 self.tm[s].mts = self.tm[s].mts.max(rts);
                 if dirty {
                     ctx.stats.dram_accesses += 1;
-                    let mc = home_mc(addr, 8);
+                    let mc = self.map.home_mc(addr);
                     ctx.send(Message {
                         src: Node::Slice(slice),
                         dst: Node::Mc(mc),
@@ -369,7 +376,7 @@ impl Tardis {
         self.tm[s].mts = self.tm[s].mts.max(line.rts);
         if line.dirty {
             ctx.stats.dram_accesses += 1;
-            let mc = home_mc(addr, 8);
+            let mc = self.map.home_mc(addr);
             ctx.send(Message {
                 src: Node::Slice(slice),
                 dst: Node::Mc(mc),

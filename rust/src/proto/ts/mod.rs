@@ -52,6 +52,13 @@ pub struct SharedReq {
     pub renew: bool,
     /// The requester's `wts` matches the line's (its copy is current).
     pub version_match: bool,
+    /// NUMA cost factor of the requester's position: 1 = local socket
+    /// (or a flat system), `numa_ratio` = the grant crosses a socket
+    /// link ([`crate::net::NumaView::lease_stretch`]).  The paper's
+    /// distance-blind policies (Static, Dynamic) ignore it and serve
+    /// as the sweep's control; Predictive stretches remote leases by
+    /// it, the Tardis-2.0 self-tuning argument applied to distance.
+    pub numa_stretch: u64,
 }
 
 /// The paper's fixed lease.
@@ -106,12 +113,25 @@ pub struct PredictiveLease {
 
 impl PredictiveLease {
     #[inline]
-    fn shared_lease(&self, line: &mut LineLease, _req: SharedReq) -> u64 {
+    fn shared_lease(&self, line: &mut LineLease, req: SharedReq) -> u64 {
         let run = line.read_run as u64;
         line.read_run = line.read_run.saturating_add(1);
-        let mut lease = self.base.saturating_mul(1 + run).min(self.max);
+        // A remote sharer's renewal crosses a socket link costing
+        // `numa_stretch` x a local one, so its lease (and cap) stretch
+        // by the same factor — the amortization that makes owner-free
+        // renewal win in distributed shared memory (paper §VII).
+        // stretch == 1 reproduces the flat behavior exactly.
+        let stretch = req.numa_stretch.max(1);
+        let mut lease = self
+            .base
+            .saturating_mul(1 + run)
+            .saturating_mul(stretch)
+            .min(self.max.saturating_mul(stretch));
         if line.write_gap > 0 {
-            // Self-tune down to the observed write interval.
+            // Self-tune down to the observed write interval — it
+            // outranks the distance stretch: over-leasing a
+            // write-churned remote line only converts the renewals we
+            // saved into misspeculations.
             lease = lease.min(line.write_gap as u64);
         }
         lease.max(1)
@@ -138,11 +158,10 @@ pub enum LeasePolicy {
 }
 
 impl LeasePolicy {
-    /// Instantiate the policy selected by the Tardis configuration
-    /// (honoring the deprecated `dynamic_lease` alias).
+    /// Instantiate the policy selected by the Tardis configuration.
     pub fn new(cfg: &TardisConfig) -> Self {
         let base = cfg.lease;
-        match cfg.effective_lease_policy() {
+        match cfg.lease_policy {
             LeasePolicyKind::Static => Self::Static(StaticLease { lease: base }),
             LeasePolicyKind::Dynamic { max_lease } => {
                 let max = max_lease.max(base);
@@ -201,11 +220,15 @@ mod tests {
     }
 
     fn renew_hit() -> SharedReq {
-        SharedReq { renew: true, version_match: true }
+        SharedReq { renew: true, version_match: true, numa_stretch: 1 }
     }
 
     fn cold_read() -> SharedReq {
-        SharedReq { renew: false, version_match: false }
+        SharedReq { renew: false, version_match: false, numa_stretch: 1 }
+    }
+
+    fn remote_read(stretch: u64) -> SharedReq {
+        SharedReq { renew: false, version_match: false, numa_stretch: stretch }
     }
 
     #[test]
@@ -284,10 +307,55 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_alias_constructs_the_dynamic_policy() {
-        let c = TardisConfig { dynamic_lease: true, ..TardisConfig::default() };
-        assert_eq!(LeasePolicy::new(&c).kind_name(), "dynamic");
-        assert_eq!(LeasePolicy::new(&TardisConfig::default()).kind_name(), "static");
+    fn predictive_policy_stretches_remote_leases_by_numa_distance() {
+        let p = LeasePolicy::new(&cfg(LeasePolicyKind::Predictive {
+            max_lease: DEFAULT_MAX_LEASE,
+        }));
+        // Same read-run position, different distances: the remote
+        // grant is exactly stretch x the local one.
+        let mut local = LineLease::default();
+        let mut remote = LineLease::default();
+        assert_eq!(p.shared_lease(&mut local, cold_read()), 10);
+        assert_eq!(p.shared_lease(&mut remote, remote_read(4)), 40);
+        // The cap stretches too: a long remote read run earns up to
+        // stretch x max_lease.
+        for _ in 0..30 {
+            p.shared_lease(&mut remote, remote_read(4));
+        }
+        assert_eq!(
+            p.shared_lease(&mut remote, remote_read(4)),
+            4 * DEFAULT_MAX_LEASE
+        );
+    }
+
+    #[test]
+    fn write_interval_bound_outranks_the_numa_stretch() {
+        let p = LeasePolicy::new(&cfg(LeasePolicyKind::Predictive {
+            max_lease: DEFAULT_MAX_LEASE,
+        }));
+        let mut line = LineLease::default();
+        p.on_write(&mut line, 0);
+        p.on_write(&mut line, 7);
+        // Even an 8x-stretched remote lease stays inside the observed
+        // write interval — distance never buys misspeculations.
+        for _ in 0..20 {
+            assert!(p.shared_lease(&mut line, remote_read(8)) <= 7);
+        }
+    }
+
+    #[test]
+    fn paper_policies_are_distance_blind() {
+        // Static and Dynamic ignore the stretch (the sweep's control
+        // group): identical leases at any distance.
+        let st = LeasePolicy::new(&cfg(LeasePolicyKind::Static));
+        let mut line = LineLease::default();
+        assert_eq!(st.shared_lease(&mut line, remote_read(8)), 10);
+        let dy = LeasePolicy::new(&cfg(LeasePolicyKind::Dynamic { max_lease: 80 }));
+        let mut a = LineLease::default();
+        let mut b = LineLease::default();
+        assert_eq!(
+            dy.shared_lease(&mut a, renew_hit()),
+            dy.shared_lease(&mut b, SharedReq { numa_stretch: 8, ..renew_hit() })
+        );
     }
 }

@@ -16,7 +16,7 @@ use crate::config::{CoreModel, SystemConfig};
 use crate::core::{inorder::InOrderCore, ooo::OooCore, CoreAction, CoreEnv, CoreUnit};
 use crate::hashing::FxHashMap;
 use crate::mem::Dram;
-use crate::net::{Mesh, Message, MsgClass, MsgKind, Node};
+use crate::net::{Message, MsgClass, MsgKind, Node, Topology};
 use crate::prog::checker::AccessLog;
 use crate::prog::Workload;
 use crate::proto::{Coherence, Completion, ProtoCtx, ProtocolDispatch};
@@ -80,7 +80,7 @@ pub struct SimResult {
 pub(crate) struct Engine {
     cfg: SystemConfig,
     queue: EventQueue,
-    mesh: Mesh,
+    topology: Topology,
     dram: Dram,
     /// DRAM backing image (line values; absent = 0).  Fx-hashed: the
     /// SipHash default cost showed up in every DRAM endpoint access.
@@ -105,6 +105,13 @@ impl Engine {
             workload.n_cores(),
             "workload core count must match the system configuration"
         );
+        if cfg.topology.sockets > 1 {
+            assert_eq!(
+                cfg.n_cores % cfg.topology.sockets,
+                0,
+                "core count must divide evenly into sockets (SimBuilder validates this)"
+            );
+        }
         let proto = ProtocolDispatch::new(&cfg);
         let cores = (0..cfg.n_cores)
             .map(|id| match cfg.core_model {
@@ -113,7 +120,7 @@ impl Engine {
             })
             .collect();
         Self {
-            mesh: Mesh::new(cfg.n_cores, cfg.n_mcs, cfg.hop_cycles, cfg.flit_bits),
+            topology: Topology::new(&cfg),
             dram: Dram::new(cfg.n_mcs, cfg.dram_latency, cfg.dram_service_cycles),
             queue: EventQueue::new(),
             memory: FxHashMap::default(),
@@ -287,22 +294,33 @@ impl Engine {
         }
     }
 
-    /// Send a message: account traffic, add mesh latency, enqueue.
-    fn route(&mut self, now: Cycle, msg: Message) {
-        let flits = self.mesh.traffic_flits(&msg);
-        if flits > 0 {
+    /// Send a message departing at `depart`: resolve its route through
+    /// the topology, account traffic (by class, and by the intra- vs
+    /// inter-socket split), add fabric latency, enqueue.
+    fn route(&mut self, depart: Cycle, msg: Message) {
+        let info = self.topology.route(&msg);
+        if info.flits > 0 {
             let t = &mut self.stats.traffic;
             match msg.kind.class() {
-                MsgClass::Request => t.request_flits += flits,
-                MsgClass::Data => t.data_flits += flits,
-                MsgClass::Control => t.control_flits += flits,
-                MsgClass::Renew => t.renew_flits += flits,
-                MsgClass::Invalidation => t.invalidation_flits += flits,
-                MsgClass::Dram => t.dram_flits += flits,
+                MsgClass::Request => t.request_flits += info.flits,
+                MsgClass::Data => t.data_flits += info.flits,
+                MsgClass::Control => t.control_flits += info.flits,
+                MsgClass::Renew => t.renew_flits += info.flits,
+                MsgClass::Invalidation => t.invalidation_flits += info.flits,
+                MsgClass::Dram => t.dram_flits += info.flits,
+            }
+            let sk = &mut self.stats.socket;
+            if info.socket_hops == 0 {
+                sk.intra_msgs += 1;
+                sk.intra_hops += info.mesh_hops as u64;
+            } else {
+                sk.inter_msgs += 1;
+                sk.inter_hops += info.mesh_hops as u64;
+                sk.link_crossings += info.socket_hops as u64;
+                sk.inter_flits += info.flits;
             }
         }
-        let lat = self.mesh.latency(&msg);
-        self.deliver_at(now + lat, msg);
+        self.deliver_at(depart + info.latency, msg);
     }
 
     /// Enqueue a delivery, enforcing per-channel FIFO order.
@@ -328,10 +346,7 @@ impl Engine {
                     kind: MsgKind::DramLdRep { value },
                 };
                 // Reply leaves the controller when the access completes.
-                let flits = self.mesh.traffic_flits(&reply);
-                self.stats.traffic.dram_flits += flits;
-                let lat = self.mesh.latency(&reply);
-                self.deliver_at(done + lat, reply);
+                self.route(done, reply);
             }
             MsgKind::DramStReq { value } => {
                 let _done = self.dram.access(mc, now);
@@ -535,6 +550,43 @@ mod tests {
             }
         }
         assert!(found, "DRAM load reply missing");
+    }
+
+    #[test]
+    fn socket_split_accounts_cross_socket_messages() {
+        let (mut cfg, w) = tiny(ProtocolKind::Msi);
+        cfg.topology.sockets = 2;
+        cfg.topology.numa_ratio = 4;
+        let mut eng = Engine::build(cfg, &w, Observers::none());
+        // 2 cores on 2 sockets: slice 0 and core 1 sit on different
+        // sockets, slice 0 and core 0 share a tile.
+        let remote = Message {
+            src: Node::Slice(0),
+            dst: Node::Core(1),
+            addr: 0,
+            requester: 1,
+            kind: MsgKind::DataS { value: 1 },
+        };
+        eng.route(0, remote);
+        assert_eq!(eng.stats.socket.inter_msgs, 1);
+        assert_eq!(eng.stats.socket.link_crossings, 1);
+        assert_eq!(eng.stats.socket.inter_flits, 5);
+        assert_eq!(eng.stats.traffic.data_flits, 5, "class accounting unchanged");
+        // Same-tile messages skip the network entirely — no split
+        // entry, just like the flat free-local rule.
+        let local = Message { dst: Node::Core(0), requester: 0, ..remote };
+        eng.route(0, local);
+        assert_eq!(eng.stats.socket.intra_msgs, 0);
+        assert_eq!(eng.stats.socket.total_msgs(), 1);
+    }
+
+    #[test]
+    fn flat_runs_report_all_traffic_as_intra_socket() {
+        let (cfg, w) = tiny(ProtocolKind::Tardis);
+        let res = SimBuilder::from_config(cfg).workload(&w).run().unwrap();
+        assert!(res.stats.socket.intra_msgs > 0);
+        assert_eq!(res.stats.socket.inter_msgs, 0);
+        assert_eq!(res.stats.socket.link_crossings, 0);
     }
 
     #[test]

@@ -41,6 +41,47 @@ impl TrafficStats {
     }
 }
 
+/// Socket-level traffic split (ccNUMA topologies): every message that
+/// enters the network is either intra-socket (source and destination
+/// tiles on one socket) or inter-socket (crossed a socket link).  On a
+/// flat topology everything is intra-socket.  The `numa` sweep's
+/// headline metric: Tardis's owner-free renewals keep `inter_msgs`
+/// growing slower than directory invalidation multicasts as the
+/// numa-ratio rises (paper §VII).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SocketStats {
+    /// Messages delivered without leaving their socket.
+    pub intra_msgs: u64,
+    /// Messages that crossed at least one inter-socket link.
+    pub inter_msgs: u64,
+    /// Mesh hops traversed by intra-socket messages.
+    pub intra_hops: u64,
+    /// Mesh hops traversed by inter-socket messages (their on-chip
+    /// segments on both sockets).
+    pub inter_hops: u64,
+    /// Inter-socket link crossings.
+    pub link_crossings: u64,
+    /// Flits carried over inter-socket links (the scarce bandwidth).
+    pub inter_flits: u64,
+}
+
+impl SocketStats {
+    /// Messages that entered the network at all.
+    pub fn total_msgs(&self) -> u64 {
+        self.intra_msgs + self.inter_msgs
+    }
+
+    /// Fraction of network messages that crossed a socket link.
+    pub fn inter_fraction(&self) -> f64 {
+        let total = self.total_msgs();
+        if total == 0 {
+            0.0
+        } else {
+            self.inter_msgs as f64 / total as f64
+        }
+    }
+}
+
 /// Tardis timestamp dynamics (paper Table VI).
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TimestampStats {
@@ -132,6 +173,8 @@ pub struct SimStats {
     pub barriers_passed: u64,
 
     pub traffic: TrafficStats,
+    /// Intra- vs inter-socket traffic split (all intra when flat).
+    pub socket: SocketStats,
     pub ts: TimestampStats,
 }
 
@@ -264,5 +307,13 @@ mod tests {
         assert_eq!(s.renew_rate(), 0.0);
         assert_eq!(s.l1_miss_rate(), 0.0);
         assert!(s.ts_incr_rate().is_infinite());
+        assert_eq!(s.socket.inter_fraction(), 0.0);
+    }
+
+    #[test]
+    fn socket_split_fractions() {
+        let s = SocketStats { intra_msgs: 6, inter_msgs: 2, ..Default::default() };
+        assert_eq!(s.total_msgs(), 8);
+        assert!((s.inter_fraction() - 0.25).abs() < 1e-12);
     }
 }

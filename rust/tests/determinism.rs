@@ -8,7 +8,8 @@
 
 use tardis_dsm::api::{SimBuilder, SimReport};
 use tardis_dsm::config::{
-    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SystemConfig, DEFAULT_MAX_LEASE,
+    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, SystemConfig,
+    TopologyConfig, DEFAULT_MAX_LEASE,
 };
 use tardis_dsm::testutil::{ProgGen, Rng};
 use tardis_dsm::trace::synth_workload;
@@ -83,6 +84,55 @@ fn repeated_runs_are_bit_identical_across_lease_policies_and_consistency() {
                     assert!(
                         a.stats.sb_stores > 0,
                         "{policy:?}/{core_model:?}: TSO run never buffered a store"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The topology subsystem must also be a pure function of (config,
+/// workload): every (sockets, numa-ratio, interleave) point
+/// repeat-runs bit-identically — including the socket-split counters,
+/// which live inside [`tardis_dsm::SimStats`]'s equality.  The
+/// 1-socket point doubles as the flat-vs-legacy check: whatever the
+/// numa knobs say, one socket must reproduce the default flat run
+/// exactly (the deeper cross-config equality lives in
+/// `tests/topology.rs`).
+#[test]
+fn repeated_runs_are_bit_identical_across_topologies() {
+    let spec = workloads::by_name("fft").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    let flat_baseline = SimBuilder::from_config(SystemConfig::small(8, ProtocolKind::Tardis))
+        .record_accesses(true)
+        .workload(&w)
+        .run()
+        .unwrap();
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+        for sockets in [1u32, 2, 4] {
+            for interleave in [SocketInterleave::Line, SocketInterleave::Block] {
+                let run = || {
+                    let mut cfg = SystemConfig::small(8, protocol);
+                    cfg.topology =
+                        TopologyConfig { sockets, numa_ratio: 4, interleave };
+                    SimBuilder::from_config(cfg)
+                        .record_accesses(true)
+                        .workload(&w)
+                        .run()
+                        .unwrap()
+                };
+                let a = run();
+                let b = run();
+                assert_identical(&a, &b, &format!("{protocol:?}/{sockets}s/{interleave:?}"));
+                if sockets == 1 {
+                    assert_eq!(a.stats.socket.inter_msgs, 0);
+                    if protocol == ProtocolKind::Tardis {
+                        assert_identical(&a, &flat_baseline, "1-socket vs legacy flat");
+                    }
+                } else {
+                    assert!(
+                        a.stats.socket.inter_msgs > 0,
+                        "{protocol:?}/{sockets}s: no cross-socket traffic"
                     );
                 }
             }

@@ -35,23 +35,29 @@ fn fig4_table_has_twelve_workloads_and_average() {
 }
 
 #[test]
-fn lease_matrix_covers_every_policy_and_consistency() {
+fn lease_matrix_covers_every_policy_consistency_and_core_count() {
     let mut ctx = quick_ctx();
     let t = experiments::lease_matrix(&mut ctx).unwrap();
-    // 12 workloads x 6 variants, plus one AVG row per variant.
-    assert_eq!(t.rows.len(), 12 * 6 + 6);
-    for v in [
-        "static-sc",
-        "static-tso",
-        "dynamic-sc",
-        "dynamic-tso",
-        "predictive-sc",
-        "predictive-tso",
-    ] {
-        assert!(t.rows.iter().any(|r| r[1] == v), "missing variant {v}");
+    // Per core count: 12 workloads x 6 variants plus one AVG row per
+    // variant; the matrix spans 16 / 64 / 256 cores.
+    assert_eq!(t.rows.len(), 3 * (12 * 6 + 6));
+    for cores in ["16", "64", "256"] {
+        for v in [
+            "static-sc",
+            "static-tso",
+            "dynamic-sc",
+            "dynamic-tso",
+            "predictive-sc",
+            "predictive-tso",
+        ] {
+            assert!(
+                t.rows.iter().any(|r| r[0] == cores && r[2] == v),
+                "missing variant {v} at {cores} cores"
+            );
+        }
     }
-    for row in &t.rows[..12 * 6] {
-        let thr: f64 = row[2].parse().expect("numeric throughput cell");
+    for row in t.rows.iter().filter(|r| r[1] != "AVG(geo)") {
+        let thr: f64 = row[3].parse().expect("numeric throughput cell");
         assert!(thr > 0.0, "non-positive throughput in {row:?}");
     }
 }

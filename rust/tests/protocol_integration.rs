@@ -353,26 +353,8 @@ fn dynamic_lease_reduces_renewals() {
     );
 }
 
-/// The deprecated `dynamic_lease` flag keeps working for one release:
-/// it must resolve to the same policy (and the same simulation) as
-/// the explicit `LeasePolicyKind::Dynamic`.
-#[test]
-#[allow(deprecated)]
-fn deprecated_dynamic_lease_alias_matches_explicit_policy() {
-    let spec = workloads::by_name("volrend").unwrap();
-    let w = synth_workload(&spec.params, 4, 512);
-    let explicit = {
-        let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
-        cfg.tardis.lease_policy = LeasePolicyKind::Dynamic { max_lease: DEFAULT_MAX_LEASE };
-        run_logged(cfg, &w).unwrap()
-    };
-    let alias = {
-        let mut cfg = SystemConfig::small(4, ProtocolKind::Tardis);
-        cfg.tardis.dynamic_lease = true;
-        run_logged(cfg, &w).unwrap()
-    };
-    assert_eq!(explicit.stats, alias.stats, "alias must be bit-identical");
-}
+// (The PR-4 `dynamic_lease` alias test retired with the alias itself:
+// `LeasePolicyKind::Dynamic { max_lease }` is the one spelling now.)
 
 /// Dynamic leases under write churn must reset (writes invalidate the
 /// read-mostly assumption) and stay consistent.

@@ -1,0 +1,161 @@
+//! ccNUMA topology integration suite: the socket-split statistics,
+//! flat-equivalence guarantees, and the paper's §VII acceptance claim
+//! — Tardis's owner-free renewals keep inter-socket traffic growing
+//! strictly slower than the MSI directory's invalidation multicasts
+//! as the numa-ratio rises.
+
+use tardis_dsm::api::{SimBuilder, SimReport};
+use tardis_dsm::config::{
+    ProtocolKind, SocketInterleave, SystemConfig, TopologyConfig,
+};
+use tardis_dsm::coordinator::experiments::{numa_variants, sweep, EvalCtx};
+use tardis_dsm::prog::Workload;
+use tardis_dsm::trace::synth_workload;
+use tardis_dsm::workloads;
+
+fn run(cfg: SystemConfig, w: &Workload) -> SimReport {
+    SimBuilder::from_config(cfg)
+        .record_accesses(true)
+        .workload(w)
+        .run()
+        .unwrap()
+}
+
+fn small_workload(n_cores: u32) -> Workload {
+    let spec = workloads::by_name("fft").unwrap();
+    synth_workload(&spec.params, n_cores, 512)
+}
+
+/// The flat-vs-legacy equality check: a default (pre-topology shape)
+/// run must be bit-for-bit identical to a run that explicitly routes
+/// through the topology layer's flat path with every new knob set to
+/// a non-default value that must be inert at 1 socket (numa-ratio,
+/// Block interleave).  The subsystem cannot perturb flat results.
+#[test]
+fn flat_topology_is_bit_identical_to_legacy_flat_runs() {
+    let w = small_workload(8);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        let legacy = run(SystemConfig::small(8, protocol), &w);
+        let mut cfg = SystemConfig::small(8, protocol);
+        cfg.topology = TopologyConfig {
+            sockets: 1,
+            numa_ratio: 8,
+            interleave: SocketInterleave::Block,
+        };
+        let topo = run(cfg, &w);
+        assert_eq!(legacy.stats, topo.stats, "{protocol:?}: stats diverged");
+        assert_eq!(legacy.log.records, topo.log.records, "{protocol:?}: logs diverged");
+        assert_eq!(legacy.core_finish, topo.core_finish, "{protocol:?}");
+        // Flat runs never cross a socket link.
+        assert_eq!(topo.stats.socket.inter_msgs, 0);
+        assert!(topo.stats.socket.intra_msgs > 0);
+    }
+}
+
+/// Multi-socket runs complete correctly under every protocol and both
+/// interleaves, split their traffic, and stay sequentially consistent.
+#[test]
+fn numa_runs_complete_and_split_traffic() {
+    let w = small_workload(16);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi, ProtocolKind::Ackwise] {
+        for interleave in [SocketInterleave::Line, SocketInterleave::Block] {
+            let mut cfg = SystemConfig::small(16, protocol);
+            cfg.topology = TopologyConfig { sockets: 2, numa_ratio: 4, interleave };
+            let res = run(cfg, &w);
+            res.check_sc().unwrap_or_else(|v| {
+                panic!("{protocol:?}/{interleave:?}: SC violation {v:?}")
+            });
+            let sk = &res.stats.socket;
+            assert!(sk.inter_msgs > 0, "{protocol:?}/{interleave:?}: no cross-socket traffic");
+            assert!(sk.intra_msgs > 0, "{protocol:?}/{interleave:?}: no local traffic");
+            assert_eq!(sk.link_crossings, sk.inter_msgs, "one link per remote message");
+            assert!(sk.inter_flits > 0);
+            let f = sk.inter_fraction();
+            assert!(f > 0.0 && f < 1.0, "{protocol:?}: inter fraction {f}");
+        }
+    }
+}
+
+/// Raising the inter-socket cost ratio slows completion (the links
+/// really are on the critical path).
+#[test]
+fn numa_ratio_slows_completion() {
+    let w = small_workload(16);
+    let cycles = |ratio: u32| {
+        let mut cfg = SystemConfig::small(16, ProtocolKind::Msi);
+        cfg.topology = TopologyConfig { sockets: 2, numa_ratio: ratio, ..Default::default() };
+        run(cfg, &w).stats.cycles
+    };
+    assert!(cycles(8) > cycles(1), "ratio-8 links must cost more than ratio-1");
+}
+
+/// An invalid socket split is rejected up front, not mid-run.
+#[test]
+fn builder_rejects_indivisible_socket_counts() {
+    let w = small_workload(6);
+    let err = SimBuilder::small(6, ProtocolKind::Tardis)
+        .sockets(4)
+        .workload(&w)
+        .build()
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("do not divide evenly"), "{err}");
+}
+
+/// The acceptance claim at 64 cores (paper §VII): going from cheap to
+/// expensive inter-socket links (ratio 1 -> 8), Tardis's inter-socket
+/// message count must grow strictly slower than the MSI directory's.
+/// The mechanism: the NUMA-aware predictive policy stretches remote
+/// leases with the ratio, converting recurring remote renewals into
+/// long quiet leases, while the directory keeps multicasting
+/// invalidations across the links at any price.
+#[test]
+fn tardis_inter_socket_traffic_grows_strictly_slower_than_msi() {
+    let mut ctx = EvalCtx::new(None, 0);
+    ctx.scale_down = 16; // 256-op traces: the full 12-workload grid stays fast
+    let mut variants = Vec::new();
+    for ratio in [1u32, 8] {
+        variants.extend(
+            numa_variants(64, 4, ratio)
+                .into_iter()
+                .filter(|v| {
+                    v.label.starts_with("msi") || v.label.starts_with("tardis-predictive")
+                }),
+        );
+    }
+    let stats = sweep(&mut ctx, 64, &variants).unwrap();
+    let total_inter = |variant: &str| -> i64 {
+        workloads::all()
+            .iter()
+            .map(|s| stats[&(s.name.to_string(), variant.to_string())].socket.inter_msgs as i64)
+            .sum()
+    };
+    let total_renews = |variant: &str| -> u64 {
+        workloads::all()
+            .iter()
+            .map(|s| stats[&(s.name.to_string(), variant.to_string())].renew_requests)
+            .sum()
+    };
+    let msi_growth = total_inter("msi-r8") - total_inter("msi-r1");
+    let tardis_growth =
+        total_inter("tardis-predictive-r8") - total_inter("tardis-predictive-r1");
+    assert!(
+        tardis_growth < msi_growth,
+        "Tardis inter-socket messages must grow strictly slower than MSI's \
+         as the numa-ratio rises: tardis {} -> {} (growth {tardis_growth}), \
+         msi {} -> {} (growth {msi_growth})",
+        total_inter("tardis-predictive-r1"),
+        total_inter("tardis-predictive-r8"),
+        total_inter("msi-r1"),
+        total_inter("msi-r8"),
+    );
+    // The mechanism is visible too: stretched remote leases cut the
+    // renewal stream as links get more expensive.
+    assert!(
+        total_renews("tardis-predictive-r8") < total_renews("tardis-predictive-r1"),
+        "remote-lease stretching should reduce renewals at high ratios: {} vs {}",
+        total_renews("tardis-predictive-r8"),
+        total_renews("tardis-predictive-r1"),
+    );
+}

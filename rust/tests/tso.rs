@@ -165,6 +165,119 @@ fn forwarding_returns_the_youngest_own_store() {
     }
 }
 
+/// Fence-drain while the buffer is full: with a 2-entry buffer, a
+/// burst of stores back-pressures issue (`sb_full_stalls`), and the
+/// lock fence that follows must wait for a *complete* drain — the
+/// full-buffer stall resumes on one free slot, the fence only on
+/// empty, and the two wait conditions must not wedge each other.
+#[test]
+fn fence_drains_a_full_store_buffer() {
+    use tardis_dsm::prog::{lock, unlock};
+    use tardis_dsm::types::LOCK_BASE;
+    let mut ops = Vec::new();
+    for i in 0..6u64 {
+        ops.push(store(SHARED_BASE + 0x80 + i, i + 1));
+    }
+    ops.push(lock(LOCK_BASE + 1));
+    ops.push(load(SHARED_BASE + 0x80));
+    ops.push(unlock(LOCK_BASE + 1));
+    let w = Workload::new(vec![Program::new(ops), Program::new(vec![load(SHARED_BASE)])]);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+        for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+            let mut cfg = SystemConfig::small(2, protocol);
+            cfg.core_model = model;
+            cfg.consistency = Consistency::Tso;
+            cfg.sb_entries = 2;
+            let res = SimBuilder::from_config(cfg)
+                .record_accesses(true)
+                .workload(&w)
+                .run()
+                .unwrap();
+            res.check_consistency().unwrap_or_else(|v| {
+                panic!("{protocol:?}/{model:?}: violation {v:?}")
+            });
+            assert_eq!(res.stats.sb_stores, 6, "{protocol:?}/{model:?}");
+            assert!(
+                res.stats.sb_full_stalls > 0,
+                "{protocol:?}/{model:?}: a 6-store burst must fill a 2-entry buffer"
+            );
+            assert_eq!(res.stats.locks_acquired, 1, "{protocol:?}/{model:?}");
+            // The post-fence load ran with the buffer drained: it read
+            // the coherent value, not a forward.
+            let post_fence = observed(&res, &[(0, 7)]);
+            assert_eq!(post_fence, [1], "{protocol:?}/{model:?}: fence lost a store");
+        }
+    }
+}
+
+/// Retirement ordering under back-pressure: with a 1-entry buffer
+/// every store drains before the next can retire, and the drained
+/// stores must become globally visible in program order (TSO's
+/// store-store order) — read off the access log's commit sequence.
+#[test]
+fn backpressured_drains_retire_in_program_order() {
+    let addrs: Vec<u64> = (0..5).map(|i| SHARED_BASE + 0x100 + i).collect();
+    let ops: Vec<Op> = addrs.iter().enumerate().map(|(i, &a)| store(a, i as u64)).collect();
+    let w = Workload::new(vec![Program::new(ops), Program::new(vec![load(SHARED_BASE)])]);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+        for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+            let mut cfg = SystemConfig::small(2, protocol);
+            cfg.core_model = model;
+            cfg.consistency = Consistency::Tso;
+            cfg.sb_entries = 1;
+            let res = SimBuilder::from_config(cfg)
+                .record_accesses(true)
+                .workload(&w)
+                .run()
+                .unwrap();
+            res.check_consistency().unwrap();
+            assert!(res.stats.sb_full_stalls > 0, "{protocol:?}/{model:?}: no back-pressure");
+            // The store records in global commit order must carry
+            // ascending pcs (drain order == program order).
+            let drained_pcs: Vec<u32> = res
+                .log
+                .records
+                .iter()
+                .filter(|r| r.valid && r.core == 0 && r.value_written.is_some())
+                .map(|r| r.pc)
+                .collect();
+            assert_eq!(
+                drained_pcs,
+                vec![0, 1, 2, 3, 4],
+                "{protocol:?}/{model:?}: stores drained out of order"
+            );
+        }
+    }
+}
+
+/// Forwarding with the buffer at capacity: the newest of multiple
+/// same-address buffered stores wins even while the head is in
+/// flight and later stores are stalled behind a full buffer.
+#[test]
+fn forwarding_picks_newest_store_under_full_buffer() {
+    let x = SHARED_BASE + 0x140;
+    let y = SHARED_BASE + 0x141;
+    let w = Workload::new(vec![
+        Program::new(vec![store(x, 1), store(y, 7), store(x, 2), load(x), load(y)]),
+        Program::new(vec![load(SHARED_BASE)]),
+    ]);
+    for model in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+        let mut cfg = SystemConfig::small(2, ProtocolKind::Tardis);
+        cfg.core_model = model;
+        cfg.consistency = Consistency::Tso;
+        cfg.sb_entries = 3;
+        let res = SimBuilder::from_config(cfg)
+            .record_accesses(true)
+            .workload(&w)
+            .run()
+            .unwrap();
+        res.check_consistency().unwrap();
+        assert_eq!(observed(&res, &[(0, 3)]), [2], "{model:?}: stale forward for x");
+        assert_eq!(observed(&res, &[(0, 4)]), [7], "{model:?}: wrong line forwarded for y");
+        assert!(res.stats.sb_forwards >= 2, "{model:?}");
+    }
+}
+
 /// Synchronization fences the buffer: lock-protected increments stay
 /// mutually exclusive under TSO (the release store is not reordered
 /// into the critical section of the next owner).

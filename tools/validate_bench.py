@@ -30,6 +30,16 @@ TOP_KEYS = {
     "aggregate": dict,
 }
 
+# Topology keys arrived with the ccNUMA subsystem; pre-topology files
+# omit them and are treated as flat.
+TOP_OPTIONAL_KEYS = {
+    "topology": str,
+    "sockets": int,
+    "numa_ratio": int,
+}
+
+TOPOLOGY_VALUES = {"flat", "numa"}
+
 POINT_KEYS = {
     "workload": str,
     "variant": str,
@@ -41,6 +51,20 @@ POINT_KEYS = {
     "sim_cycles_per_sec": (int, float),
 }
 
+# Socket-split counters: optional on flat reports, REQUIRED on every
+# point of a non-flat report (a numa bench without the split is not a
+# usable trajectory record).
+POINT_SOCKET_KEYS = {
+    "intra_socket_msgs": int,
+    "inter_socket_msgs": int,
+}
+
+# Per-point core count: emitted by multi-scale suites (lease matrix)
+# and current single-scale reports; absent from pre-topology files.
+POINT_OPTIONAL_KEYS = {
+    "cores": int,
+}
+
 AGGREGATE_KEYS = {
     "wall_s": (int, float),
     "events": int,
@@ -50,7 +74,8 @@ AGGREGATE_KEYS = {
 }
 
 
-def check_keys(obj, spec, where):
+def check_keys(obj, spec, where, optional=None):
+    optional = optional or {}
     for key, typ in spec.items():
         if key not in obj:
             raise ValueError(f"{where}: missing key {key!r}")
@@ -59,7 +84,13 @@ def check_keys(obj, spec, where):
                 f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
                 f"expected {typ}"
             )
-    extra = set(obj) - set(spec)
+    for key, typ in optional.items():
+        if key in obj and not isinstance(obj[key], typ):
+            raise ValueError(
+                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
+                f"expected {typ}"
+            )
+    extra = set(obj) - set(spec) - set(optional)
     if extra:
         raise ValueError(f"{where}: unknown keys {sorted(extra)}")
 
@@ -67,9 +98,19 @@ def check_keys(obj, spec, where):
 def validate(path):
     with open(path) as f:
         doc = json.load(f)
-    check_keys(doc, TOP_KEYS, "top level")
+    check_keys(doc, TOP_KEYS, "top level", optional=TOP_OPTIONAL_KEYS)
     if doc["schema"] != "tardis-bench-v1":
         raise ValueError(f"unknown schema {doc['schema']!r}")
+    topology = doc.get("topology", "flat")
+    if topology not in TOPOLOGY_VALUES:
+        raise ValueError(
+            f"unknown topology {topology!r} (expected one of {sorted(TOPOLOGY_VALUES)})"
+        )
+    if topology != "flat":
+        if doc.get("sockets", 0) < 2:
+            raise ValueError(f"{topology} report needs sockets >= 2")
+        if doc.get("numa_ratio", 0) < 1:
+            raise ValueError(f"{topology} report needs numa_ratio >= 1")
     if doc["provenance"] not in PROVENANCE_VALUES:
         raise ValueError(
             f"unknown provenance {doc['provenance']!r} "
@@ -90,7 +131,24 @@ def validate(path):
         where = f"points[{i}]"
         if not isinstance(point, dict):
             raise ValueError(f"{where}: not an object")
-        check_keys(point, POINT_KEYS, where)
+        check_keys(
+            point,
+            POINT_KEYS,
+            where,
+            optional={**POINT_SOCKET_KEYS, **POINT_OPTIONAL_KEYS},
+        )
+        if "cores" in point and point["cores"] < 1:
+            raise ValueError(f"{where}: cores must be >= 1")
+        if topology != "flat":
+            for key in POINT_SOCKET_KEYS:
+                if key not in point:
+                    raise ValueError(
+                        f"{where}: {topology!r} report is missing the "
+                        f"socket-split counter {key!r}"
+                    )
+        for key in POINT_SOCKET_KEYS:
+            if key in point and point[key] < 0:
+                raise ValueError(f"{where}: {key} must be non-negative")
         for key in ("sim_cycles", "memops", "events"):
             if point[key] <= 0:
                 raise ValueError(f"{where}: {key} must be positive")
