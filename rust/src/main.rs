@@ -11,6 +11,9 @@
 //!              [--threads N] [--scale-down N] [--out results/]
 //! tardis litmus
 //! tardis case-study
+//! tardis verify [--protocol tardis|msi|all] [--consistency sc|tso|all]
+//!              [--cores N] [--lines N] [--max-ts N] [--lease N]
+//!              [--sb-entries N] [--out FILE]
 //! tardis reproduce [--threads N] [--scale-down N] [--out results/]
 //! tardis help
 //! ```
@@ -29,6 +32,7 @@ use tardis_dsm::coordinator::experiments::{self, EvalCtx};
 use tardis_dsm::coordinator::report::Table;
 use tardis_dsm::prog::litmus;
 use tardis_dsm::runtime::TraceRuntime;
+use tardis_dsm::verif::{self, VerifBounds};
 use tardis_dsm::workloads;
 
 struct Args {
@@ -136,6 +140,7 @@ fn main() -> Result<()> {
             args.expect_only("case-study", &[], &[])?;
             cmd_case_study()
         }
+        "verify" => cmd_verify(&args),
         "reproduce" => cmd_reproduce(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
@@ -160,6 +165,12 @@ USAGE:
              [--threads N] [--scale-down N] [--out DIR]
   tardis litmus           run the litmus suite under all three protocols
   tardis case-study       cycle-by-cycle §V example, Tardis vs MSI
+  tardis verify [--protocol tardis|msi|all] [--consistency sc|tso|all]
+               [--cores N] [--lines N] [--max-ts N] [--lease N]
+               [--sb-entries N] [--out FILE]
+                          exhaustive bounded model check of the shipped
+                          controllers; writes the tardis-verif-v1 JSON
+                          report (non-zero exit on any violation)
   tardis reproduce        regenerate every table and figure
   tardis bench [--suite fig4|lease] [--cores N] [--iters N] [--scale-down N]
                [--out FILE] [--lease-policy static|dynamic|predictive]
@@ -489,6 +500,77 @@ fn cmd_bench(args: &Args) -> Result<()> {
     println!("{}", report.summary());
     report.write(out)?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// `tardis verify`: bounded exhaustive model check of the shipped
+/// protocol controllers (DESIGN.md §9).  Explores every interleaving
+/// within the bounds, checks the protocol invariants at every state,
+/// re-linearizes the access trace on every commit, and writes a
+/// `tardis-verif-v1` JSON report.  Any violation prints its minimal
+/// counterexample trace and exits non-zero.
+fn cmd_verify(args: &Args) -> Result<()> {
+    args.expect_only(
+        "verify",
+        &["protocol", "consistency", "cores", "lines", "max-ts", "lease", "sb-entries", "out"],
+        &[],
+    )?;
+    let protocols: Vec<ProtocolKind> = match args.get_str("protocol", "all")? {
+        "all" => vec![ProtocolKind::Tardis, ProtocolKind::Msi],
+        p => vec![ProtocolKind::parse(p)
+            .ok_or_else(|| anyhow!("unknown protocol {p:?} (tardis|msi|all)"))?],
+    };
+    let models: Vec<Consistency> = match args.get_str("consistency", "all")? {
+        "all" => vec![Consistency::Sc, Consistency::Tso],
+        c => vec![Consistency::parse(c)
+            .ok_or_else(|| anyhow!("unknown consistency model {c:?} (sc|tso)"))?],
+    };
+    let defaults = VerifBounds::default();
+    let bounds = VerifBounds {
+        cores: args.get_u64("cores", defaults.cores as u64)? as u32,
+        lines: args.get_u64("lines", defaults.lines as u64)? as u32,
+        max_ts: args.get_u64("max-ts", defaults.max_ts as u64)? as u32,
+        lease: args.get_u64("lease", defaults.lease)?,
+        sb_entries: args.get_u64("sb-entries", defaults.sb_entries as u64)? as u32,
+    };
+    let out = args.get_str("out", "VERIF_local.json")?;
+    println!(
+        "verifying {{{}}} x {{{}}} at {} cores, {} line(s), max-ts {}, lease {}...",
+        protocols.iter().map(|p| p.name()).collect::<Vec<_>>().join(","),
+        models.iter().map(|m| m.name()).collect::<Vec<_>>().join(","),
+        bounds.cores,
+        bounds.lines,
+        bounds.max_ts,
+        bounds.lease
+    );
+    let report = verif::run_matrix(&protocols, &models, bounds).map_err(|e| anyhow!(e))?;
+    for r in &report.runs {
+        let o = &r.outcome;
+        println!(
+            "  {:<6} {:<3} {:>9} states  {:>10} transitions  depth {:>3}  {:>6} terminal  {}",
+            r.protocol,
+            r.consistency,
+            o.states,
+            o.transitions,
+            o.max_depth,
+            o.terminal_states,
+            if o.passed() { "ok" } else { "VIOLATION" }
+        );
+        if let Some(cex) = &o.counterexample {
+            println!("    invariant : {}", cex.invariant);
+            println!("    detail    : {}", cex.detail);
+            println!("    counterexample trace ({} events):", cex.labels.len());
+            for (i, label) in cex.labels.iter().enumerate() {
+                println!("      {:>3}. {label}", i + 1);
+            }
+        }
+    }
+    std::fs::write(out, report.to_json())?;
+    println!("wrote {out}");
+    if !report.passed() {
+        bail!("verification found a protocol violation (see counterexample above)");
+    }
+    println!("all runs clean");
     Ok(())
 }
 

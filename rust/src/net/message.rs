@@ -15,7 +15,7 @@ pub enum Node {
 
 /// Message payloads.  One unified enum keeps the engine protocol-
 /// agnostic; each protocol only produces/consumes its own variants.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MsgKind {
     // ------ Tardis (paper Table IV) ------
     /// Shared (load) request; `renew` marks a lease-extension attempt
@@ -146,7 +146,7 @@ impl MsgKind {
 }
 
 /// A message in flight.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Message {
     pub src: Node,
     pub dst: Node,

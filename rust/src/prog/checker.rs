@@ -70,7 +70,9 @@ impl LogRecord {
 }
 
 /// Growable access log, one per simulation when checking is enabled.
-#[derive(Debug, Default)]
+/// `Clone` exists for the `verif` model checker, which forks a log per
+/// explored interleaving.
+#[derive(Debug, Clone, Default)]
 pub struct AccessLog {
     pub records: Vec<LogRecord>,
 }
@@ -106,19 +108,58 @@ impl AccessLog {
     }
 }
 
-/// A detected consistency violation.
+/// A detected consistency violation.  Each variant carries its
+/// witness — the pc / physiological-key pair and the forbidden edge —
+/// so a model-checker counterexample is actionable without re-running
+/// the log by hand.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Violation {
-    /// Rule 1: a core's timestamps went backwards.
-    ProgramOrder { core: CoreId, at_seq: u64 },
+    /// Rule 1: a core's keys went backwards along `edge` — the
+    /// offending record (`pc`, `key`) sits below the `prev_key` it had
+    /// to dominate.
+    ProgramOrder {
+        core: CoreId,
+        at_seq: u64,
+        pc: u32,
+        key: (Ts, Cycle, u64),
+        prev_key: (Ts, Cycle, u64),
+        /// Which preserved order broke: "program-order" (SC),
+        /// "load-load", "store-store", "load-store", or
+        /// "atomic-fence" (TSO).
+        edge: &'static str,
+    },
     /// Rule 2: a load saw a value other than the latest preceding
     /// write in the physiological order.
-    StaleRead { core: CoreId, addr: LineAddr, expected: u64, got: u64, at_seq: u64 },
+    StaleRead {
+        core: CoreId,
+        addr: LineAddr,
+        expected: u64,
+        got: u64,
+        at_seq: u64,
+        pc: u32,
+        /// The load's physiological key — where in the global order it
+        /// observed the stale value.
+        key: (Ts, Cycle, u64),
+    },
     /// Two successful lock acquires without an intervening release.
-    LockOverlap { addr: LineAddr, first: CoreId, second: CoreId },
+    LockOverlap {
+        addr: LineAddr,
+        first: CoreId,
+        second: CoreId,
+        /// Commit cycle of the overlapping (second) acquire.
+        at_cycle: Cycle,
+        at_seq: u64,
+    },
     /// TSO: a forwarded load did not observe its own core's latest
     /// program-order-earlier store to that address.
-    BadForward { core: CoreId, addr: LineAddr, got: u64, expected: Option<u64>, at_seq: u64 },
+    BadForward {
+        core: CoreId,
+        addr: LineAddr,
+        got: u64,
+        expected: Option<u64>,
+        at_seq: u64,
+        pc: u32,
+    },
 }
 
 /// Summary of a clean check.
@@ -178,12 +219,19 @@ fn check_tso_program_order(log: &AccessLog) -> Result<(), Violation> {
         let st = cores.entry(r.core).or_default();
         let is_load = r.value_read.is_some();
         let is_store = r.value_written.is_some();
-        let fail = || Violation::ProgramOrder { core: r.core, at_seq: r.seq };
+        let fail = |prev_key: (Ts, Cycle, u64), edge: &'static str| Violation::ProgramOrder {
+            core: r.core,
+            at_seq: r.seq,
+            pc: r.pc,
+            key,
+            prev_key,
+            edge,
+        };
         match (is_load, is_store) {
             // Atomic: a full fence — nothing may pass it either way.
             (true, true) => {
                 if key < st.max_key {
-                    return Err(fail());
+                    return Err(fail(st.max_key, "atomic-fence"));
                 }
                 st.last_load = key;
                 st.last_store = key;
@@ -191,20 +239,20 @@ fn check_tso_program_order(log: &AccessLog) -> Result<(), Violation> {
             }
             (true, false) => {
                 if key < st.last_load {
-                    return Err(fail());
+                    return Err(fail(st.last_load, "load-load"));
                 }
                 st.last_load = key;
                 push_load(&mut st.loads, r.pc, key);
             }
             (false, true) => {
                 if key < st.last_store {
-                    return Err(fail());
+                    return Err(fail(st.last_store, "store-store"));
                 }
                 // Load→store order: the store may not slip under any
                 // load that precedes it in *program* order.
                 let earlier = st.loads.partition_point(|&(pc, _)| pc < r.pc);
                 if earlier > 0 && key < st.loads[earlier - 1].1 {
-                    return Err(fail());
+                    return Err(fail(st.loads[earlier - 1].1, "load-store"));
                 }
                 st.last_store = key;
             }
@@ -245,6 +293,7 @@ fn check_tso_forwarding(log: &AccessLog) -> Result<(), Violation> {
                         got,
                         expected,
                         at_seq: r.seq,
+                        pc: r.pc,
                     });
                 }
             }
@@ -265,7 +314,14 @@ fn check_program_order(log: &AccessLog) -> Result<(), Violation> {
         let key = r.key();
         if let Some(prev) = last.get(&r.core) {
             if key < *prev {
-                return Err(Violation::ProgramOrder { core: r.core, at_seq: r.seq });
+                return Err(Violation::ProgramOrder {
+                    core: r.core,
+                    at_seq: r.seq,
+                    pc: r.pc,
+                    key,
+                    prev_key: *prev,
+                    edge: "program-order",
+                });
             }
         }
         last.insert(r.core, key);
@@ -295,6 +351,8 @@ fn check_value_order(log: &AccessLog) -> Result<CheckReport, Violation> {
                         expected: current,
                         got: read,
                         at_seq: r.seq,
+                        pc: r.pc,
+                        key: r.key(),
                     });
                 }
                 loads_checked += 1;
@@ -328,7 +386,13 @@ fn check_lock_alternation(log: &AccessLog) -> Result<(), Violation> {
         let released = r.value_read.is_none() && r.value_written == Some(0);
         if acquired {
             if let Some(&h) = holder.get(&r.addr) {
-                return Err(Violation::LockOverlap { addr: r.addr, first: h, second: r.core });
+                return Err(Violation::LockOverlap {
+                    addr: r.addr,
+                    first: h,
+                    second: r.core,
+                    at_cycle: r.commit_cycle,
+                    at_seq: r.seq,
+                });
             }
             holder.insert(r.addr, r.core);
         } else if released {
@@ -556,6 +620,45 @@ mod tests {
         log.push(fwd);
         log.push(rec_pc(0, 0, 1, None, Some(7), 5, 9, 3));
         assert!(check_model(&log, Consistency::Tso).is_ok());
+    }
+
+    #[test]
+    fn violations_carry_their_witness() {
+        // SC program order: both keys, the pc, and the edge name.
+        let mut log = AccessLog::default();
+        log.push(rec(0, 1, Some(0), None, 5, 10, 1));
+        log.push(rec(0, 2, Some(0), None, 3, 11, 2));
+        match check(&log) {
+            Err(Violation::ProgramOrder { key, prev_key, edge, pc, .. }) => {
+                assert_eq!(prev_key, (5, 10, 1));
+                assert_eq!(key, (3, 11, 2));
+                assert_eq!(edge, "program-order");
+                assert_eq!(pc, 2);
+            }
+            other => panic!("expected ProgramOrder, got {other:?}"),
+        }
+        // TSO names the specific forbidden edge.
+        let mut log = AccessLog::default();
+        log.push(rec_pc(0, 0, 1, None, Some(1), 9, 9, 1));
+        log.push(rec_pc(0, 1, 2, None, Some(1), 3, 10, 2));
+        match check_model(&log, Consistency::Tso) {
+            Err(Violation::ProgramOrder { edge, prev_key, .. }) => {
+                assert_eq!(edge, "store-store");
+                assert_eq!(prev_key, (9, 9, 1));
+            }
+            other => panic!("expected ProgramOrder, got {other:?}"),
+        }
+        // Stale reads carry the observing load's key.
+        let mut log = AccessLog::default();
+        log.push(rec(0, 1, None, Some(7), 1, 10, 1));
+        log.push(rec(1, 1, Some(0), None, 2, 20, 2));
+        match check(&log) {
+            Err(Violation::StaleRead { key, expected, got, .. }) => {
+                assert_eq!(key, (2, 20, 2));
+                assert_eq!((expected, got), (7, 0));
+            }
+            other => panic!("expected StaleRead, got {other:?}"),
+        }
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::stats::SimStats;
 use crate::types::{CoreId, Cycle, LineAddr, Ts};
 
 /// A memory operation issued by a core.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MemOp {
     Load,
     Store { value: u64 },

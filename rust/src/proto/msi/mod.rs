@@ -19,7 +19,7 @@ use crate::types::{CoreId, LineAddr, SliceId, Ts};
 pub use sharers::Sharers;
 
 /// Per-line L1 state: present means S or M.
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
 pub struct MsiL1Line {
     /// Modified (exclusive + dirty) vs shared.
     pub m: bool,
@@ -29,12 +29,13 @@ pub struct MsiL1Line {
 }
 
 /// A demand miss outstanding at an L1.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Demand {
     pub op: MemOp,
     pub parked: u32,
 }
 
+#[derive(Debug, Clone)]
 pub struct MsiL1 {
     pub cache: SetAssoc<MsiL1Line>,
     pub demand: FxHashMap<LineAddr, Demand>,
@@ -42,7 +43,7 @@ pub struct MsiL1 {
 }
 
 /// Directory entry per LLC line.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
 pub struct DirLine {
     pub sharers: Sharers,
     pub owner: Option<CoreId>,
@@ -53,7 +54,7 @@ pub struct DirLine {
 }
 
 /// Why a directory line is busy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DirPendKind {
     /// DRAM fetch in flight (line absent).
     Fetch,
@@ -69,7 +70,7 @@ pub enum DirPendKind {
     EvictFlush,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct DirPending {
     pub kind: DirPendKind,
     pub waiters: std::collections::VecDeque<DirReq>,
@@ -83,27 +84,31 @@ impl DirPending {
 }
 
 /// A queued directory request.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct DirReq {
     pub core: CoreId,
     pub write: bool,
 }
 
+#[derive(Debug, Clone)]
 pub struct DirSlice {
     pub cache: SetAssoc<DirLine>,
     pub pending: FxHashMap<LineAddr, DirPending>,
 }
 
 /// The directory protocol (MSI full map, or Ackwise-k when
-/// `ptr_limit` is set).
+/// `ptr_limit` is set).  `Clone` and the `pub(crate)` controller
+/// fields exist for the `verif` model checker's snapshot/branch
+/// exploration.
+#[derive(Debug, Clone)]
 pub struct Msi {
     n_cores: u32,
     /// None = full-map bit vector; Some(k) = Ackwise-k pointers.
     ptr_limit: Option<u32>,
     /// Address -> home slice / memory-controller map (socket-aware).
     map: SliceMap,
-    l1: Vec<MsiL1>,
-    dir: Vec<DirSlice>,
+    pub(crate) l1: Vec<MsiL1>,
+    pub(crate) dir: Vec<DirSlice>,
 }
 
 impl Msi {

@@ -3,7 +3,7 @@
 
 use crate::types::CoreId;
 
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum Sharers {
     /// Full-map bit vector.
     Map(Vec<u64>),

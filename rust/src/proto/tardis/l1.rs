@@ -416,9 +416,21 @@ impl Tardis {
                 self.raise_pts(core, ts, false, ctx);
                 let new = op.write_value(old_value).expect("write op");
                 let observed = if matches!(op, MemOp::Store { .. }) { new } else { old_value };
+                // Seeded fault for the verif mutation smoke-check: keep
+                // the stale wts on the freshly written line (the write
+                // "time-travels" under the old version).  Compiled out
+                // of normal builds.
+                let line_wts = if cfg!(feature = "verif-mutate-wts-skip") { wts } else { ts };
                 (
                     observed,
-                    L1Line { excl: true, wts: ts, rts: ts, value: new, modified: true, pinned: false },
+                    L1Line {
+                        excl: true,
+                        wts: line_wts,
+                        rts: ts,
+                        value: new,
+                        modified: true,
+                        pinned: false,
+                    },
                 )
             }
         };

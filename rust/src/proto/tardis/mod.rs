@@ -24,7 +24,7 @@ use crate::types::{CoreId, LineAddr, SliceId, Ts};
 pub use tm::{Pending, PendingKind, Req, ReqKind};
 
 /// Per-line state in a private L1 (paper Table II).
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
 pub struct L1Line {
     /// Exclusive (M-like) vs shared.
     pub excl: bool,
@@ -41,7 +41,7 @@ pub struct L1Line {
 }
 
 /// A demand miss outstanding at an L1 (one per address).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Demand {
     pub op: MemOp,
     /// Extra same-address accesses parked behind this miss; they get a
@@ -50,7 +50,7 @@ pub struct Demand {
 }
 
 /// An outstanding renewal (lease-extension) request.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Renewal {
     /// Number of loads the core speculated through on this renewal
     /// (§IV-A); each gets a SpecOk/Misspec completion at resolution.
@@ -60,6 +60,7 @@ pub struct Renewal {
 }
 
 /// Per-core private-cache controller state.
+#[derive(Debug, Clone)]
 pub struct L1 {
     pub cache: SetAssoc<L1Line>,
     /// Program timestamp: ts of the last committed operation.
@@ -77,7 +78,7 @@ pub struct L1 {
 /// Per-line state at a timestamp manager (paper Table III).  `owner`
 /// Some = exclusive; the stored wts/rts are only meaningful while the
 /// line is shared (the paper reuses those bits for the owner id).
-#[derive(Debug, Clone, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
 pub struct TmLine {
     pub owner: Option<CoreId>,
     /// Mid-transaction (owner round-trip in flight): not evictable.
@@ -93,6 +94,7 @@ pub struct TmLine {
 }
 
 /// Per-slice timestamp-manager state.
+#[derive(Debug, Clone)]
 pub struct Tm {
     pub cache: SetAssoc<TmLine>,
     /// Memory timestamp for DRAM-resident lines (§III-C2).
@@ -104,7 +106,9 @@ pub struct Tm {
     pub pending: FxHashMap<LineAddr, Pending>,
 }
 
-/// The full protocol: all L1s + all timestamp managers.
+/// The full protocol: all L1s + all timestamp managers.  `Clone`
+/// exists for the `verif` model checker's snapshot/branch exploration.
+#[derive(Debug, Clone)]
 pub struct Tardis {
     pub(crate) cfg: TardisConfig,
     pub(crate) n_cores: u32,

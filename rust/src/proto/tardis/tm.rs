@@ -6,20 +6,20 @@ use super::*;
 
 /// A queued request at a TM line that is busy (DRAM fetch or owner
 /// round-trip in flight).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Req {
     pub core: CoreId,
     pub kind: ReqKind,
 }
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ReqKind {
     Sh { pts: Ts, wts: Ts, renew: bool },
     Ex { wts: Ts },
 }
 
 /// Why a line is busy.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PendingKind {
     /// DRAM read in flight; the line is absent from the array.
     Fetch,
@@ -34,7 +34,7 @@ pub enum PendingKind {
     EvictFlush,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Pending {
     pub kind: PendingKind,
     pub waiters: VecDeque<Req>,
@@ -161,16 +161,31 @@ impl Tardis {
                 line.touched = true;
                 let (l_wts, l_rts, l_val) = (line.wts, line.rts, line.value);
                 self.tm[s].max_ts = self.tm[s].max_ts.max(l_rts);
+                // Seeded fault for the verif mutation smoke-check: the
+                // grant promises the sharer a longer lease than the TM
+                // records, breaking lease containment (sharer rts must
+                // stay <= TM rts).  Compiled out of normal builds.
+                let sent_rts = if cfg!(feature = "verif-mutate-over-lease") {
+                    l_rts + 1000
+                } else {
+                    l_rts
+                };
                 if wts == l_wts {
                     // Requester's copy is current: renew without data.
-                    ctx.send(to_core(slice, req.core, addr, req.core, MsgKind::RenewRep { rts: l_rts }));
+                    ctx.send(to_core(
+                        slice,
+                        req.core,
+                        addr,
+                        req.core,
+                        MsgKind::RenewRep { rts: sent_rts },
+                    ));
                 } else {
                     ctx.send(to_core(
                         slice,
                         req.core,
                         addr,
                         req.core,
-                        MsgKind::ShRep { wts: l_wts, rts: l_rts, value: l_val },
+                        MsgKind::ShRep { wts: l_wts, rts: sent_rts, value: l_val },
                     ));
                 }
                 self.tm_check_rebase(slice, ctx);

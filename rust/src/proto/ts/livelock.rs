@@ -19,7 +19,7 @@
 use crate::hashing::FxHashMap;
 use crate::types::{CoreId, LineAddr};
 
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct LivelockGuard {
     /// Consecutive failed renewals before escalation; 0 disables.
     threshold: u32,

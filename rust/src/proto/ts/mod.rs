@@ -33,7 +33,7 @@ use crate::types::Ts;
 /// Per-line lease-policy state, embedded in each timestamp-manager
 /// line.  One compact struct shared by all policies so switching
 /// policies never changes the line layout (and the storage model).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
 pub struct LineLease {
     /// Dynamic: lease multiplier exponent (`lease << exp`).
     pub exp: u8,

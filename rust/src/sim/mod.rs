@@ -1,4 +1,8 @@
 //! Discrete-event simulation: calendar event queue and engine.
+//!
+//! The engine advances the protocol controllers along *one* timed
+//! path; [`crate::verif`] drives the same controllers through *every*
+//! interleaving at small bounds (bounded exhaustive model checking).
 
 pub mod engine;
 pub mod event;

@@ -1,0 +1,724 @@
+//! The model-checking harness.
+//!
+//! [`World`] is the closed system under exploration: one real protocol
+//! object plus everything the engine normally provides around it —
+//! per-core issue state (with a TSO store buffer), per-(src, dst)
+//! FIFO message channels, and a flat DRAM backing store.  The harness
+//! *is* the deterministic single-step driver: where
+//! [`crate::sim::Engine`] advances the same controllers along one
+//! timed path, `explore` branches over every enabled transition.
+//!
+//! Per-channel delivery stays FIFO (matching the engine's ChannelClock
+//! ordering guarantee, which MSI's invalidation protocol relies on);
+//! *cross*-channel delivery order is explored exhaustively — a strict
+//! over-approximation of what any latency assignment can produce,
+//! sound because the controllers never read `ctx.now` for correctness.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::Consistency;
+use crate::hashing::FxHashMap;
+use crate::net::{Message, MsgKind, Node};
+use crate::prog::checker::{self, AccessLog, LogRecord};
+use crate::prog::Workload;
+use crate::proto::{AccessOutcome, Completion, CompletionKind, MemOp, ProtoCtx};
+use crate::stats::SimStats;
+use crate::types::{CoreId, LineAddr};
+
+use super::{
+    Counterexample, InvariantStat, ModelProto, RunOutcome, VerifBounds, VerifEvent, VerifOp,
+};
+
+/// A memory access handed to the protocol and still pending.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Outstanding {
+    addr: LineAddr,
+    op: MemOp,
+    pc: u32,
+}
+
+/// One TSO store-buffer entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct SbEntry {
+    addr: LineAddr,
+    value: u64,
+    pc: u32,
+}
+
+/// Harness-side state of one core: issue budgets plus whatever sits
+/// between the core and the protocol.  Part of the exact state key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct CoreState {
+    next_pc: u32,
+    /// Remaining loads / stores per line index.
+    loads_left: Vec<u32>,
+    stores_left: Vec<u32>,
+    outstanding: Option<Outstanding>,
+    sb: VecDeque<SbEntry>,
+}
+
+/// Exact key of a [`World`]: everything that can affect *future*
+/// behavior.  The access log and the step/seq counters are excluded on
+/// purpose — they record the *past* — which is what lets distinct
+/// histories merge (see DESIGN.md §9 for the soundness discussion).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct StateKey<K> {
+    proto: K,
+    cores: Vec<CoreState>,
+    /// Non-empty channels only, sorted by (src, dst).
+    channels: Vec<(u32, u32, Vec<Message>)>,
+    memory: Vec<(LineAddr, u64)>,
+}
+
+/// The closed system: protocol + cores + network + DRAM.
+#[derive(Clone)]
+struct World<P: ModelProto> {
+    proto: P,
+    cores: Vec<CoreState>,
+    /// In-flight messages per (src, dst) endpoint pair, FIFO.
+    channels: BTreeMap<(u32, u32), VecDeque<Message>>,
+    /// Flat DRAM backing store (absent = 0).
+    memory: BTreeMap<LineAddr, u64>,
+    log: AccessLog,
+    /// Logical step counter: `ctx.now` and `commit_cycle` for logged
+    /// records (monotone along any path).
+    step: u64,
+    seq: u64,
+    bounds: VerifBounds,
+    model: Consistency,
+    lines: Vec<LineAddr>,
+}
+
+impl<P: ModelProto> World<P> {
+    fn new(proto: P, bounds: VerifBounds, model: Consistency) -> Self {
+        let lines = bounds.line_addrs();
+        let nl = lines.len();
+        Self {
+            proto,
+            cores: (0..bounds.cores)
+                .map(|_| CoreState {
+                    next_pc: 0,
+                    loads_left: vec![bounds.max_ts; nl],
+                    stores_left: vec![bounds.max_ts; nl],
+                    outstanding: None,
+                    sb: VecDeque::new(),
+                })
+                .collect(),
+            channels: BTreeMap::new(),
+            memory: BTreeMap::new(),
+            log: AccessLog::default(),
+            step: 0,
+            seq: 0,
+            bounds,
+            model,
+            lines,
+        }
+    }
+
+    /// Endpoint numbering: cores, then LLC slices, then MCs.
+    fn node_id(&self, n: Node) -> u32 {
+        let nc = self.bounds.cores;
+        match n {
+            Node::Core(c) => c,
+            Node::Slice(s) => nc + s,
+            Node::Mc(m) => 2 * nc + m,
+        }
+    }
+
+    fn node_name(&self, id: u32) -> String {
+        let nc = self.bounds.cores;
+        if id < nc {
+            format!("core{id}")
+        } else if id < 2 * nc {
+            format!("slice{}", id - nc)
+        } else {
+            format!("mc{}", id - 2 * nc)
+        }
+    }
+
+    fn route(&mut self, m: Message) {
+        let key = (self.node_id(m.src), self.node_id(m.dst));
+        self.channels.entry(key).or_default().push_back(m);
+    }
+
+    /// Run one protocol call with a scratch context, then move its
+    /// outgoing messages into the channels.  Returns the call's result
+    /// plus any completions it pushed.
+    fn call<R>(&mut self, f: impl FnOnce(&mut P, &mut ProtoCtx) -> R) -> (R, Vec<Completion>) {
+        let mut msgs = Vec::new();
+        let mut comps = Vec::new();
+        let mut stats = SimStats::default();
+        let r = {
+            let mut ctx = ProtoCtx {
+                now: self.step,
+                msgs: &mut msgs,
+                completions: &mut comps,
+                stats: &mut stats,
+            };
+            f(&mut self.proto, &mut ctx)
+        };
+        for m in msgs {
+            self.route(m);
+        }
+        (r, comps)
+    }
+
+    fn push_record(
+        &mut self,
+        core: CoreId,
+        pc: u32,
+        addr: LineAddr,
+        op: MemOp,
+        value: u64,
+        ts: u64,
+        forwarded: bool,
+    ) {
+        let (value_read, value_written) = match op {
+            MemOp::Load => (Some(value), None),
+            MemOp::Store { value: v } => (None, Some(v)),
+            other => panic!("harness never issues {other:?}"),
+        };
+        let seq = self.seq;
+        self.seq += 1;
+        self.log.push(LogRecord {
+            core,
+            pc,
+            addr,
+            value_read,
+            value_written,
+            ts,
+            commit_cycle: self.step,
+            seq,
+            valid: true,
+            forwarded,
+        });
+    }
+
+    /// Resolve protocol completions against outstanding accesses.
+    /// Returns true if any log record was appended.
+    fn handle_completions(&mut self, comps: Vec<Completion>) -> bool {
+        let mut appended = false;
+        for comp in comps {
+            assert!(
+                matches!(comp.kind, CompletionKind::Demand),
+                "harness: unexpected completion kind {comp:?} (speculation and \
+                 spinning are outside the verification bounds)"
+            );
+            let out = self.cores[comp.core as usize]
+                .outstanding
+                .take()
+                .unwrap_or_else(|| {
+                    panic!("harness: completion without outstanding access: {comp:?}")
+                });
+            assert_eq!(out.addr, comp.addr, "harness: completion for the wrong address");
+            self.push_record(comp.core, out.pc, out.addr, out.op, comp.value, comp.ts, false);
+            appended = true;
+        }
+        appended
+    }
+
+    /// All transitions enabled in this state, in a fixed deterministic
+    /// order (cores ascending, then channels by (src, dst)).
+    fn enabled(&self) -> Vec<VerifEvent> {
+        let mut evs = Vec::new();
+        for (c, core) in self.cores.iter().enumerate() {
+            let cid = c as CoreId;
+            if core.outstanding.is_some() {
+                continue;
+            }
+            for li in 0..self.lines.len() {
+                if core.loads_left[li] > 0 {
+                    evs.push(VerifEvent::Issue { core: cid, line: li as u32, op: VerifOp::Load });
+                }
+                let sb_room = self.model == Consistency::Sc
+                    || (core.sb.len() as u32) < self.bounds.sb_entries;
+                if core.stores_left[li] > 0 && sb_room {
+                    evs.push(VerifEvent::Issue { core: cid, line: li as u32, op: VerifOp::Store });
+                }
+            }
+            if self.model == Consistency::Tso && !core.sb.is_empty() {
+                evs.push(VerifEvent::Drain { core: cid });
+            }
+        }
+        for &(s, d) in self.channels.keys() {
+            evs.push(VerifEvent::Deliver { src: s, dst: d });
+        }
+        evs
+    }
+
+    /// Everything issued has fully resolved (distinct from merely
+    /// having no enabled transition, which is a deadlock).
+    fn is_complete(&self) -> bool {
+        self.channels.is_empty()
+            && self
+                .cores
+                .iter()
+                .all(|c| c.outstanding.is_none() && c.sb.is_empty())
+    }
+
+    fn stuck_detail(&self) -> String {
+        let stuck: Vec<String> = self
+            .cores
+            .iter()
+            .enumerate()
+            .filter_map(|(c, s)| {
+                s.outstanding
+                    .map(|o| format!("core{c} waiting on {:#x} ({:?})", o.addr, o.op))
+            })
+            .collect();
+        format!(
+            "no transition enabled but work remains: [{}], {} in-flight channel(s)",
+            stuck.join(", "),
+            self.channels.len()
+        )
+    }
+
+    /// Human-readable label for `ev` as applied to *this* state (must
+    /// be called before `apply`).
+    fn describe(&self, ev: VerifEvent) -> String {
+        match ev {
+            VerifEvent::Issue { core, line, op } => format!(
+                "core{core}: issue {} to line{line} ({:#x})",
+                op.name(),
+                self.lines[line as usize]
+            ),
+            VerifEvent::Drain { core } => match self.cores[core as usize].sb.front() {
+                Some(e) => format!(
+                    "core{core}: drain store buffer (store {:#x} to {:#x}, pc {})",
+                    e.value, e.addr, e.pc
+                ),
+                None => format!("core{core}: drain store buffer (empty?)"),
+            },
+            VerifEvent::Deliver { src, dst } => {
+                let head = self.channels.get(&(src, dst)).and_then(|q| q.front());
+                match head {
+                    Some(m) => format!(
+                        "deliver {} -> {}: {:?} for {:#x}",
+                        self.node_name(src),
+                        self.node_name(dst),
+                        m.kind,
+                        m.addr
+                    ),
+                    None => format!(
+                        "deliver {} -> {}: (empty channel?)",
+                        self.node_name(src),
+                        self.node_name(dst)
+                    ),
+                }
+            }
+        }
+    }
+
+    /// The access log is only a *checkable* TSO history once every
+    /// store buffer has drained: a forwarded load commits to the log
+    /// while its store is still buffered (unlogged), so mid-buffer
+    /// prefixes legitimately fail `check_tso_forwarding`.  Under SC
+    /// this is always true.  At such states the per-core logs are
+    /// committed program prefixes, so `check_model` applies.
+    fn log_checkable(&self) -> bool {
+        self.cores.iter().all(|c| c.sb.is_empty())
+    }
+
+    /// Apply one transition.  Returns true if a log record was
+    /// appended (the caller then re-runs the linearization check).
+    fn apply(&mut self, ev: VerifEvent) -> bool {
+        self.step += 1;
+        match ev {
+            VerifEvent::Issue { core, line, op } => {
+                let c = core as usize;
+                let li = line as usize;
+                let addr = self.lines[li];
+                let pc = self.cores[c].next_pc;
+                self.cores[c].next_pc += 1;
+                match op {
+                    VerifOp::Load => self.cores[c].loads_left[li] -= 1,
+                    VerifOp::Store => self.cores[c].stores_left[li] -= 1,
+                }
+                match op {
+                    VerifOp::Store if self.model == Consistency::Tso => {
+                        // TSO: stores retire into the FIFO store buffer;
+                        // they reach the protocol on a later Drain.
+                        let value = Workload::store_value(core, pc as usize);
+                        self.cores[c].sb.push_back(SbEntry { addr, value, pc });
+                        false
+                    }
+                    VerifOp::Load if self.model == Consistency::Tso
+                        && self.cores[c].sb.iter().any(|e| e.addr == addr) =>
+                    {
+                        // Store-to-load forwarding from the newest
+                        // matching buffered store; the value never
+                        // touches the coherence substrate.
+                        let value = self.cores[c]
+                            .sb
+                            .iter()
+                            .rev()
+                            .find(|e| e.addr == addr)
+                            .unwrap()
+                            .value;
+                        self.push_record(core, pc, addr, MemOp::Load, value, 0, true);
+                        true
+                    }
+                    _ => {
+                        let memop = match op {
+                            VerifOp::Load => MemOp::Load,
+                            VerifOp::Store => MemOp::Store {
+                                value: Workload::store_value(core, pc as usize),
+                            },
+                        };
+                        self.access(core, addr, memop, pc)
+                    }
+                }
+            }
+            VerifEvent::Drain { core } => {
+                let e = self.cores[core as usize]
+                    .sb
+                    .pop_front()
+                    .expect("harness: Drain on an empty store buffer");
+                self.access(core, e.addr, MemOp::Store { value: e.value }, e.pc)
+            }
+            VerifEvent::Deliver { src, dst } => {
+                let q = self
+                    .channels
+                    .get_mut(&(src, dst))
+                    .expect("harness: Deliver on an empty channel");
+                let msg = q.pop_front().expect("harness: Deliver on an empty channel");
+                if q.is_empty() {
+                    self.channels.remove(&(src, dst));
+                }
+                if matches!(msg.dst, Node::Mc(_)) {
+                    self.dram(msg);
+                    false
+                } else {
+                    let ((), comps) = self.call(|p, ctx| p.on_message(msg, ctx));
+                    self.handle_completions(comps)
+                }
+            }
+        }
+    }
+
+    /// Hand one access to the protocol (speculation disabled: the
+    /// harness wants every outcome deterministic and demand-ordered).
+    fn access(&mut self, core: CoreId, addr: LineAddr, memop: MemOp, pc: u32) -> bool {
+        let (outcome, comps) =
+            self.call(|p, ctx| p.core_access(core, addr, memop, false, ctx));
+        let mut appended = match outcome {
+            AccessOutcome::Done(d) => {
+                self.push_record(core, pc, addr, memop, d.value, d.ts, false);
+                true
+            }
+            AccessOutcome::Pending => {
+                self.cores[core as usize].outstanding = Some(Outstanding { addr, op: memop, pc });
+                false
+            }
+            AccessOutcome::SpecDone(_) => {
+                panic!("harness: protocol speculated with spec_ok=false")
+            }
+        };
+        appended |= self.handle_completions(comps);
+        appended
+    }
+
+    /// The engine-provided DRAM endpoint: immediate-service model, one
+    /// request per Deliver transition (the round trip itself is still
+    /// interleaved through the channels).
+    fn dram(&mut self, msg: Message) {
+        match msg.kind {
+            MsgKind::DramLdReq => {
+                let value = self.memory.get(&msg.addr).copied().unwrap_or(0);
+                self.route(Message {
+                    src: msg.dst,
+                    dst: msg.src,
+                    addr: msg.addr,
+                    requester: msg.requester,
+                    kind: MsgKind::DramLdRep { value },
+                });
+            }
+            MsgKind::DramStReq { value } => {
+                self.memory.insert(msg.addr, value);
+            }
+            other => panic!("harness: unexpected MC-bound message {other:?}"),
+        }
+    }
+
+    fn key(&self) -> StateKey<P::Key> {
+        StateKey {
+            proto: self.proto.state_key(),
+            cores: self.cores.clone(),
+            channels: self
+                .channels
+                .iter()
+                .map(|(&(s, d), q)| (s, d, q.iter().copied().collect()))
+                .collect(),
+            memory: self.memory.iter().map(|(&a, &v)| (a, v)).collect(),
+        }
+    }
+}
+
+/// Exhaustively explore one (protocol, consistency) configuration by
+/// BFS over [`World`] transitions with exact-state deduplication.
+/// BFS makes the first violation found a *shortest* counterexample.
+pub fn explore<P: ModelProto>(
+    mk: &dyn Fn() -> P,
+    bounds: VerifBounds,
+    model: Consistency,
+) -> RunOutcome {
+    let invs = P::invariants();
+    let mut stats: Vec<InvariantStat> = invs
+        .iter()
+        .map(|i| InvariantStat { name: i.name().to_string(), checked: 0, violations: 0 })
+        .collect();
+    let mut transitions = 0u64;
+    let mut max_depth = 0u32;
+    let mut terminal_states = 0u64;
+    let mut trace_checks = 0u64;
+
+    let root = World::new(mk(), bounds, model);
+    let mut visited: FxHashMap<StateKey<P::Key>, u32> = FxHashMap::default();
+    // nodes[i] = (parent node id, event that produced node i).
+    let mut nodes: Vec<(u32, Option<VerifEvent>)> = vec![(0, None)];
+    visited.insert(root.key(), 0);
+
+    let outcome = |visited_len: usize,
+                   transitions: u64,
+                   max_depth: u32,
+                   terminal_states: u64,
+                   trace_checks: u64,
+                   stats: Vec<InvariantStat>,
+                   cex: Option<Counterexample>| RunOutcome {
+        states: visited_len as u64,
+        transitions,
+        max_depth,
+        terminal_states,
+        trace_checks,
+        invariants: stats,
+        counterexample: cex,
+    };
+
+    // The reset state must satisfy the invariants too.
+    for (i, inv) in invs.iter().enumerate() {
+        stats[i].checked += 1;
+        if let Err(detail) = inv.check(&root.proto, &root.lines) {
+            stats[i].violations += 1;
+            let cex = build_cex(mk, bounds, model, &nodes, 0, None, inv.name(), detail);
+            return outcome(1, 0, 0, 0, 0, stats, Some(cex));
+        }
+    }
+
+    let mut queue: VecDeque<(World<P>, u32, u32)> = VecDeque::new();
+    queue.push_back((root, 0, 0));
+
+    while let Some((world, node, depth)) = queue.pop_front() {
+        max_depth = max_depth.max(depth);
+        let evs = world.enabled();
+        if evs.is_empty() {
+            if world.is_complete() {
+                terminal_states += 1;
+                trace_checks += 1;
+                if let Err(v) = checker::check_model(&world.log, model) {
+                    let cex = build_cex(
+                        mk, bounds, model, &nodes, node, None,
+                        "linearization", format!("{v:?}"),
+                    );
+                    return outcome(
+                        visited.len(), transitions, max_depth, terminal_states,
+                        trace_checks, stats, Some(cex),
+                    );
+                }
+            } else {
+                let cex = build_cex(
+                    mk, bounds, model, &nodes, node, None,
+                    "deadlock-freedom", world.stuck_detail(),
+                );
+                return outcome(
+                    visited.len(), transitions, max_depth, terminal_states,
+                    trace_checks, stats, Some(cex),
+                );
+            }
+            continue;
+        }
+        for ev in evs {
+            transitions += 1;
+            let mut next = world.clone();
+            let appended = next.apply(ev);
+            for (i, inv) in invs.iter().enumerate() {
+                stats[i].checked += 1;
+                let r = inv
+                    .check(&next.proto, &next.lines)
+                    .and_then(|()| inv.check_step(&world.proto, &next.proto));
+                if let Err(detail) = r {
+                    stats[i].violations += 1;
+                    let cex =
+                        build_cex(mk, bounds, model, &nodes, node, Some(ev), inv.name(), detail);
+                    return outcome(
+                        visited.len(), transitions, max_depth, terminal_states,
+                        trace_checks, stats, Some(cex),
+                    );
+                }
+            }
+            if appended && next.log_checkable() {
+                trace_checks += 1;
+                if let Err(v) = checker::check_model(&next.log, model) {
+                    let cex = build_cex(
+                        mk, bounds, model, &nodes, node, Some(ev),
+                        "linearization", format!("{v:?}"),
+                    );
+                    return outcome(
+                        visited.len(), transitions, max_depth, terminal_states,
+                        trace_checks, stats, Some(cex),
+                    );
+                }
+            }
+            if let std::collections::hash_map::Entry::Vacant(slot) = visited.entry(next.key()) {
+                let id = nodes.len() as u32;
+                slot.insert(id);
+                nodes.push((node, Some(ev)));
+                queue.push_back((next, id, depth + 1));
+            }
+        }
+    }
+
+    outcome(
+        visited.len(), transitions, max_depth, terminal_states, trace_checks, stats, None,
+    )
+}
+
+/// Re-execute an event path from reset, producing a label per event
+/// and the violation it ends in (if any).  Deterministic: the same
+/// path always reproduces the same states, which is what makes
+/// counterexamples replayable regression tests.
+pub fn replay<P: ModelProto>(
+    mk: &dyn Fn() -> P,
+    bounds: VerifBounds,
+    model: Consistency,
+    events: &[VerifEvent],
+) -> (Vec<String>, Option<(String, String)>) {
+    let invs = P::invariants();
+    let mut world = World::new(mk(), bounds, model);
+    let mut labels = Vec::new();
+    for &ev in events {
+        labels.push(world.describe(ev));
+        let before = world.proto.clone();
+        let appended = world.apply(ev);
+        for inv in &invs {
+            let r = inv
+                .check(&world.proto, &world.lines)
+                .and_then(|()| inv.check_step(&before, &world.proto));
+            if let Err(detail) = r {
+                return (labels, Some((inv.name().to_string(), detail)));
+            }
+        }
+        if appended && world.log_checkable() {
+            if let Err(v) = checker::check_model(&world.log, model) {
+                return (labels, Some(("linearization".to_string(), format!("{v:?}"))));
+            }
+        }
+    }
+    if world.enabled().is_empty() && !world.is_complete() {
+        return (
+            labels,
+            Some(("deadlock-freedom".to_string(), world.stuck_detail())),
+        );
+    }
+    (labels, None)
+}
+
+/// Reconstruct the event path to `node` (plus `last`, the violating
+/// edge) and label it by replaying.
+fn build_cex<P: ModelProto>(
+    mk: &dyn Fn() -> P,
+    bounds: VerifBounds,
+    model: Consistency,
+    nodes: &[(u32, Option<VerifEvent>)],
+    node: u32,
+    last: Option<VerifEvent>,
+    invariant: &str,
+    detail: String,
+) -> Counterexample {
+    let mut events = Vec::new();
+    let mut id = node as usize;
+    while let (parent, Some(ev)) = nodes[id] {
+        events.push(ev);
+        id = parent as usize;
+    }
+    events.reverse();
+    if let Some(ev) = last {
+        events.push(ev);
+    }
+    let (labels, _) = replay(mk, bounds, model, &events);
+    Counterexample {
+        invariant: invariant.to_string(),
+        detail,
+        events,
+        labels,
+    }
+}
+
+// The clean-protocol expectations below are meaningless when a seeded
+// fault is compiled in.
+#[cfg(all(
+    test,
+    not(any(feature = "verif-mutate-wts-skip", feature = "verif-mutate-over-lease"))
+))]
+mod tests {
+    use super::*;
+    use crate::config::ProtocolKind;
+    use crate::proto::msi::Msi;
+    use crate::proto::tardis::Tardis;
+
+    fn tiny() -> VerifBounds {
+        VerifBounds { cores: 2, lines: 1, max_ts: 1, lease: 2, sb_entries: 2 }
+    }
+
+    #[test]
+    fn tardis_sc_tiny_is_clean_and_deterministic() {
+        let bounds = tiny();
+        let cfg = bounds.config(ProtocolKind::Tardis, Consistency::Sc);
+        let a = explore(&|| Tardis::new(&cfg), bounds, Consistency::Sc);
+        assert!(a.passed(), "counterexample: {:#?}", a.counterexample);
+        assert!(a.states > 1 && a.terminal_states > 0);
+        let b = explore(&|| Tardis::new(&cfg), bounds, Consistency::Sc);
+        assert_eq!(a, b, "repeat exploration must be bit-identical");
+    }
+
+    #[test]
+    fn tardis_tso_tiny_exhibits_store_buffering_and_stays_clean() {
+        let bounds = tiny();
+        let cfg = bounds.config(ProtocolKind::Tardis, Consistency::Tso);
+        let a = explore(&|| Tardis::new(&cfg), bounds, Consistency::Tso);
+        assert!(a.passed(), "counterexample: {:#?}", a.counterexample);
+        // TSO adds Drain transitions, so its graph is strictly larger
+        // than the SC one for the same bounds.
+        let sc_cfg = bounds.config(ProtocolKind::Tardis, Consistency::Sc);
+        let sc = explore(&|| Tardis::new(&sc_cfg), bounds, Consistency::Sc);
+        assert!(a.states > sc.states);
+    }
+
+    #[test]
+    fn msi_sc_tiny_is_clean() {
+        let bounds = tiny();
+        let cfg = bounds.config(ProtocolKind::Msi, Consistency::Sc);
+        let a = explore(&|| Msi::new(&cfg), bounds, Consistency::Sc);
+        assert!(a.passed(), "counterexample: {:#?}", a.counterexample);
+        assert!(a.terminal_states > 0);
+    }
+
+    #[test]
+    fn counterexamples_map_back_to_workloads() {
+        // Build a synthetic counterexample and check the projection.
+        let bounds = tiny();
+        let cex = Counterexample {
+            invariant: "x".into(),
+            detail: "y".into(),
+            events: vec![
+                VerifEvent::Issue { core: 0, line: 0, op: VerifOp::Store },
+                VerifEvent::Deliver { src: 0, dst: 2 },
+                VerifEvent::Issue { core: 1, line: 0, op: VerifOp::Load },
+            ],
+            labels: vec![],
+        };
+        let w = cex.to_workload(&bounds);
+        assert_eq!(w.n_cores(), 2);
+        assert_eq!(w.programs[0].len(), 1);
+        assert_eq!(w.programs[1].len(), 1);
+    }
+}

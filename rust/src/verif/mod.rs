@@ -1,0 +1,273 @@
+//! Exhaustive protocol verification: a bounded model checker that
+//! drives the *shipped* coherence controllers.
+//!
+//! Unlike a hand-written TLA+/Murphi re-model, the checker explores
+//! the actual `proto/` implementations — [`crate::proto::tardis::Tardis`]
+//! and [`crate::proto::msi::Msi`] — so a bug in the code (not just in
+//! an abstraction of it) is caught.  A [`harness::World`] bundles one
+//! protocol object with per-core issue state, per-channel in-flight
+//! message queues, and a flat DRAM model; [`explore`] runs BFS over
+//! every interleaving of issue / store-buffer-drain / message-delivery
+//! transitions within small bounds (cores, lines, ops per core).
+//!
+//! At every explored state each [`Invariant`] is evaluated, and every
+//! time an access commits the accumulated trace is re-linearized with
+//! [`crate::prog::checker::check_model`] (SC or TSO).  A violation
+//! yields a minimal counterexample: the BFS-shortest event path from
+//! reset, replayable with [`replay`] and convertible to a
+//! [`crate::prog::Workload`] for an engine-level regression run.
+//!
+//! DESIGN.md §9 documents the state encoding, the soundness argument
+//! for what the state key excludes, and how to add an invariant.
+
+mod harness;
+mod msi;
+mod report;
+mod tardis;
+
+pub use harness::{explore, replay};
+pub use report::{RunReport, VerifReport};
+
+use crate::config::{Consistency, ProtocolKind, SystemConfig};
+use crate::proto::Coherence;
+use crate::types::{CoreId, LineAddr};
+
+/// Exploration bounds.  Deliberately tiny: exhaustive enumeration is
+/// only tractable (and only needed) for a handful of cores and lines —
+/// coherence bugs are interleaving bugs, not capacity bugs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifBounds {
+    /// Cores issuing accesses (2..=3).
+    pub cores: u32,
+    /// Distinct cache lines touched (1..=2).
+    pub lines: u32,
+    /// Loads *and* stores each core may issue per line (1..=4); bounds
+    /// the timestamps a run can reach.
+    pub max_ts: u32,
+    /// Tardis static lease used for the run.
+    pub lease: u64,
+    /// TSO store-buffer depth per core.
+    pub sb_entries: u32,
+}
+
+impl Default for VerifBounds {
+    fn default() -> Self {
+        Self { cores: 2, lines: 1, max_ts: 3, lease: 2, sb_entries: 2 }
+    }
+}
+
+impl VerifBounds {
+    pub fn validate(&self) -> Result<(), String> {
+        let range = |what: &str, v: u64, lo: u64, hi: u64| {
+            if v < lo || v > hi {
+                Err(format!("{what} must be in {lo}..={hi} (got {v})"))
+            } else {
+                Ok(())
+            }
+        };
+        range("--cores", self.cores as u64, 2, 3)?;
+        range("--lines", self.lines as u64, 1, 2)?;
+        range("--max-ts", self.max_ts as u64, 1, 4)?;
+        range("--lease", self.lease, 1, 16)?;
+        range("--sb-entries", self.sb_entries as u64, 1, 2)
+    }
+
+    /// The concrete line addresses a run touches.
+    pub fn line_addrs(&self) -> Vec<LineAddr> {
+        (0..self.lines as u64)
+            .map(|i| crate::types::SHARED_BASE + i)
+            .collect()
+    }
+
+    /// System configuration for a verification run.  Geometry is sized
+    /// so the bounded run can never evict (4-way caches vs <= 2 lines):
+    /// replacement is out of scope for the checker, and no-eviction is
+    /// what makes excluding LRU age from the state key sound.
+    pub fn config(&self, protocol: ProtocolKind, model: Consistency) -> SystemConfig {
+        let mut cfg = SystemConfig::small(self.cores, protocol);
+        cfg.consistency = model;
+        cfg.sb_entries = self.sb_entries;
+        cfg.l1_sets = 4;
+        cfg.l1_ways = 4;
+        cfg.l2_sets = 4;
+        cfg.l2_ways = 4;
+        cfg.tardis.lease = self.lease;
+        // Self increment is time-driven nondeterminism the harness does
+        // not model (and with it off, timestamps stay tiny and exact).
+        cfg.tardis.self_inc_period = 0;
+        cfg.tardis.exclusive_state = false;
+        cfg.tardis.livelock_threshold = 0;
+        cfg
+    }
+}
+
+/// A protocol the model checker can explore: clonable (snapshot /
+/// branch), with an exact state key for the visited set and a set of
+/// per-state invariants.
+pub trait ModelProto: Coherence + Clone {
+    /// Exact (lossless) encoding of all protocol state that can affect
+    /// future behavior.  Two states with equal keys *must* behave
+    /// identically — the explored-state count is only meaningful if
+    /// this is true.
+    type Key: std::hash::Hash + Eq + Clone + std::fmt::Debug;
+
+    fn state_key(&self) -> Self::Key;
+
+    fn invariants() -> Vec<Box<dyn Invariant<Self>>>;
+}
+
+/// A safety property evaluated at every explored state.
+pub trait Invariant<P: ?Sized> {
+    fn name(&self) -> &'static str;
+
+    /// Check the property on one state; `lines` are the addresses the
+    /// run touches.  Err carries a human-readable description of the
+    /// violation.
+    fn check(&self, proto: &P, lines: &[LineAddr]) -> Result<(), String>;
+
+    /// Check a relation between consecutive states (e.g. timestamp
+    /// monotonicity).  Default: nothing.
+    fn check_step(&self, _before: &P, _after: &P) -> Result<(), String> {
+        Ok(())
+    }
+}
+
+/// What kind of access an [`VerifEvent::Issue`] performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VerifOp {
+    Load,
+    Store,
+}
+
+impl VerifOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            VerifOp::Load => "load",
+            VerifOp::Store => "store",
+        }
+    }
+}
+
+/// One transition of the model-checked system.  The triple (event
+/// sequence from reset) fully determines a state — counterexamples are
+/// lists of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum VerifEvent {
+    /// A core issues a load or store to `line` (index into
+    /// [`VerifBounds::line_addrs`]).
+    Issue { core: CoreId, line: u32, op: VerifOp },
+    /// A core drains the oldest entry of its store buffer (TSO only).
+    Drain { core: CoreId },
+    /// Deliver the head message of the (src, dst) channel (endpoint
+    /// ids: cores, then slices, then memory controllers).
+    Deliver { src: u32, dst: u32 },
+}
+
+/// Per-invariant evaluation counts for one run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InvariantStat {
+    pub name: String,
+    pub checked: u64,
+    pub violations: u64,
+}
+
+/// A minimal violating run: the BFS-shortest event path from reset,
+/// with human-readable labels resolved against the replayed states.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Counterexample {
+    /// Violated invariant ("linearization" for trace-check failures,
+    /// "deadlock-freedom" for stuck states).
+    pub invariant: String,
+    pub detail: String,
+    pub events: Vec<VerifEvent>,
+    pub labels: Vec<String>,
+}
+
+impl Counterexample {
+    /// Project the per-core issue order onto a [`crate::prog::Workload`]
+    /// so the counterexample can also be driven through the full engine
+    /// (`SimBuilder`) as a coarse regression — the engine's fixed
+    /// timing picks *one* interleaving, so only [`replay`] is
+    /// guaranteed to reproduce the violation exactly.
+    pub fn to_workload(&self, bounds: &VerifBounds) -> crate::prog::Workload {
+        use crate::prog::{Op, Program, Workload};
+        let addrs = bounds.line_addrs();
+        let mut programs = vec![Program::default(); bounds.cores as usize];
+        for ev in &self.events {
+            if let VerifEvent::Issue { core, line, op } = *ev {
+                let prog = &mut programs[core as usize];
+                let addr = addrs[line as usize];
+                prog.ops.push(match op {
+                    VerifOp::Load => Op::Load { addr, gap: 0 },
+                    // None = "use the core's unique per-op value", the
+                    // same Workload::store_value the harness logs.
+                    VerifOp::Store => Op::Store { addr, value: None, gap: 0 },
+                });
+            }
+        }
+        Workload::new(programs)
+    }
+}
+
+/// Result of exhaustively exploring one (protocol, consistency) pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunOutcome {
+    /// Distinct states visited (exact-key dedup).
+    pub states: u64,
+    /// Transitions taken (explored edges, including ones that landed
+    /// on already-visited states).
+    pub transitions: u64,
+    /// Deepest BFS frontier reached.
+    pub max_depth: u32,
+    /// Fully quiescent end states (all budgets spent, nothing in
+    /// flight).
+    pub terminal_states: u64,
+    /// Incremental + end-state linearization checks run.
+    pub trace_checks: u64,
+    pub invariants: Vec<InvariantStat>,
+    pub counterexample: Option<Counterexample>,
+}
+
+impl RunOutcome {
+    pub fn passed(&self) -> bool {
+        self.counterexample.is_none()
+    }
+}
+
+/// Explore every (protocol, consistency) combination and collect a
+/// report.  `Ackwise` is rejected: its `Sharers::Global` overflow set
+/// is a deliberate over-approximation, so exact-state invariants do
+/// not apply.
+pub fn run_matrix(
+    protocols: &[ProtocolKind],
+    models: &[Consistency],
+    bounds: VerifBounds,
+) -> Result<VerifReport, String> {
+    bounds.validate()?;
+    let mut runs = Vec::new();
+    for &p in protocols {
+        for &m in models {
+            let cfg = bounds.config(p, m);
+            let outcome = match p {
+                ProtocolKind::Tardis => {
+                    explore(&|| crate::proto::tardis::Tardis::new(&cfg), bounds, m)
+                }
+                ProtocolKind::Msi => explore(&|| crate::proto::msi::Msi::new(&cfg), bounds, m),
+                ProtocolKind::Ackwise => {
+                    return Err(
+                        "verify does not support ackwise: the limited-pointer overflow \
+                         (Sharers::Global) is a conservative over-approximation, so \
+                         exact-state invariants do not apply"
+                            .to_string(),
+                    )
+                }
+            };
+            runs.push(RunReport {
+                protocol: p.name().to_string(),
+                consistency: m.name().to_string(),
+                outcome,
+            });
+        }
+    }
+    Ok(VerifReport::new(bounds, runs))
+}

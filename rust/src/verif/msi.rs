@@ -1,0 +1,197 @@
+//! [`ModelProto`] adapter + invariants for the MSI directory — the
+//! cross-check protocol: the same harness, transitions, and trace
+//! linearization exercised against a classically ordered design.
+//!
+//! Directory transients are visible concrete states here (Inv in
+//! flight, acks outstanding, ...), so the per-line checks are guarded
+//! by "no pending transaction at the home slice for this address":
+//! while a transaction is mid-flight the directory's sharer set and
+//! value legitimately disagree with the L1s, and the protocol's
+//! correctness claim is only about settled lines.
+
+use crate::proto::msi::{Demand, DirLine, DirPending, Msi, MsiL1Line};
+use crate::types::{CoreId, LineAddr};
+
+use super::{Invariant, ModelProto};
+
+/// Exact protocol-state key (hash-map contents sorted by address; LRU
+/// age excluded — see DESIGN.md §9).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MsiKey {
+    cores: Vec<MsiCoreKey>,
+    slices: Vec<MsiSliceKey>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct MsiCoreKey {
+    lines: Vec<(LineAddr, MsiL1Line)>,
+    demand: Vec<(LineAddr, Demand)>,
+    watch: Option<LineAddr>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct MsiSliceKey {
+    lines: Vec<(LineAddr, DirLine)>,
+    pending: Vec<(LineAddr, DirPending)>,
+}
+
+impl ModelProto for Msi {
+    type Key = MsiKey;
+
+    fn state_key(&self) -> MsiKey {
+        MsiKey {
+            cores: self
+                .l1
+                .iter()
+                .map(|l1| {
+                    let mut lines = Vec::new();
+                    l1.cache.for_each(|a, line| lines.push((a, line.clone())));
+                    lines.sort_by_key(|e| e.0);
+                    let mut demand: Vec<_> =
+                        l1.demand.iter().map(|(&a, d)| (a, d.clone())).collect();
+                    demand.sort_by_key(|e| e.0);
+                    MsiCoreKey { lines, demand, watch: l1.watch }
+                })
+                .collect(),
+            slices: self
+                .dir
+                .iter()
+                .map(|d| {
+                    let mut lines = Vec::new();
+                    d.cache.for_each(|a, line| lines.push((a, line.clone())));
+                    lines.sort_by_key(|e| e.0);
+                    let mut pending: Vec<_> =
+                        d.pending.iter().map(|(&a, p)| (a, p.clone())).collect();
+                    pending.sort_by_key(|e| e.0);
+                    MsiSliceKey { lines, pending }
+                })
+                .collect(),
+        }
+    }
+
+    fn invariants() -> Vec<Box<dyn Invariant<Self>>> {
+        vec![
+            Box::new(SingleModified),
+            Box::new(DirValueAgreement),
+            Box::new(SharerAccounting),
+        ]
+    }
+}
+
+fn settled(p: &Msi, addr: LineAddr) -> bool {
+    let s = p.slice_of(addr) as usize;
+    !p.dir[s].pending.contains_key(&addr)
+}
+
+fn l1_copies(p: &Msi, addr: LineAddr) -> Vec<(CoreId, MsiL1Line)> {
+    let mut out = Vec::new();
+    for (c, l1) in p.l1.iter().enumerate() {
+        if let Some(l) = l1.cache.peek(addr) {
+            out.push((c as CoreId, l.clone()));
+        }
+    }
+    out
+}
+
+/// At most one M copy system-wide; on settled lines the directory
+/// agrees on who holds it.
+struct SingleModified;
+
+impl Invariant<Msi> for SingleModified {
+    fn name(&self) -> &'static str {
+        "single-modified"
+    }
+
+    fn check(&self, p: &Msi, lines: &[LineAddr]) -> Result<(), String> {
+        for &addr in lines {
+            let m: Vec<CoreId> = l1_copies(p, addr)
+                .into_iter()
+                .filter(|(_, l)| l.m)
+                .map(|(c, _)| c)
+                .collect();
+            if m.len() > 1 {
+                return Err(format!(
+                    "line {addr:#x}: cores {m:?} hold M copies simultaneously"
+                ));
+            }
+            if let Some(&c) = m.first() {
+                if settled(p, addr) {
+                    let s = p.slice_of(addr) as usize;
+                    let owner = p.dir[s].cache.peek(addr).map(|d| d.owner);
+                    if owner != Some(Some(c)) {
+                        return Err(format!(
+                            "line {addr:#x}: core{c} holds M but slice{s} records \
+                             owner {owner:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A settled, unowned directory line and its sharers hold one value.
+struct DirValueAgreement;
+
+impl Invariant<Msi> for DirValueAgreement {
+    fn name(&self) -> &'static str {
+        "dir-value-agreement"
+    }
+
+    fn check(&self, p: &Msi, lines: &[LineAddr]) -> Result<(), String> {
+        for &addr in lines {
+            if !settled(p, addr) {
+                continue;
+            }
+            let s = p.slice_of(addr) as usize;
+            let Some(dl) = p.dir[s].cache.peek(addr) else { continue };
+            if dl.owner.is_some() || dl.busy {
+                continue;
+            }
+            for (c, l) in l1_copies(p, addr) {
+                if !l.m && l.value != dl.value {
+                    return Err(format!(
+                        "line {addr:#x}: core{c} caches {:#x} but slice{s} holds {:#x} \
+                         with no owner",
+                        l.value, dl.value
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Every cached copy is accounted for at the directory (the recorded
+/// sharer set / owner is a superset of the true holders — the
+/// direction invalidations depend on).
+struct SharerAccounting;
+
+impl Invariant<Msi> for SharerAccounting {
+    fn name(&self) -> &'static str {
+        "sharer-accounting"
+    }
+
+    fn check(&self, p: &Msi, lines: &[LineAddr]) -> Result<(), String> {
+        for &addr in lines {
+            if !settled(p, addr) {
+                continue;
+            }
+            let s = p.slice_of(addr) as usize;
+            for (c, _) in l1_copies(p, addr) {
+                let known = p.dir[s]
+                    .cache
+                    .peek(addr)
+                    .is_some_and(|d| d.owner == Some(c) || d.sharers.contains(c));
+                if !known {
+                    return Err(format!(
+                        "line {addr:#x}: core{c} caches the line but slice{s} has no \
+                         record of it"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,195 @@
+//! Machine-readable verification reports (schema `tardis-verif-v1`),
+//! mirroring the bench-JSON conventions: hand-written serialization
+//! (no serde in the offline image), a `schema` discriminator, and a
+//! validator (`tools/validate_verif.py`) that cross-checks repeat-run
+//! state counts against a recorded baseline.
+
+use super::{RunOutcome, VerifBounds};
+
+pub const SCHEMA: &str = "tardis-verif-v1";
+
+/// One (protocol, consistency) exploration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RunReport {
+    pub protocol: String,
+    pub consistency: String,
+    pub outcome: RunOutcome,
+}
+
+/// The full report for one `tardis verify` invocation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerifReport {
+    pub unix_time: u64,
+    pub bounds: VerifBounds,
+    pub runs: Vec<RunReport>,
+}
+
+impl VerifReport {
+    pub fn new(bounds: VerifBounds, runs: Vec<RunReport>) -> Self {
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        Self { unix_time, bounds, runs }
+    }
+
+    pub fn passed(&self) -> bool {
+        self.runs.iter().all(|r| r.outcome.passed())
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+        s.push_str(&format!("  \"unix_time\": {},\n", self.unix_time));
+        s.push_str(&format!("  \"cores\": {},\n", self.bounds.cores));
+        s.push_str(&format!("  \"lines\": {},\n", self.bounds.lines));
+        s.push_str(&format!("  \"max_ts\": {},\n", self.bounds.max_ts));
+        s.push_str(&format!("  \"lease\": {},\n", self.bounds.lease));
+        s.push_str(&format!("  \"sb_entries\": {},\n", self.bounds.sb_entries));
+        s.push_str(&format!("  \"passed\": {},\n", self.passed()));
+        s.push_str("  \"runs\": [\n");
+        for (i, r) in self.runs.iter().enumerate() {
+            s.push_str(&run_json(r, "    "));
+            s.push_str(if i + 1 < self.runs.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+fn run_json(r: &RunReport, pad: &str) -> String {
+    let o = &r.outcome;
+    let mut s = String::new();
+    s.push_str(&format!("{pad}{{\n"));
+    s.push_str(&format!("{pad}  \"protocol\": \"{}\",\n", esc(&r.protocol)));
+    s.push_str(&format!(
+        "{pad}  \"consistency\": \"{}\",\n",
+        esc(&r.consistency)
+    ));
+    s.push_str(&format!("{pad}  \"states_explored\": {},\n", o.states));
+    s.push_str(&format!("{pad}  \"transitions\": {},\n", o.transitions));
+    s.push_str(&format!("{pad}  \"max_depth\": {},\n", o.max_depth));
+    s.push_str(&format!(
+        "{pad}  \"terminal_states\": {},\n",
+        o.terminal_states
+    ));
+    s.push_str(&format!("{pad}  \"trace_checks\": {},\n", o.trace_checks));
+    s.push_str(&format!("{pad}  \"passed\": {},\n", o.passed()));
+    s.push_str(&format!("{pad}  \"invariants\": [\n"));
+    for (i, inv) in o.invariants.iter().enumerate() {
+        s.push_str(&format!(
+            "{pad}    {{\"name\": \"{}\", \"checked\": {}, \"violations\": {}}}{}",
+            esc(&inv.name),
+            inv.checked,
+            inv.violations,
+            if i + 1 < o.invariants.len() { ",\n" } else { "\n" }
+        ));
+    }
+    s.push_str(&format!("{pad}  ],\n"));
+    match &o.counterexample {
+        None => s.push_str(&format!("{pad}  \"counterexample\": null\n")),
+        Some(cex) => {
+            s.push_str(&format!("{pad}  \"counterexample\": {{\n"));
+            s.push_str(&format!(
+                "{pad}    \"invariant\": \"{}\",\n",
+                esc(&cex.invariant)
+            ));
+            s.push_str(&format!("{pad}    \"detail\": \"{}\",\n", esc(&cex.detail)));
+            s.push_str(&format!("{pad}    \"events\": [\n"));
+            for (i, label) in cex.labels.iter().enumerate() {
+                s.push_str(&format!(
+                    "{pad}      \"{}\"{}",
+                    esc(label),
+                    if i + 1 < cex.labels.len() { ",\n" } else { "\n" }
+                ));
+            }
+            s.push_str(&format!("{pad}    ]\n"));
+            s.push_str(&format!("{pad}  }}\n"));
+        }
+    }
+    s.push_str(&format!("{pad}}}"));
+    s
+}
+
+/// Minimal JSON string escaping (labels may quote protocol debug
+/// output).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::verif::{Counterexample, InvariantStat};
+
+    fn outcome(passed: bool) -> RunOutcome {
+        RunOutcome {
+            states: 10,
+            transitions: 20,
+            max_depth: 5,
+            terminal_states: 2,
+            trace_checks: 8,
+            invariants: vec![InvariantStat {
+                name: "single-writer".into(),
+                checked: 20,
+                violations: u64::from(!passed),
+            }],
+            counterexample: if passed {
+                None
+            } else {
+                Some(Counterexample {
+                    invariant: "single-writer".into(),
+                    detail: "two \"owners\"".into(),
+                    events: vec![],
+                    labels: vec!["core0: issue store to line0 (0x8000000)".into()],
+                })
+            },
+        }
+    }
+
+    fn report(passed: bool) -> VerifReport {
+        VerifReport::new(
+            VerifBounds::default(),
+            vec![RunReport {
+                protocol: "tardis".into(),
+                consistency: "sc".into(),
+                outcome: outcome(passed),
+            }],
+        )
+    }
+
+    #[test]
+    fn json_carries_schema_and_counts() {
+        let j = report(true).to_json();
+        assert!(j.contains("\"schema\": \"tardis-verif-v1\""));
+        assert!(j.contains("\"states_explored\": 10"));
+        assert!(j.contains("\"counterexample\": null"));
+        assert!(j.contains("\"passed\": true"));
+    }
+
+    #[test]
+    fn json_escapes_counterexample_text() {
+        let j = report(false).to_json();
+        assert!(j.contains("two \\\"owners\\\""));
+        assert!(j.contains("\"invariant\": \"single-writer\""));
+    }
+
+    #[test]
+    fn escaping_handles_control_chars() {
+        assert_eq!(esc("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(esc("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,333 @@
+//! [`ModelProto`] adapter + invariants for the Tardis controllers.
+//!
+//! The invariants mirror the paper's correctness argument (§III-B,
+//! Theorem 1): writes jump past every outstanding lease, so a stale
+//! copy is never readable at or after a newer version's write
+//! timestamp.  They are stated over *reachable concrete states* of the
+//! shipped controllers, with in-flight transients (owner round trips)
+//! excluded exactly where the protocol reuses the TM's wts/rts bits
+//! for the owner id.
+
+use crate::proto::tardis::{Demand, L1Line, Pending, Renewal, Tardis, TmLine};
+use crate::types::{CoreId, LineAddr, Ts};
+
+use super::{Invariant, ModelProto};
+
+/// Exact protocol-state key: every L1 and TM field that can affect
+/// future behavior, with hash-map contents sorted by address.  LRU age
+/// is deliberately absent — verification geometry guarantees no
+/// evictions, so replacement order is dead state (DESIGN.md §9).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TardisKey {
+    cores: Vec<TardisCoreKey>,
+    slices: Vec<TardisSliceKey>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct TardisCoreKey {
+    pts: Ts,
+    bts: Ts,
+    since_inc: u64,
+    lines: Vec<(LineAddr, L1Line)>,
+    demand: Vec<(LineAddr, Demand)>,
+    renewals: Vec<(LineAddr, Renewal)>,
+    watch: Option<LineAddr>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct TardisSliceKey {
+    mts: Ts,
+    bts: Ts,
+    max_ts: Ts,
+    lines: Vec<(LineAddr, TmLine)>,
+    pending: Vec<(LineAddr, Pending)>,
+}
+
+impl ModelProto for Tardis {
+    type Key = TardisKey;
+
+    fn state_key(&self) -> TardisKey {
+        TardisKey {
+            cores: self
+                .l1
+                .iter()
+                .map(|l1| {
+                    let mut lines = Vec::new();
+                    l1.cache.for_each(|a, line| lines.push((a, line.clone())));
+                    lines.sort_by_key(|e| e.0);
+                    let mut demand: Vec<_> =
+                        l1.demand.iter().map(|(&a, d)| (a, d.clone())).collect();
+                    demand.sort_by_key(|e| e.0);
+                    let mut renewals: Vec<_> =
+                        l1.renewals.iter().map(|(&a, r)| (a, *r)).collect();
+                    renewals.sort_by_key(|e| e.0);
+                    TardisCoreKey {
+                        pts: l1.pts,
+                        bts: l1.bts,
+                        since_inc: l1.accesses_since_inc,
+                        lines,
+                        demand,
+                        renewals,
+                        watch: l1.watch,
+                    }
+                })
+                .collect(),
+            slices: self
+                .tm
+                .iter()
+                .map(|tm| {
+                    let mut lines = Vec::new();
+                    tm.cache.for_each(|a, line| lines.push((a, line.clone())));
+                    lines.sort_by_key(|e| e.0);
+                    let mut pending: Vec<_> =
+                        tm.pending.iter().map(|(&a, p)| (a, p.clone())).collect();
+                    pending.sort_by_key(|e| e.0);
+                    TardisSliceKey {
+                        mts: tm.mts,
+                        bts: tm.bts,
+                        max_ts: tm.max_ts,
+                        lines,
+                        pending,
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    fn invariants() -> Vec<Box<dyn Invariant<Self>>> {
+        vec![
+            Box::new(SingleWriter),
+            Box::new(LeaseContainment),
+            Box::new(WriteAfterExpiry),
+            Box::new(VersionValueAgreement),
+            Box::new(TsSanity),
+        ]
+    }
+}
+
+/// One observable copy of a line: an L1 entry, or the TM's own entry
+/// while unowned (while owned, the TM's wts/rts bits belong to the
+/// owner id and carry no meaning — paper §III-F2).
+struct LineCopy {
+    who: String,
+    wts: Ts,
+    rts: Ts,
+    value: u64,
+    excl: bool,
+}
+
+fn copies(p: &Tardis, addr: LineAddr) -> Vec<LineCopy> {
+    let mut out = Vec::new();
+    for (c, l1) in p.l1.iter().enumerate() {
+        if let Some(l) = l1.cache.peek(addr) {
+            out.push(LineCopy {
+                who: format!("core{c} L1"),
+                wts: l.wts,
+                rts: l.rts,
+                value: l.value,
+                excl: l.excl,
+            });
+        }
+    }
+    let s = p.slice_of(addr) as usize;
+    if let Some(t) = p.tm[s].cache.peek(addr) {
+        if t.owner.is_none() {
+            out.push(LineCopy {
+                who: format!("slice{s} TM"),
+                wts: t.wts,
+                rts: t.rts,
+                value: t.value,
+                excl: false,
+            });
+        }
+    }
+    out
+}
+
+/// At most one exclusive L1 copy per line, and the home TM must agree
+/// on who owns it.
+struct SingleWriter;
+
+impl Invariant<Tardis> for SingleWriter {
+    fn name(&self) -> &'static str {
+        "single-writer"
+    }
+
+    fn check(&self, p: &Tardis, lines: &[LineAddr]) -> Result<(), String> {
+        for &addr in lines {
+            let excl: Vec<CoreId> = (0..p.n_cores)
+                .filter(|&c| {
+                    p.l1[c as usize]
+                        .cache
+                        .peek(addr)
+                        .is_some_and(|l| l.excl)
+                })
+                .collect();
+            if excl.len() > 1 {
+                return Err(format!(
+                    "line {addr:#x}: cores {excl:?} hold exclusive copies simultaneously"
+                ));
+            }
+            if let Some(&c) = excl.first() {
+                let s = p.slice_of(addr) as usize;
+                let owner = p.tm[s].cache.peek(addr).map(|t| t.owner);
+                if owner != Some(Some(c)) {
+                    return Err(format!(
+                        "line {addr:#x}: core{c} holds an exclusive copy but slice{s} \
+                         records owner {owner:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A sharer's lease never extends past what the home TM recorded for
+/// that version: sharer rts <= TM rts whenever their wts match and the
+/// line is unowned.  The over-lease seeded fault breaks exactly this.
+struct LeaseContainment;
+
+impl Invariant<Tardis> for LeaseContainment {
+    fn name(&self) -> &'static str {
+        "lease-containment"
+    }
+
+    fn check(&self, p: &Tardis, lines: &[LineAddr]) -> Result<(), String> {
+        for &addr in lines {
+            let s = p.slice_of(addr) as usize;
+            let Some(tm) = p.tm[s].cache.peek(addr) else { continue };
+            if tm.owner.is_some() {
+                continue;
+            }
+            for (c, l1) in p.l1.iter().enumerate() {
+                if let Some(l) = l1.cache.peek(addr) {
+                    if !l.excl && l.wts == tm.wts && l.rts > tm.rts {
+                        return Err(format!(
+                            "line {addr:#x}: core{c} holds lease rts={} beyond the TM's \
+                             rts={} for the same version (wts={})",
+                            l.rts, tm.rts, l.wts
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The paper's core ordering rule: a write must jump past every lease
+/// on the previous version, so no stale copy stays readable at or
+/// after a newer differing version's wts (Theorem 1's no-overlap
+/// condition).  The equal-value exemption covers clean refills, where
+/// a new version legitimately repeats the old data.
+struct WriteAfterExpiry;
+
+impl Invariant<Tardis> for WriteAfterExpiry {
+    fn name(&self) -> &'static str {
+        "write-after-expiry"
+    }
+
+    fn check(&self, p: &Tardis, lines: &[LineAddr]) -> Result<(), String> {
+        for &addr in lines {
+            let cps = copies(p, addr);
+            for x in cps.iter().filter(|c| !c.excl) {
+                for y in &cps {
+                    if x.wts < y.wts && x.value != y.value && x.rts >= y.wts {
+                        return Err(format!(
+                            "line {addr:#x}: stale copy at {} (wts={} rts={} value={:#x}) \
+                             is readable at/after the newer version at {} (wts={} value={:#x})",
+                            x.who, x.wts, x.rts, x.value, y.who, y.wts, y.value
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One version, one value: non-exclusive copies with equal wts must
+/// carry equal data.  The wts-skip seeded fault (a write that keeps
+/// the stale wts) surfaces here once the owner's data returns to the
+/// TM while an old sharer still caches the true old version.
+struct VersionValueAgreement;
+
+impl Invariant<Tardis> for VersionValueAgreement {
+    fn name(&self) -> &'static str {
+        "version-value-agreement"
+    }
+
+    fn check(&self, p: &Tardis, lines: &[LineAddr]) -> Result<(), String> {
+        for &addr in lines {
+            let cps = copies(p, addr);
+            for (i, x) in cps.iter().enumerate() {
+                if x.excl {
+                    continue;
+                }
+                for y in cps.iter().skip(i + 1) {
+                    if !y.excl && x.wts == y.wts && x.value != y.value {
+                        return Err(format!(
+                            "line {addr:#x}: version wts={} has two values: {} holds \
+                             {:#x}, {} holds {:#x}",
+                            x.wts, x.who, x.value, y.who, y.value
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Local timestamp sanity: wts <= rts on every meaningful copy, and
+/// the global clocks (per-core pts, per-slice mts / max_ts) never run
+/// backwards across a transition.
+struct TsSanity;
+
+impl Invariant<Tardis> for TsSanity {
+    fn name(&self) -> &'static str {
+        "timestamp-sanity"
+    }
+
+    fn check(&self, p: &Tardis, lines: &[LineAddr]) -> Result<(), String> {
+        for &addr in lines {
+            for cp in copies(p, addr) {
+                if cp.wts > cp.rts {
+                    return Err(format!(
+                        "line {addr:#x}: {} has wts={} > rts={}",
+                        cp.who, cp.wts, cp.rts
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_step(&self, before: &Tardis, after: &Tardis) -> Result<(), String> {
+        for c in 0..after.n_cores {
+            if after.pts(c) < before.pts(c) {
+                return Err(format!(
+                    "core{c}: pts moved backwards {} -> {}",
+                    before.pts(c),
+                    after.pts(c)
+                ));
+            }
+        }
+        for s in 0..after.tm.len() {
+            if after.tm[s].mts < before.tm[s].mts {
+                return Err(format!(
+                    "slice{s}: mts moved backwards {} -> {}",
+                    before.tm[s].mts, after.tm[s].mts
+                ));
+            }
+            if after.tm[s].max_ts < before.tm[s].max_ts {
+                return Err(format!(
+                    "slice{s}: max_ts moved backwards {} -> {}",
+                    before.tm[s].max_ts, after.tm[s].max_ts
+                ));
+            }
+        }
+        Ok(())
+    }
+}

@@ -140,6 +140,55 @@ fn repeated_runs_are_bit_identical_across_topologies() {
     }
 }
 
+/// Multi-socket points across the *numa knobs*: the inter-socket
+/// latency ratio must only scale timing — never introduce
+/// nondeterminism — and the TSO store buffer must compose with the
+/// socket-sliced TM/directory exactly as reproducibly as SC does.
+/// (Extends the matrix above, which pins numa_ratio and runs SC only.)
+#[test]
+fn repeated_runs_are_bit_identical_across_numa_ratios_and_tso() {
+    let spec = workloads::by_name("ocean-c").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+        for numa_ratio in [1u32, 8] {
+            for sockets in [2u32, 4] {
+                for model in [Consistency::Sc, Consistency::Tso] {
+                    let run = || {
+                        let mut cfg = SystemConfig::small(8, protocol);
+                        cfg.topology = TopologyConfig {
+                            sockets,
+                            numa_ratio,
+                            interleave: SocketInterleave::Line,
+                        };
+                        cfg.consistency = model;
+                        SimBuilder::from_config(cfg)
+                            .record_accesses(true)
+                            .workload(&w)
+                            .run()
+                            .unwrap()
+                    };
+                    let a = run();
+                    let b = run();
+                    let what = format!("{protocol:?}/{sockets}s/ratio{numa_ratio}/{model:?}");
+                    assert_identical(&a, &b, &what);
+                    assert!(
+                        a.stats.socket.inter_msgs > 0,
+                        "{what}: no cross-socket traffic"
+                    );
+                    a.check_consistency()
+                        .unwrap_or_else(|v| panic!("{what}: violation {v:?}"));
+                    if model == Consistency::Tso {
+                        assert!(
+                            a.stats.sb_stores > 0,
+                            "{what}: TSO run never buffered a store"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn repeated_runs_are_bit_identical_on_sync_heavy_programs() {
     // Lock/barrier microcode exercises spin wakes, parked cores, and

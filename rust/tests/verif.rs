@@ -1,0 +1,117 @@
+//! Integration tests for the verification subsystem (`verif::`): the
+//! bounded exhaustive model checker must find the shipped controllers
+//! clean at small bounds, repeat-run to identical state counts, and
+//! reject configurations it cannot make exact claims about.
+//!
+//! Compiled out when a seeded fault feature is on — with a mutation in
+//! the controllers the clean-run expectations below are *supposed* to
+//! fail (that flip is asserted in `tests/verif_mutation.rs`).
+#![cfg(not(any(feature = "verif-mutate-wts-skip", feature = "verif-mutate-over-lease")))]
+
+use tardis_dsm::config::{Consistency, ProtocolKind};
+use tardis_dsm::verif::{self, VerifBounds};
+
+fn bounds(max_ts: u32) -> VerifBounds {
+    VerifBounds { max_ts, ..VerifBounds::default() }
+}
+
+/// The full protocol x consistency matrix is violation-free at the
+/// smallest interesting bounds, and every run actually explored a
+/// branching graph (not a single path).
+#[test]
+fn full_matrix_is_clean_at_tiny_bounds() {
+    let report = verif::run_matrix(
+        &[ProtocolKind::Tardis, ProtocolKind::Msi],
+        &[Consistency::Sc, Consistency::Tso],
+        bounds(1),
+    )
+    .unwrap();
+    assert_eq!(report.runs.len(), 4);
+    assert!(report.passed());
+    for r in &report.runs {
+        let o = &r.outcome;
+        assert!(
+            o.passed(),
+            "{}/{}: counterexample {:#?}",
+            r.protocol,
+            r.consistency,
+            o.counterexample
+        );
+        assert!(o.states > 10, "{}/{}: suspiciously small graph", r.protocol, r.consistency);
+        assert!(o.terminal_states > 0, "{}/{}: no quiescent end state", r.protocol, r.consistency);
+        assert!(o.trace_checks > 0, "{}/{}: linearization never ran", r.protocol, r.consistency);
+        for inv in &o.invariants {
+            assert!(inv.checked > 0, "{}: invariant {} never evaluated", r.protocol, inv.name);
+            assert_eq!(inv.violations, 0);
+        }
+    }
+    let json = report.to_json();
+    assert!(json.contains("\"schema\": \"tardis-verif-v1\""));
+    assert!(json.contains("\"counterexample\": null"));
+}
+
+/// Exact-state exploration is deterministic: the explored-state count
+/// (and everything else in the outcome) is bit-identical across
+/// repeat runs — the property the CI baseline comparison rests on.
+#[test]
+fn repeat_runs_explore_identical_state_counts() {
+    let protocols = [ProtocolKind::Tardis, ProtocolKind::Msi];
+    let models = [Consistency::Sc, Consistency::Tso];
+    let a = verif::run_matrix(&protocols, &models, bounds(1)).unwrap();
+    let b = verif::run_matrix(&protocols, &models, bounds(1)).unwrap();
+    assert_eq!(a.runs, b.runs, "repeat exploration diverged");
+}
+
+/// Deeper Tardis run (more timestamps, SC + TSO): still clean, and the
+/// graph grows strictly with the op budget.
+#[test]
+fn tardis_stays_clean_with_more_ops() {
+    let shallow = verif::run_matrix(&[ProtocolKind::Tardis], &[Consistency::Sc], bounds(1))
+        .unwrap();
+    let deep = verif::run_matrix(
+        &[ProtocolKind::Tardis],
+        &[Consistency::Sc, Consistency::Tso],
+        bounds(2),
+    )
+    .unwrap();
+    assert!(deep.passed(), "counterexample: {:#?}", deep.runs[0].outcome.counterexample);
+    assert!(
+        deep.runs[0].outcome.states > shallow.runs[0].outcome.states,
+        "doubling the op budget must enlarge the state graph"
+    );
+}
+
+/// Two distinct lines exercise the line-index plumbing (and, for
+/// Tardis, two independent lease books at the same TM).
+#[test]
+fn two_line_runs_are_clean() {
+    let b = VerifBounds { lines: 2, max_ts: 1, ..VerifBounds::default() };
+    let report = verif::run_matrix(
+        &[ProtocolKind::Tardis, ProtocolKind::Msi],
+        &[Consistency::Sc],
+        b,
+    )
+    .unwrap();
+    assert!(report.passed());
+    for r in &report.runs {
+        assert!(r.outcome.terminal_states > 0);
+    }
+}
+
+/// Ackwise's limited-pointer overflow is a conservative
+/// over-approximation, so exact-state verification refuses it rather
+/// than reporting a vacuous pass.
+#[test]
+fn ackwise_is_rejected() {
+    let err = verif::run_matrix(&[ProtocolKind::Ackwise], &[Consistency::Sc], bounds(1))
+        .unwrap_err();
+    assert!(err.contains("ackwise"), "unhelpful error: {err}");
+}
+
+/// Out-of-range bounds are rejected up front with the flag name.
+#[test]
+fn bounds_are_validated() {
+    let b = VerifBounds { cores: 9, ..VerifBounds::default() };
+    let err = verif::run_matrix(&[ProtocolKind::Tardis], &[Consistency::Sc], b).unwrap_err();
+    assert!(err.contains("--cores"), "unhelpful error: {err}");
+}

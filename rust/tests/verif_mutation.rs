@@ -1,0 +1,102 @@
+//! Mutation smoke-check (ISSUE item: seeded faults): with a known bug
+//! compiled into the Tardis controllers, `tardis verify`'s exploration
+//! MUST report a violation with a non-empty, replayable counterexample
+//! trace.  One regression test per seeded fault:
+//!
+//! - `verif-mutate-wts-skip` (l1.rs): a store keeps the stale version
+//!   timestamp instead of bumping to the jumped ts — two different
+//!   values end up sharing one wts, caught by version-value-agreement
+//!   (or by write-after-expiry / linearization first, depending on
+//!   which state BFS reaches earlier; any violation is a catch).
+//! - `verif-mutate-over-lease` (tm.rs): the TM grants a sharer a lease
+//!   1000 cycles past what it records — caught by lease-containment.
+//!
+//! Run with: `cargo test --features verif-mutate-<fault> --test
+//! verif_mutation` (scoped to this file; the clean-protocol suites
+//! would rightly fail under a seeded fault).
+#![cfg(any(feature = "verif-mutate-wts-skip", feature = "verif-mutate-over-lease"))]
+
+use tardis_dsm::config::{Consistency, ProtocolKind};
+use tardis_dsm::proto::tardis::Tardis;
+use tardis_dsm::verif::{self, replay, VerifBounds};
+
+/// Shared body: verify Tardis/SC at the given bounds, assert the run
+/// fails with a well-formed counterexample, and re-execute the trace
+/// to confirm it reproduces the same violation deterministically.
+fn assert_fault_caught(bounds: VerifBounds) {
+    let report = verif::run_matrix(&[ProtocolKind::Tardis], &[Consistency::Sc], bounds)
+        .expect("run_matrix should run (and fail its invariants), not error out");
+    assert!(!report.passed(), "seeded fault escaped verification");
+    let run = &report.runs[0];
+    let cex = run
+        .outcome
+        .counterexample
+        .as_ref()
+        .expect("failed run must carry a counterexample");
+    assert!(!cex.events.is_empty(), "counterexample trace is empty");
+    assert_eq!(
+        cex.labels.len(),
+        cex.events.len(),
+        "every counterexample event must carry a human-readable label"
+    );
+    assert!(!cex.detail.is_empty());
+
+    // The violated invariant shows up in the per-invariant tallies
+    // (unless the catch was a trace-linearization or deadlock failure,
+    // which are accounted separately).
+    if !matches!(cex.invariant.as_str(), "linearization" | "deadlock-freedom") {
+        let stat = run
+            .outcome
+            .invariants
+            .iter()
+            .find(|s| s.name == cex.invariant)
+            .expect("counterexample names an unknown invariant");
+        assert!(stat.violations > 0);
+    }
+
+    // Replayability: the recorded event path reproduces the violation.
+    let cfg = bounds.config(ProtocolKind::Tardis, Consistency::Sc);
+    let (labels, violation) =
+        replay(&|| Tardis::new(&cfg), bounds, Consistency::Sc, &cex.events);
+    assert_eq!(labels, cex.labels, "replay labels diverged from the recorded trace");
+    let (inv, _detail) = violation.expect("replaying the counterexample found no violation");
+    assert_eq!(inv, cex.invariant, "replay blamed a different invariant");
+
+    // The JSON report serializes the failure for the CI validator.
+    let json = report.to_json();
+    assert!(json.contains("\"passed\": false"));
+    assert!(json.contains(&format!("\"invariant\": \"{}\"", cex.invariant)));
+
+    // And the counterexample projects onto an engine-runnable
+    // workload: the full timed engine (which compiled in the same
+    // fault) must accept it as a regression input.  The engine's
+    // fixed timing picks one interleaving, so only `replay` above is
+    // guaranteed to reproduce the violation; here we assert the
+    // projection is drivable end to end.
+    let w = cex.to_workload(&bounds);
+    assert!(w.total_ops() > 0);
+    let sim = tardis_dsm::api::SimBuilder::from_config(
+        bounds.config(ProtocolKind::Tardis, Consistency::Sc),
+    )
+    .record_accesses(true)
+    .workload(&w)
+    .run()
+    .expect("engine must run the projected counterexample workload");
+    assert!(sim.stats.cycles > 0);
+}
+
+/// A write that skips the wts bump lets one version timestamp carry
+/// two different values.
+#[cfg(feature = "verif-mutate-wts-skip")]
+#[test]
+fn wts_skip_fault_is_caught_with_replayable_trace() {
+    assert_fault_caught(VerifBounds { max_ts: 2, ..VerifBounds::default() });
+}
+
+/// A lease grant longer than the TM records lets a sharer read a
+/// version the TM believes expired.
+#[cfg(feature = "verif-mutate-over-lease")]
+#[test]
+fn over_lease_fault_is_caught_with_replayable_trace() {
+    assert_fault_caught(VerifBounds { max_ts: 2, ..VerifBounds::default() });
+}

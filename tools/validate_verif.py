@@ -1,0 +1,181 @@
+#!/usr/bin/env python3
+"""Validate a VERIF_*.json report against the tardis-verif-v1 schema.
+
+Usage: validate_verif.py [--baseline BASE.json] FILE [FILE...]
+
+Emitted by `tardis verify` (rust/src/verif/report.rs) and checked by
+the CI verify-smoke job.  Exits non-zero with a diagnostic on the
+first schema violation, on any failed run, or — with --baseline — on
+any explored-state-count drift against the baseline report: exhaustive
+exploration with exact state keys is deterministic, so two runs at the
+same bounds must visit exactly the same number of states.
+"""
+
+import argparse
+import json
+import sys
+
+TOP_KEYS = {
+    "schema": str,
+    "unix_time": int,
+    "cores": int,
+    "lines": int,
+    "max_ts": int,
+    "lease": int,
+    "sb_entries": int,
+    "passed": bool,
+    "runs": list,
+}
+
+RUN_KEYS = {
+    "protocol": str,
+    "consistency": str,
+    "states_explored": int,
+    "transitions": int,
+    "max_depth": int,
+    "terminal_states": int,
+    "trace_checks": int,
+    "passed": bool,
+    "invariants": list,
+    "counterexample": (dict, type(None)),
+}
+
+INVARIANT_KEYS = {
+    "name": str,
+    "checked": int,
+    "violations": int,
+}
+
+COUNTEREXAMPLE_KEYS = {
+    "invariant": str,
+    "detail": str,
+    "events": list,
+}
+
+PROTOCOL_VALUES = {"tardis", "msi"}
+CONSISTENCY_VALUES = {"sc", "tso"}
+
+
+def check_keys(obj, spec, where):
+    for key, typ in spec.items():
+        if key not in obj:
+            raise ValueError(f"{where}: missing key {key!r}")
+        if not isinstance(obj[key], typ):
+            raise ValueError(
+                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
+                f"expected {typ}"
+            )
+    extra = set(obj) - set(spec)
+    if extra:
+        raise ValueError(f"{where}: unknown keys {sorted(extra)}")
+
+
+def validate(path, require_pass):
+    with open(path) as f:
+        doc = json.load(f)
+    check_keys(doc, TOP_KEYS, "top level")
+    if doc["schema"] != "tardis-verif-v1":
+        raise ValueError(f"unknown schema {doc['schema']!r}")
+    for key in ("cores", "lines", "max_ts", "lease", "sb_entries"):
+        if doc[key] < 1:
+            raise ValueError(f"{key} must be >= 1")
+    if not doc["runs"]:
+        raise ValueError("runs must be non-empty")
+    pairs = set()
+    for i, run in enumerate(doc["runs"]):
+        where = f"runs[{i}]"
+        if not isinstance(run, dict):
+            raise ValueError(f"{where}: not an object")
+        check_keys(run, RUN_KEYS, where)
+        if run["protocol"] not in PROTOCOL_VALUES:
+            raise ValueError(f"{where}: unknown protocol {run['protocol']!r}")
+        if run["consistency"] not in CONSISTENCY_VALUES:
+            raise ValueError(f"{where}: unknown consistency {run['consistency']!r}")
+        pair = (run["protocol"], run["consistency"])
+        if pair in pairs:
+            raise ValueError(f"{where}: duplicate run for {pair}")
+        pairs.add(pair)
+        if run["states_explored"] < 1 or run["transitions"] < 1:
+            raise ValueError(f"{where}: an exploration must visit states")
+        if run["passed"] and run["terminal_states"] < 1:
+            raise ValueError(f"{where}: a clean run must reach a quiescent end state")
+        if not run["invariants"]:
+            raise ValueError(f"{where}: invariants must be non-empty")
+        violations = 0
+        for j, inv in enumerate(run["invariants"]):
+            iw = f"{where}.invariants[{j}]"
+            if not isinstance(inv, dict):
+                raise ValueError(f"{iw}: not an object")
+            check_keys(inv, INVARIANT_KEYS, iw)
+            if inv["checked"] < 1:
+                raise ValueError(f"{iw}: invariant {inv['name']!r} was never evaluated")
+            if inv["violations"] < 0:
+                raise ValueError(f"{iw}: negative violation count")
+            violations += inv["violations"]
+        cex = run["counterexample"]
+        if run["passed"]:
+            if cex is not None or violations != 0:
+                raise ValueError(f"{where}: passed run carries a violation")
+        else:
+            if cex is None:
+                raise ValueError(f"{where}: failed run has no counterexample")
+            check_keys(cex, COUNTEREXAMPLE_KEYS, f"{where}.counterexample")
+            if not cex["events"]:
+                raise ValueError(f"{where}: counterexample trace is empty")
+            if not all(isinstance(e, str) for e in cex["events"]):
+                raise ValueError(f"{where}: counterexample events must be strings")
+    if doc["passed"] != all(r["passed"] for r in doc["runs"]):
+        raise ValueError("top-level passed does not match the runs")
+    if require_pass and not doc["passed"]:
+        raise ValueError("report records a protocol violation")
+    return doc
+
+
+def compare_baseline(doc, base, path, base_path):
+    for key in ("cores", "lines", "max_ts", "lease", "sb_entries"):
+        if doc[key] != base[key]:
+            raise ValueError(
+                f"bounds mismatch vs {base_path}: {key} {doc[key]} != {base[key]}"
+            )
+    base_runs = {(r["protocol"], r["consistency"]): r for r in base["runs"]}
+    for run in doc["runs"]:
+        pair = (run["protocol"], run["consistency"])
+        if pair not in base_runs:
+            raise ValueError(f"{pair} missing from baseline {base_path}")
+        for key in ("states_explored", "transitions", "terminal_states"):
+            got, want = run[key], base_runs[pair][key]
+            if got != want:
+                raise ValueError(
+                    f"{pair}: {key} drifted from baseline: {got} != {want} "
+                    "(exact-state exploration must be deterministic)"
+                )
+    print(f"ok {path}: state counts match baseline {base_path}")
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--baseline", help="earlier report to diff state counts against")
+    ap.add_argument(
+        "--allow-fail",
+        action="store_true",
+        help="accept reports that record a violation (schema check only)",
+    )
+    ap.add_argument("files", nargs="+")
+    args = ap.parse_args(argv[1:])
+    try:
+        base = validate(args.baseline, False) if args.baseline else None
+        for path in args.files:
+            doc = validate(path, require_pass=not args.allow_fail)
+            print(f"ok {path}: {len(doc['runs'])} runs, passed={doc['passed']}")
+            if base is not None:
+                compare_baseline(doc, base, path, args.baseline)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
