@@ -1,0 +1,38 @@
+"""Reference clients for the `tardis serve` batch sweep server.
+
+The server speaks newline-delimited JSON over TCP (DESIGN.md §10):
+submit a batch of simulation points, stream progress, and fetch the
+results as a columnar ``tardis-serve-v1`` payload — one list per
+statistic, so ``fetch_columns()["sim_cycles"]`` drops straight into
+NumPy/pandas without a row-wise gather.
+
+Two clients, one protocol:
+
+* :class:`client.sync.TardisClient` — blocking sockets, the default.
+* :class:`client.aio.AsyncTardisClient` — asyncio streams.
+
+Both accept injected transports, so the unit tests (and any consumer
+that wants to replay recorded frames) run without a live server.
+"""
+
+from .frames import (
+    SCHEMA,
+    ProtocolError,
+    ServerError,
+    decode_frame,
+    encode_frame,
+    validate_payload,
+)
+from .sync import TardisClient
+from .aio import AsyncTardisClient
+
+__all__ = [
+    "SCHEMA",
+    "ProtocolError",
+    "ServerError",
+    "decode_frame",
+    "encode_frame",
+    "validate_payload",
+    "TardisClient",
+    "AsyncTardisClient",
+]

@@ -1,0 +1,131 @@
+"""Asyncio reference client for `tardis serve`.
+
+Mirrors :class:`client.sync.TardisClient` method-for-method with
+coroutines; ``iter_progress`` is an async generator::
+
+    from client import AsyncTardisClient
+
+    async with await AsyncTardisClient.connect(port=7436) as c:
+        bid = await c.submit_sweep([{"workload": "fft"}], progress_every=10_000)
+        async for ev in c.iter_progress(bid):
+            print(ev)
+        cols = await c.fetch_columns(bid)
+"""
+
+import asyncio
+import itertools
+
+from . import frames
+from .frames import ProtocolError
+
+
+class AsyncTardisClient:
+    """One connection over asyncio streams.
+
+    Construct with :meth:`connect`, or inject ``(reader, writer)``
+    directly — the tests feed a plain ``asyncio.StreamReader`` with
+    recorded frames and a no-op writer.
+    """
+
+    def __init__(self, reader, writer):
+        self._reader = reader
+        self._writer = writer
+        self._ids = itertools.count(1)
+        self._results = {}
+
+    @classmethod
+    async def connect(cls, host="127.0.0.1", port=7436):
+        reader, writer = await asyncio.open_connection(host, port)
+        return cls(reader, writer)
+
+    # ------------------------------------------------------ transport
+
+    async def close(self):
+        self._writer.close()
+        wait = getattr(self._writer, "wait_closed", None)
+        if wait is not None:
+            await wait()
+
+    async def __aenter__(self):
+        return self
+
+    async def __aexit__(self, *exc):
+        await self.close()
+        return False
+
+    async def _send(self, obj):
+        self._writer.write(frames.encode_frame(obj))
+        drain = getattr(self._writer, "drain", None)
+        if drain is not None:
+            await drain()
+
+    async def _recv(self):
+        line = await self._reader.readline()
+        if not line:
+            raise ProtocolError("server closed the connection")
+        return frames.decode_frame(line)
+
+    # ------------------------------------------------------- protocol
+
+    async def hello(self):
+        await self._send({"type": "hello"})
+        frame = frames.raise_if_error(await self._recv())
+        if frame.get("type") != "hello":
+            raise ProtocolError(f"expected hello, got {frame!r}")
+        return frame
+
+    async def ping(self):
+        await self._send({"type": "ping"})
+        frame = frames.raise_if_error(await self._recv())
+        if frame.get("type") != "pong":
+            raise ProtocolError(f"expected pong, got {frame!r}")
+
+    async def submit_sweep(self, points, batch_id=None, seed=None,
+                           progress_every=0):
+        if batch_id is None:
+            batch_id = f"batch-{next(self._ids)}"
+        await self._send(
+            frames.sweep_frame(points, batch_id, seed, progress_every))
+        ack = frames.raise_if_error(await self._recv())
+        if ack.get("type") != "ack" or ack.get("batch_id") != batch_id:
+            raise ProtocolError(f"expected ack for {batch_id!r}, got {ack!r}")
+        return batch_id
+
+    async def iter_progress(self, batch_id):
+        while True:
+            stored = self._results.get(batch_id)
+            if stored is not None:
+                frames.raise_if_error(stored)
+                return
+            frame = await self._recv()
+            ty = frame.get("type")
+            bid = frame.get("batch_id")
+            if ty in ("result", "error") and bid is not None:
+                self._results[bid] = frame
+            elif ty == "error":
+                frames.raise_if_error(frame)
+            elif ty in ("progress", "point_done") and bid == batch_id:
+                yield frame
+
+    async def fetch_columns(self, batch_id):
+        payload = await self.fetch_payload(batch_id)
+        return frames.validate_payload(payload)
+
+    async def fetch_payload(self, batch_id):
+        async for _ in self.iter_progress(batch_id):
+            pass
+        frame = frames.raise_if_error(self._results.pop(batch_id))
+        payload = frame.get("payload")
+        if not isinstance(payload, dict):
+            raise ProtocolError(f"result for {batch_id!r} has no payload")
+        return payload
+
+    async def shutdown(self):
+        await self._send({"type": "shutdown"})
+        try:
+            while True:
+                frame = frames.raise_if_error(await self._recv())
+                if frame.get("type") == "bye":
+                    return
+        except ProtocolError:
+            return

@@ -1,0 +1,111 @@
+"""Wire-frame helpers shared by the sync and async clients.
+
+One frame = one JSON object on one line, UTF-8, ``\\n``-terminated.
+Client frame types: ``hello``, ``ping``, ``sweep``, ``shutdown``.
+Server frame types: ``hello``, ``pong``, ``ack``, ``progress``,
+``point_done``, ``result``, ``error``, ``bye``.
+"""
+
+import json
+
+#: The columnar result schema this client understands.
+SCHEMA = "tardis-serve-v1"
+
+#: Columns that identify a point (everything else is a counter).
+IDENTITY_COLUMNS = ("workload", "variant", "cores")
+
+
+class ProtocolError(Exception):
+    """The peer violated the wire protocol (bad frame, bad payload,
+    unexpected EOF)."""
+
+
+class ServerError(Exception):
+    """The server reported an ``error`` frame for our request."""
+
+    def __init__(self, message, batch_id=None):
+        super().__init__(message)
+        self.batch_id = batch_id
+
+
+def encode_frame(obj):
+    """Serialize one frame to its wire bytes (newline-terminated)."""
+    if not isinstance(obj, dict) or not isinstance(obj.get("type"), str):
+        raise ProtocolError("a frame is a dict with a string 'type'")
+    line = json.dumps(obj, separators=(",", ":"), ensure_ascii=False)
+    if "\n" in line:  # impossible via json.dumps, but the invariant matters
+        raise ProtocolError("frame serialized to multiple lines")
+    return (line + "\n").encode("utf-8")
+
+
+def decode_frame(line):
+    """Parse one wire line (bytes or str) into a frame dict."""
+    if isinstance(line, bytes):
+        line = line.decode("utf-8", errors="replace")
+    try:
+        obj = json.loads(line)
+    except ValueError as e:
+        raise ProtocolError(f"bad frame JSON: {e}") from None
+    if not isinstance(obj, dict) or not isinstance(obj.get("type"), str):
+        raise ProtocolError(f"frame is not a typed object: {line!r}")
+    return obj
+
+
+def raise_if_error(frame):
+    """Turn a server ``error`` frame into a :class:`ServerError`."""
+    if frame.get("type") == "error":
+        raise ServerError(frame.get("message", "unknown server error"),
+                          batch_id=frame.get("batch_id"))
+    return frame
+
+
+def sweep_frame(points, batch_id, seed=None, progress_every=0):
+    """Build a ``sweep`` request frame.
+
+    ``points`` is a list of dicts whose keys mirror the ``tardis run``
+    flags (``workload`` required; ``protocol``, ``cores``, ``seed``,
+    ...).  Validation is the server's job — the client passes points
+    through untouched so server-side errors stay authoritative.
+    """
+    if not isinstance(points, (list, tuple)) or not points:
+        raise ProtocolError("a sweep needs a non-empty list of points")
+    frame = {
+        "type": "sweep",
+        "id": batch_id,
+        "seed": seed,
+        "progress_every": int(progress_every),
+        "points": list(points),
+    }
+    return frame
+
+
+def validate_payload(payload):
+    """Check a ``tardis-serve-v1`` payload's envelope and columnar
+    invariants; returns the ``columns`` dict-of-lists.
+
+    Raises :class:`ProtocolError` on schema mismatch, missing identity
+    columns, non-list columns, or ragged column lengths.  (Exhaustive
+    per-column schema checking lives server-side in
+    ``tools/validate_serve.py``; this guards what consumers index.)
+    """
+    if not isinstance(payload, dict):
+        raise ProtocolError("payload is not an object")
+    if payload.get("schema") != SCHEMA:
+        raise ProtocolError(
+            f"schema mismatch: got {payload.get('schema')!r}, want {SCHEMA!r}")
+    n = payload.get("n_points")
+    if not isinstance(n, int) or n < 0:
+        raise ProtocolError(f"bad n_points: {n!r}")
+    columns = payload.get("columns")
+    if not isinstance(columns, dict) or not columns:
+        raise ProtocolError("payload has no columns")
+    for name in IDENTITY_COLUMNS + ("sim_cycles", "wall_s"):
+        if name not in columns:
+            raise ProtocolError(f"missing column {name!r}")
+    for name, col in columns.items():
+        if not isinstance(col, list):
+            raise ProtocolError(f"column {name!r} is not a list")
+        if len(col) != n:
+            raise ProtocolError(
+                f"ragged column {name!r}: {len(col)} values for {n} points")
+    return columns

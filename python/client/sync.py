@@ -1,0 +1,141 @@
+"""Blocking reference client for `tardis serve`.
+
+Typical use::
+
+    from client import TardisClient
+
+    with TardisClient(port=7436) as c:
+        bid = c.submit_sweep(
+            [{"workload": "fft", "cores": 16},
+             {"workload": "barnes", "cores": 16, "protocol": "msi"}],
+            seed=7, progress_every=100_000)
+        for ev in c.iter_progress(bid):
+            print(ev)                      # progress / point_done frames
+        cols = c.fetch_columns(bid)        # dict of equal-length lists
+        print(cols["workload"], cols["sim_cycles"])
+"""
+
+import itertools
+import socket
+
+from . import frames
+from .frames import ProtocolError
+
+
+class TardisClient:
+    """One TCP connection to a `tardis serve` server.
+
+    Pass ``sock`` to inject a transport: anything with ``sendall``,
+    ``makefile("rb")``, and ``close`` (the unit tests use a recorded-
+    frame fake; a live ``socket.socket`` works unchanged).
+    """
+
+    def __init__(self, host="127.0.0.1", port=7436, timeout=120.0, sock=None):
+        if sock is None:
+            sock = socket.create_connection((host, port), timeout=timeout)
+        self._sock = sock
+        self._rfile = sock.makefile("rb")
+        self._ids = itertools.count(1)
+        # Frames already read while draining a different batch, keyed
+        # by batch id ("result" frames only — chatter is not buffered).
+        self._results = {}
+
+    # ------------------------------------------------------ transport
+
+    def close(self):
+        try:
+            self._rfile.close()
+        finally:
+            self._sock.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    def _send(self, obj):
+        self._sock.sendall(frames.encode_frame(obj))
+
+    def _recv(self):
+        line = self._rfile.readline()
+        if not line:
+            raise ProtocolError("server closed the connection")
+        return frames.decode_frame(line)
+
+    # ------------------------------------------------------- protocol
+
+    def hello(self):
+        """Handshake; returns the server banner frame."""
+        self._send({"type": "hello"})
+        frame = frames.raise_if_error(self._recv())
+        if frame.get("type") != "hello":
+            raise ProtocolError(f"expected hello, got {frame!r}")
+        return frame
+
+    def ping(self):
+        self._send({"type": "ping"})
+        frame = frames.raise_if_error(self._recv())
+        if frame.get("type") != "pong":
+            raise ProtocolError(f"expected pong, got {frame!r}")
+
+    def submit_sweep(self, points, batch_id=None, seed=None, progress_every=0):
+        """Submit a batch; blocks until the server acks; returns the
+        batch id (auto-generated when not given)."""
+        if batch_id is None:
+            batch_id = f"batch-{next(self._ids)}"
+        self._send(frames.sweep_frame(points, batch_id, seed, progress_every))
+        ack = frames.raise_if_error(self._recv())
+        if ack.get("type") != "ack" or ack.get("batch_id") != batch_id:
+            raise ProtocolError(f"expected ack for {batch_id!r}, got {ack!r}")
+        return batch_id
+
+    def iter_progress(self, batch_id):
+        """Yield ``progress`` and ``point_done`` frames for ``batch_id``
+        until its result (or error) arrives; terminal frames are
+        buffered for :meth:`fetch_columns`.  Raises
+        :class:`ServerError` immediately on a batch failure."""
+        while True:
+            stored = self._results.get(batch_id)
+            if stored is not None:
+                frames.raise_if_error(stored)
+                return
+            frame = self._recv()
+            ty = frame.get("type")
+            bid = frame.get("batch_id")
+            if ty in ("result", "error") and bid is not None:
+                self._results[bid] = frame  # terminal; maybe not ours
+            elif ty == "error":
+                frames.raise_if_error(frame)  # connection-level error
+            elif ty in ("progress", "point_done") and bid == batch_id:
+                yield frame
+
+    def fetch_columns(self, batch_id):
+        """Block until ``batch_id``'s result and return its validated
+        ``columns`` dict-of-lists (point ``i`` at index ``i`` of every
+        list)."""
+        payload = self.fetch_payload(batch_id)
+        return frames.validate_payload(payload)
+
+    def fetch_payload(self, batch_id):
+        """Like :meth:`fetch_columns` but returns the whole payload
+        (schema, seed, workers, timing, columns), unvalidated."""
+        for _ in self.iter_progress(batch_id):
+            pass  # drain chatter; iter_progress stops at the result
+        frame = frames.raise_if_error(self._results.pop(batch_id))
+        payload = frame.get("payload")
+        if not isinstance(payload, dict):
+            raise ProtocolError(f"result for {batch_id!r} has no payload")
+        return payload
+
+    def shutdown(self):
+        """Ask the server to drain in-flight sessions and exit; reads
+        until ``bye`` (or EOF)."""
+        self._send({"type": "shutdown"})
+        try:
+            while True:
+                if frames.raise_if_error(self._recv()).get("type") == "bye":
+                    return
+        except ProtocolError:
+            return  # EOF before bye: the server is gone either way

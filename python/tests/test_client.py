@@ -1,0 +1,273 @@
+"""Unit tests for the `tardis serve` reference clients.
+
+No live server: the sync client gets a fake socket replaying recorded
+server frames, the async client gets a plain ``asyncio.StreamReader``
+fed the same bytes.  The frames mirror what `rust/src/serve/server.rs`
+emits (kept in sync with `rust/tests/serve.rs`).
+"""
+
+import asyncio
+import io
+
+import pytest
+
+from client import (
+    SCHEMA,
+    AsyncTardisClient,
+    ProtocolError,
+    ServerError,
+    TardisClient,
+    decode_frame,
+    encode_frame,
+    validate_payload,
+)
+
+
+def make_payload(batch_id="b1"):
+    """A minimal but schema-shaped tardis-serve-v1 payload (2 points)."""
+    return {
+        "schema": SCHEMA,
+        "batch_id": batch_id,
+        "seed": 7,
+        "n_points": 2,
+        "workers": 4,
+        "timing": {"wall_s": 0.25, "queue_depth_at_submit": 1},
+        "columns": {
+            "workload": ["fft", "barnes"],
+            "variant": ["tardis", "msi"],
+            "cores": [4, 4],
+            "sim_cycles": [1000, 2000],
+            "memops": [500, 900],
+            "total_flits": [300, 700],
+            "wall_s": [0.1, 0.15],
+        },
+    }
+
+
+def recorded(frames_in):
+    """Serialize server frames to the byte stream a socket would yield."""
+    return b"".join(encode_frame(f) for f in frames_in)
+
+
+class FakeSock:
+    """Duck-typed socket: replays recorded bytes, records sends."""
+
+    def __init__(self, server_frames):
+        self.sent = []
+        self._rfile = io.BytesIO(recorded(server_frames))
+        self.closed = False
+
+    def sendall(self, data):
+        self.sent.append(data)
+
+    def makefile(self, mode):
+        assert mode == "rb"
+        return self._rfile
+
+    def close(self):
+        self.closed = True
+
+    def sent_frames(self):
+        return [decode_frame(line) for line in b"".join(self.sent).splitlines()]
+
+
+class TestFrames:
+    def test_encode_decode_round_trip(self):
+        frame = {"type": "sweep", "id": "b", "points": [{"workload": "fft"}]}
+        wire = encode_frame(frame)
+        assert wire.endswith(b"\n") and wire.count(b"\n") == 1
+        assert decode_frame(wire) == frame
+
+    def test_encode_rejects_untyped_frames(self):
+        for bad in [None, [], "x", {}, {"type": 3}]:
+            with pytest.raises(ProtocolError):
+                encode_frame(bad)
+
+    def test_decode_rejects_non_frames(self):
+        for bad in [b"not json\n", b"[1,2]\n", b'{"no_type":1}\n', b'"str"\n']:
+            with pytest.raises(ProtocolError):
+                decode_frame(bad)
+
+    def test_validate_payload_accepts_well_formed(self):
+        cols = validate_payload(make_payload())
+        assert cols["workload"] == ["fft", "barnes"]
+        assert cols["sim_cycles"] == [1000, 2000]
+
+    def test_validate_payload_rejects_schema_mismatch(self):
+        p = make_payload()
+        p["schema"] = "tardis-serve-v0"
+        with pytest.raises(ProtocolError, match="schema mismatch"):
+            validate_payload(p)
+
+    def test_validate_payload_rejects_ragged_columns(self):
+        p = make_payload()
+        p["columns"]["sim_cycles"] = [1000]  # 1 value for 2 points
+        with pytest.raises(ProtocolError, match="ragged column"):
+            validate_payload(p)
+
+    def test_validate_payload_rejects_missing_identity_column(self):
+        p = make_payload()
+        del p["columns"]["variant"]
+        with pytest.raises(ProtocolError, match="missing column"):
+            validate_payload(p)
+
+    def test_validate_payload_rejects_non_list_column(self):
+        p = make_payload()
+        p["columns"]["cores"] = 4
+        with pytest.raises(ProtocolError, match="not a list"):
+            validate_payload(p)
+
+
+class TestSyncClient:
+    def test_full_session_replay(self):
+        sock = FakeSock([
+            {"type": "hello", "server": "tardis-serve", "schema": SCHEMA,
+             "workers": 4},
+            {"type": "pong"},
+            {"type": "ack", "batch_id": "b1", "n_points": 2, "queue_depth": 1},
+            {"type": "progress", "batch_id": "b1", "point": 0, "memops": 100},
+            {"type": "point_done", "batch_id": "b1", "point": 0, "wall_s": 0.1},
+            {"type": "point_done", "batch_id": "b1", "point": 1, "wall_s": 0.2},
+            {"type": "result", "batch_id": "b1", "payload": make_payload()},
+        ])
+        c = TardisClient(sock=sock)
+        assert c.hello()["workers"] == 4
+        c.ping()
+        bid = c.submit_sweep(
+            [{"workload": "fft", "cores": 4},
+             {"workload": "barnes", "cores": 4, "protocol": "msi"}],
+            batch_id="b1", seed=7, progress_every=50)
+        assert bid == "b1"
+        events = list(c.iter_progress(bid))
+        assert [e["type"] for e in events] == \
+            ["progress", "point_done", "point_done"]
+        cols = c.fetch_columns(bid)
+        assert cols["sim_cycles"] == [1000, 2000]
+        assert cols["variant"] == ["tardis", "msi"]
+        c.close()
+        assert sock.closed
+
+        # The recorded requests are exactly the protocol's frames.
+        sent = sock.sent_frames()
+        assert [f["type"] for f in sent] == ["hello", "ping", "sweep"]
+        sweep = sent[2]
+        assert sweep["id"] == "b1" and sweep["seed"] == 7
+        assert sweep["progress_every"] == 50
+        assert sweep["points"][1]["protocol"] == "msi"
+
+    def test_fetch_columns_skips_progress_chatter(self):
+        sock = FakeSock([
+            {"type": "ack", "batch_id": "b1", "n_points": 2, "queue_depth": 0},
+            {"type": "progress", "batch_id": "b1", "point": 1, "memops": 5},
+            {"type": "result", "batch_id": "b1", "payload": make_payload()},
+        ])
+        c = TardisClient(sock=sock)
+        bid = c.submit_sweep([{"workload": "fft"}] * 2, batch_id="b1")
+        assert c.fetch_columns(bid)["workload"] == ["fft", "barnes"]
+
+    def test_server_error_frame_raises(self):
+        sock = FakeSock([
+            {"type": "ack", "batch_id": "b1", "n_points": 1, "queue_depth": 0},
+            {"type": "error", "batch_id": "b1",
+             "message": "point 0: unknown workload \"nope\""},
+        ])
+        c = TardisClient(sock=sock)
+        bid = c.submit_sweep([{"workload": "nope"}], batch_id="b1")
+        with pytest.raises(ServerError, match="unknown workload"):
+            c.fetch_columns(bid)
+
+    def test_rejected_sweep_raises_at_submit(self):
+        sock = FakeSock([
+            {"type": "error", "message": "unknown key \"corez\""},
+        ])
+        c = TardisClient(sock=sock)
+        with pytest.raises(ServerError, match="corez"):
+            c.submit_sweep([{"workload": "fft", "corez": 4}], batch_id="b1")
+
+    def test_interleaved_batches_route_by_id(self):
+        # b2's result arrives first; fetching b1 must buffer it.
+        sock = FakeSock([
+            {"type": "ack", "batch_id": "b1", "n_points": 2, "queue_depth": 0},
+            {"type": "ack", "batch_id": "b2", "n_points": 2, "queue_depth": 1},
+            {"type": "result", "batch_id": "b2", "payload": make_payload("b2")},
+            {"type": "result", "batch_id": "b1", "payload": make_payload("b1")},
+        ])
+        c = TardisClient(sock=sock)
+        b1 = c.submit_sweep([{"workload": "fft"}] * 2, batch_id="b1")
+        b2 = c.submit_sweep([{"workload": "fft"}] * 2, batch_id="b2")
+        p1 = c.fetch_payload(b1)
+        p2 = c.fetch_payload(b2)
+        assert p1["batch_id"] == "b1" and p2["batch_id"] == "b2"
+
+    def test_eof_mid_stream_is_a_protocol_error(self):
+        sock = FakeSock([
+            {"type": "ack", "batch_id": "b1", "n_points": 1, "queue_depth": 0},
+        ])
+        c = TardisClient(sock=sock)
+        bid = c.submit_sweep([{"workload": "fft"}], batch_id="b1")
+        with pytest.raises(ProtocolError, match="closed"):
+            c.fetch_columns(bid)
+
+    def test_empty_sweep_rejected_client_side(self):
+        c = TardisClient(sock=FakeSock([]))
+        with pytest.raises(ProtocolError, match="non-empty"):
+            c.submit_sweep([], batch_id="b1")
+
+
+class FakeWriter:
+    """Duck-typed asyncio writer recording frames."""
+
+    def __init__(self):
+        self.sent = []
+        self.closed = False
+
+    def write(self, data):
+        self.sent.append(data)
+
+    def close(self):
+        self.closed = True
+
+
+def make_async_client(server_frames):
+    reader = asyncio.StreamReader()
+    reader.feed_data(recorded(server_frames))
+    reader.feed_eof()
+    return AsyncTardisClient(reader, FakeWriter())
+
+
+class TestAsyncClient:
+    def test_full_session_replay(self):
+        async def scenario():
+            c = make_async_client([
+                {"type": "hello", "server": "tardis-serve", "schema": SCHEMA,
+                 "workers": 2},
+                {"type": "ack", "batch_id": "b1", "n_points": 2,
+                 "queue_depth": 0},
+                {"type": "progress", "batch_id": "b1", "point": 0,
+                 "memops": 10},
+                {"type": "result", "batch_id": "b1",
+                 "payload": make_payload()},
+            ])
+            assert (await c.hello())["workers"] == 2
+            bid = await c.submit_sweep(
+                [{"workload": "fft"}] * 2, batch_id="b1")
+            events = [e async for e in c.iter_progress(bid)]
+            assert [e["type"] for e in events] == ["progress"]
+            cols = await c.fetch_columns(bid)
+            assert cols["sim_cycles"] == [1000, 2000]
+            await c.close()
+
+        asyncio.run(scenario())
+
+    def test_error_frame_raises(self):
+        async def scenario():
+            c = make_async_client([
+                {"type": "ack", "batch_id": "b1", "n_points": 1,
+                 "queue_depth": 0},
+                {"type": "error", "batch_id": "b1", "message": "boom"},
+            ])
+            bid = await c.submit_sweep([{"workload": "fft"}], batch_id="b1")
+            with pytest.raises(ServerError, match="boom"):
+                await c.fetch_columns(bid)
+
+        asyncio.run(scenario())

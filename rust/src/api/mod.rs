@@ -33,6 +33,8 @@
 
 pub mod builder;
 pub mod observer;
+pub mod spec;
 
 pub use builder::{default_trace_len, scaled_trace_len, SimBuilder, SimReport, SimSession};
 pub use observer::{Observer, Observers, ProgressObserver, StatsTap};
+pub use spec::SimSpec;

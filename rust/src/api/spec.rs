@@ -1,0 +1,283 @@
+//! Declarative simulation-point specification.
+//!
+//! [`SimSpec`] is the plain-data description of one simulation point —
+//! workload name, protocol, core count, and every optional knob the
+//! `tardis run` CLI exposes.  Both the CLI (`main.rs`) and the serve
+//! subsystem (`crate::serve`) lower their inputs into a `SimSpec` and
+//! call [`SimSpec::builder`], so a batch point submitted over the wire
+//! passes exactly the validation (and produces exactly the
+//! [`SimBuilder`]) that the equivalent CLI invocation would — the
+//! bit-for-bit serve-vs-CLI equality the determinism suite asserts.
+//!
+//! Fields are `Option` where the CLI distinguishes "flag absent" from
+//! "flag set to the default" (e.g. an explicit `--numa-ratio` on a
+//! 1-socket system is an error, an absent one is not).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{
+    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, SystemConfig,
+};
+use crate::trace::TraceParams;
+use crate::workloads;
+
+use super::builder::{scaled_trace_len, SimBuilder};
+
+/// One simulation point, ready to validate and lower into a
+/// [`SimBuilder`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimSpec {
+    /// Named SPLASH-2-signature workload ([`crate::workloads::all`]).
+    pub workload: String,
+    /// Display label for sweep/serve results; defaults to a
+    /// protocol-derived label ([`SimSpec::variant_label`]).
+    pub label: Option<String>,
+    pub protocol: ProtocolKind,
+    pub cores: u32,
+    pub core_model: CoreModel,
+    /// Consistency model; `None` keeps the config default (SC).
+    pub consistency: Option<Consistency>,
+    /// Lease policy; `None` keeps the config default (Static).
+    pub lease_policy: Option<LeasePolicyKind>,
+    /// ccNUMA sockets; `None` keeps the flat single-chip mesh.
+    pub sockets: Option<u32>,
+    /// Inter-socket cost ratio; setting it without `sockets >= 2` is
+    /// an error (an inert knob must not look honored).
+    pub numa_ratio: Option<u32>,
+    /// Address interleave; same inert-knob rule as `numa_ratio`.
+    pub interleave: Option<SocketInterleave>,
+    /// Static lease override (Tardis).
+    pub lease: Option<u64>,
+    /// Self-increment period override (Tardis).
+    pub self_inc: Option<u64>,
+    /// Delta-timestamp width override (Tardis).
+    pub delta_bits: Option<u32>,
+    /// Disable expired-load speculation (Tardis).
+    pub no_spec: bool,
+    /// Divide the default trace length by this factor (>= 1).
+    pub scale_down: u32,
+    /// Explicit trace length; overrides `scale_down` scaling.
+    pub trace_len: Option<u32>,
+    /// Trace-seed override: replaces the workload's canonical
+    /// [`TraceParams::seed`], giving a distinct but deterministic
+    /// trace instance (the serve layer's per-session seeds).
+    pub seed: Option<u64>,
+}
+
+impl SimSpec {
+    /// A point running `workload` with every knob at its default.
+    pub fn new(workload: impl Into<String>) -> Self {
+        Self {
+            workload: workload.into(),
+            label: None,
+            protocol: ProtocolKind::Tardis,
+            cores: 64,
+            core_model: CoreModel::InOrder,
+            consistency: None,
+            lease_policy: None,
+            sockets: None,
+            numa_ratio: None,
+            interleave: None,
+            lease: None,
+            self_inc: None,
+            delta_bits: None,
+            no_spec: false,
+            scale_down: 1,
+            trace_len: None,
+            seed: None,
+        }
+    }
+
+    /// The workload's trace parameters with the seed override applied.
+    /// Fails on an unknown workload name — the first validation any
+    /// consumer hits.
+    pub fn resolve_params(&self) -> Result<TraceParams> {
+        let spec = workloads::by_name(&self.workload).ok_or_else(|| {
+            anyhow!(
+                "unknown workload {:?} (known: {})",
+                self.workload,
+                workloads::all().iter().map(|w| w.name).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+        let mut params = spec.params;
+        if let Some(seed) = self.seed {
+            params.seed = seed;
+        }
+        Ok(params)
+    }
+
+    /// Trace length this point runs: the explicit override, or the
+    /// core-count default divided by `scale_down`.
+    pub fn resolved_trace_len(&self) -> u32 {
+        self.trace_len.unwrap_or_else(|| scaled_trace_len(self.cores, self.scale_down))
+    }
+
+    /// Result label: the explicit one, else derived from the protocol
+    /// and its modifiers (`tardis-predictive-nospec`, `msi`...).
+    pub fn variant_label(&self) -> String {
+        if let Some(l) = &self.label {
+            return l.clone();
+        }
+        let mut label = self.protocol.name().to_string();
+        if self.protocol == ProtocolKind::Tardis {
+            if let Some(p) = self.lease_policy {
+                label.push('-');
+                label.push_str(p.name());
+            }
+            if self.no_spec {
+                label.push_str("-nospec");
+            }
+        }
+        label
+    }
+
+    /// Validate the point and lower it into a configured
+    /// [`SimBuilder`] (workload source attached, trace length set).
+    /// Geometry checks that need the final config (socket
+    /// divisibility) run later, in [`SimBuilder::build`].
+    pub fn builder(&self) -> Result<SimBuilder> {
+        if self.cores == 0 {
+            bail!("a simulation needs at least one core");
+        }
+        let params = self.resolve_params()?;
+        let mut b = SimBuilder::from_config(SystemConfig::for_point(self.cores, self.protocol));
+        b = b.core_model(self.core_model);
+        if let Some(c) = self.consistency {
+            b = b.consistency(c);
+        }
+        if let Some(p) = self.lease_policy {
+            b = b.lease_policy(p);
+        }
+        if let Some(s) = self.sockets {
+            b = b.sockets(s);
+        }
+        if let Some(r) = self.numa_ratio {
+            b = b.numa_ratio(r);
+        }
+        if let Some(i) = self.interleave {
+            b = b.interleave(i);
+        }
+        // NUMA knobs are inert on a 1-socket system: reject them
+        // loudly instead of simulating flat while the spec looks
+        // honored (the CLI surfaces this as its --flag variant).
+        if b.cfg().topology.is_flat() {
+            if self.numa_ratio.is_some() {
+                bail!("numa-ratio has no effect without sockets >= 2");
+            }
+            if self.interleave.is_some() {
+                bail!("interleave has no effect without sockets >= 2");
+            }
+        }
+        let (lease, self_inc, delta_bits, no_spec) =
+            (self.lease, self.self_inc, self.delta_bits, self.no_spec);
+        b = b.tardis(|t| {
+            if let Some(l) = lease {
+                t.lease = l;
+            }
+            if let Some(s) = self_inc {
+                t.self_inc_period = s;
+            }
+            if let Some(d) = delta_bits {
+                t.delta_ts_bits = d;
+            }
+            if no_spec {
+                t.speculation = false;
+            }
+        });
+        Ok(b.synth_workload(params).trace_len(self.resolved_trace_len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_the_cli_defaults() {
+        let s = SimSpec::new("fft");
+        assert_eq!(s.protocol, ProtocolKind::Tardis);
+        assert_eq!(s.cores, 64);
+        assert_eq!(s.core_model, CoreModel::InOrder);
+        assert_eq!(s.variant_label(), "tardis");
+        let b = s.builder().unwrap();
+        assert_eq!(b.cfg().n_cores, 64);
+        assert_eq!(b.cfg().consistency, Consistency::Sc);
+    }
+
+    #[test]
+    fn unknown_workload_is_rejected() {
+        let err = SimSpec::new("nope").builder().unwrap_err().to_string();
+        assert!(err.contains("unknown workload"), "{err}");
+    }
+
+    #[test]
+    fn inert_numa_knobs_are_rejected() {
+        let mut s = SimSpec::new("fft");
+        s.numa_ratio = Some(4);
+        let err = s.builder().unwrap_err().to_string();
+        assert!(err.contains("numa-ratio has no effect"), "{err}");
+        let mut s = SimSpec::new("fft");
+        s.interleave = Some(SocketInterleave::Block);
+        let err = s.builder().unwrap_err().to_string();
+        assert!(err.contains("interleave has no effect"), "{err}");
+        // With sockets set the same knobs are honored.
+        let mut s = SimSpec::new("fft");
+        s.cores = 8;
+        s.sockets = Some(2);
+        s.numa_ratio = Some(4);
+        s.interleave = Some(SocketInterleave::Block);
+        assert_eq!(s.builder().unwrap().cfg().topology.sockets, 2);
+    }
+
+    #[test]
+    fn socket_divisibility_still_checked_at_build() {
+        let mut s = SimSpec::new("fft");
+        s.cores = 6;
+        s.sockets = Some(4);
+        let err = s.builder().unwrap().build().unwrap_err().to_string();
+        assert!(err.contains("do not divide"), "{err}");
+    }
+
+    #[test]
+    fn seed_override_changes_the_trace_deterministically() {
+        let mut a = SimSpec::new("fft");
+        a.cores = 2;
+        a.trace_len = Some(64);
+        let mut b = a.clone();
+        b.seed = Some(999);
+        let run = |s: &SimSpec| s.builder().unwrap().run().unwrap().stats;
+        let (ra1, ra2, rb) = (run(&a), run(&a), run(&b));
+        assert_eq!(ra1, ra2, "same spec must repeat bit-identically");
+        assert_ne!(ra1, rb, "a reseeded trace must differ");
+    }
+
+    #[test]
+    fn spec_run_matches_the_equivalent_manual_builder() {
+        let mut s = SimSpec::new("barnes");
+        s.cores = 4;
+        s.protocol = ProtocolKind::Msi;
+        s.scale_down = 8;
+        let via_spec = s.builder().unwrap().run().unwrap();
+        let params = workloads::by_name("barnes").unwrap().params;
+        let manual = SimBuilder::from_config(SystemConfig::for_point(4, ProtocolKind::Msi))
+            .synth_workload(params)
+            .trace_len(scaled_trace_len(4, 8))
+            .run()
+            .unwrap();
+        assert_eq!(via_spec.stats, manual.stats);
+    }
+
+    #[test]
+    fn variant_labels_encode_the_modifiers() {
+        let mut s = SimSpec::new("fft");
+        s.lease_policy = Some(LeasePolicyKind::parse("predictive").unwrap());
+        s.no_spec = true;
+        assert_eq!(s.variant_label(), "tardis-predictive-nospec");
+        s.label = Some("custom".into());
+        assert_eq!(s.variant_label(), "custom");
+        let mut m = SimSpec::new("fft");
+        m.protocol = ProtocolKind::Msi;
+        m.no_spec = true; // tardis-only modifier: not in msi labels
+        assert_eq!(m.variant_label(), "msi");
+    }
+}

@@ -42,6 +42,23 @@ pub enum CoreModel {
     OutOfOrder,
 }
 
+impl CoreModel {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "inorder" => Some(Self::InOrder),
+            "ooo" => Some(Self::OutOfOrder),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::InOrder => "inorder",
+            Self::OutOfOrder => "ooo",
+        }
+    }
+}
+
 /// Memory consistency model the cores enforce (Tardis 2.0,
 /// arXiv:1511.08774 §5: the physiological order supports relaxed
 /// models directly).
@@ -340,6 +357,18 @@ impl Default for SystemConfig {
 }
 
 impl SystemConfig {
+    /// Paper-default configuration for one sweep point: Table V
+    /// defaults with the Ackwise pointer count scaled the way the
+    /// paper's Table VII does (8 pointers at 256+ cores, 4 below).
+    /// The single source of truth behind the CLI's `run`, the
+    /// experiment harness's `base_cfg`, and the serve subsystem's
+    /// per-point configs.
+    pub fn for_point(n_cores: u32, protocol: ProtocolKind) -> Self {
+        let mut cfg = Self { n_cores, protocol, ..Self::default() };
+        cfg.ackwise.num_pointers = if n_cores >= 256 { 8 } else { 4 };
+        cfg
+    }
+
     /// Convenience: small test system.
     pub fn small(n_cores: u32, protocol: ProtocolKind) -> Self {
         Self {
@@ -412,6 +441,21 @@ mod tests {
             assert_eq!(LeasePolicyKind::parse(k.name()), Some(k));
         }
         assert_eq!(LeasePolicyKind::parse("oracle"), None);
+    }
+
+    #[test]
+    fn core_model_parse_roundtrip() {
+        for m in [CoreModel::InOrder, CoreModel::OutOfOrder] {
+            assert_eq!(CoreModel::parse(m.name()), Some(m));
+        }
+        assert_eq!(CoreModel::parse("vliw"), None);
+    }
+
+    #[test]
+    fn for_point_scales_ackwise_pointers() {
+        assert_eq!(SystemConfig::for_point(64, ProtocolKind::Ackwise).ackwise.num_pointers, 4);
+        assert_eq!(SystemConfig::for_point(256, ProtocolKind::Ackwise).ackwise.num_pointers, 8);
+        assert_eq!(SystemConfig::for_point(16, ProtocolKind::Tardis).n_cores, 16);
     }
 
     #[test]

@@ -68,11 +68,11 @@ pub struct Variant {
 }
 
 /// Base config at a core count (Table V defaults + Ackwise pointer
-/// scaling: 4 at 16/64 cores, 8 at 256 — paper Table VII).
+/// scaling: 4 at 16/64 cores, 8 at 256 — paper Table VII).  Thin
+/// alias of [`SystemConfig::for_point`], which the CLI and the serve
+/// subsystem share via [`crate::api::SimSpec`].
 pub fn base_cfg(n_cores: u32, protocol: ProtocolKind) -> SystemConfig {
-    let mut cfg = SystemConfig { n_cores, protocol, ..SystemConfig::default() };
-    cfg.ackwise.num_pointers = if n_cores >= 256 { 8 } else { 4 };
-    cfg
+    SystemConfig::for_point(n_cores, protocol)
 }
 
 /// Standard Fig-4 variant set: MSI baseline, Ackwise, Tardis,

@@ -13,7 +13,7 @@ pub mod experiments;
 pub mod report;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use anyhow::Result;
 
@@ -34,6 +34,113 @@ pub struct SimPoint {
 pub struct SimPointResult {
     pub label: String,
     pub stats: SimStats,
+}
+
+/// A boxed unit of work for the [`WorkerPool`].
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A long-lived pool of worker threads draining a shared job queue —
+/// the execution substrate of the serve subsystem (`crate::serve`,
+/// DESIGN.md §10) and the plumbing groundwork for the PDES shard
+/// engine (ROADMAP item 1).  Unlike [`run_points`], which spawns
+/// scoped workers per sweep and joins them before returning, a
+/// `WorkerPool` outlives any one batch: sessions from many concurrent
+/// clients interleave on the same threads.
+///
+/// Shutdown is graceful by construction: [`WorkerPool::shutdown`]
+/// closes the queue and joins the workers, which keep draining every
+/// job already submitted — in-flight sessions always finish.
+pub struct WorkerPool {
+    tx: Mutex<Option<mpsc::Sender<Job>>>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Jobs submitted but not yet picked up by a worker.
+    queued: Arc<AtomicUsize>,
+    /// High-water mark of `queued` (per-batch queue-depth stats).
+    peak_queued: Arc<AtomicUsize>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (0 = available parallelism).
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            workers
+        };
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::spawn(move || loop {
+                    // Holding the lock across recv serializes dequeue
+                    // only — the job itself runs after the guard drops.
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => {
+                            queued.fetch_sub(1, Ordering::Relaxed);
+                            job();
+                        }
+                        // Queue closed and drained: worker retires.
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self {
+            tx: Mutex::new(Some(tx)),
+            handles: Mutex::new(handles),
+            queued,
+            peak_queued: Arc::new(AtomicUsize::new(0)),
+            workers,
+        }
+    }
+
+    /// Enqueue a job; returns the queue depth right after enqueue
+    /// (jobs waiting for a worker, this one included).  Fails once
+    /// [`WorkerPool::shutdown`] has closed the queue.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<usize> {
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref().ok_or_else(|| anyhow::anyhow!("worker pool is shut down"))?;
+        let depth = self.queued.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak_queued.fetch_max(depth, Ordering::Relaxed);
+        tx.send(job).map_err(|_| anyhow::anyhow!("worker pool is shut down"))?;
+        Ok(depth)
+    }
+
+    /// Jobs submitted but not yet started.
+    pub fn queue_depth(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of [`WorkerPool::queue_depth`] over the pool's
+    /// lifetime.
+    pub fn peak_queue_depth(&self) -> usize {
+        self.peak_queued.load(Ordering::Relaxed)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Close the queue and join every worker.  Already submitted jobs
+    /// are drained first (graceful); new submissions fail.
+    pub fn shutdown(&self) {
+        self.tx.lock().unwrap().take();
+        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
 }
 
 /// Run all points on `threads` worker threads (0 = available
@@ -122,6 +229,33 @@ mod tests {
             assert_eq!(r.label, format!("p{i}"));
             assert!(r.stats.cycles > 0);
         }
+    }
+
+    #[test]
+    fn worker_pool_runs_jobs_and_drains_on_shutdown() {
+        use std::sync::atomic::AtomicU64;
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let sum = Arc::new(AtomicU64::new(0));
+        for i in 1..=100u64 {
+            let sum = Arc::clone(&sum);
+            pool.submit(move || {
+                sum.fetch_add(i, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        // Graceful shutdown drains every queued job before joining.
+        pool.shutdown();
+        assert_eq!(sum.load(Ordering::Relaxed), 5050);
+        assert_eq!(pool.queue_depth(), 0);
+        assert!(pool.peak_queue_depth() >= 1);
+        assert!(pool.submit(|| {}).is_err(), "closed pool must reject jobs");
+    }
+
+    #[test]
+    fn worker_pool_zero_means_available_parallelism() {
+        let pool = WorkerPool::new(0);
+        assert!(pool.workers() >= 1);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!              [--cores N] [--lines N] [--max-ts N] [--lease N]
 //!              [--sb-entries N] [--out FILE]
 //! tardis reproduce [--threads N] [--scale-down N] [--out results/]
+//! tardis serve [--addr HOST:PORT | --port N] [--workers N]
 //! tardis help
 //! ```
 //!
@@ -24,7 +25,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use tardis_dsm::api::SimBuilder;
+use tardis_dsm::api::{SimBuilder, SimSpec};
 use tardis_dsm::config::{
     Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, TopologyConfig,
 };
@@ -32,6 +33,7 @@ use tardis_dsm::coordinator::experiments::{self, EvalCtx};
 use tardis_dsm::coordinator::report::Table;
 use tardis_dsm::prog::litmus;
 use tardis_dsm::runtime::TraceRuntime;
+use tardis_dsm::serve::{ServeConfig, Server};
 use tardis_dsm::verif::{self, VerifBounds};
 use tardis_dsm::workloads;
 
@@ -143,6 +145,7 @@ fn main() -> Result<()> {
         "verify" => cmd_verify(&args),
         "reproduce" => cmd_reproduce(&args),
         "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -160,7 +163,8 @@ USAGE:
              [--ooo] [--consistency sc|tso] [--lease N]
              [--lease-policy static|dynamic|predictive] [--self-inc N]
              [--no-spec] [--delta-bits N] [--scale-down N] [--progress N]
-             [--sockets N] [--numa-ratio N] [--interleave line|block]
+             [--seed N] [--sockets N] [--numa-ratio N]
+             [--interleave line|block]
   tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7|lease|numa>
              [--threads N] [--scale-down N] [--out DIR]
   tardis litmus           run the litmus suite under all three protocols
@@ -177,79 +181,75 @@ USAGE:
                [--sockets N] [--numa-ratio N]
                           macro benchmark (fig-4 sweep, timed serially);
                           writes the machine-readable BENCH_*.json record
+  tardis serve [--addr HOST:PORT | --port N] [--workers N]
+                          simulation-as-a-service: long-lived batch sweep
+                          server (newline-delimited JSON, columnar
+                          tardis-serve-v1 results; python/client/ has the
+                          reference clients)
   tardis help             this message
   workloads: {}",
         workloads::all().iter().map(|w| w.name).collect::<Vec<_>>().join(", ")
     );
 }
 
-/// Assemble the `run` subcommand's builder from its flags.
-fn run_builder(args: &Args) -> Result<SimBuilder> {
-    let protocol = {
+/// Lower the `run` subcommand's flags into the shared [`SimSpec`]
+/// point description (the serve subsystem lowers wire points into the
+/// same struct, so both paths share one validation and one builder).
+fn spec_from_args(args: &Args) -> Result<SimSpec> {
+    let mut spec = SimSpec::new(args.get_str("workload", "fft")?);
+    {
         let p = args.get_str("protocol", "tardis")?;
-        ProtocolKind::parse(p).ok_or_else(|| anyhow!("unknown protocol {p:?}"))?
-    };
-    let n_cores = args.get_u64("cores", 64)? as u32;
-    let mut b = SimBuilder::from_config(experiments::base_cfg(n_cores, protocol));
+        spec.protocol = ProtocolKind::parse(p).ok_or_else(|| anyhow!("unknown protocol {p:?}"))?;
+    }
+    spec.cores = args.get_u64("cores", 64)? as u32;
     if args.has("ooo") {
-        b = b.core_model(CoreModel::OutOfOrder);
+        spec.core_model = CoreModel::OutOfOrder;
     }
     if args.has("consistency") {
         let c = args.get_str("consistency", "sc")?;
-        let model = Consistency::parse(c)
-            .ok_or_else(|| anyhow!("unknown consistency model {c:?} (sc|tso)"))?;
-        b = b.consistency(model);
+        spec.consistency = Some(
+            Consistency::parse(c)
+                .ok_or_else(|| anyhow!("unknown consistency model {c:?} (sc|tso)"))?,
+        );
     }
     if args.has("lease-policy") {
         let p = args.get_str("lease-policy", "static")?;
-        let policy = LeasePolicyKind::parse(p)
-            .ok_or_else(|| anyhow!("unknown lease policy {p:?} (static|dynamic|predictive)"))?;
-        b = b.lease_policy(policy);
+        spec.lease_policy = Some(
+            LeasePolicyKind::parse(p)
+                .ok_or_else(|| anyhow!("unknown lease policy {p:?} (static|dynamic|predictive)"))?,
+        );
     }
     if args.has("sockets") {
-        b = b.sockets(args.get_u64("sockets", 1)? as u32);
+        spec.sockets = Some(args.get_u64("sockets", 1)? as u32);
     }
     if args.has("numa-ratio") {
-        b = b.numa_ratio(args.get_u64("numa-ratio", 1)? as u32);
+        spec.numa_ratio = Some(args.get_u64("numa-ratio", 1)? as u32);
     }
     if args.has("interleave") {
         let i = args.get_str("interleave", "line")?;
-        let policy = SocketInterleave::parse(i)
-            .ok_or_else(|| anyhow!("unknown interleave {i:?} (line|block)"))?;
-        b = b.interleave(policy);
+        spec.interleave = Some(
+            SocketInterleave::parse(i)
+                .ok_or_else(|| anyhow!("unknown interleave {i:?} (line|block)"))?,
+        );
     }
-    // NUMA knobs are inert on a 1-socket system: reject them loudly
-    // instead of simulating flat and letting the flags look honored.
-    if b.cfg().topology.is_flat() {
-        for flag in ["numa-ratio", "interleave"] {
-            if args.has(flag) {
-                bail!("--{flag} has no effect without --sockets >= 2");
-            }
-        }
+    if args.has("lease") {
+        spec.lease = Some(args.get_u64("lease", 0)?);
     }
-    let lease = args.get_u64("lease", 0)?;
-    let self_inc = args.get_u64("self-inc", 0)?;
-    let delta_bits = args.get_u64("delta-bits", 0)? as u32;
-    let no_spec = args.has("no-spec");
-    b = b.tardis(|t| {
-        if args.has("lease") {
-            t.lease = lease;
-        }
-        if args.has("self-inc") {
-            t.self_inc_period = self_inc;
-        }
-        if args.has("delta-bits") {
-            t.delta_ts_bits = delta_bits;
-        }
-        if no_spec {
-            t.speculation = false;
-        }
-    });
-    let progress = args.get_u64("progress", 0)?;
-    if progress > 0 {
-        b = b.progress_every(progress);
+    if args.has("self-inc") {
+        spec.self_inc = Some(args.get_u64("self-inc", 0)?);
     }
-    Ok(b)
+    if args.has("delta-bits") {
+        spec.delta_bits = Some(args.get_u64("delta-bits", 0)? as u32);
+    }
+    spec.no_spec = args.has("no-spec");
+    spec.scale_down = args.get_u64("scale-down", 1)? as u32;
+    if spec.scale_down == 0 {
+        bail!("--scale-down must be >= 1");
+    }
+    if args.has("seed") {
+        spec.seed = Some(args.get_u64("seed", 0)?);
+    }
+    Ok(spec)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -266,19 +266,21 @@ fn cmd_run(args: &Args) -> Result<()> {
             "delta-bits",
             "scale-down",
             "progress",
+            "seed",
             "sockets",
             "numa-ratio",
             "interleave",
         ],
         &["ooo", "no-spec"],
     )?;
-    let name = args.get_str("workload", "fft")?;
-    let mut b = run_builder(args)?;
-    let n_cores = b.cfg().n_cores;
-    let scale_down = args.get_u64("scale-down", 1)? as u32;
-    b = b
-        .named_workload(name)
-        .trace_len(tardis_dsm::api::scaled_trace_len(n_cores, scale_down));
+    let spec = spec_from_args(args)?;
+    let name = spec.workload.clone();
+    let n_cores = spec.cores;
+    let mut b = spec.builder()?;
+    let progress = args.get_u64("progress", 0)?;
+    if progress > 0 {
+        b = b.progress_every(progress);
+    }
     if let Ok(rt) = TraceRuntime::open_default() {
         b = b.trace_runtime(rt);
     } else {
@@ -500,6 +502,36 @@ fn cmd_bench(args: &Args) -> Result<()> {
     println!("{}", report.summary());
     report.write(out)?;
     println!("wrote {out}");
+    Ok(())
+}
+
+/// `tardis serve`: the long-lived batch sweep server (DESIGN.md §10).
+/// Binds, prints the bound address (port 0 picks a free port, for
+/// harnesses), and blocks until a client sends a `shutdown` frame;
+/// in-flight sessions drain before exit.
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_only("serve", &["addr", "port", "workers"], &[])?;
+    if args.has("addr") && args.has("port") {
+        bail!("--addr and --port are mutually exclusive (addr includes the port)");
+    }
+    let addr = if args.has("addr") {
+        match args.get("addr") {
+            Some(a) => a.to_string(),
+            None => bail!("--addr expects host:port"),
+        }
+    } else {
+        format!("127.0.0.1:{}", args.get_u64("port", 7436)?)
+    };
+    let workers = args.get_u64("workers", 0)? as usize;
+    let server = Server::start(ServeConfig { addr, workers })?;
+    println!(
+        "tardis-serve listening on {} ({} workers, schema {})",
+        server.addr(),
+        server.workers(),
+        tardis_dsm::serve::SCHEMA
+    );
+    server.join();
+    println!("tardis-serve: drained and shut down");
     Ok(())
 }
 

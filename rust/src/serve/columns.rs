@@ -1,0 +1,213 @@
+//! The `tardis-serve-v1` columnar result payload.
+//!
+//! A finished batch is returned as one JSON object with a `columns`
+//! map: one array per field, all the same length, point `i` at index
+//! `i` everywhere.  Column-major wins over row-per-point objects for
+//! this workload because consumers are analytical — "plot `sim_cycles`
+//! across the sweep", "sum `total_flits`" — and a column lands in
+//! NumPy/pandas as one contiguous slice instead of a Python-level
+//! gather over N dicts.  The field names mirror the `BENCH_*.json`
+//! per-stat vocabulary (`tools/schema_common.py` holds the single
+//! shared list), so the serve validator and the bench validator check
+//! the same schema.
+
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use crate::api::SimSpec;
+use crate::stats::SimStats;
+
+use super::json::escape;
+
+/// Wire schema identifier; bump on any incompatible payload change.
+pub const SCHEMA: &str = "tardis-serve-v1";
+
+/// One completed point: the spec it ran plus its outcome.
+pub struct PointResult {
+    pub spec: SimSpec,
+    pub stats: SimStats,
+    pub elapsed: Duration,
+}
+
+/// Per-batch bookkeeping echoed into the payload's `timing` object.
+pub struct BatchTiming {
+    /// Wall time from batch accept to last point done.
+    pub wall: Duration,
+    /// Worker-pool queue depth observed when the batch was submitted.
+    pub queue_depth_at_submit: usize,
+}
+
+/// Render a finished batch as the `tardis-serve-v1` columnar JSON
+/// object (no trailing newline; the frame layer adds it).
+///
+/// `results` must be in point-submission order — the column index IS
+/// the point index.
+pub fn payload(
+    batch_id: &str,
+    seed: Option<u64>,
+    workers: usize,
+    timing: &BatchTiming,
+    results: &[PointResult],
+) -> String {
+    let mut out = String::with_capacity(1024 + results.len() * 512);
+    out.push_str("{\"schema\": ");
+    out.push_str(&escape(SCHEMA));
+    let _ = write!(out, ", \"batch_id\": {}", escape(batch_id));
+    match seed {
+        Some(s) => {
+            let _ = write!(out, ", \"seed\": {s}");
+        }
+        None => out.push_str(", \"seed\": null"),
+    }
+    let _ = write!(out, ", \"n_points\": {}", results.len());
+    let _ = write!(out, ", \"workers\": {workers}");
+    let _ = write!(
+        out,
+        ", \"timing\": {{\"wall_s\": {:.6}, \"queue_depth_at_submit\": {}}}",
+        timing.wall.as_secs_f64(),
+        timing.queue_depth_at_submit
+    );
+    out.push_str(", \"columns\": {");
+
+    // Identity columns first: what ran.
+    push_str_column(&mut out, "workload", results.iter().map(|r| r.spec.workload.as_str()), true);
+    let variants: Vec<String> = results.iter().map(|r| r.spec.variant_label()).collect();
+    push_str_column(&mut out, "variant", variants.iter().map(String::as_str), false);
+    push_u64_column(&mut out, "cores", results.iter().map(|r| u64::from(r.spec.cores)));
+
+    // One column per counter, in the stable SimStats::columns order.
+    // Transpose: results are row-major (per point), the wire is
+    // column-major (per stat).
+    let rows: Vec<Vec<(&'static str, u64)>> = results.iter().map(|r| r.stats.columns()).collect();
+    let template = SimStats::default().columns();
+    for (s, (name, _)) in template.iter().enumerate() {
+        push_u64_column(&mut out, name, rows.iter().map(|r| r[s].1));
+    }
+
+    // Per-point wall time last (float column).
+    out.push_str(", ");
+    out.push_str(&escape("wall_s"));
+    out.push_str(": [");
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "{:.6}", r.elapsed.as_secs_f64());
+    }
+    out.push(']');
+
+    out.push_str("}}");
+    out
+}
+
+fn push_str_column<'a>(
+    out: &mut String,
+    name: &str,
+    values: impl Iterator<Item = &'a str>,
+    first: bool,
+) {
+    if !first {
+        out.push_str(", ");
+    }
+    out.push_str(&escape(name));
+    out.push_str(": [");
+    for (i, v) in values.enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&escape(v));
+    }
+    out.push(']');
+}
+
+fn push_u64_column(out: &mut String, name: &str, values: impl Iterator<Item = u64>) {
+    out.push_str(", ");
+    out.push_str(&escape(name));
+    out.push_str(": [");
+    for (i, v) in values.enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "{v}");
+    }
+    out.push(']');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::json::{self, Json};
+
+    fn fake_result(workload: &str, cores: u32, cycles: u64) -> PointResult {
+        let mut spec = SimSpec::new(workload);
+        spec.cores = cores;
+        let stats = SimStats { cycles, memops: cycles / 2, ..SimStats::default() };
+        PointResult { spec, stats, elapsed: Duration::from_millis(5) }
+    }
+
+    #[test]
+    fn payload_parses_back_and_is_column_major() {
+        let timing = BatchTiming { wall: Duration::from_millis(42), queue_depth_at_submit: 3 };
+        let results =
+            vec![fake_result("fft", 16, 1000), fake_result("barnes", 64, 2000)];
+        let text = payload("batch-1", Some(7), 4, &timing, &results);
+        let v = json::parse(&text).expect("payload must be valid JSON");
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(v.get("batch_id").unwrap().as_str(), Some("batch-1"));
+        assert_eq!(v.get("seed").unwrap().as_u64(), Some(7));
+        assert_eq!(v.get("n_points").unwrap().as_u64(), Some(2));
+        assert_eq!(v.get("workers").unwrap().as_u64(), Some(4));
+        let timing = v.get("timing").unwrap();
+        assert!(timing.get("wall_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(timing.get("queue_depth_at_submit").unwrap().as_u64(), Some(3));
+
+        let cols = v.get("columns").unwrap();
+        let workload = cols.get("workload").unwrap().as_array().unwrap();
+        assert_eq!(workload[0].as_str(), Some("fft"));
+        assert_eq!(workload[1].as_str(), Some("barnes"));
+        assert_eq!(
+            cols.get("variant").unwrap().as_array().unwrap()[0].as_str(),
+            Some("tardis")
+        );
+        let cores = cols.get("cores").unwrap().as_array().unwrap();
+        assert_eq!(cores[0].as_u64(), Some(16));
+        let cycles = cols.get("sim_cycles").unwrap().as_array().unwrap();
+        assert_eq!(cycles[0].as_u64(), Some(1000));
+        assert_eq!(cycles[1].as_u64(), Some(2000));
+
+        // Every stat column exists, same length, plus the 4 identity/
+        // timing columns.
+        let stat_names: Vec<&str> =
+            SimStats::default().columns().iter().map(|(n, _)| *n).collect();
+        for name in &stat_names {
+            let col = cols.get(name).unwrap_or_else(|| panic!("missing column {name}"));
+            assert_eq!(col.as_array().unwrap().len(), 2, "{name}");
+        }
+        assert_eq!(cols.keys().len(), stat_names.len() + 4);
+        assert_eq!(cols.get("wall_s").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn null_seed_and_empty_batch_are_representable() {
+        let timing = BatchTiming { wall: Duration::ZERO, queue_depth_at_submit: 0 };
+        let text = payload("b", None, 1, &timing, &[]);
+        let v = json::parse(&text).unwrap();
+        assert!(v.get("seed").unwrap().is_null());
+        assert_eq!(v.get("n_points").unwrap().as_u64(), Some(0));
+        // Even with zero points every column is present (empty).
+        let cols = v.get("columns").unwrap();
+        assert_eq!(
+            cols.get("sim_cycles").unwrap(),
+            &Json::Arr(vec![]),
+            "stat columns survive an empty batch"
+        );
+    }
+
+    #[test]
+    fn hostile_batch_ids_are_escaped() {
+        let timing = BatchTiming { wall: Duration::ZERO, queue_depth_at_submit: 0 };
+        let text = payload("a\"b\\c\nd", None, 1, &timing, &[]);
+        let v = json::parse(&text).unwrap();
+        assert_eq!(v.get("batch_id").unwrap().as_str(), Some("a\"b\\c\nd"));
+    }
+}

@@ -1,0 +1,31 @@
+//! Simulation-as-a-service: the `tardis serve` batch sweep server
+//! (DESIGN.md §10).
+//!
+//! A long-lived TCP server speaking newline-delimited JSON frames.
+//! Clients submit batched sweeps; every point is an independent
+//! [`SimSpec`](crate::api::SimSpec) `-> SimBuilder -> run` session
+//! fanned across a shared [`WorkerPool`](crate::coordinator::WorkerPool),
+//! progress streams back through the [`Observer`](crate::api::Observer)
+//! registry, and a finished batch returns one columnar
+//! `tardis-serve-v1` payload (one array per statistic — the
+//! `BENCH_*.json` field vocabulary, see [`columns`]).
+//!
+//! Wire protocol (client -> server frame types): `hello`, `ping`,
+//! `sweep`, `shutdown`.  Server -> client: `hello`, `pong`, `ack`,
+//! `progress`, `point_done`, `result`, `error`, `bye`.  One JSON
+//! object per line, UTF-8.  `python/client/` ships sync and async
+//! reference clients.
+//!
+//! Determinism: a point's results are bit-for-bit identical to the
+//! equivalent `tardis run` invocation — both lower through the same
+//! `SimSpec`, and per-session seeds make distinct sessions
+//! deterministic too (`tests/serve.rs`, `tests/determinism.rs`).
+
+pub mod columns;
+pub mod json;
+pub mod request;
+pub mod server;
+
+pub use columns::{BatchTiming, PointResult, SCHEMA};
+pub use request::{Request, SweepRequest};
+pub use server::{run_batch, ServeConfig, Server};

@@ -1,0 +1,327 @@
+//! Wire-frame -> request decoding for the serve protocol.
+//!
+//! Every client frame is one JSON object per line with a `"type"`
+//! discriminator.  Decoding is strict: unknown frame types, unknown
+//! keys, wrong value types, and out-of-range knobs are all errors —
+//! a typo'd knob must fail the request, not silently run the default
+//! point and return misleading numbers.
+//!
+//! Sweep points lower into [`SimSpec`], so a point carries exactly the
+//! knobs (and hits exactly the validation) of the equivalent
+//! `tardis run` invocation.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::api::SimSpec;
+use crate::config::{Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave};
+
+use super::json::{self, Json};
+
+/// Cap on points per sweep: keeps one hostile frame from queueing
+/// unbounded work.  Real paper sweeps are 12 workloads x ~6 variants.
+pub const MAX_POINTS: usize = 1024;
+
+/// Cap on a batch id's length (it is echoed into every response).
+pub const MAX_ID_LEN: usize = 128;
+
+/// One decoded client frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Protocol handshake; server answers with its banner.
+    Hello,
+    /// Liveness probe; server answers `pong`.
+    Ping,
+    /// A batch of simulation points to fan across the worker pool.
+    Sweep(SweepRequest),
+    /// Graceful server shutdown: drain in-flight sessions, then exit.
+    Shutdown,
+}
+
+/// A batched sweep: N independent points run concurrently, results
+/// returned as one columnar payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRequest {
+    /// Client-chosen batch id, echoed in every related server frame.
+    pub id: String,
+    /// Session seed applied to every point that doesn't set its own
+    /// (per-session determinism: same id+seed+points -> same bits).
+    pub seed: Option<u64>,
+    /// Emit a `progress` frame every this many commits per point
+    /// (0 = no progress frames).
+    pub progress_every: u64,
+    pub points: Vec<SimSpec>,
+}
+
+/// Decode one wire line into a [`Request`].
+pub fn decode(line: &str) -> Result<Request> {
+    let v = json::parse(line.trim()).map_err(|e| anyhow!("bad JSON: {e}"))?;
+    let ty = v
+        .get("type")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("frame needs a string \"type\" field"))?;
+    match ty {
+        "hello" => {
+            expect_keys(&v, &["type"])?;
+            Ok(Request::Hello)
+        }
+        "ping" => {
+            expect_keys(&v, &["type"])?;
+            Ok(Request::Ping)
+        }
+        "shutdown" => {
+            expect_keys(&v, &["type"])?;
+            Ok(Request::Shutdown)
+        }
+        "sweep" => Ok(Request::Sweep(decode_sweep(&v)?)),
+        other => bail!("unknown frame type {other:?}"),
+    }
+}
+
+fn decode_sweep(v: &Json) -> Result<SweepRequest> {
+    expect_keys(v, &["type", "id", "seed", "progress_every", "points"])?;
+    let id = v
+        .get("id")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("sweep needs a string \"id\""))?
+        .to_string();
+    if id.is_empty() || id.len() > MAX_ID_LEN {
+        bail!("sweep id must be 1..={MAX_ID_LEN} bytes");
+    }
+    let seed = opt_u64(v, "seed")?;
+    let progress_every = opt_u64(v, "progress_every")?.unwrap_or(0);
+    let points = v
+        .get("points")
+        .and_then(Json::as_array)
+        .ok_or_else(|| anyhow!("sweep needs a \"points\" array"))?;
+    if points.is_empty() {
+        bail!("sweep has no points");
+    }
+    if points.len() > MAX_POINTS {
+        bail!("sweep has {} points (max {MAX_POINTS})", points.len());
+    }
+    let points = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            decode_point(p, seed).map_err(|e| anyhow!("point {i}: {e}")).and_then(|spec| {
+                // Full CLI-equivalent validation now, before anything
+                // is queued: a sweep is accepted whole or not at all.
+                spec.builder().map_err(|e| anyhow!("point {i}: {e}"))?;
+                Ok(spec)
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(SweepRequest { id, seed, progress_every, points })
+}
+
+/// Every key a point object may carry; names match the `tardis run`
+/// flags one-for-one.
+const POINT_KEYS: &[&str] = &[
+    "workload",
+    "label",
+    "protocol",
+    "cores",
+    "core_model",
+    "consistency",
+    "lease_policy",
+    "sockets",
+    "numa_ratio",
+    "interleave",
+    "lease",
+    "self_inc",
+    "delta_bits",
+    "no_spec",
+    "scale_down",
+    "trace_len",
+    "seed",
+];
+
+fn decode_point(v: &Json, session_seed: Option<u64>) -> Result<SimSpec> {
+    if !matches!(v, Json::Obj(_)) {
+        bail!("point must be an object");
+    }
+    expect_keys(v, POINT_KEYS)?;
+    let workload = v
+        .get("workload")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("point needs a string \"workload\""))?;
+    let mut spec = SimSpec::new(workload);
+    if let Some(l) = v.get("label") {
+        spec.label =
+            Some(l.as_str().ok_or_else(|| anyhow!("\"label\" must be a string"))?.to_string());
+    }
+    if let Some(p) = v.get("protocol") {
+        let s = p.as_str().ok_or_else(|| anyhow!("\"protocol\" must be a string"))?;
+        spec.protocol = ProtocolKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown protocol {s:?} (tardis, msi, ackwise)"))?;
+    }
+    if let Some(c) = opt_u32(v, "cores")? {
+        spec.cores = c;
+    }
+    if let Some(m) = v.get("core_model") {
+        let s = m.as_str().ok_or_else(|| anyhow!("\"core_model\" must be a string"))?;
+        spec.core_model =
+            CoreModel::parse(s).ok_or_else(|| anyhow!("unknown core_model {s:?} (inorder, ooo)"))?;
+    }
+    if let Some(c) = v.get("consistency") {
+        let s = c.as_str().ok_or_else(|| anyhow!("\"consistency\" must be a string"))?;
+        spec.consistency = Some(
+            Consistency::parse(s).ok_or_else(|| anyhow!("unknown consistency {s:?} (sc, tso)"))?,
+        );
+    }
+    if let Some(p) = v.get("lease_policy") {
+        let s = p.as_str().ok_or_else(|| anyhow!("\"lease_policy\" must be a string"))?;
+        spec.lease_policy = Some(LeasePolicyKind::parse(s).ok_or_else(|| {
+            anyhow!("unknown lease_policy {s:?} (static, dynamic, predictive)")
+        })?);
+    }
+    spec.sockets = opt_u32(v, "sockets")?;
+    spec.numa_ratio = opt_u32(v, "numa_ratio")?;
+    if let Some(i) = v.get("interleave") {
+        let s = i.as_str().ok_or_else(|| anyhow!("\"interleave\" must be a string"))?;
+        spec.interleave = Some(
+            SocketInterleave::parse(s)
+                .ok_or_else(|| anyhow!("unknown interleave {s:?} (line, block)"))?,
+        );
+    }
+    spec.lease = opt_u64(v, "lease")?;
+    spec.self_inc = opt_u64(v, "self_inc")?;
+    spec.delta_bits = opt_u32(v, "delta_bits")?;
+    if let Some(b) = v.get("no_spec") {
+        spec.no_spec = b.as_bool().ok_or_else(|| anyhow!("\"no_spec\" must be a bool"))?;
+    }
+    if let Some(s) = opt_u32(v, "scale_down")? {
+        if s == 0 {
+            bail!("\"scale_down\" must be >= 1");
+        }
+        spec.scale_down = s;
+    }
+    spec.trace_len = opt_u32(v, "trace_len")?;
+    // Point seed wins over the session seed; both are deterministic.
+    spec.seed = opt_u64(v, "seed")?.or(session_seed);
+    Ok(spec)
+}
+
+/// Reject any key outside `allowed` (null-valued keys count too — a
+/// typo'd knob set to null is still a typo'd knob).
+fn expect_keys(v: &Json, allowed: &[&str]) -> Result<()> {
+    for k in v.keys() {
+        if !allowed.contains(&k) {
+            bail!("unknown key {k:?} (allowed: {})", allowed.join(", "));
+        }
+    }
+    Ok(())
+}
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) if j.is_null() => Ok(None),
+        Some(j) => {
+            j.as_u64().map(Some).ok_or_else(|| anyhow!("{key:?} must be a non-negative integer"))
+        }
+    }
+}
+
+fn opt_u32(v: &Json, key: &str) -> Result<Option<u32>> {
+    match v.get(key) {
+        None => Ok(None),
+        Some(j) if j.is_null() => Ok(None),
+        Some(j) => {
+            j.as_u32().map(Some).ok_or_else(|| anyhow!("{key:?} must be a u32 integer"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decodes_control_frames() {
+        assert_eq!(decode(r#"{"type":"hello"}"#).unwrap(), Request::Hello);
+        assert_eq!(decode(r#"{"type":"ping"}"#).unwrap(), Request::Ping);
+        assert_eq!(decode(r#"{"type":"shutdown"}"#).unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn decodes_a_full_sweep_point() {
+        let line = r#"{"type":"sweep","id":"b1","seed":7,"progress_every":1000,
+            "points":[{"workload":"fft","protocol":"msi","cores":16,
+                       "core_model":"ooo","scale_down":8,"label":"msi-16"},
+                      {"workload":"barnes","cores":4,"sockets":2,
+                       "numa_ratio":3,"interleave":"block","trace_len":64,
+                       "seed":99,"no_spec":true,"lease":8,"self_inc":16,
+                       "delta_bits":20,"consistency":"tso",
+                       "lease_policy":"dynamic"}]}"#;
+        let Request::Sweep(s) = decode(line).unwrap() else { panic!("not a sweep") };
+        assert_eq!(s.id, "b1");
+        assert_eq!(s.seed, Some(7));
+        assert_eq!(s.progress_every, 1000);
+        assert_eq!(s.points.len(), 2);
+        let p0 = &s.points[0];
+        assert_eq!(p0.protocol, ProtocolKind::Msi);
+        assert_eq!(p0.cores, 16);
+        assert_eq!(p0.core_model, CoreModel::OutOfOrder);
+        assert_eq!(p0.seed, Some(7), "session seed fills unset point seeds");
+        assert_eq!(p0.variant_label(), "msi-16");
+        let p1 = &s.points[1];
+        assert_eq!(p1.seed, Some(99), "point seed wins over session seed");
+        assert_eq!(p1.sockets, Some(2));
+        assert!(p1.no_spec);
+        assert_eq!(p1.consistency, Some(Consistency::Tso));
+    }
+
+    #[test]
+    fn rejects_malformed_frames() {
+        let cases: &[(&str, &str)] = &[
+            ("not json at all", "bad JSON"),
+            (r#"{"no_type":1}"#, "type"),
+            (r#"{"type":"launch_missiles"}"#, "unknown frame type"),
+            (r#"{"type":"ping","extra":1}"#, "unknown key"),
+            (r#"{"type":"sweep","id":"b","points":[]}"#, "no points"),
+            (r#"{"type":"sweep","id":"","points":[{"workload":"fft"}]}"#, "id must be"),
+            (r#"{"type":"sweep","id":"b","points":[{"workload":"nope"}]}"#, "unknown workload"),
+            (r#"{"type":"sweep","id":"b","points":[{"workload":"fft","corez":4}]}"#, "unknown key"),
+            (
+                r#"{"type":"sweep","id":"b","points":[{"workload":"fft","cores":"many"}]}"#,
+                "must be a u32",
+            ),
+            (
+                r#"{"type":"sweep","id":"b","points":[{"workload":"fft","numa_ratio":4}]}"#,
+                "numa-ratio has no effect",
+            ),
+            (
+                r#"{"type":"sweep","id":"b","points":[{"workload":"fft","cores":0}]}"#,
+                "at least one core",
+            ),
+            (
+                r#"{"type":"sweep","id":"b","points":[{"workload":"fft","scale_down":0}]}"#,
+                "scale_down",
+            ),
+            (r#"{"type":"sweep","id":"b","seed":-1,"points":[{"workload":"fft"}]}"#, "seed"),
+        ];
+        for (line, needle) in cases {
+            let err = decode(line).unwrap_err().to_string();
+            assert!(err.contains(needle), "{line} -> {err}");
+        }
+    }
+
+    #[test]
+    fn point_errors_name_the_offending_index() {
+        let line = r#"{"type":"sweep","id":"b","points":[
+            {"workload":"fft"},{"workload":"bogus"}]}"#;
+        let err = decode(line).unwrap_err().to_string();
+        assert!(err.contains("point 1:"), "{err}");
+    }
+
+    #[test]
+    fn null_knobs_read_as_absent() {
+        let line = r#"{"type":"sweep","id":"b","seed":null,
+            "points":[{"workload":"fft","trace_len":null,"sockets":null}]}"#;
+        let Request::Sweep(s) = decode(line).unwrap() else { panic!() };
+        assert_eq!(s.seed, None);
+        assert_eq!(s.points[0].trace_len, None);
+        assert_eq!(s.points[0].sockets, None);
+    }
+}

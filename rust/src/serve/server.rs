@@ -1,0 +1,514 @@
+//! The `tardis serve` TCP server: long-lived, multi-threaded,
+//! line-delimited JSON.
+//!
+//! Threading layout (DESIGN.md §10):
+//!
+//! * one **accept thread** polls a nonblocking listener (~50 ms) so it
+//!   can notice the shutdown flag between connections;
+//! * one **connection thread** per client reads frames with a short
+//!   read timeout (again so shutdown is noticed promptly) and answers
+//!   control frames inline;
+//! * one **writer thread** per client owns a cloned stream and drains
+//!   an mpsc channel of outgoing lines — batch jobs on pool threads
+//!   and the connection thread interleave responses without sharing
+//!   the socket;
+//! * sweeps fan out over one shared [`WorkerPool`]: every point is an
+//!   independent `SimSpec -> SimBuilder -> run` session on a pool
+//!   thread, so batches from concurrent clients interleave at
+//!   point granularity.
+//!
+//! Shutdown is graceful end-to-end: the flag stops the accept loop,
+//! each connection thread joins its in-flight batch threads (which
+//! wait for their pool jobs), result frames drain through the writer,
+//! and finally the pool itself drains and joins.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::api::{Observer, SimSpec};
+use crate::coordinator::WorkerPool;
+use crate::prog::checker::LogRecord;
+
+use super::columns::{self, BatchTiming, PointResult, SCHEMA};
+use super::json::escape;
+use super::request::{self, Request, SweepRequest};
+
+/// Largest accepted request frame (a 1024-point sweep with every knob
+/// spelled out fits in well under 1 MB).
+const MAX_FRAME_BYTES: usize = 8 * 1024 * 1024;
+
+/// How long blocking calls sleep before re-checking the shutdown flag.
+const POLL: Duration = Duration::from_millis(50);
+
+/// Server configuration (the `tardis serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address, e.g. `127.0.0.1:7436`; port 0 picks a free port
+    /// (the test harness's ephemeral-port mode).
+    pub addr: String,
+    /// Simulation worker threads (0 = available parallelism).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { addr: "127.0.0.1:7436".into(), workers: 0 }
+    }
+}
+
+/// A running server.  Dropping the handle shuts the server down.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pool: Arc<WorkerPool>,
+}
+
+impl Server {
+    /// Bind and start serving in background threads; returns once the
+    /// listener is live (so the bound address is known).
+    pub fn start(cfg: ServeConfig) -> Result<Self> {
+        let listener =
+            TcpListener::bind(&cfg.addr).with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let pool = Arc::new(WorkerPool::new(cfg.workers));
+        let accept_thread = {
+            let shutdown = Arc::clone(&shutdown);
+            let pool = Arc::clone(&pool);
+            std::thread::spawn(move || accept_loop(listener, shutdown, pool))
+        };
+        Ok(Self { addr, shutdown, accept_thread: Some(accept_thread), pool })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn workers(&self) -> usize {
+        self.pool.workers()
+    }
+
+    /// True once a client frame or [`Server::shutdown`] requested
+    /// shutdown.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Block until shutdown is requested, then drain and join
+    /// everything.  The `tardis serve` main loop.
+    pub fn join(mut self) {
+        while !self.shutdown_requested() {
+            std::thread::sleep(POLL);
+        }
+        self.drain();
+    }
+
+    /// Request shutdown, drain in-flight sessions, join all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        // Connection threads have joined their batch threads by now;
+        // the pool drains whatever is still queued.
+        self.pool.shutdown();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shutdown: Arc<AtomicBool>, pool: Arc<WorkerPool>) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let shutdown = Arc::clone(&shutdown);
+                let pool = Arc::clone(&pool);
+                conns.push(std::thread::spawn(move || {
+                    // A broken socket tears down one connection, not
+                    // the server.
+                    let _ = serve_connection(stream, shutdown, pool);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(POLL);
+            }
+            Err(_) => std::thread::sleep(POLL),
+        }
+        conns.retain(|h| !h.is_finished());
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    shutdown: Arc<AtomicBool>,
+    pool: Arc<WorkerPool>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+    let (tx, rx) = mpsc::channel::<String>();
+    let writer_stream = stream.try_clone()?;
+    let writer = std::thread::spawn(move || write_loop(writer_stream, rx));
+    let mut batches: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) => break, // client hung up
+            Ok(_) if buf.last() != Some(&b'\n') => continue, // partial line, keep reading
+            Ok(_) => {
+                let line = String::from_utf8_lossy(&buf).into_owned();
+                buf.clear();
+                if line.trim().is_empty() {
+                    continue;
+                }
+                if !handle_frame(&line, &tx, &shutdown, &pool, &mut batches) {
+                    break;
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Read timeout: partial bytes (if any) stay in `buf`;
+                // loop back to re-check the shutdown flag.
+                if buf.len() > MAX_FRAME_BYTES {
+                    let _ = tx.send(error_frame(None, "frame too large"));
+                    break;
+                }
+                continue;
+            }
+            Err(_) => break,
+        }
+        if buf.len() > MAX_FRAME_BYTES {
+            let _ = tx.send(error_frame(None, "frame too large"));
+            break;
+        }
+    }
+
+    // Drain this connection's in-flight batches: their result frames
+    // flow through the writer before the socket closes.
+    for b in batches {
+        let _ = b.join();
+    }
+    if shutdown.load(Ordering::SeqCst) {
+        let _ = tx.send("{\"type\": \"bye\"}".to_string());
+    }
+    drop(tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// Handle one decoded line; returns false when the connection should
+/// close.
+fn handle_frame(
+    line: &str,
+    tx: &mpsc::Sender<String>,
+    shutdown: &Arc<AtomicBool>,
+    pool: &Arc<WorkerPool>,
+    batches: &mut Vec<std::thread::JoinHandle<()>>,
+) -> bool {
+    match request::decode(line) {
+        Ok(Request::Hello) => {
+            let _ = tx.send(hello_frame(pool.workers()));
+            true
+        }
+        Ok(Request::Ping) => {
+            let _ = tx.send("{\"type\": \"pong\"}".to_string());
+            true
+        }
+        Ok(Request::Shutdown) => {
+            shutdown.store(true, Ordering::SeqCst);
+            false
+        }
+        Ok(Request::Sweep(req)) => {
+            let depth = pool.queue_depth();
+            let _ = tx.send(ack_frame(&req.id, req.points.len(), depth));
+            let pool = Arc::clone(pool);
+            let tx = tx.clone();
+            batches.push(std::thread::spawn(move || {
+                let t0 = Instant::now();
+                let frame = match run_batch(&pool, &req, Some(&tx)) {
+                    Ok(results) => {
+                        let timing =
+                            BatchTiming { wall: t0.elapsed(), queue_depth_at_submit: depth };
+                        result_frame(&req, pool.workers(), &timing, &results)
+                    }
+                    Err(e) => error_frame(Some(&req.id), &format!("{e:#}")),
+                };
+                let _ = tx.send(frame);
+            }));
+            true
+        }
+        Err(e) => {
+            let _ = tx.send(error_frame(None, &format!("{e:#}")));
+            true
+        }
+    }
+}
+
+fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<String>) {
+    while let Ok(mut line) = rx.recv() {
+        line.push('\n');
+        if stream.write_all(line.as_bytes()).is_err() {
+            break;
+        }
+        let _ = stream.flush();
+    }
+}
+
+/// Run every point of a sweep on the pool and collect results in
+/// point order.  Blocks until the whole batch is done; progress and
+/// `point_done` frames stream through `events` as points run.  This
+/// is the serve execution core, also driven directly (no socket) by
+/// the determinism tests.
+pub fn run_batch(
+    pool: &WorkerPool,
+    req: &SweepRequest,
+    events: Option<&mpsc::Sender<String>>,
+) -> Result<Vec<PointResult>> {
+    let n = req.points.len();
+    let (done_tx, done_rx) = mpsc::channel::<(usize, Result<PointResult>)>();
+    for (i, spec) in req.points.iter().enumerate() {
+        let spec = spec.clone();
+        let done = done_tx.clone();
+        let events = events.cloned();
+        let id = req.id.clone();
+        let progress_every = req.progress_every;
+        pool.submit(move || {
+            let res = run_point(&id, i, &spec, progress_every, events.as_ref());
+            let _ = done.send((i, res));
+        })?;
+    }
+    drop(done_tx);
+
+    let mut out: Vec<Option<PointResult>> = (0..n).map(|_| None).collect();
+    let mut errors: Vec<String> = Vec::new();
+    for _ in 0..n {
+        let (i, res) = done_rx.recv().context("worker pool shut down mid-batch")?;
+        match res {
+            Ok(p) => out[i] = Some(p),
+            Err(e) => errors.push(format!("point {i}: {e}")),
+        }
+    }
+    if !errors.is_empty() {
+        errors.sort(); // deterministic error text regardless of finish order
+        anyhow::bail!("{} point(s) failed: {}", errors.len(), errors.join("; "));
+    }
+    Ok(out.into_iter().map(|p| p.unwrap()).collect())
+}
+
+/// One independent simulation session on a pool thread.
+fn run_point(
+    batch_id: &str,
+    index: usize,
+    spec: &SimSpec,
+    progress_every: u64,
+    events: Option<&mpsc::Sender<String>>,
+) -> Result<PointResult> {
+    let mut b = spec.builder()?;
+    if progress_every > 0 {
+        if let Some(tx) = events {
+            b = b.observe(ServeProgressObserver::new(
+                batch_id.to_string(),
+                index,
+                progress_every,
+                tx.clone(),
+            ));
+        }
+    }
+    let report = b.run()?;
+    if let Some(tx) = events {
+        let _ = tx.send(point_done_frame(batch_id, index, report.elapsed));
+    }
+    Ok(PointResult { spec: spec.clone(), stats: report.stats, elapsed: report.elapsed })
+}
+
+/// Streams per-point progress frames through the connection's writer
+/// channel: one frame every `every` committed memory operations.
+/// Purely observational — attaching it cannot change the simulated
+/// statistics, so progress-streaming runs stay bit-identical to bare
+/// ones (asserted in `tests/serve.rs`).
+pub struct ServeProgressObserver {
+    batch_id: String,
+    point: usize,
+    every: u64,
+    committed: u64,
+    tx: mpsc::Sender<String>,
+}
+
+impl ServeProgressObserver {
+    pub fn new(batch_id: String, point: usize, every: u64, tx: mpsc::Sender<String>) -> Self {
+        Self { batch_id, point, every: every.max(1), committed: 0, tx }
+    }
+}
+
+impl Observer for ServeProgressObserver {
+    fn on_commit(&mut self, _rec: &LogRecord) {
+        self.committed += 1;
+        if self.committed % self.every == 0 {
+            let _ = self.tx.send(progress_frame(&self.batch_id, self.point, self.committed));
+        }
+    }
+}
+
+// ---- response frames (hand-rolled JSON; one line each) -------------
+
+pub fn hello_frame(workers: usize) -> String {
+    format!(
+        "{{\"type\": \"hello\", \"server\": \"tardis-serve\", \"schema\": {}, \"workers\": {workers}}}",
+        escape(SCHEMA)
+    )
+}
+
+pub fn ack_frame(batch_id: &str, n_points: usize, queue_depth: usize) -> String {
+    format!(
+        "{{\"type\": \"ack\", \"batch_id\": {}, \"n_points\": {n_points}, \"queue_depth\": {queue_depth}}}",
+        escape(batch_id)
+    )
+}
+
+pub fn progress_frame(batch_id: &str, point: usize, memops: u64) -> String {
+    format!(
+        "{{\"type\": \"progress\", \"batch_id\": {}, \"point\": {point}, \"memops\": {memops}}}",
+        escape(batch_id)
+    )
+}
+
+pub fn point_done_frame(batch_id: &str, point: usize, elapsed: Duration) -> String {
+    format!(
+        "{{\"type\": \"point_done\", \"batch_id\": {}, \"point\": {point}, \"wall_s\": {:.6}}}",
+        escape(batch_id),
+        elapsed.as_secs_f64()
+    )
+}
+
+pub fn result_frame(
+    req: &SweepRequest,
+    workers: usize,
+    timing: &BatchTiming,
+    results: &[PointResult],
+) -> String {
+    format!(
+        "{{\"type\": \"result\", \"batch_id\": {}, \"payload\": {}}}",
+        escape(&req.id),
+        columns::payload(&req.id, req.seed, workers, timing, results)
+    )
+}
+
+pub fn error_frame(batch_id: Option<&str>, message: &str) -> String {
+    match batch_id {
+        Some(id) => format!(
+            "{{\"type\": \"error\", \"batch_id\": {}, \"message\": {}}}",
+            escape(id),
+            escape(message)
+        ),
+        None => format!("{{\"type\": \"error\", \"message\": {}}}", escape(message)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::json;
+
+    #[test]
+    fn frames_are_single_line_valid_json() {
+        let timing = BatchTiming { wall: Duration::ZERO, queue_depth_at_submit: 0 };
+        let req = SweepRequest {
+            id: "b\"1".into(),
+            seed: None,
+            progress_every: 0,
+            points: vec![SimSpec::new("fft")],
+        };
+        for frame in [
+            hello_frame(4),
+            ack_frame("b\"1", 2, 1),
+            progress_frame("b", 0, 1000),
+            point_done_frame("b", 1, Duration::from_millis(3)),
+            result_frame(&req, 4, &timing, &[]),
+            error_frame(None, "bad \"JSON\""),
+            error_frame(Some("b"), "x\ny"),
+        ] {
+            assert!(!frame.contains('\n'), "frame must be one line: {frame}");
+            let v = json::parse(&frame).unwrap_or_else(|e| panic!("{frame}: {e}"));
+            assert!(v.get("type").is_some());
+        }
+    }
+
+    #[test]
+    fn run_batch_runs_points_in_order_on_the_pool() {
+        let pool = WorkerPool::new(4);
+        let mk = |workload: &str| {
+            let mut s = SimSpec::new(workload);
+            s.cores = 2;
+            s.trace_len = Some(64);
+            s
+        };
+        let req = SweepRequest {
+            id: "t".into(),
+            seed: None,
+            progress_every: 0,
+            points: vec![mk("fft"), mk("barnes"), mk("fft"), mk("lu-c")],
+        };
+        let results = run_batch(&pool, &req, None).unwrap();
+        assert_eq!(results.len(), 4);
+        assert_eq!(results[0].spec.workload, "fft");
+        assert_eq!(results[1].spec.workload, "barnes");
+        assert_eq!(results[3].spec.workload, "lu-c");
+        // Identical specs at different batch slots give identical bits.
+        assert_eq!(results[0].stats, results[2].stats);
+        assert!(results[0].stats.cycles > 0);
+    }
+
+    #[test]
+    fn run_batch_streams_progress_and_point_done() {
+        let pool = WorkerPool::new(2);
+        let mut spec = SimSpec::new("fft");
+        spec.cores = 2;
+        spec.trace_len = Some(64);
+        let req = SweepRequest {
+            id: "p".into(),
+            seed: None,
+            progress_every: 10,
+            points: vec![spec],
+        };
+        let (tx, rx) = mpsc::channel();
+        let results = run_batch(&pool, &req, Some(&tx)).unwrap();
+        drop(tx);
+        let events: Vec<String> = rx.iter().collect();
+        assert!(!events.is_empty());
+        let last = json::parse(events.last().unwrap()).unwrap();
+        assert_eq!(last.get("type").unwrap().as_str(), Some("point_done"));
+        assert!(
+            events.iter().any(|e| e.contains("\"progress\"")),
+            "expected progress frames, got {events:?}"
+        );
+        // Streaming progress must not perturb the simulation.
+        let bare = run_batch(&pool, &SweepRequest { progress_every: 0, ..req }, None).unwrap();
+        assert_eq!(results[0].stats, bare[0].stats);
+    }
+}

@@ -239,6 +239,57 @@ impl SimStats {
         }
     }
 
+    /// Every integer counter as a flat `(name, value)` list — the
+    /// column set of the `tardis-serve-v1` payload (DESIGN.md §10).
+    /// Names mirror the `BENCH_*.json` fields where both schemas
+    /// carry the stat (`sim_cycles`, `memops`, `events`,
+    /// `intra_socket_msgs`, `inter_socket_msgs`), so the `tools/`
+    /// validators share one vocabulary.  Order is stable and part of
+    /// the wire schema; `tools/validate_serve.py` keeps the mirror
+    /// list.
+    pub fn columns(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("sim_cycles", self.cycles),
+            ("events", self.events),
+            ("memops", self.memops),
+            ("loads", self.loads),
+            ("stores", self.stores),
+            ("atomics", self.atomics),
+            ("l1_hits", self.l1_hits),
+            ("l1_misses", self.l1_misses),
+            ("llc_accesses", self.llc_accesses),
+            ("dram_accesses", self.dram_accesses),
+            ("renew_requests", self.renew_requests),
+            ("renew_success", self.renew_success),
+            ("misspeculations", self.misspeculations),
+            ("rollback_cycles", self.rollback_cycles),
+            ("invalidations_sent", self.invalidations_sent),
+            ("broadcasts", self.broadcasts),
+            ("sb_stores", self.sb_stores),
+            ("sb_forwards", self.sb_forwards),
+            ("sb_full_stalls", self.sb_full_stalls),
+            ("spin_cycles", self.spin_cycles),
+            ("locks_acquired", self.locks_acquired),
+            ("barriers_passed", self.barriers_passed),
+            ("request_flits", self.traffic.request_flits),
+            ("data_flits", self.traffic.data_flits),
+            ("control_flits", self.traffic.control_flits),
+            ("renew_flits", self.traffic.renew_flits),
+            ("invalidation_flits", self.traffic.invalidation_flits),
+            ("dram_flits", self.traffic.dram_flits),
+            ("total_flits", self.traffic.total()),
+            ("intra_socket_msgs", self.socket.intra_msgs),
+            ("inter_socket_msgs", self.socket.inter_msgs),
+            ("link_crossings", self.socket.link_crossings),
+            ("inter_socket_flits", self.socket.inter_flits),
+            ("pts_increase_total", self.ts.pts_increase_total),
+            ("pts_increase_self_inc", self.ts.pts_increase_self_inc),
+            ("leases_granted", self.ts.leases_granted),
+            ("lease_total", self.ts.lease_total),
+            ("livelock_escalations", self.ts.livelock_escalations),
+        ]
+    }
+
     /// L1 miss rate over demand accesses.
     pub fn l1_miss_rate(&self) -> f64 {
         let total = self.l1_hits + self.l1_misses;
@@ -308,6 +359,36 @@ mod tests {
         assert_eq!(s.l1_miss_rate(), 0.0);
         assert!(s.ts_incr_rate().is_infinite());
         assert_eq!(s.socket.inter_fraction(), 0.0);
+    }
+
+    #[test]
+    fn columns_expose_every_counter_with_unique_names() {
+        let s = SimStats {
+            cycles: 7,
+            events: 9,
+            memops: 5,
+            traffic: TrafficStats { renew_flits: 3, ..Default::default() },
+            socket: SocketStats { inter_msgs: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let cols = s.columns();
+        let get = |name: &str| {
+            cols.iter().find(|(n, _)| *n == name).map(|(_, v)| *v).unwrap_or_else(|| {
+                panic!("missing column {name}")
+            })
+        };
+        assert_eq!(get("sim_cycles"), 7);
+        assert_eq!(get("events"), 9);
+        assert_eq!(get("memops"), 5);
+        assert_eq!(get("renew_flits"), 3);
+        assert_eq!(get("total_flits"), 3);
+        assert_eq!(get("inter_socket_msgs"), 2);
+        let mut names: Vec<&str> = cols.iter().map(|(n, _)| *n).collect();
+        let before = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), before, "duplicate column names");
+        assert_eq!(before, 38, "column count is part of the wire schema");
     }
 
     #[test]

@@ -189,6 +189,45 @@ fn repeated_runs_are_bit_identical_across_numa_ratios_and_tso() {
     }
 }
 
+/// The serve execution path — [`SimSpec`]s fanned across a shared
+/// [`WorkerPool`](tardis_dsm::coordinator::WorkerPool) — must return
+/// the exact bits a serial `SimSpec::builder().run()` of each point
+/// produces: pooled threads, submission order, and progress streaming
+/// are all outside the (config, workload) pure function.
+#[test]
+fn pooled_batches_match_serial_runs_bit_for_bit() {
+    use tardis_dsm::api::SimSpec;
+    use tardis_dsm::coordinator::WorkerPool;
+    use tardis_dsm::serve::{run_batch, SweepRequest};
+
+    let mut points = Vec::new();
+    for (i, workload) in ["fft", "barnes", "volrend", "radix"].iter().enumerate() {
+        for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+            let mut s = SimSpec::new(*workload);
+            s.protocol = protocol;
+            s.cores = 4;
+            s.trace_len = Some(256);
+            s.seed = Some(1000 + i as u64);
+            points.push(s);
+        }
+    }
+    let serial: Vec<_> =
+        points.iter().map(|s| s.builder().unwrap().run().unwrap().stats).collect();
+
+    let pool = WorkerPool::new(4);
+    let req = SweepRequest { id: "det".into(), seed: None, progress_every: 0, points };
+    let batched = run_batch(&pool, &req, None).unwrap();
+    assert_eq!(batched.len(), serial.len());
+    for (i, (b, s)) in batched.iter().zip(&serial).enumerate() {
+        assert_eq!(b.stats, *s, "point {i}: pooled run diverged from serial run");
+    }
+    // And the batch itself repeats bit-identically.
+    let again = run_batch(&pool, &req, None).unwrap();
+    for (b, a) in batched.iter().zip(&again) {
+        assert_eq!(b.stats, a.stats, "re-batched run diverged");
+    }
+}
+
 #[test]
 fn repeated_runs_are_bit_identical_on_sync_heavy_programs() {
     // Lock/barrier microcode exercises spin wakes, parked cores, and

@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Shared schema machinery for the tools/ validators.
+
+The three machine-readable record formats — ``tardis-bench-v1``
+(`validate_bench.py`), ``tardis-verif-v1`` (`validate_verif.py`), and
+``tardis-serve-v1`` (`validate_serve.py`) — share key-checking,
+loading, and provenance conventions, plus the per-stat column
+vocabulary: the serve payload's columns mirror the BENCH per-point
+field names, and this module is the single home of that list (kept in
+lockstep with ``SimStats::columns()`` in rust/src/stats/mod.rs).
+"""
+
+import json
+import sys
+
+# "measured" = emitted by a local run of the tool; "estimate" =
+# projected numbers committed from an environment that could not run
+# the pipeline (allowed, but warned on so estimates never silently
+# read as real trajectory points).
+PROVENANCE_VALUES = {"measured", "estimate"}
+
+# One entry per SimStats counter, in the stable wire order the serve
+# payload emits (rust/src/stats/mod.rs `columns()`).  The first
+# handful double as the BENCH_*.json per-point field names.
+STAT_COLUMNS = (
+    "sim_cycles",
+    "events",
+    "memops",
+    "loads",
+    "stores",
+    "atomics",
+    "l1_hits",
+    "l1_misses",
+    "llc_accesses",
+    "dram_accesses",
+    "renew_requests",
+    "renew_success",
+    "misspeculations",
+    "rollback_cycles",
+    "invalidations_sent",
+    "broadcasts",
+    "sb_stores",
+    "sb_forwards",
+    "sb_full_stalls",
+    "spin_cycles",
+    "locks_acquired",
+    "barriers_passed",
+    "request_flits",
+    "data_flits",
+    "control_flits",
+    "renew_flits",
+    "invalidation_flits",
+    "dram_flits",
+    "total_flits",
+    "intra_socket_msgs",
+    "inter_socket_msgs",
+    "link_crossings",
+    "inter_socket_flits",
+    "pts_increase_total",
+    "pts_increase_self_inc",
+    "leases_granted",
+    "lease_total",
+    "livelock_escalations",
+)
+
+
+def load(path):
+    """Load one JSON document from ``path``."""
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_keys(obj, spec, where, optional=None):
+    """Require every key in ``spec`` with its type, allow ``optional``
+    keys with theirs, and reject anything else.  ``spec``/``optional``
+    map key -> type or tuple of types."""
+    optional = optional or {}
+    for key, typ in spec.items():
+        if key not in obj:
+            raise ValueError(f"{where}: missing key {key!r}")
+        if not isinstance(obj[key], typ):
+            raise ValueError(
+                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
+                f"expected {typ}"
+            )
+    for key, typ in optional.items():
+        if key in obj and not isinstance(obj[key], typ):
+            raise ValueError(
+                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
+                f"expected {typ}"
+            )
+    extra = set(obj) - set(spec) - set(optional)
+    if extra:
+        raise ValueError(f"{where}: unknown keys {sorted(extra)}")
+
+
+def check_provenance(doc, path, regen_hint):
+    """Validate the ``provenance`` field and warn (on stderr) when the
+    record is an estimate rather than a measured run."""
+    if doc["provenance"] not in PROVENANCE_VALUES:
+        raise ValueError(
+            f"unknown provenance {doc['provenance']!r} "
+            f"(expected one of {sorted(PROVENANCE_VALUES)})"
+        )
+    if doc["provenance"] != "measured":
+        print(
+            f"WARNING {path}: provenance is {doc['provenance']!r} — these "
+            f"numbers were not produced by a local run; regenerate with "
+            f"`{regen_hint}`",
+            file=sys.stderr,
+        )

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""CI smoke driver for `tardis serve` (the serve-smoke job).
+
+Usage: serve_smoke.py --port N --out PAYLOAD.json [--no-shutdown]
+
+Connects to a freshly started server (retrying while it binds),
+submits a 4-point batch through the sync reference client with
+progress streaming on, checks the stream and the columnar result
+shape, dumps the raw payload to --out (for validate_serve.py), and —
+unless --no-shutdown — asks the server to drain and exit so the CI
+job can `wait` on a clean exit code.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "python")
+)
+
+from client import TardisClient, validate_payload  # noqa: E402
+
+POINTS = [
+    {"workload": "fft", "protocol": "tardis", "cores": 4, "trace_len": 4096},
+    {"workload": "fft", "protocol": "msi", "cores": 4, "trace_len": 4096},
+    {"workload": "barnes", "protocol": "tardis", "cores": 4, "trace_len": 4096},
+    {"workload": "volrend", "protocol": "ackwise", "cores": 4, "trace_len": 4096},
+]
+
+
+def connect(port, deadline_s=30.0):
+    last = None
+    deadline = time.monotonic() + deadline_s
+    while time.monotonic() < deadline:
+        try:
+            return TardisClient(port=port, timeout=300.0)
+        except OSError as e:
+            last = e
+            time.sleep(0.2)
+    raise SystemExit(f"server on port {port} never came up: {last}")
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--port", type=int, required=True)
+    ap.add_argument("--out", required=True, help="payload dump for validate_serve.py")
+    ap.add_argument("--no-shutdown", action="store_true")
+    args = ap.parse_args(argv[1:])
+
+    with connect(args.port) as c:
+        banner = c.hello()
+        print(f"connected: {banner['server']} schema={banner['schema']} "
+              f"workers={banner['workers']}")
+        c.ping()
+
+        bid = c.submit_sweep(POINTS, seed=2718, progress_every=500)
+        events = 0
+        done = 0
+        for ev in c.iter_progress(bid):
+            events += 1
+            if ev["type"] == "point_done":
+                done += 1
+        if done != len(POINTS):
+            raise SystemExit(f"expected {len(POINTS)} point_done frames, got {done}")
+        print(f"batch {bid}: {events} stream events, {done} points done")
+
+        payload = c.fetch_payload(bid)
+        cols = validate_payload(payload)
+        got = list(zip(cols["workload"], cols["variant"]))
+        want = [(p["workload"], p["protocol"]) for p in POINTS]
+        if got != want:
+            raise SystemExit(f"column order diverged: {got} != {want}")
+        if any(v <= 0 for v in cols["sim_cycles"]):
+            raise SystemExit(f"non-positive sim_cycles: {cols['sim_cycles']}")
+
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {args.out} ({payload['n_points']} points, "
+              f"{len(cols)} columns)")
+
+        if not args.no_shutdown:
+            c.shutdown()
+            print("server acknowledged shutdown")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -12,11 +12,7 @@ non-zero with a diagnostic on the first schema violation.
 import json
 import sys
 
-# "measured" = emitted by a local `tardis bench` run; "estimate" =
-# projected numbers committed from an environment that could not run
-# the pipeline (allowed, but warned on so estimates never silently
-# read as real trajectory points).
-PROVENANCE_VALUES = {"measured", "estimate"}
+from schema_common import check_keys, check_provenance, load
 
 TOP_KEYS = {
     "schema": str,
@@ -74,30 +70,8 @@ AGGREGATE_KEYS = {
 }
 
 
-def check_keys(obj, spec, where, optional=None):
-    optional = optional or {}
-    for key, typ in spec.items():
-        if key not in obj:
-            raise ValueError(f"{where}: missing key {key!r}")
-        if not isinstance(obj[key], typ):
-            raise ValueError(
-                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
-                f"expected {typ}"
-            )
-    for key, typ in optional.items():
-        if key in obj and not isinstance(obj[key], typ):
-            raise ValueError(
-                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
-                f"expected {typ}"
-            )
-    extra = set(obj) - set(spec) - set(optional)
-    if extra:
-        raise ValueError(f"{where}: unknown keys {sorted(extra)}")
-
-
 def validate(path):
-    with open(path) as f:
-        doc = json.load(f)
+    doc = load(path)
     check_keys(doc, TOP_KEYS, "top level", optional=TOP_OPTIONAL_KEYS)
     if doc["schema"] != "tardis-bench-v1":
         raise ValueError(f"unknown schema {doc['schema']!r}")
@@ -111,18 +85,7 @@ def validate(path):
             raise ValueError(f"{topology} report needs sockets >= 2")
         if doc.get("numa_ratio", 0) < 1:
             raise ValueError(f"{topology} report needs numa_ratio >= 1")
-    if doc["provenance"] not in PROVENANCE_VALUES:
-        raise ValueError(
-            f"unknown provenance {doc['provenance']!r} "
-            f"(expected one of {sorted(PROVENANCE_VALUES)})"
-        )
-    if doc["provenance"] != "measured":
-        print(
-            f"WARNING {path}: provenance is {doc['provenance']!r} — these "
-            "numbers were not produced by a local `tardis bench` run; "
-            "regenerate with `cargo run --release -- bench --out <file>`",
-            file=sys.stderr,
-        )
+    check_provenance(doc, path, "cargo run --release -- bench --out <file>")
     if not doc["points"]:
         raise ValueError("points must be non-empty")
     if doc["iters"] < 1 or doc["n_cores"] < 1 or doc["scale_down"] < 1:

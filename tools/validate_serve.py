@@ -1,0 +1,106 @@
+#!/usr/bin/env python3
+"""Validate a tardis-serve-v1 columnar payload dump.
+
+Usage: validate_serve.py FILE [FILE...]
+
+FILE is a JSON dump of the payload a `tardis serve` batch returns
+(the `payload` member of a `result` frame; `tools/serve_smoke.py`
+writes one).  Checks the envelope, the columnar invariants (every
+column a list, every length == n_points), the full per-stat column
+set mirrored from `SimStats::columns()` via `schema_common.py`, and
+basic positivity.  Exits non-zero with a diagnostic on the first
+violation.
+"""
+
+import json
+import sys
+
+from schema_common import STAT_COLUMNS, check_keys, load
+
+TOP_KEYS = {
+    "schema": str,
+    "batch_id": str,
+    "seed": (int, type(None)),
+    "n_points": int,
+    "workers": int,
+    "timing": dict,
+    "columns": dict,
+}
+
+TIMING_KEYS = {
+    "wall_s": (int, float),
+    "queue_depth_at_submit": int,
+}
+
+# Identity columns lead; the stat columns mirror SimStats; wall_s is
+# the per-point host time.
+STR_COLUMNS = ("workload", "variant")
+INT_COLUMNS = ("cores",) + STAT_COLUMNS
+FLOAT_COLUMNS = ("wall_s",)
+
+# Columns that must be strictly positive for any real simulation.
+POSITIVE_COLUMNS = ("cores", "sim_cycles", "memops", "events")
+
+
+def validate(path):
+    doc = load(path)
+    check_keys(doc, TOP_KEYS, "top level")
+    if doc["schema"] != "tardis-serve-v1":
+        raise ValueError(f"unknown schema {doc['schema']!r}")
+    check_keys(doc["timing"], TIMING_KEYS, "timing")
+    if doc["timing"]["wall_s"] < 0 or doc["timing"]["queue_depth_at_submit"] < 0:
+        raise ValueError("timing values must be non-negative")
+    n = doc["n_points"]
+    if n < 1:
+        raise ValueError("n_points must be >= 1 (the server rejects empty sweeps)")
+    if doc["workers"] < 1:
+        raise ValueError("workers must be >= 1")
+
+    columns = doc["columns"]
+    expected = set(STR_COLUMNS) | set(INT_COLUMNS) | set(FLOAT_COLUMNS)
+    missing = expected - set(columns)
+    if missing:
+        raise ValueError(f"missing columns {sorted(missing)}")
+    extra = set(columns) - expected
+    if extra:
+        raise ValueError(f"unknown columns {sorted(extra)}")
+
+    for name, col in columns.items():
+        where = f"columns[{name!r}]"
+        if not isinstance(col, list):
+            raise ValueError(f"{where}: not a list")
+        if len(col) != n:
+            raise ValueError(f"{where}: {len(col)} values for {n} points")
+        if name in STR_COLUMNS:
+            ok = all(isinstance(v, str) and v for v in col)
+        elif name in FLOAT_COLUMNS:
+            ok = all(isinstance(v, (int, float)) and v >= 0 for v in col)
+        else:
+            # bool is an int subclass; a True in a counter column is a bug.
+            ok = all(
+                isinstance(v, int) and not isinstance(v, bool) and v >= 0
+                for v in col
+            )
+        if not ok:
+            raise ValueError(f"{where}: value of the wrong type or range")
+        if name in POSITIVE_COLUMNS and not all(v > 0 for v in col):
+            raise ValueError(f"{where}: must be strictly positive")
+    return n
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    for path in argv[1:]:
+        try:
+            n = validate(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}", file=sys.stderr)
+            return 1
+        print(f"ok {path}: {n} points, {len(STAT_COLUMNS)} stat columns")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

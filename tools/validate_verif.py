@@ -15,6 +15,8 @@ import argparse
 import json
 import sys
 
+from schema_common import check_keys, load
+
 TOP_KEYS = {
     "schema": str,
     "unix_time": int,
@@ -56,23 +58,8 @@ PROTOCOL_VALUES = {"tardis", "msi"}
 CONSISTENCY_VALUES = {"sc", "tso"}
 
 
-def check_keys(obj, spec, where):
-    for key, typ in spec.items():
-        if key not in obj:
-            raise ValueError(f"{where}: missing key {key!r}")
-        if not isinstance(obj[key], typ):
-            raise ValueError(
-                f"{where}: key {key!r} has type {type(obj[key]).__name__}, "
-                f"expected {typ}"
-            )
-    extra = set(obj) - set(spec)
-    if extra:
-        raise ValueError(f"{where}: unknown keys {sorted(extra)}")
-
-
 def validate(path, require_pass):
-    with open(path) as f:
-        doc = json.load(f)
+    doc = load(path)
     check_keys(doc, TOP_KEYS, "top level")
     if doc["schema"] != "tardis-verif-v1":
         raise ValueError(f"unknown schema {doc['schema']!r}")
