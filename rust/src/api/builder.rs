@@ -74,6 +74,7 @@ pub struct SimBuilder {
     observers: Observers,
     trace_len: Option<u32>,
     runtime: Option<TraceRuntime>,
+    threads: u32,
     #[cfg(any(test, feature = "legacy-queue"))]
     legacy_queue: bool,
 }
@@ -98,6 +99,7 @@ impl SimBuilder {
             observers: Observers::none(),
             trace_len: None,
             runtime: None,
+            threads: 1,
             #[cfg(any(test, feature = "legacy-queue"))]
             legacy_queue: false,
         }
@@ -196,6 +198,18 @@ impl SimBuilder {
 
     pub fn max_cycles(mut self, cap: Cycle) -> Self {
         self.cfg.max_cycles = cap;
+        self
+    }
+
+    /// Simulation worker threads (default 1 = the serial engine).
+    /// With `n > 1` the run shards along tile boundaries and executes
+    /// under the conservative-lookahead PDES driver
+    /// ([`crate::sim::pdes`]), producing bit-for-bit the same stats,
+    /// access log, and per-core finish times as the serial run.  The
+    /// thread count must divide the core count; plugins and cycle
+    /// sampling are serial-only (checked at [`SimBuilder::build`]).
+    pub fn threads(mut self, n: u32) -> Self {
+        self.threads = n;
         self
     }
 
@@ -313,6 +327,24 @@ impl SimBuilder {
                 bail!("numa_ratio must be >= 1");
             }
         }
+        if self.threads == 0 {
+            bail!("threads must be >= 1");
+        }
+        if self.threads > 1 {
+            if n_cores % self.threads != 0 {
+                bail!("{n_cores} cores do not shard evenly across {} threads", self.threads);
+            }
+            if self.observers.has_plugins() {
+                bail!("observer plugins are serial-only (they hold thread-local state); drop .observe(..) or use .threads(1)");
+            }
+            if self.observers.sampling_enabled() {
+                bail!("cycle sampling is serial-only (samples would fire per-shard); drop .sample_every(..) or use .threads(1)");
+            }
+            #[cfg(any(test, feature = "legacy-queue"))]
+            if self.legacy_queue {
+                bail!("the legacy event queue is serial-only; drop .legacy_event_queue(true) or use .threads(1)");
+            }
+        }
         let trace_len = self.trace_len.unwrap_or_else(|| default_trace_len(n_cores));
         let workload: Arc<Workload> = match self.source {
             WorkloadSource::Unset => bail!(
@@ -353,6 +385,7 @@ impl SimBuilder {
             cfg: self.cfg,
             workload,
             observers: self.observers,
+            threads: self.threads,
             #[cfg(any(test, feature = "legacy-queue"))]
             legacy_queue: self.legacy_queue,
         })
@@ -369,6 +402,7 @@ pub struct SimSession {
     cfg: SystemConfig,
     workload: Arc<Workload>,
     observers: Observers,
+    threads: u32,
     #[cfg(any(test, feature = "legacy-queue"))]
     legacy_queue: bool,
 }
@@ -405,6 +439,18 @@ impl SimSession {
     pub fn run(self) -> Result<SimReport> {
         let t0 = Instant::now();
         let consistency = self.cfg.consistency;
+        if self.threads > 1 {
+            let record_log = self.observers.sc_log_enabled();
+            let res =
+                crate::sim::pdes::run_parallel(self.cfg, &self.workload, self.threads, record_log)?;
+            return Ok(SimReport {
+                stats: res.stats,
+                log: res.log,
+                core_finish: res.core_finish,
+                consistency,
+                elapsed: t0.elapsed(),
+            });
+        }
         #[allow(unused_mut)]
         let mut eng = Engine::build(self.cfg, &self.workload, self.observers);
         #[cfg(any(test, feature = "legacy-queue"))]
@@ -578,6 +624,46 @@ mod tests {
             .unwrap();
         assert!(report.stats.memops > 0);
         report.check_sc().unwrap();
+    }
+
+    #[test]
+    fn threads_validation_catches_bad_combinations() {
+        let base = || SimBuilder::small(4, ProtocolKind::Tardis).named_workload("fft").trace_len(64);
+        let err = base().threads(0).build().unwrap_err().to_string();
+        assert!(err.contains("threads must be >= 1"), "{err}");
+        let err = base().threads(3).build().unwrap_err().to_string();
+        assert!(err.contains("do not shard evenly"), "{err}");
+        let err = base()
+            .observe(ProgressObserver::default())
+            .threads(2)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("serial-only"), "{err}");
+        let err = base().sample_every(100).threads(2).build().unwrap_err().to_string();
+        assert!(err.contains("sampling is serial-only"), "{err}");
+        let err = base().legacy_event_queue(true).threads(2).build().unwrap_err().to_string();
+        assert!(err.contains("legacy event queue is serial-only"), "{err}");
+        base().threads(2).build().unwrap();
+    }
+
+    #[test]
+    fn threaded_run_matches_serial_through_the_builder() {
+        let mk = |threads: u32| {
+            SimBuilder::small(4, ProtocolKind::Tardis)
+                .named_workload("lu-c")
+                .trace_len(96)
+                .threads(threads)
+                .run()
+                .unwrap()
+        };
+        let serial = mk(1);
+        let par = mk(4);
+        assert_eq!(par.stats, serial.stats);
+        assert_eq!(par.log.records, serial.log.records);
+        assert_eq!(par.core_finish, serial.core_finish);
+        par.check_sc().unwrap();
+        assert_eq!(par.stats.parallel.threads, 4);
     }
 
     #[test]

@@ -169,6 +169,24 @@ impl Observers {
         self.log.is_some()
     }
 
+    /// Records committed so far (0 with logging off) — the engine's
+    /// per-dispatch log grouping for the PDES merge reads this.
+    pub(crate) fn log_len(&self) -> usize {
+        self.log.as_ref().map_or(0, |l| l.records.len())
+    }
+
+    /// Whether any plugin is registered.  Plugins hold thread-local
+    /// state (`Rc`, closures), so the parallel engine refuses them.
+    pub(crate) fn has_plugins(&self) -> bool {
+        !self.plugins.is_empty()
+    }
+
+    /// Whether cycle sampling is enabled (also serial-only: samples
+    /// would fire per-shard, not on the global cycle order).
+    pub(crate) fn sampling_enabled(&self) -> bool {
+        self.sample_period != 0
+    }
+
     pub fn register(&mut self, plugin: Box<dyn Observer>) {
         self.plugins.push(plugin);
     }

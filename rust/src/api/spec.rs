@@ -62,6 +62,11 @@ pub struct SimSpec {
     /// [`TraceParams::seed`], giving a distinct but deterministic
     /// trace instance (the serve layer's per-session seeds).
     pub seed: Option<u64>,
+    /// Simulation worker threads; `None`/`Some(1)` runs the serial
+    /// engine, `Some(n > 1)` the sharded PDES driver.  Results are
+    /// bit-for-bit identical either way, so this is a *performance*
+    /// knob and deliberately absent from [`SimSpec::variant_label`].
+    pub threads: Option<u32>,
 }
 
 impl SimSpec {
@@ -85,6 +90,7 @@ impl SimSpec {
             scale_down: 1,
             trace_len: None,
             seed: None,
+            threads: None,
         }
     }
 
@@ -156,6 +162,9 @@ impl SimSpec {
         }
         if let Some(i) = self.interleave {
             b = b.interleave(i);
+        }
+        if let Some(t) = self.threads {
+            b = b.threads(t);
         }
         // NUMA knobs are inert on a 1-socket system: reject them
         // loudly instead of simulating flat while the spec looks
@@ -265,6 +274,23 @@ mod tests {
             .run()
             .unwrap();
         assert_eq!(via_spec.stats, manual.stats);
+    }
+
+    #[test]
+    fn threads_lower_into_the_builder_and_keep_results_identical() {
+        let mut s = SimSpec::new("fft");
+        s.cores = 4;
+        s.trace_len = Some(64);
+        let serial = s.builder().unwrap().run().unwrap();
+        s.threads = Some(2);
+        let par = s.builder().unwrap().run().unwrap();
+        assert_eq!(par.stats, serial.stats);
+        assert_eq!(par.core_finish, serial.core_finish);
+        assert_eq!(s.variant_label(), "tardis", "threads must not leak into labels");
+        // Bad thread counts surface through the builder validation.
+        s.threads = Some(3);
+        let err = s.builder().unwrap().build().unwrap_err().to_string();
+        assert!(err.contains("do not shard evenly"), "{err}");
     }
 
     #[test]

@@ -48,6 +48,13 @@ pub struct BenchPoint {
     /// flat topologies).
     pub intra_socket_msgs: u64,
     pub inter_socket_msgs: u64,
+    /// Engine shards this point ran on (1 = the serial engine; both
+    /// this and `parallel_efficiency` are omitted from the JSON for
+    /// serial points, keeping the pre-PDES point shape).
+    pub threads: u32,
+    /// Σ per-shard busy time / wall time, in (0, threads] — from the
+    /// best-wall iteration.  0 on serial points.
+    pub parallel_efficiency: f64,
     /// Best host wall time over the iterations, seconds.
     pub wall_s: f64,
 }
@@ -153,10 +160,20 @@ impl BenchReport {
             } else {
                 String::new()
             };
+            // Threaded points record the shard count and efficiency;
+            // serial points keep the pre-PDES shape.
+            let pdes = if p.threads > 1 {
+                format!(
+                    ", \"threads\": {}, \"parallel_efficiency\": {:.4}",
+                    p.threads, p.parallel_efficiency
+                )
+            } else {
+                String::new()
+            };
             let _ = write!(
                 j,
                 "    {{\"workload\": {}, \"variant\": {}, \"cores\": {}, \"sim_cycles\": {}, \
-                 \"memops\": {}, \"events\": {}{socket_split}, \"wall_s\": {:.6}, \
+                 \"memops\": {}, \"events\": {}{socket_split}{pdes}, \"wall_s\": {:.6}, \
                  \"events_per_sec\": {:.1}, \"sim_cycles_per_sec\": {:.1}}}",
                 lit(&p.workload),
                 lit(&p.variant),
@@ -199,6 +216,10 @@ pub struct BenchOpts {
     /// Fabric topology applied to every variant (the CI numa-smoke
     /// point runs 2 sockets at ratio 4); default = flat.
     pub topology: TopologyConfig,
+    /// Engine shards per point (0 and 1 both mean the serial engine;
+    /// `Default` yields 0 so existing `..Default::default()` call
+    /// sites stay serial).
+    pub threads: u32,
 }
 
 /// Run the fig-4-shaped macro bench at `n_cores` (the trajectory
@@ -225,7 +246,8 @@ pub fn run_macro_bench_with_opts(
             }
         }
     }
-    let points = measure_points(ctx, n_cores, iters, &variants)?;
+    let threads = opts.threads.max(1);
+    let points = measure_points(ctx, n_cores, iters, &variants, threads)?;
     let mut label = format!("fig4-{n_cores}c");
     if let Some(p) = opts.policy {
         label.push_str(&format!("-{}", p.name()));
@@ -235,6 +257,9 @@ pub fn run_macro_bench_with_opts(
             "-s{}r{}",
             opts.topology.sockets, opts.topology.numa_ratio
         ));
+    }
+    if threads > 1 {
+        label.push_str(&format!("-t{threads}"));
     }
     Ok(report_shell(label, n_cores, iters, ctx.scale_down, opts.topology, points))
 }
@@ -253,7 +278,7 @@ pub fn run_lease_matrix_bench(ctx: &mut EvalCtx, iters: u32) -> Result<BenchRepo
         for v in &mut variants {
             v.label = format!("{}-{n_cores}c", v.label);
         }
-        points.extend(measure_points(ctx, n_cores, iters, &variants)?);
+        points.extend(measure_points(ctx, n_cores, iters, &variants, 1)?);
     }
     Ok(report_shell(
         "lease-matrix".to_string(),
@@ -298,6 +323,7 @@ fn measure_points(
     n_cores: u32,
     iters: u32,
     variants: &[Variant],
+    threads: u32,
 ) -> Result<Vec<BenchPoint>> {
     ensure!(iters > 0, "bench needs at least one iteration");
     let mut points = Vec::new();
@@ -305,10 +331,12 @@ fn measure_points(
         let w = ctx.workload(spec, n_cores);
         for v in variants {
             let mut best_wall = f64::INFINITY;
+            let mut best_eff = 0.0;
             let mut first: Option<crate::stats::SimStats> = None;
             for _ in 0..iters {
                 let report = SimBuilder::from_config(v.cfg.clone())
                     .workload_arc(std::sync::Arc::clone(&w))
+                    .threads(threads)
                     .run()?;
                 match &first {
                     None => first = Some(report.stats.clone()),
@@ -321,7 +349,11 @@ fn measure_points(
                         report.stats
                     ),
                 }
-                best_wall = best_wall.min(report.elapsed.as_secs_f64());
+                let wall = report.elapsed.as_secs_f64();
+                if wall < best_wall {
+                    best_wall = wall;
+                    best_eff = report.stats.parallel.efficiency();
+                }
             }
             let stats = first.unwrap();
             points.push(BenchPoint {
@@ -333,6 +365,8 @@ fn measure_points(
                 events: stats.events,
                 intra_socket_msgs: stats.socket.intra_msgs,
                 inter_socket_msgs: stats.socket.inter_msgs,
+                threads,
+                parallel_efficiency: if threads > 1 { best_eff } else { 0.0 },
                 wall_s: best_wall,
             });
         }
@@ -425,6 +459,26 @@ mod tests {
             }
         }
         assert!(r.to_json().contains("\"cores\": 256"));
+    }
+
+    #[test]
+    fn threaded_bench_records_shards_and_efficiency() {
+        let mut ctx = EvalCtx::new(None, 1);
+        ctx.scale_down = 32;
+        let opts = BenchOpts { threads: 2, ..BenchOpts::default() };
+        let r = run_macro_bench_with_opts(&mut ctx, 2, 1, opts).unwrap();
+        assert_eq!(r.label, "fig4-2c-t2");
+        assert!(r.points.iter().all(|p| p.threads == 2));
+        assert!(
+            r.points.iter().all(|p| p.parallel_efficiency > 0.0 && p.parallel_efficiency <= 2.0),
+            "efficiency must land in (0, threads]"
+        );
+        let j = r.to_json();
+        assert!(j.contains("\"threads\": 2"));
+        assert!(j.contains("\"parallel_efficiency\""));
+        // Serial reports keep the pre-PDES point shape.
+        let flat = tiny_report().to_json();
+        assert!(!flat.contains("parallel_efficiency"));
     }
 
     #[test]

@@ -164,23 +164,26 @@ USAGE:
              [--lease-policy static|dynamic|predictive] [--self-inc N]
              [--no-spec] [--delta-bits N] [--scale-down N] [--progress N]
              [--seed N] [--sockets N] [--numa-ratio N]
-             [--interleave line|block]
+             [--interleave line|block] [--threads N]
   tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7|lease|numa>
              [--threads N] [--scale-down N] [--out DIR]
   tardis litmus           run the litmus suite under all three protocols
   tardis case-study       cycle-by-cycle §V example, Tardis vs MSI
   tardis verify [--protocol tardis|msi|all] [--consistency sc|tso|all]
                [--cores N] [--lines N] [--max-ts N] [--lease N]
-               [--sb-entries N] [--out FILE]
+               [--sb-entries N] [--schedule serial|sharded|sharded:N]
+               [--out FILE]
                           exhaustive bounded model check of the shipped
                           controllers; writes the tardis-verif-v1 JSON
                           report (non-zero exit on any violation)
   tardis reproduce        regenerate every table and figure
   tardis bench [--suite fig4|lease] [--cores N] [--iters N] [--scale-down N]
                [--out FILE] [--lease-policy static|dynamic|predictive]
-               [--sockets N] [--numa-ratio N]
-                          macro benchmark (fig-4 sweep, timed serially);
-                          writes the machine-readable BENCH_*.json record
+               [--sockets N] [--numa-ratio N] [--threads N]
+                          macro benchmark (fig-4 sweep, timed serially;
+                          --threads N times the sharded PDES engine and
+                          records its parallel efficiency); writes the
+                          machine-readable BENCH_*.json record
   tardis serve [--addr HOST:PORT | --port N] [--workers N]
                           simulation-as-a-service: long-lived batch sweep
                           server (newline-delimited JSON, columnar
@@ -249,6 +252,9 @@ fn spec_from_args(args: &Args) -> Result<SimSpec> {
     if args.has("seed") {
         spec.seed = Some(args.get_u64("seed", 0)?);
     }
+    if args.has("threads") {
+        spec.threads = Some(args.get_u64("threads", 1)? as u32);
+    }
     Ok(spec)
 }
 
@@ -270,6 +276,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             "sockets",
             "numa-ratio",
             "interleave",
+            "threads",
         ],
         &["ooo", "no-spec"],
     )?;
@@ -443,13 +450,30 @@ fn cmd_case_study() -> Result<()> {
 fn cmd_bench(args: &Args) -> Result<()> {
     args.expect_only(
         "bench",
-        &["suite", "cores", "iters", "scale-down", "out", "lease-policy", "sockets", "numa-ratio"],
+        &[
+            "suite",
+            "cores",
+            "iters",
+            "scale-down",
+            "out",
+            "lease-policy",
+            "sockets",
+            "numa-ratio",
+            "threads",
+        ],
         &[],
     )?;
     let suite = args.get_str("suite", "fig4")?;
     let n_cores = args.get_u64("cores", 16)? as u32;
     let iters = args.get_u64("iters", 3)? as u32;
     let out = args.get_str("out", "BENCH_local.json")?;
+    // `--threads` here means *engine* shards per point (the thing the
+    // bench times), never the EvalCtx worker pool — pool parallelism
+    // would corrupt the timings, so the ctx below is built serial.
+    let threads = args.get_u64("threads", 1)? as u32;
+    if threads == 0 {
+        bail!("--threads must be >= 1");
+    }
     let policy = if args.has("lease-policy") {
         let p = args.get_str("lease-policy", "static")?;
         Some(
@@ -467,25 +491,31 @@ fn cmd_bench(args: &Args) -> Result<()> {
     if args.has("numa-ratio") && topology.is_flat() {
         bail!("--numa-ratio has no effect without --sockets >= 2");
     }
-    let mut ctx = eval_ctx(args)?;
+    let runtime = TraceRuntime::open_default().ok();
+    if runtime.is_none() {
+        eprintln!("note: artifacts not found, using rust synth fallback (run `make artifacts`)");
+    }
+    let mut ctx = EvalCtx::new(runtime, 0);
+    ctx.scale_down = args.get_u64("scale-down", 1)? as u32;
     let report = match suite {
         "fig4" => {
             println!(
-                "benchmarking fig-4 sweep at {n_cores} cores ({iters} iters, scale-down {})...",
+                "benchmarking fig-4 sweep at {n_cores} cores ({iters} iters, scale-down {}, \
+                 {threads} engine thread(s))...",
                 ctx.scale_down
             );
             tardis_dsm::coordinator::bench::run_macro_bench_with_opts(
                 &mut ctx,
                 n_cores,
                 iters,
-                tardis_dsm::coordinator::bench::BenchOpts { policy, topology },
+                tardis_dsm::coordinator::bench::BenchOpts { policy, topology, threads },
             )?
         }
         "lease" => {
             // The lease suite fixes its own grid (16/64/256 cores,
             // every policy, flat fabric): reject knobs it would
             // otherwise silently drop.
-            for flag in ["cores", "lease-policy", "sockets", "numa-ratio"] {
+            for flag in ["cores", "lease-policy", "sockets", "numa-ratio", "threads"] {
                 if args.has(flag) {
                     bail!("--{flag} does not apply to `bench --suite lease` \
                            (the suite sweeps its own fixed grid)");
@@ -544,7 +574,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
 fn cmd_verify(args: &Args) -> Result<()> {
     args.expect_only(
         "verify",
-        &["protocol", "consistency", "cores", "lines", "max-ts", "lease", "sb-entries", "out"],
+        &[
+            "protocol",
+            "consistency",
+            "cores",
+            "lines",
+            "max-ts",
+            "lease",
+            "sb-entries",
+            "schedule",
+            "out",
+        ],
         &[],
     )?;
     let protocols: Vec<ProtocolKind> = match args.get_str("protocol", "all")? {
@@ -565,9 +605,20 @@ fn cmd_verify(args: &Args) -> Result<()> {
         lease: args.get_u64("lease", defaults.lease)?,
         sb_entries: args.get_u64("sb-entries", defaults.sb_entries as u64)? as u32,
     };
+    // Frontier schedule: `sharded` permutes the exploration order the
+    // way the PDES engine's shard partition would, and must reach the
+    // same state count (exploration-order invariance).
+    let schedule = match args.get_str("schedule", "serial")? {
+        "serial" => verif::ExploreSchedule::Serial,
+        "sharded" => verif::ExploreSchedule::Sharded { shards: 2 },
+        other => match other.strip_prefix("sharded:").and_then(|n| n.parse().ok()) {
+            Some(n) if n >= 1 => verif::ExploreSchedule::Sharded { shards: n },
+            _ => bail!("unknown schedule {other:?} (serial|sharded|sharded:N)"),
+        },
+    };
     let out = args.get_str("out", "VERIF_local.json")?;
     println!(
-        "verifying {{{}}} x {{{}}} at {} cores, {} line(s), max-ts {}, lease {}...",
+        "verifying {{{}}} x {{{}}} at {} cores, {} line(s), max-ts {}, lease {} ({schedule:?})...",
         protocols.iter().map(|p| p.name()).collect::<Vec<_>>().join(","),
         models.iter().map(|m| m.name()).collect::<Vec<_>>().join(","),
         bounds.cores,
@@ -575,7 +626,8 @@ fn cmd_verify(args: &Args) -> Result<()> {
         bounds.max_ts,
         bounds.lease
     );
-    let report = verif::run_matrix(&protocols, &models, bounds).map_err(|e| anyhow!(e))?;
+    let report = verif::run_matrix_scheduled(&protocols, &models, bounds, schedule)
+        .map_err(|e| anyhow!(e))?;
     for r in &report.runs {
         let o = &r.outcome;
         println!(

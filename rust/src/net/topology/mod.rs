@@ -108,6 +108,19 @@ impl Topology {
             Self::Numa(_) => "numa",
         }
     }
+
+    /// Global tile index of a node — the same mapping both fabrics
+    /// route by.  This is the anchor of the PDES ownership rule: the
+    /// engine shards state by tile (DESIGN.md §11), so two nodes on
+    /// different shards are guaranteed to sit on different tiles and
+    /// every cross-shard message pays at least one mesh hop of
+    /// latency — the conservative lookahead is never zero.
+    pub fn tile_of(&self, node: Node) -> u32 {
+        match self {
+            Self::Flat(m) => m.tile_of(node),
+            Self::Numa(f) => f.tile_of(node),
+        }
+    }
 }
 
 /// A multi-socket ccNUMA fabric: `n_sockets` sockets, each owning a
@@ -161,7 +174,7 @@ impl NumaFabric {
     }
 
     /// Global tile index of a node (same mapping as [`Mesh::tile_of`]).
-    fn tile_of(&self, node: Node) -> u32 {
+    pub(crate) fn tile_of(&self, node: Node) -> u32 {
         match node {
             Node::Core(c) => c % self.n_tiles,
             Node::Slice(s) => s % self.n_tiles,

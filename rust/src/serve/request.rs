@@ -134,6 +134,7 @@ const POINT_KEYS: &[&str] = &[
     "scale_down",
     "trace_len",
     "seed",
+    "threads",
 ];
 
 fn decode_point(v: &Json, session_seed: Option<u64>) -> Result<SimSpec> {
@@ -199,6 +200,9 @@ fn decode_point(v: &Json, session_seed: Option<u64>) -> Result<SimSpec> {
     spec.trace_len = opt_u32(v, "trace_len")?;
     // Point seed wins over the session seed; both are deterministic.
     spec.seed = opt_u64(v, "seed")?.or(session_seed);
+    // Engine threads per point: a pure perf knob — results are
+    // bit-for-bit identical to the serial run (tests/serve.rs).
+    spec.threads = opt_u32(v, "threads")?;
     Ok(spec)
 }
 
@@ -292,6 +296,10 @@ mod tests {
                 "numa-ratio has no effect",
             ),
             (
+                r#"{"type":"sweep","id":"b","points":[{"workload":"fft","threads":"two"}]}"#,
+                "must be a u32",
+            ),
+            (
                 r#"{"type":"sweep","id":"b","points":[{"workload":"fft","cores":0}]}"#,
                 "at least one core",
             ),
@@ -323,5 +331,14 @@ mod tests {
         assert_eq!(s.seed, None);
         assert_eq!(s.points[0].trace_len, None);
         assert_eq!(s.points[0].sockets, None);
+    }
+
+    #[test]
+    fn threads_knob_decodes_per_point() {
+        let line = r#"{"type":"sweep","id":"b","points":[
+            {"workload":"fft","cores":4,"threads":2},{"workload":"fft"}]}"#;
+        let Request::Sweep(s) = decode(line).unwrap() else { panic!() };
+        assert_eq!(s.points[0].threads, Some(2));
+        assert_eq!(s.points[1].threads, None);
     }
 }

@@ -5,18 +5,22 @@
 //! round-trips), so the queue is a **calendar**: a ring of per-cycle
 //! buckets covering the next [`HORIZON_BUCKETS`] cycles, with a binary
 //! heap as fallback for the rare far-future event (deep DRAM queueing).
-//! Pushing into the ring is an append; popping walks the cursor
-//! forward.  Both are O(1) amortized, versus O(log n) sift costs on
-//! the old all-heap queue.
+//! Pushing into the ring is a sorted insert (append in the common
+//! case); popping walks the cursor forward.  Both are O(1) amortized,
+//! versus O(log n) sift costs on the old all-heap queue.
 //!
 //! [`Message`] payloads are interned in a [`MsgSlab`], so what moves
-//! through buckets and heap is an 8-byte [`CompactEvent`] index, not
-//! an ~80-byte message struct.
+//! through buckets and heap is a small [`CompactEvent`] index, not an
+//! ~80-byte message struct.
 //!
-//! Firing order is bit-for-bit the old heap's (cycle, insertion-seq)
-//! order — see the ordering argument on [`EventQueue::promote`] and
-//! the randomized equivalence test against [`EventQueue::legacy_heap`]
-//! below.
+//! Firing order is the canonical `(cycle, PushKey)` total order shared
+//! by the serial engine and the sharded PDES driver (DESIGN.md §11): a
+//! [`PushKey`] names the push *provenance* — (push cycle, pushing
+//! reactor, per-reactor counter) — so per-shard queues pop exactly the
+//! restriction of the global serial order.  Raw [`EventQueue::push`]
+//! derives a key from the insertion sequence, which reproduces the old
+//! (cycle, seq) heap order bit-for-bit — see the randomized
+//! equivalence test against [`EventQueue::legacy_heap`] below.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -28,6 +32,19 @@ use crate::types::{CoreId, Cycle};
 /// two; must comfortably exceed hop + serialization + DRAM latency
 /// (~100-150 cycles) so overflow is rare even under DRAM queueing.
 const HORIZON_BUCKETS: usize = 2048;
+
+/// Canonical push identity: the total event order is `(fire cycle,
+/// PushKey)`, identical for a single global queue and for per-shard
+/// queues merged at epoch barriers.  `cycle` is the cycle the push was
+/// made, `src` the global node index of the pushing reactor, and `k` a
+/// per-(cycle, reactor) running counter — globally unique because a
+/// reactor's dispatches are totally ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct PushKey {
+    pub cycle: Cycle,
+    pub src: u32,
+    pub k: u64,
+}
 
 /// Events dispatched by the engine.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -45,7 +62,7 @@ enum CompactEvent {
     Deliver(u32),
 }
 
-/// The overflow heap orders by (cycle, seq) only; the event payload
+/// The overflow heap orders by (cycle, key) only; the event payload
 /// must still be `Ord` for the tuple, so compare as always-equal.
 impl Ord for CompactEvent {
     fn cmp(&self, _other: &Self) -> std::cmp::Ordering {
@@ -61,9 +78,9 @@ impl PartialOrd for CompactEvent {
 #[derive(Debug)]
 pub struct EventQueue {
     /// Per-cycle buckets; bucket `c & mask` holds only events for the
-    /// single cycle `c` in `[cursor, cursor + ring.len())`.  Empty in
-    /// legacy mode.
-    ring: Vec<Vec<CompactEvent>>,
+    /// single cycle `c` in `[cursor, cursor + ring.len())`, sorted by
+    /// [`PushKey`].  Empty in legacy mode.
+    ring: Vec<Vec<(PushKey, CompactEvent)>>,
     mask: u64,
     /// Earliest cycle the ring may still hold events for.
     cursor: Cycle,
@@ -72,10 +89,12 @@ pub struct EventQueue {
     cur_head: usize,
     /// Live events in the ring.
     ring_len: usize,
-    /// Far-future overflow, ordered by (cycle, seq).  Invariant while
+    /// Far-future overflow, ordered by (cycle, key).  Invariant while
     /// the ring is active: every heap event's cycle is at or beyond
     /// `cursor + ring.len()`.  In legacy mode this holds everything.
-    heap: BinaryHeap<Reverse<(Cycle, u64, CompactEvent)>>,
+    heap: BinaryHeap<Reverse<(Cycle, PushKey, CompactEvent)>>,
+    /// Raw-push counter: [`Self::push`] derives keys from it so
+    /// key-less callers keep exact insertion order per cycle.
     seq: u64,
     msgs: MsgSlab,
     legacy: bool,
@@ -133,11 +152,20 @@ impl EventQueue {
         }
     }
 
+    /// Key-less push: derives a key from the insertion sequence, which
+    /// keeps the old (cycle, push order) firing order exactly.
     pub fn push(&mut self, at: Cycle, ev: Event) {
         self.seq += 1;
+        let key = PushKey { cycle: 0, src: 0, k: self.seq };
+        self.push_keyed(at, key, ev);
+    }
+
+    /// Push with an explicit canonical key (the engine's path; the
+    /// PDES driver injects barrier-exchanged events through it too).
+    pub fn push_keyed(&mut self, at: Cycle, key: PushKey, ev: Event) {
         let ev = self.compact(ev);
         if self.legacy {
-            self.heap.push(Reverse((at, self.seq, ev)));
+            self.heap.push(Reverse((at, key, ev)));
             return;
         }
         // An *empty* queue may legally be pushed below the cursor
@@ -159,11 +187,24 @@ impl EventQueue {
             self.cursor
         );
         if at - self.cursor < self.ring.len() as u64 {
-            self.ring[(at & self.mask) as usize].push(ev);
-            self.ring_len += 1;
+            self.insert_ring(at, key, ev);
         } else {
-            self.heap.push(Reverse((at, self.seq, ev)));
+            self.heap.push(Reverse((at, key, ev)));
         }
+    }
+
+    /// Sorted insert into `at`'s bucket.  Only the cursor bucket has a
+    /// consumed prefix; an insert never lands inside it (see the
+    /// ordering argument in DESIGN.md §11 — a mid-drain push's key
+    /// always exceeds every consumed key), but clamping keeps the
+    /// unconsumed suffix sorted even if a future caller violates that.
+    fn insert_ring(&mut self, at: Cycle, key: PushKey, ev: CompactEvent) {
+        let b = (at & self.mask) as usize;
+        let lo = if at == self.cursor { self.cur_head } else { 0 };
+        let bucket = &mut self.ring[b];
+        let pos = lo + bucket[lo..].partition_point(|&(kk, _)| kk < key);
+        bucket.insert(pos, (key, ev));
+        self.ring_len += 1;
     }
 
     /// Ring drained: jump the cursor straight to the earliest
@@ -181,29 +222,33 @@ impl EventQueue {
     }
 
     /// Move heap events whose cycle entered the horizon into their
-    /// bucket.  Ordering: a cycle's bucket can only receive direct
-    /// pushes after that cycle is inside the horizon, and promotion
-    /// runs the moment it enters, so promoted events (pushed earlier,
-    /// with smaller seq) always precede later ring pushes; among
-    /// themselves they arrive in heap (cycle, seq) order.  Appended
-    /// bucket order therefore equals global seq order per cycle.
+    /// bucket.  The sorted insert puts each promoted event at its key
+    /// position, so an event that overflowed to the heap and one
+    /// pushed directly into the ring fire in exact `(cycle, key)`
+    /// order regardless of which path they took — including when the
+    /// horizon crossing happens at a PDES epoch boundary (see the
+    /// epoch-boundary test below).
     fn promote(&mut self) {
         let horizon = self.cursor + self.ring.len() as u64;
         while let Some(&Reverse((t, _, _))) = self.heap.peek() {
             if t >= horizon {
                 break;
             }
-            let Reverse((t, _, ev)) = self.heap.pop().unwrap();
-            self.ring[(t & self.mask) as usize].push(ev);
-            self.ring_len += 1;
+            let Reverse((t, key, ev)) = self.heap.pop().unwrap();
+            self.insert_ring(t, key, ev);
         }
     }
 
     pub fn pop(&mut self) -> Option<(Cycle, Event)> {
+        self.pop_keyed().map(|(t, _, ev)| (t, ev))
+    }
+
+    /// Pop the globally next event together with its canonical key.
+    pub fn pop_keyed(&mut self) -> Option<(Cycle, PushKey, Event)> {
         if self.legacy {
-            return self.heap.pop().map(|Reverse((t, _, e))| {
+            return self.heap.pop().map(|Reverse((t, key, e))| {
                 let ev = self.expand(e);
-                (t, ev)
+                (t, key, ev)
             });
         }
         if self.ring_len == 0 {
@@ -212,12 +257,12 @@ impl EventQueue {
         loop {
             let b = (self.cursor & self.mask) as usize;
             if self.cur_head < self.ring[b].len() {
-                let ev = self.ring[b][self.cur_head];
+                let (key, ev) = self.ring[b][self.cur_head];
                 self.cur_head += 1;
                 self.ring_len -= 1;
                 let at = self.cursor;
                 let ev = self.expand(ev);
-                return Some((at, ev));
+                return Some((at, key, ev));
             }
             // Bucket exhausted: recycle it and advance the cursor,
             // admitting newly in-horizon heap events as we go.
@@ -228,6 +273,39 @@ impl EventQueue {
             if self.ring_len == 0 {
                 self.jump_to_heap_min()?;
             }
+        }
+    }
+
+    /// Cycle of the next event without consuming it (and, crucially,
+    /// without moving the cursor: an epoch-bounded drain must be able
+    /// to stop *before* a far-future event so barrier-injected events
+    /// can still be pushed at their true cycles).
+    pub fn next_fire(&self) -> Option<Cycle> {
+        if self.legacy || self.ring_len == 0 {
+            return self.heap.peek().map(|&Reverse((t, _, _))| t);
+        }
+        // Ring events always precede heap events (horizon invariant),
+        // so scan buckets from the cursor; the first live one wins.
+        for off in 0..self.ring.len() as u64 {
+            let c = self.cursor + off;
+            let b = (c & self.mask) as usize;
+            let head = if off == 0 { self.cur_head } else { 0 };
+            if self.ring[b].len() > head {
+                return Some(c);
+            }
+        }
+        unreachable!("ring_len > 0 but no live bucket");
+    }
+
+    /// Pop the next event only if it fires strictly before `limit` —
+    /// the PDES epoch window drain.  The cursor never advances past an
+    /// unpopped event, so events injected at the following barrier
+    /// (which fire at or beyond `limit`) are never "in the past".
+    pub fn pop_before(&mut self, limit: Cycle) -> Option<(Cycle, PushKey, Event)> {
+        if self.next_fire()? < limit {
+            self.pop_keyed()
+        } else {
+            None
         }
     }
 
@@ -341,7 +419,7 @@ mod tests {
         // Event A at cycle 100 pushed while 100 is beyond the horizon
         // (overflows to the heap), event B at cycle 100 pushed after
         // the cursor jumped close enough that 100 is in the ring.  A
-        // has the smaller seq and must pop first.
+        // has the smaller key and must pop first.
         let mut q = EventQueue::with_horizon(8);
         q.push(100, Event::CoreWake(0)); // A -> heap
         q.push(95, Event::CoreWake(7)); // filler
@@ -349,6 +427,60 @@ mod tests {
         q.push(100, Event::CoreWake(1)); // B -> ring (100 < 95 + 8)
         assert_eq!(q.pop(), Some((100, Event::CoreWake(0))));
         assert_eq!(q.pop(), Some((100, Event::CoreWake(1))));
+    }
+
+    /// Satellite regression for the sharded drain: heap-overflowed
+    /// events crossing the horizon exactly at an epoch boundary must
+    /// still fire in exact `(cycle, key)` order, interleaved correctly
+    /// with a direct ring push made mid-drain — and an epoch-bounded
+    /// drain must never advance the cursor past an unpopped event.
+    #[test]
+    fn epoch_boundary_promotion_preserves_exact_key_order() {
+        let mut q = EventQueue::with_horizon(8);
+        let key = |src: u32, k: u64| PushKey { cycle: 0, src, k };
+        // Both land in the heap (100 is far outside [0, 8)), pushed in
+        // the *opposite* of their key order.
+        q.push_keyed(100, key(2, 0), Event::CoreWake(102));
+        q.push_keyed(100, key(0, 1), Event::CoreWake(100));
+        q.push_keyed(5, key(0, 0), Event::CoreWake(5));
+        // Epoch [0, 8): only cycle 5 fires; the heap events stay put.
+        assert_eq!(q.pop_before(8), Some((5, key(0, 0), Event::CoreWake(5))));
+        assert_eq!(q.pop_before(8), None);
+        assert_eq!(q.next_fire(), Some(100), "cursor must not pass the heap events");
+        // Next epoch crosses the horizon: the first pop jumps the
+        // cursor, promoting both heap events in key order; a mid-drain
+        // ring push with an in-between key lands exactly between them.
+        assert_eq!(q.pop_before(104), Some((100, key(0, 1), Event::CoreWake(100))));
+        q.push_keyed(100, key(1, 0), Event::CoreWake(101));
+        assert_eq!(q.pop_before(104), Some((100, key(1, 0), Event::CoreWake(101))));
+        assert_eq!(q.pop_before(104), Some((100, key(2, 0), Event::CoreWake(102))));
+        assert_eq!(q.pop_before(104), None);
+        assert!(q.is_empty());
+    }
+
+    /// Keyed pushes fire in key order within a cycle even when they
+    /// arrive out of key order, on both queue implementations.
+    #[test]
+    fn keyed_pushes_pop_in_key_order_on_both_queues() {
+        let keys = [
+            PushKey { cycle: 3, src: 0, k: 0 },
+            PushKey { cycle: 1, src: 2, k: 5 },
+            PushKey { cycle: 1, src: 2, k: 1 },
+            PushKey { cycle: 2, src: 1, k: 0 },
+            PushKey { cycle: 1, src: 0, k: 9 },
+        ];
+        for mut q in [EventQueue::new(), EventQueue::legacy_heap()] {
+            for (i, &k) in keys.iter().enumerate() {
+                q.push_keyed(7, k, Event::CoreWake(i as u32));
+            }
+            let mut sorted = keys;
+            sorted.sort();
+            for &k in &sorted {
+                let (at, key, _) = q.pop_keyed().unwrap();
+                assert_eq!((at, key), (7, k));
+            }
+            assert!(q.is_empty());
+        }
     }
 
     #[test]

@@ -6,6 +6,7 @@
 
 pub mod engine;
 pub mod event;
+pub(crate) mod pdes;
 
 pub use engine::SimResult;
 pub use event::{Event, EventQueue};

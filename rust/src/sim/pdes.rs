@@ -1,0 +1,331 @@
+//! Conservative-lookahead parallel simulation driver (PDES).
+//!
+//! The engine shards by tile ([`shard_of_node`]): each worker thread
+//! owns a contiguous block of cores, their co-located LLC/TM slices,
+//! and the memory controllers homed there, with a private event queue
+//! and message slab.  Workers advance in lockstep epochs of width `L`
+//! = the minimum cross-shard message latency ([`lookahead`]): every
+//! event a shard dispatches in window `[T, T+L)` can only schedule
+//! cross-shard work at `now + latency >= T + L`, so events exchanged
+//! at the epoch barrier always land in a *future* window — conservative
+//! synchronization with zero rollbacks (cf. DESIGN.md §11 for the full
+//! soundness argument).
+//!
+//! Determinism is bit-for-bit: every push carries a canonical
+//! [`PushKey`] minted by the *sending* reactor, identical in serial
+//! and sharded runs, and per-shard queues pop in global `(cycle, key)`
+//! order restricted to the shard.  Since shards partition the
+//! reactors and a reactor's dispatch sequence fully determines its
+//! state, an N-thread run produces the same per-shard stats — merged
+//! with commutative sums — and the same access log — merged by
+//! sorting per-dispatch record groups on `(cycle, key)` — as the
+//! 1-thread run.  `tests/determinism.rs` asserts exactly this.
+
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::api::observer::Observers;
+use crate::config::SystemConfig;
+use crate::net::{Message, MsgKind, Node, Topology};
+use crate::prog::checker::AccessLog;
+use crate::prog::Workload;
+use crate::stats::{ParallelStats, ShardLoad, SimStats};
+use crate::types::Cycle;
+
+use super::engine::{shard_of_node, Engine, ShardSpec, SimResult};
+use super::event::PushKey;
+
+/// The conservative lookahead for `shards` shards of `cfg`: the
+/// minimum fabric latency over all cross-shard node pairs, probed
+/// with a 1-flit control message (latency grows with flit count, so
+/// the control probe is the true minimum).  Under `Topology::Numa`
+/// with shards == sockets this is the inter-socket link latency; under
+/// `Flat` it is the smallest cross-boundary mesh crossing.  Always
+/// >= 1 because distinct shards occupy distinct tiles.
+pub(crate) fn lookahead(cfg: &SystemConfig, shards: u32) -> Cycle {
+    let topo = Topology::new(cfg);
+    let mut nodes = Vec::new();
+    for c in 0..cfg.n_cores {
+        nodes.push(Node::Core(c));
+        nodes.push(Node::Slice(c));
+    }
+    for m in 0..cfg.n_mcs {
+        nodes.push(Node::Mc(m));
+    }
+    let mut min = Cycle::MAX;
+    for &a in &nodes {
+        let sa = shard_of_node(&topo, cfg.n_cores, shards, a);
+        for &b in &nodes {
+            if shard_of_node(&topo, cfg.n_cores, shards, b) == sa {
+                continue;
+            }
+            let probe = Message { src: a, dst: b, addr: 0, requester: 0, kind: MsgKind::GetS };
+            min = min.min(topo.route(&probe).latency);
+        }
+    }
+    min
+}
+
+/// Post-injection shard state published at each epoch's second
+/// barrier; every worker reads all slots and derives the same verdict.
+#[derive(Default)]
+struct ShardStatus {
+    next_fire: Option<Cycle>,
+    finished: u32,
+    error: Option<String>,
+}
+
+struct WorkerDone {
+    out: super::engine::ShardOutput,
+    load: ShardLoad,
+    epochs: u64,
+}
+
+type Mailbox = Mutex<Vec<(Cycle, PushKey, Message)>>;
+
+/// Run `cfg` + `workload` across `threads` shards and merge the
+/// results into the same `SimResult` the serial engine produces.
+pub(crate) fn run_parallel(
+    cfg: SystemConfig,
+    workload: &Workload,
+    threads: u32,
+    record_log: bool,
+) -> Result<SimResult> {
+    assert!(threads >= 2, "run_parallel needs at least two shards");
+    let la = lookahead(&cfg, threads);
+    if la == 0 || la == Cycle::MAX {
+        bail!("degenerate lookahead for {threads} shards (is the system shardable?)");
+    }
+    let n = threads as usize;
+    let n_cores = cfg.n_cores;
+    let statuses: Vec<Mutex<ShardStatus>> =
+        (0..n).map(|_| Mutex::new(ShardStatus::default())).collect();
+    // mailboxes[to][from]: senders fill before barrier A, the owner
+    // drains between barriers A and B.
+    let mailboxes: Vec<Vec<Mailbox>> =
+        (0..n).map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect()).collect();
+    let barrier = Barrier::new(n);
+    let t0 = Instant::now();
+    let results: Vec<std::result::Result<WorkerDone, String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|me| {
+                let cfg = cfg.clone();
+                let (statuses, mailboxes, barrier) = (&statuses, &mailboxes, &barrier);
+                s.spawn(move || {
+                    run_shard(cfg, workload, me, threads, la, record_log, statuses, mailboxes, barrier)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
+    });
+
+    let mut outs = Vec::with_capacity(n);
+    let mut loads = Vec::with_capacity(n);
+    let mut epochs = 0u64;
+    let mut errs: Vec<String> = Vec::new();
+    for r in results {
+        match r {
+            Ok(d) => {
+                epochs = epochs.max(d.epochs);
+                loads.push(d.load);
+                outs.push(d.out);
+            }
+            Err(e) => errs.push(e),
+        }
+    }
+    if !errs.is_empty() {
+        errs.dedup();
+        bail!("{}", errs.join("\n"));
+    }
+    let wall_ns = (t0.elapsed().as_nanos() as u64).max(1);
+
+    let global_last = outs.iter().map(|o| o.last_now).max().unwrap_or(0);
+    let mut core_finish = vec![global_last; n_cores as usize];
+    let mut stats = SimStats { n_cores, ..SimStats::default() };
+    for o in &outs {
+        stats.absorb(&o.stats);
+        for &(c, t) in &o.core_finish {
+            core_finish[c as usize] = t;
+        }
+    }
+    stats.cycles = core_finish.iter().copied().max().unwrap_or(0);
+    stats.parallel = ParallelStats { threads, lookahead: la, epochs, wall_ns, shards: loads };
+
+    // Canonical log merge: per-dispatch record groups, globally sorted
+    // by the dispatched event's (cycle, key) — the exact order the
+    // serial engine dispatched them in — then re-sequenced, because
+    // serial `seq` is positional (1-based commit order).
+    let mut order: Vec<(Cycle, PushKey, usize, u32, u32)> = Vec::new();
+    for (i, o) in outs.iter().enumerate() {
+        for &(cy, key, start, end) in &o.log_groups {
+            order.push((cy, key, i, start, end));
+        }
+    }
+    order.sort_unstable_by_key(|&(cy, key, ..)| (cy, key));
+    let mut log = AccessLog::default();
+    log.records.reserve(outs.iter().map(|o| o.log.records.len()).sum());
+    for &(_, _, i, start, end) in &order {
+        log.records.extend_from_slice(&outs[i].log.records[start as usize..end as usize]);
+    }
+    for (i, r) in log.records.iter_mut().enumerate() {
+        r.seq = (i + 1) as u64;
+    }
+
+    Ok(SimResult { stats, log, core_finish })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    cfg: SystemConfig,
+    workload: &Workload,
+    me: u32,
+    threads: u32,
+    la: Cycle,
+    record_log: bool,
+    statuses: &[Mutex<ShardStatus>],
+    mailboxes: &[Vec<Mailbox>],
+    barrier: &Barrier,
+) -> std::result::Result<WorkerDone, String> {
+    let n_cores = cfg.n_cores;
+    let obs = if record_log { Observers::with_sc_log() } else { Observers::none() };
+    let mut eng = Engine::build_shard(cfg, workload, obs, ShardSpec { index: me, count: threads });
+    eng.seed();
+    let mut window_start: Cycle = 0;
+    let mut epochs: u64 = 0;
+    let mut busy_ns: u64 = 0;
+    let mut wait_ns: u64 = 0;
+    let verdict: std::result::Result<(), String> = loop {
+        epochs += 1;
+        let limit = window_start.saturating_add(la);
+        let b0 = Instant::now();
+        let res = eng.run_window(limit).map_err(|e| format!("{e:#}"));
+        if res.is_ok() {
+            for dest in 0..threads {
+                if dest == me {
+                    continue;
+                }
+                let out = eng.take_outbox(dest);
+                if !out.is_empty() {
+                    mailboxes[dest as usize][me as usize].lock().unwrap().extend(out);
+                }
+            }
+        }
+        busy_ns += b0.elapsed().as_nanos() as u64;
+        let w0 = Instant::now();
+        barrier.wait(); // A: every shard's outboxes are published.
+        wait_ns += w0.elapsed().as_nanos() as u64;
+
+        let b1 = Instant::now();
+        let mut err = res.err();
+        if err.is_none() {
+            for src in 0..threads {
+                if src == me {
+                    continue;
+                }
+                let mail = std::mem::take(&mut *mailboxes[me as usize][src as usize].lock().unwrap());
+                for (at, key, msg) in mail {
+                    eng.inject(at, key, msg);
+                }
+            }
+        }
+        {
+            let mut st = statuses[me as usize].lock().unwrap();
+            st.next_fire = eng.next_fire();
+            st.finished = eng.finished_cores();
+            st.error = err.take();
+        }
+        busy_ns += b1.elapsed().as_nanos() as u64;
+        let w1 = Instant::now();
+        barrier.wait(); // B: every shard's post-injection status is visible.
+        wait_ns += w1.elapsed().as_nanos() as u64;
+
+        // Symmetric decision: all workers read the same snapshot (the
+        // slots can't be rewritten until every reader passes the next
+        // barrier A) and derive the same verdict — no coordinator.
+        let mut min_next: Option<Cycle> = None;
+        let mut finished_total = 0u32;
+        let mut error: Option<String> = None;
+        for st in statuses {
+            let st = st.lock().unwrap();
+            if let Some(t) = st.next_fire {
+                min_next = Some(min_next.map_or(t, |m: Cycle| m.min(t)));
+            }
+            finished_total += st.finished;
+            if error.is_none() {
+                error.clone_from(&st.error);
+            }
+        }
+        if let Some(e) = error {
+            break Err(e);
+        }
+        match min_next {
+            // Every queue drained and every core done: quiescence,
+            // matching the serial engine's drain-to-quiescence exit.
+            None if finished_total == n_cores => break Ok(()),
+            None => {
+                let stuck = eng.stuck_cores().join("\n");
+                break Err(format!(
+                    "deadlock: all shards drained with {finished_total}/{n_cores} cores \
+                     finished\nshard {me} stuck cores:\n{stuck}"
+                ));
+            }
+            Some(t) => {
+                // Conservative soundness: the earliest pending event
+                // anywhere is at or past this window's end (locals
+                // below `limit` were dispatched; cross-shard fires are
+                // >= now + la >= limit).
+                debug_assert!(t >= limit, "event at {t} fired inside closed window [.., {limit})");
+                window_start = t;
+            }
+        }
+    };
+    verdict?;
+    let out = eng.finalize_shard();
+    let load = ShardLoad { shard: me, events: out.stats.events, busy_ns, wait_ns };
+    Ok(WorkerDone { out, load, epochs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ProtocolKind;
+
+    #[test]
+    fn lookahead_reflects_the_shard_boundary_cost() {
+        let flat = SystemConfig::small(8, ProtocolKind::Tardis);
+        let la2 = lookahead(&flat, 2);
+        assert!(la2 >= 2, "cross-shard pairs differ in tile, so latency >= hop + flit");
+        assert!(lookahead(&flat, 4) <= la2, "finer shards can only shrink the window");
+        // On a NUMA fabric with shards == sockets, every cross-shard
+        // route crosses a socket link, so the window widens by the
+        // numa factor.
+        let mut numa = SystemConfig::small(8, ProtocolKind::Tardis);
+        numa.topology.sockets = 2;
+        numa.topology.numa_ratio = 4;
+        let nla = lookahead(&numa, 2);
+        assert!(nla > la2, "socket-link lookahead {nla} should exceed mesh lookahead {la2}");
+    }
+
+    /// End-to-end canary (the full matrix lives in
+    /// tests/determinism.rs): a 2-shard Tardis run is bit-for-bit the
+    /// serial run — stats, access log, and per-core finish times.
+    #[test]
+    fn two_shards_match_serial_bit_for_bit() {
+        let spec = crate::workloads::by_name("fft").unwrap();
+        let w = crate::trace::synth_workload(&spec.params, 4, 128);
+        let cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        let serial = Engine::build(cfg.clone(), &w, Observers::with_sc_log()).run().unwrap();
+        let par = run_parallel(cfg, &w, 2, true).unwrap();
+        assert_eq!(par.stats, serial.stats);
+        assert_eq!(par.log.records, serial.log.records);
+        assert_eq!(par.core_finish, serial.core_finish);
+        assert_eq!(par.stats.parallel.threads, 2);
+        assert!(par.stats.parallel.epochs > 0);
+        assert!(par.stats.parallel.lookahead >= 1);
+        assert_eq!(par.stats.parallel.shards.len(), 2);
+        let shard_events: u64 = par.stats.parallel.shards.iter().map(|s| s.events).sum();
+        assert_eq!(shard_events, par.stats.events, "per-shard event loads sum to the total");
+    }
+}

@@ -66,6 +66,15 @@ pub struct SocketStats {
 }
 
 impl SocketStats {
+    pub fn add(&mut self, other: &SocketStats) {
+        self.intra_msgs += other.intra_msgs;
+        self.inter_msgs += other.inter_msgs;
+        self.intra_hops += other.intra_hops;
+        self.inter_hops += other.inter_hops;
+        self.link_crossings += other.link_crossings;
+        self.inter_flits += other.inter_flits;
+    }
+
     /// Messages that entered the network at all.
     pub fn total_msgs(&self) -> u64 {
         self.intra_msgs + self.inter_msgs
@@ -106,6 +115,73 @@ pub struct TimestampStats {
     /// crossed the livelock threshold and demoted speculation on that
     /// (core, line) to blocking demands.
     pub livelock_escalations: u64,
+}
+
+impl TimestampStats {
+    pub fn add(&mut self, other: &TimestampStats) {
+        self.pts_increase_total += other.pts_increase_total;
+        self.pts_increase_self_inc += other.pts_increase_self_inc;
+        self.l1_rebases += other.l1_rebases;
+        self.l2_rebases += other.l2_rebases;
+        self.rebase_stall_cycles += other.rebase_stall_cycles;
+        self.rebase_invalidations += other.rebase_invalidations;
+        self.leases_granted += other.leases_granted;
+        self.lease_total += other.lease_total;
+        self.livelock_escalations += other.livelock_escalations;
+    }
+}
+
+/// Per-shard load accounting for a parallel (PDES) run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardLoad {
+    pub shard: u32,
+    /// Events this shard dispatched (deterministic).
+    pub events: u64,
+    /// Host time spent simulating + exchanging events.
+    pub busy_ns: u64,
+    /// Host time spent blocked at epoch barriers.
+    pub wait_ns: u64,
+}
+
+/// How a parallel run executed: thread/shard count, the conservative
+/// lookahead window, epoch count, and per-shard busy/wait timings.
+///
+/// Host timings are inherently nondeterministic, so `PartialEq` is an
+/// unconditional match: two runs of the same `SimSpec` compare equal
+/// on `SimStats` regardless of how the work was scheduled — which is
+/// exactly the bit-for-bit determinism contract `tests/determinism.rs`
+/// asserts between 1-thread and N-thread runs.
+#[derive(Debug, Clone, Default)]
+pub struct ParallelStats {
+    /// Worker threads (= shards); 1 for the serial engine.
+    pub threads: u32,
+    /// Conservative lookahead (epoch window width) in cycles.
+    pub lookahead: Cycle,
+    /// Epoch barriers crossed.
+    pub epochs: u64,
+    /// Host wall-clock of the parallel section, nanoseconds.
+    pub wall_ns: u64,
+    pub shards: Vec<ShardLoad>,
+}
+
+impl PartialEq for ParallelStats {
+    fn eq(&self, _other: &Self) -> bool {
+        true
+    }
+}
+impl Eq for ParallelStats {}
+
+impl ParallelStats {
+    /// Parallel efficiency in (0, threads]: total shard busy time over
+    /// wall time.  `threads x efficiency` is the effective speedup
+    /// against an ideal serial run of the same work.
+    pub fn efficiency(&self) -> f64 {
+        if self.wall_ns == 0 || self.shards.is_empty() {
+            return 0.0;
+        }
+        let busy: u64 = self.shards.iter().map(|s| s.busy_ns).sum();
+        busy as f64 / self.wall_ns as f64
+    }
 }
 
 /// Everything measured by one simulation run.
@@ -176,6 +252,11 @@ pub struct SimStats {
     /// Intra- vs inter-socket traffic split (all intra when flat).
     pub socket: SocketStats,
     pub ts: TimestampStats,
+    /// Parallel-execution accounting (empty for serial runs).  Not a
+    /// simulated quantity: compares always-equal and is excluded from
+    /// [`SimStats::columns`], so determinism checks and the wire
+    /// schema see identical stats however the run was scheduled.
+    pub parallel: ParallelStats,
 }
 
 impl SimStats {
@@ -290,6 +371,38 @@ impl SimStats {
         ]
     }
 
+    /// Merge another run's counters into this one — the PDES shard
+    /// reduction.  Every field is a commutative sum except `n_cores`
+    /// (a system property, kept) and `cycles` (the max over per-core
+    /// finish times, computed by the caller once all shards are in);
+    /// `parallel` is filled by the driver afterwards.
+    pub fn absorb(&mut self, other: &SimStats) {
+        self.events += other.events;
+        self.memops += other.memops;
+        self.loads += other.loads;
+        self.stores += other.stores;
+        self.atomics += other.atomics;
+        self.l1_hits += other.l1_hits;
+        self.l1_misses += other.l1_misses;
+        self.llc_accesses += other.llc_accesses;
+        self.dram_accesses += other.dram_accesses;
+        self.renew_requests += other.renew_requests;
+        self.renew_success += other.renew_success;
+        self.misspeculations += other.misspeculations;
+        self.rollback_cycles += other.rollback_cycles;
+        self.invalidations_sent += other.invalidations_sent;
+        self.broadcasts += other.broadcasts;
+        self.sb_stores += other.sb_stores;
+        self.sb_forwards += other.sb_forwards;
+        self.sb_full_stalls += other.sb_full_stalls;
+        self.spin_cycles += other.spin_cycles;
+        self.locks_acquired += other.locks_acquired;
+        self.barriers_passed += other.barriers_passed;
+        self.traffic.add(&other.traffic);
+        self.socket.add(&other.socket);
+        self.ts.add(&other.ts);
+    }
+
     /// L1 miss rate over demand accesses.
     pub fn l1_miss_rate(&self) -> f64 {
         let total = self.l1_hits + self.l1_misses;
@@ -389,6 +502,40 @@ mod tests {
         names.dedup();
         assert_eq!(names.len(), before, "duplicate column names");
         assert_eq!(before, 38, "column count is part of the wire schema");
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_parallel_stats_never_break_equality() {
+        let mut a = SimStats { n_cores: 4, events: 10, memops: 5, ..Default::default() };
+        let b = SimStats {
+            n_cores: 4,
+            events: 3,
+            memops: 2,
+            traffic: TrafficStats { data_flits: 5, ..Default::default() },
+            socket: SocketStats { inter_msgs: 1, ..Default::default() },
+            ts: TimestampStats { leases_granted: 2, ..Default::default() },
+            ..Default::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.events, 13);
+        assert_eq!(a.memops, 7);
+        assert_eq!(a.n_cores, 4, "n_cores is a system property, not a sum");
+        assert_eq!(a.traffic.data_flits, 5);
+        assert_eq!(a.socket.inter_msgs, 1);
+        assert_eq!(a.ts.leases_granted, 2);
+        // Host-time accounting never breaks run equality: the PDES
+        // determinism contract compares SimStats across schedules.
+        let mut c = a.clone();
+        c.parallel = ParallelStats {
+            threads: 4,
+            lookahead: 9,
+            epochs: 3,
+            wall_ns: 200,
+            shards: vec![ShardLoad { shard: 0, events: 13, busy_ns: 150, wait_ns: 10 }],
+        };
+        assert_eq!(a, c);
+        assert!((c.parallel.efficiency() - 0.75).abs() < 1e-12);
+        assert_eq!(ParallelStats::default().efficiency(), 0.0);
     }
 
     #[test]

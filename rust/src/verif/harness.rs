@@ -26,7 +26,8 @@ use crate::stats::SimStats;
 use crate::types::{CoreId, LineAddr};
 
 use super::{
-    Counterexample, InvariantStat, ModelProto, RunOutcome, VerifBounds, VerifEvent, VerifOp,
+    Counterexample, ExploreSchedule, InvariantStat, ModelProto, RunOutcome, VerifBounds,
+    VerifEvent, VerifOp,
 };
 
 /// A memory access handed to the protocol and still pending.
@@ -246,6 +247,31 @@ impl<P: ModelProto> World<P> {
         evs
     }
 
+    /// The tile an endpoint id sits on (the same tile both fabrics
+    /// route by): core c and slice c share tile c, MC m maps to tile
+    /// m (the harness never has more MCs than cores).
+    fn tile_of_endpoint(&self, id: u32) -> u32 {
+        let nc = self.bounds.cores;
+        if id < 2 * nc {
+            id % nc
+        } else {
+            (id - 2 * nc) % nc
+        }
+    }
+
+    /// The PDES shard that would *handle* `ev`: the issuing core's
+    /// shard for Issue/Drain, the destination endpoint's shard for
+    /// Deliver — mirroring `shard_of_node` in [`crate::sim::engine`]
+    /// (contiguous tile blocks; a message is dispatched by the shard
+    /// owning its destination reactor).
+    fn shard_of_event(&self, ev: VerifEvent, shards: u32) -> u32 {
+        let tile = match ev {
+            VerifEvent::Issue { core, .. } | VerifEvent::Drain { core } => core,
+            VerifEvent::Deliver { dst, .. } => self.tile_of_endpoint(dst),
+        };
+        (tile as u64 * shards as u64 / self.bounds.cores.max(1) as u64) as u32
+    }
+
     /// Everything issued has fully resolved (distinct from merely
     /// having no enabled transition, which is a deadlock).
     fn is_complete(&self) -> bool {
@@ -462,6 +488,23 @@ pub fn explore<P: ModelProto>(
     bounds: VerifBounds,
     model: Consistency,
 ) -> RunOutcome {
+    explore_scheduled(mk, bounds, model, ExploreSchedule::Serial)
+}
+
+/// [`explore`] with an explicit frontier [`ExploreSchedule`].  Every
+/// per-state transition list is a permutation of the serial one, and
+/// BFS with exact-state dedup visits the same reachable set in the
+/// same layers whatever the within-layer order — so all `RunOutcome`
+/// counters (states, transitions, depth, terminal states, checks) are
+/// schedule-invariant.  `tests/verif.rs` asserts this equality, which
+/// is what licenses the PDES engine to dispatch shard-partitioned
+/// work concurrently.
+pub fn explore_scheduled<P: ModelProto>(
+    mk: &dyn Fn() -> P,
+    bounds: VerifBounds,
+    model: Consistency,
+    schedule: ExploreSchedule,
+) -> RunOutcome {
     let invs = P::invariants();
     let mut stats: Vec<InvariantStat> = invs
         .iter()
@@ -509,7 +552,13 @@ pub fn explore<P: ModelProto>(
 
     while let Some((world, node, depth)) = queue.pop_front() {
         max_depth = max_depth.max(depth);
-        let evs = world.enabled();
+        let mut evs = world.enabled();
+        if let ExploreSchedule::Sharded { shards } = schedule {
+            // Shard-major enumeration: stable, so within a shard the
+            // serial order is preserved (the per-shard dispatch order
+            // the PDES engine actually uses).
+            evs.sort_by_key(|&ev| world.shard_of_event(ev, shards));
+        }
         if evs.is_empty() {
             if world.is_complete() {
                 terminal_states += 1;
@@ -700,6 +749,27 @@ mod tests {
         let a = explore(&|| Msi::new(&cfg), bounds, Consistency::Sc);
         assert!(a.passed(), "counterexample: {:#?}", a.counterexample);
         assert!(a.terminal_states > 0);
+    }
+
+    #[test]
+    fn sharded_schedule_reaches_the_same_state_space() {
+        let bounds = tiny();
+        for model in [Consistency::Sc, Consistency::Tso] {
+            let cfg = bounds.config(ProtocolKind::Tardis, model);
+            let serial = explore(&|| Tardis::new(&cfg), bounds, model);
+            for shards in [2u32, 3] {
+                let sharded = explore_scheduled(
+                    &|| Tardis::new(&cfg),
+                    bounds,
+                    model,
+                    ExploreSchedule::Sharded { shards },
+                );
+                assert_eq!(
+                    serial, sharded,
+                    "{model:?}/{shards} shards: exploration must be order-invariant"
+                );
+            }
+        }
     }
 
     #[test]

@@ -25,7 +25,7 @@ mod msi;
 mod report;
 mod tardis;
 
-pub use harness::{explore, replay};
+pub use harness::{explore, explore_scheduled, replay};
 pub use report::{RunReport, VerifReport};
 
 use crate::config::{Consistency, ProtocolKind, SystemConfig};
@@ -130,6 +130,26 @@ pub trait Invariant<P: ?Sized> {
     fn check_step(&self, _before: &P, _after: &P) -> Result<(), String> {
         Ok(())
     }
+}
+
+/// Order in which [`explore`] enumerates a state's enabled
+/// transitions.  The reachable-state space is enumeration-order
+/// *invariant* (BFS with exact-state dedup visits the same set either
+/// way), and `Sharded` exists to prove exactly that for the parallel
+/// engine's partition: it groups transitions by the PDES ownership
+/// rule ([`crate::sim::engine`]'s `shard_of_node` — contiguous tile
+/// blocks, with a message handled by its destination's shard) and
+/// enumerates shard 0's transitions first, then shard 1's, and so on.
+/// `tardis verify --schedule sharded` and `tests/verif.rs` assert the
+/// outcomes are identical, which is the model-checked counterpart of
+/// the engine-level determinism matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExploreSchedule {
+    /// The historical fixed order: cores ascending, then channels by
+    /// (src, dst).
+    Serial,
+    /// Transitions regrouped by owning shard, shard-major.
+    Sharded { shards: u32 },
 }
 
 /// What kind of access an [`VerifEvent::Issue`] performs.
@@ -243,16 +263,36 @@ pub fn run_matrix(
     models: &[Consistency],
     bounds: VerifBounds,
 ) -> Result<VerifReport, String> {
+    run_matrix_scheduled(protocols, models, bounds, ExploreSchedule::Serial)
+}
+
+/// [`run_matrix`] with an explicit frontier [`ExploreSchedule`].
+pub fn run_matrix_scheduled(
+    protocols: &[ProtocolKind],
+    models: &[Consistency],
+    bounds: VerifBounds,
+    schedule: ExploreSchedule,
+) -> Result<VerifReport, String> {
     bounds.validate()?;
+    if let ExploreSchedule::Sharded { shards } = schedule {
+        if shards == 0 {
+            return Err("sharded schedule needs at least one shard".to_string());
+        }
+    }
     let mut runs = Vec::new();
     for &p in protocols {
         for &m in models {
             let cfg = bounds.config(p, m);
             let outcome = match p {
-                ProtocolKind::Tardis => {
-                    explore(&|| crate::proto::tardis::Tardis::new(&cfg), bounds, m)
+                ProtocolKind::Tardis => explore_scheduled(
+                    &|| crate::proto::tardis::Tardis::new(&cfg),
+                    bounds,
+                    m,
+                    schedule,
+                ),
+                ProtocolKind::Msi => {
+                    explore_scheduled(&|| crate::proto::msi::Msi::new(&cfg), bounds, m, schedule)
                 }
-                ProtocolKind::Msi => explore(&|| crate::proto::msi::Msi::new(&cfg), bounds, m),
                 ProtocolKind::Ackwise => {
                     return Err(
                         "verify does not support ackwise: the limited-pointer overflow \

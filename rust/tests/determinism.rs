@@ -228,6 +228,58 @@ fn pooled_batches_match_serial_runs_bit_for_bit() {
     }
 }
 
+/// The parallel sharded PDES engine (§Perf, DESIGN.md §11): an
+/// N-thread conservative-lookahead run must be *bit-for-bit* the
+/// serial run — every `SimStats` counter, every access-log record
+/// (including its global commit sequence), every per-core finish time
+/// — across shard counts, fabrics, consistency models, and protocols.
+/// This is the tentpole determinism matrix: threads x sockets x
+/// {SC, TSO} x {tardis, msi} at 8 cores.
+#[test]
+fn parallel_shards_match_serial_bit_for_bit_across_the_matrix() {
+    let spec = workloads::by_name("water-sp").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    for protocol in [ProtocolKind::Tardis, ProtocolKind::Msi] {
+        for sockets in [1u32, 4] {
+            for model in [Consistency::Sc, Consistency::Tso] {
+                let run = |threads: u32| {
+                    let mut cfg = SystemConfig::small(8, protocol);
+                    if sockets > 1 {
+                        cfg.topology = TopologyConfig {
+                            sockets,
+                            numa_ratio: 4,
+                            interleave: SocketInterleave::Line,
+                        };
+                    }
+                    cfg.consistency = model;
+                    SimBuilder::from_config(cfg)
+                        .record_accesses(true)
+                        .workload(&w)
+                        .threads(threads)
+                        .run()
+                        .unwrap()
+                };
+                let serial = run(1);
+                serial
+                    .check_consistency()
+                    .unwrap_or_else(|v| panic!("{protocol:?}: violation {v:?}"));
+                for threads in [2u32, 4] {
+                    let par = run(threads);
+                    assert_identical(
+                        &par,
+                        &serial,
+                        &format!("{protocol:?}/{sockets}s/{model:?}/t{threads}"),
+                    );
+                    assert_eq!(par.stats.parallel.threads, threads);
+                    assert_eq!(par.stats.parallel.shards.len(), threads as usize);
+                    assert!(par.stats.parallel.lookahead >= 1);
+                    assert!(par.stats.parallel.epochs > 0);
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn repeated_runs_are_bit_identical_on_sync_heavy_programs() {
     // Lock/barrier microcode exercises spin wakes, parked cores, and

@@ -198,6 +198,33 @@ fn eight_point_wire_batch_matches_serial_cli_runs_bit_for_bit() {
     server.shutdown();
 }
 
+/// A `"threads": N` point runs on the sharded PDES engine inside the
+/// serve worker, and its columnar result is bit-for-bit the serial
+/// CLI run of the same point — the wire-level face of the engine's
+/// determinism guarantee.
+#[test]
+fn threaded_wire_point_matches_the_serial_cli_run_bit_for_bit() {
+    let mut s = SimSpec::new("fft");
+    s.cores = 4;
+    s.trace_len = Some(256);
+    s.seed = Some(4242);
+    let serial = s.builder().unwrap().run().unwrap().stats;
+
+    let server = start_server(2);
+    let mut c = Client::connect(server.addr());
+    let points = r#"{"workload":"fft","cores":4,"trace_len":256,"seed":4242,"threads":4}"#;
+    c.send(&sweep_line("pdes", None, 0, points));
+    c.recv_type("ack");
+    let result = c.recv_type("result");
+    let cols = result.get("payload").unwrap().get("columns").unwrap();
+    for (name, expect) in serial.columns() {
+        let got = cols.get(name).unwrap().as_array().unwrap()[0].as_u64().unwrap();
+        assert_eq!(got, expect, "column {name}: threaded wire point diverged from serial CLI run");
+    }
+    drop(c);
+    server.shutdown();
+}
+
 #[test]
 fn concurrent_sessions_get_their_own_correct_results() {
     let server = start_server(4);

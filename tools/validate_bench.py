@@ -61,6 +61,14 @@ POINT_OPTIONAL_KEYS = {
     "cores": int,
 }
 
+# Parallel-engine keys arrived with the sharded PDES engine; emitted
+# together on every point of a `bench --threads N` (N > 1) report and
+# absent from serial reports.
+POINT_PARALLEL_KEYS = {
+    "threads": int,
+    "parallel_efficiency": (int, float),
+}
+
 AGGREGATE_KEYS = {
     "wall_s": (int, float),
     "events": int,
@@ -98,10 +106,24 @@ def validate(path):
             point,
             POINT_KEYS,
             where,
-            optional={**POINT_SOCKET_KEYS, **POINT_OPTIONAL_KEYS},
+            optional={**POINT_SOCKET_KEYS, **POINT_OPTIONAL_KEYS, **POINT_PARALLEL_KEYS},
         )
         if "cores" in point and point["cores"] < 1:
             raise ValueError(f"{where}: cores must be >= 1")
+        if ("threads" in point) != ("parallel_efficiency" in point):
+            raise ValueError(
+                f"{where}: threads and parallel_efficiency must appear together"
+            )
+        if "threads" in point:
+            if point["threads"] < 2:
+                raise ValueError(
+                    f"{where}: threads must be >= 2 (serial points omit the key)"
+                )
+            eff = point["parallel_efficiency"]
+            if not 0 < eff <= point["threads"]:
+                raise ValueError(
+                    f"{where}: parallel_efficiency {eff} outside (0, threads]"
+                )
         if topology != "flat":
             for key in POINT_SOCKET_KEYS:
                 if key not in point:
