@@ -7,8 +7,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{
-    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, SystemConfig,
-    TardisConfig,
+    Consistency, CoreModel, LeasePolicyKind, PdesMode, ProtocolKind, SocketInterleave,
+    SystemConfig, TardisConfig,
 };
 use crate::prog::checker::{AccessLog, CheckReport, Violation};
 use crate::prog::{Program, Workload};
@@ -75,6 +75,8 @@ pub struct SimBuilder {
     trace_len: Option<u32>,
     runtime: Option<TraceRuntime>,
     threads: u32,
+    pdes_mode: PdesMode,
+    rebalance_every: u32,
     #[cfg(any(test, feature = "legacy-queue"))]
     legacy_queue: bool,
 }
@@ -100,6 +102,8 @@ impl SimBuilder {
             trace_len: None,
             runtime: None,
             threads: 1,
+            pdes_mode: PdesMode::Epoch,
+            rebalance_every: 0,
             #[cfg(any(test, feature = "legacy-queue"))]
             legacy_queue: false,
         }
@@ -203,13 +207,34 @@ impl SimBuilder {
 
     /// Simulation worker threads (default 1 = the serial engine).
     /// With `n > 1` the run shards along tile boundaries and executes
-    /// under the conservative-lookahead PDES driver
-    /// ([`crate::sim::pdes`]), producing bit-for-bit the same stats,
-    /// access log, and per-core finish times as the serial run.  The
-    /// thread count must divide the core count; plugins and cycle
-    /// sampling are serial-only (checked at [`SimBuilder::build`]).
+    /// under the parallel PDES driver ([`crate::sim::pdes`]),
+    /// producing bit-for-bit the same stats, access log, and per-core
+    /// finish times as the serial run.  Any count up to the core count
+    /// works — tiles split into balanced contiguous blocks, the last
+    /// shards one tile smaller when the division is uneven.  Plugins
+    /// and cycle sampling are serial-only (checked at
+    /// [`SimBuilder::build`]).
     pub fn threads(mut self, n: u32) -> Self {
         self.threads = n;
+        self
+    }
+
+    /// PDES synchronization mode for threaded runs (default
+    /// [`PdesMode::Epoch`]): lockstep epochs, per-edge null messages,
+    /// or automatic selection from the lookahead matrix.  No effect
+    /// at `threads(1)`.
+    pub fn pdes_mode(mut self, mode: PdesMode) -> Self {
+        self.pdes_mode = mode;
+        self
+    }
+
+    /// Deterministic load rebalancing for threaded runs: every `n`
+    /// lookahead windows, repartition tiles by cumulative simulated
+    /// event counts and migrate tile state between shards (0 = off,
+    /// the default).  Purely simulated quantities drive the decision,
+    /// so results stay bit-for-bit identical to the serial run.
+    pub fn rebalance_every(mut self, n: u32) -> Self {
+        self.rebalance_every = n;
         self
     }
 
@@ -331,8 +356,11 @@ impl SimBuilder {
             bail!("threads must be >= 1");
         }
         if self.threads > 1 {
-            if n_cores % self.threads != 0 {
-                bail!("{n_cores} cores do not shard evenly across {} threads", self.threads);
+            if self.threads > n_cores {
+                bail!(
+                    "{} threads exceed the {n_cores} cores (every shard owns at least one tile)",
+                    self.threads
+                );
             }
             if self.observers.has_plugins() {
                 bail!("observer plugins are serial-only (they hold thread-local state); drop .observe(..) or use .threads(1)");
@@ -386,6 +414,8 @@ impl SimBuilder {
             workload,
             observers: self.observers,
             threads: self.threads,
+            pdes_mode: self.pdes_mode,
+            rebalance_every: self.rebalance_every,
             #[cfg(any(test, feature = "legacy-queue"))]
             legacy_queue: self.legacy_queue,
         })
@@ -403,6 +433,8 @@ pub struct SimSession {
     workload: Arc<Workload>,
     observers: Observers,
     threads: u32,
+    pdes_mode: PdesMode,
+    rebalance_every: u32,
     #[cfg(any(test, feature = "legacy-queue"))]
     legacy_queue: bool,
 }
@@ -441,8 +473,14 @@ impl SimSession {
         let consistency = self.cfg.consistency;
         if self.threads > 1 {
             let record_log = self.observers.sc_log_enabled();
-            let res =
-                crate::sim::pdes::run_parallel(self.cfg, &self.workload, self.threads, record_log)?;
+            let res = crate::sim::pdes::run_parallel(
+                self.cfg,
+                &self.workload,
+                self.threads,
+                record_log,
+                self.pdes_mode,
+                self.rebalance_every,
+            )?;
             return Ok(SimReport {
                 stats: res.stats,
                 log: res.log,
@@ -631,8 +669,10 @@ mod tests {
         let base = || SimBuilder::small(4, ProtocolKind::Tardis).named_workload("fft").trace_len(64);
         let err = base().threads(0).build().unwrap_err().to_string();
         assert!(err.contains("threads must be >= 1"), "{err}");
-        let err = base().threads(3).build().unwrap_err().to_string();
-        assert!(err.contains("do not shard evenly"), "{err}");
+        let err = base().threads(5).build().unwrap_err().to_string();
+        assert!(err.contains("exceed the 4 cores"), "{err}");
+        // Uneven counts are fine now: 4 cores over 3 threads.
+        base().threads(3).build().unwrap();
         let err = base()
             .observe(ProgressObserver::default())
             .threads(2)
@@ -649,21 +689,24 @@ mod tests {
 
     #[test]
     fn threaded_run_matches_serial_through_the_builder() {
-        let mk = |threads: u32| {
+        let mk = |threads: u32, mode: PdesMode| {
             SimBuilder::small(4, ProtocolKind::Tardis)
                 .named_workload("lu-c")
                 .trace_len(96)
                 .threads(threads)
+                .pdes_mode(mode)
                 .run()
                 .unwrap()
         };
-        let serial = mk(1);
-        let par = mk(4);
-        assert_eq!(par.stats, serial.stats);
-        assert_eq!(par.log.records, serial.log.records);
-        assert_eq!(par.core_finish, serial.core_finish);
-        par.check_sc().unwrap();
-        assert_eq!(par.stats.parallel.threads, 4);
+        let serial = mk(1, PdesMode::Epoch);
+        for mode in [PdesMode::Epoch, PdesMode::NullMsg] {
+            let par = mk(4, mode);
+            assert_eq!(par.stats, serial.stats);
+            assert_eq!(par.log.records, serial.log.records);
+            assert_eq!(par.core_finish, serial.core_finish);
+            par.check_sc().unwrap();
+            assert_eq!(par.stats.parallel.threads, 4);
+        }
     }
 
     #[test]

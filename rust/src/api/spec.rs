@@ -16,7 +16,8 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::config::{
-    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, SystemConfig,
+    Consistency, CoreModel, LeasePolicyKind, PdesMode, ProtocolKind, SocketInterleave,
+    SystemConfig,
 };
 use crate::trace::TraceParams;
 use crate::workloads;
@@ -67,6 +68,14 @@ pub struct SimSpec {
     /// bit-for-bit identical either way, so this is a *performance*
     /// knob and deliberately absent from [`SimSpec::variant_label`].
     pub threads: Option<u32>,
+    /// PDES synchronization mode for threaded runs; `None` keeps the
+    /// builder default (lockstep epochs).  Performance knob, absent
+    /// from labels like `threads`.
+    pub pdes_mode: Option<PdesMode>,
+    /// Rebalance interval in lookahead windows for threaded runs;
+    /// `None`/`Some(0)` disables migration.  Performance knob, absent
+    /// from labels like `threads`.
+    pub rebalance_every: Option<u32>,
 }
 
 impl SimSpec {
@@ -91,6 +100,8 @@ impl SimSpec {
             trace_len: None,
             seed: None,
             threads: None,
+            pdes_mode: None,
+            rebalance_every: None,
         }
     }
 
@@ -165,6 +176,12 @@ impl SimSpec {
         }
         if let Some(t) = self.threads {
             b = b.threads(t);
+        }
+        if let Some(m) = self.pdes_mode {
+            b = b.pdes_mode(m);
+        }
+        if let Some(r) = self.rebalance_every {
+            b = b.rebalance_every(r);
         }
         // NUMA knobs are inert on a 1-socket system: reject them
         // loudly instead of simulating flat while the spec looks
@@ -287,10 +304,19 @@ mod tests {
         assert_eq!(par.stats, serial.stats);
         assert_eq!(par.core_finish, serial.core_finish);
         assert_eq!(s.variant_label(), "tardis", "threads must not leak into labels");
+        // Null-message mode and rebalancing lower through the spec and
+        // keep the same bit-for-bit contract, without leaking into
+        // labels either.
+        s.pdes_mode = Some(PdesMode::NullMsg);
+        s.rebalance_every = Some(2);
+        let nm = s.builder().unwrap().run().unwrap();
+        assert_eq!(nm.stats, serial.stats);
+        assert_eq!(nm.core_finish, serial.core_finish);
+        assert_eq!(s.variant_label(), "tardis", "pdes knobs must not leak into labels");
         // Bad thread counts surface through the builder validation.
-        s.threads = Some(3);
+        s.threads = Some(9);
         let err = s.builder().unwrap().build().unwrap_err().to_string();
-        assert!(err.contains("do not shard evenly"), "{err}");
+        assert!(err.contains("exceed the 4 cores"), "{err}");
     }
 
     #[test]

@@ -32,6 +32,44 @@ impl ProtocolKind {
     }
 }
 
+/// Synchronization protocol for the sharded PDES engine
+/// ([`crate::sim::pdes`], DESIGN.md §11.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PdesMode {
+    /// PR-8 conservative windows: all shards advance in lockstep
+    /// through two-barrier epochs sized by the global minimum
+    /// lookahead.  Cheap per epoch, but a short lookahead anywhere
+    /// rate-limits every shard.
+    Epoch,
+    /// Chandy-Misra-Bryant null messages: per-edge channel clocks let
+    /// each shard advance independently to the min over its inbound
+    /// bounds, so a quiet or distant shard no longer gates the fleet.
+    NullMsg,
+    /// Pick per run: NullMsg when the derived global lookahead is
+    /// small relative to the per-edge windows (flat meshes), Epoch
+    /// when the windows are uniform anyway.
+    Auto,
+}
+
+impl PdesMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "epoch" => Some(Self::Epoch),
+            "nullmsg" => Some(Self::NullMsg),
+            "auto" => Some(Self::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Epoch => "epoch",
+            Self::NullMsg => "nullmsg",
+            Self::Auto => "auto",
+        }
+    }
+}
+
 /// Core microarchitecture model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CoreModel {
@@ -441,6 +479,14 @@ mod tests {
             assert_eq!(LeasePolicyKind::parse(k.name()), Some(k));
         }
         assert_eq!(LeasePolicyKind::parse("oracle"), None);
+    }
+
+    #[test]
+    fn pdes_mode_parse_roundtrip() {
+        for m in [PdesMode::Epoch, PdesMode::NullMsg, PdesMode::Auto] {
+            assert_eq!(PdesMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PdesMode::parse("optimistic"), None);
     }
 
     #[test]

@@ -22,7 +22,7 @@ use super::experiments::{
     fig4_variants, tardis_lease_variants, EvalCtx, Variant, LEASE_MATRIX_CORES,
 };
 use crate::api::SimBuilder;
-use crate::config::{LeasePolicyKind, ProtocolKind, TopologyConfig};
+use crate::config::{LeasePolicyKind, PdesMode, ProtocolKind, TopologyConfig};
 use crate::workloads::all as all_workloads;
 
 /// Schema identifier stamped into every report.
@@ -55,6 +55,16 @@ pub struct BenchPoint {
     /// Σ per-shard busy time / wall time, in (0, threads] — from the
     /// best-wall iteration.  0 on serial points.
     pub parallel_efficiency: f64,
+    /// Null messages (channel-clock promises without real mail) the
+    /// run exchanged — 0 in epoch mode and on serial points.  Host
+    /// timing-dependent, so reported from the best-wall iteration.
+    pub null_msgs: u64,
+    /// Count-driven repartitions the run performed (deterministic:
+    /// driven by simulated event counts, identical every iteration).
+    pub rebalances: u64,
+    /// Max/mean per-shard busy-time ratio from the best-wall
+    /// iteration, >= 1.0 (1.0 = perfectly even).  0 on serial points.
+    pub imbalance: f64,
     /// Best host wall time over the iterations, seconds.
     pub wall_s: f64,
 }
@@ -160,12 +170,14 @@ impl BenchReport {
             } else {
                 String::new()
             };
-            // Threaded points record the shard count and efficiency;
-            // serial points keep the pre-PDES shape.
+            // Threaded points record the shard count, efficiency, and
+            // the PR-9 sync/balance counters; serial points keep the
+            // pre-PDES shape.
             let pdes = if p.threads > 1 {
                 format!(
-                    ", \"threads\": {}, \"parallel_efficiency\": {:.4}",
-                    p.threads, p.parallel_efficiency
+                    ", \"threads\": {}, \"parallel_efficiency\": {:.4}, \"null_msgs\": {}, \
+                     \"rebalances\": {}, \"imbalance\": {:.4}",
+                    p.threads, p.parallel_efficiency, p.null_msgs, p.rebalances, p.imbalance
                 )
             } else {
                 String::new()
@@ -208,7 +220,7 @@ impl BenchReport {
 }
 
 /// Options for a macro-bench run beyond the sweep shape.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct BenchOpts {
     /// Lease-policy override applied to every Tardis variant (the CI
     /// bench-smoke job runs a `Predictive` point this way).
@@ -220,6 +232,25 @@ pub struct BenchOpts {
     /// `Default` yields 0 so existing `..Default::default()` call
     /// sites stay serial).
     pub threads: u32,
+    /// PDES synchronization mode for threaded points; non-Epoch modes
+    /// suffix the report label (`-nullmsg`/`-auto`) so trajectory
+    /// records stay distinguishable.
+    pub pdes_mode: PdesMode,
+    /// Count-driven rebalance interval in lookahead windows (0 = off);
+    /// nonzero values suffix the label with `-rb<n>`.
+    pub rebalance: u32,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self {
+            policy: None,
+            topology: TopologyConfig::default(),
+            threads: 0,
+            pdes_mode: PdesMode::Epoch,
+            rebalance: 0,
+        }
+    }
 }
 
 /// Run the fig-4-shaped macro bench at `n_cores` (the trajectory
@@ -247,7 +278,8 @@ pub fn run_macro_bench_with_opts(
         }
     }
     let threads = opts.threads.max(1);
-    let points = measure_points(ctx, n_cores, iters, &variants, threads)?;
+    let points =
+        measure_points(ctx, n_cores, iters, &variants, threads, opts.pdes_mode, opts.rebalance)?;
     let mut label = format!("fig4-{n_cores}c");
     if let Some(p) = opts.policy {
         label.push_str(&format!("-{}", p.name()));
@@ -260,6 +292,12 @@ pub fn run_macro_bench_with_opts(
     }
     if threads > 1 {
         label.push_str(&format!("-t{threads}"));
+        if opts.pdes_mode != PdesMode::Epoch {
+            label.push_str(&format!("-{}", opts.pdes_mode.name()));
+        }
+        if opts.rebalance > 0 {
+            label.push_str(&format!("-rb{}", opts.rebalance));
+        }
     }
     Ok(report_shell(label, n_cores, iters, ctx.scale_down, opts.topology, points))
 }
@@ -278,7 +316,7 @@ pub fn run_lease_matrix_bench(ctx: &mut EvalCtx, iters: u32) -> Result<BenchRepo
         for v in &mut variants {
             v.label = format!("{}-{n_cores}c", v.label);
         }
-        points.extend(measure_points(ctx, n_cores, iters, &variants, 1)?);
+        points.extend(measure_points(ctx, n_cores, iters, &variants, 1, PdesMode::Epoch, 0)?);
     }
     Ok(report_shell(
         "lease-matrix".to_string(),
@@ -324,6 +362,8 @@ fn measure_points(
     iters: u32,
     variants: &[Variant],
     threads: u32,
+    pdes_mode: PdesMode,
+    rebalance: u32,
 ) -> Result<Vec<BenchPoint>> {
     ensure!(iters > 0, "bench needs at least one iteration");
     let mut points = Vec::new();
@@ -332,11 +372,16 @@ fn measure_points(
         for v in variants {
             let mut best_wall = f64::INFINITY;
             let mut best_eff = 0.0;
+            let mut best_null = 0u64;
+            let mut best_reb = 0u64;
+            let mut best_imb = 0.0;
             let mut first: Option<crate::stats::SimStats> = None;
             for _ in 0..iters {
                 let report = SimBuilder::from_config(v.cfg.clone())
                     .workload_arc(std::sync::Arc::clone(&w))
                     .threads(threads)
+                    .pdes_mode(pdes_mode)
+                    .rebalance_every(rebalance)
                     .run()?;
                 match &first {
                     None => first = Some(report.stats.clone()),
@@ -353,6 +398,9 @@ fn measure_points(
                 if wall < best_wall {
                     best_wall = wall;
                     best_eff = report.stats.parallel.efficiency();
+                    best_null = report.stats.parallel.null_msgs;
+                    best_reb = report.stats.parallel.rebalances;
+                    best_imb = report.stats.parallel.imbalance();
                 }
             }
             let stats = first.unwrap();
@@ -367,6 +415,9 @@ fn measure_points(
                 inter_socket_msgs: stats.socket.inter_msgs,
                 threads,
                 parallel_efficiency: if threads > 1 { best_eff } else { 0.0 },
+                null_msgs: if threads > 1 { best_null } else { 0 },
+                rebalances: if threads > 1 { best_reb } else { 0 },
+                imbalance: if threads > 1 { best_imb } else { 0.0 },
                 wall_s: best_wall,
             });
         }
@@ -418,6 +469,7 @@ mod tests {
         let opts = BenchOpts {
             policy: Some(crate::config::LeasePolicyKind::Predictive { max_lease: 80 }),
             topology: TopologyConfig { sockets: 2, numa_ratio: 4, ..TopologyConfig::default() },
+            ..BenchOpts::default()
         };
         let r = run_macro_bench_with_opts(&mut ctx, 2, 1, opts).unwrap();
         assert_eq!(r.label, "fig4-2c-predictive-s2r4");
@@ -473,12 +525,38 @@ mod tests {
             r.points.iter().all(|p| p.parallel_efficiency > 0.0 && p.parallel_efficiency <= 2.0),
             "efficiency must land in (0, threads]"
         );
+        assert!(
+            r.points.iter().all(|p| p.imbalance >= 1.0),
+            "max/mean busy ratio is >= 1 by construction"
+        );
+        assert!(
+            r.points.iter().all(|p| p.null_msgs == 0),
+            "epoch mode exchanges no null messages"
+        );
         let j = r.to_json();
         assert!(j.contains("\"threads\": 2"));
         assert!(j.contains("\"parallel_efficiency\""));
+        assert!(j.contains("\"null_msgs\""));
+        assert!(j.contains("\"rebalances\""));
+        assert!(j.contains("\"imbalance\""));
         // Serial reports keep the pre-PDES point shape.
         let flat = tiny_report().to_json();
         assert!(!flat.contains("parallel_efficiency"));
+        assert!(!flat.contains("null_msgs"));
+    }
+
+    #[test]
+    fn nullmsg_bench_labels_and_counts_null_messages() {
+        let mut ctx = EvalCtx::new(None, 1);
+        ctx.scale_down = 32;
+        let opts =
+            BenchOpts { threads: 2, pdes_mode: PdesMode::NullMsg, rebalance: 4, ..BenchOpts::default() };
+        let r = run_macro_bench_with_opts(&mut ctx, 2, 1, opts).unwrap();
+        assert_eq!(r.label, "fig4-2c-t2-nullmsg-rb4");
+        assert!(
+            r.points.iter().any(|p| p.null_msgs > 0),
+            "a null-message run must exchange some channel-clock promises"
+        );
     }
 
     #[test]

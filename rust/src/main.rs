@@ -27,7 +27,8 @@ use anyhow::{anyhow, bail, Result};
 
 use tardis_dsm::api::{SimBuilder, SimSpec};
 use tardis_dsm::config::{
-    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, TopologyConfig,
+    Consistency, CoreModel, LeasePolicyKind, PdesMode, ProtocolKind, SocketInterleave,
+    TopologyConfig,
 };
 use tardis_dsm::coordinator::experiments::{self, EvalCtx};
 use tardis_dsm::coordinator::report::Table;
@@ -165,6 +166,7 @@ USAGE:
              [--no-spec] [--delta-bits N] [--scale-down N] [--progress N]
              [--seed N] [--sockets N] [--numa-ratio N]
              [--interleave line|block] [--threads N]
+             [--pdes-mode epoch|nullmsg|auto] [--rebalance N]
   tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7|lease|numa>
              [--threads N] [--scale-down N] [--out DIR]
   tardis litmus           run the litmus suite under all three protocols
@@ -180,10 +182,14 @@ USAGE:
   tardis bench [--suite fig4|lease] [--cores N] [--iters N] [--scale-down N]
                [--out FILE] [--lease-policy static|dynamic|predictive]
                [--sockets N] [--numa-ratio N] [--threads N]
+               [--pdes-mode epoch|nullmsg|auto] [--rebalance N]
                           macro benchmark (fig-4 sweep, timed serially;
-                          --threads N times the sharded PDES engine and
-                          records its parallel efficiency); writes the
-                          machine-readable BENCH_*.json record
+                          --threads N times the sharded PDES engine —
+                          epoch-barrier or null-message synchronization,
+                          optional count-driven rebalancing — and
+                          records its parallel efficiency and shard
+                          imbalance); writes the machine-readable
+                          BENCH_*.json record
   tardis serve [--addr HOST:PORT | --port N] [--workers N]
                           simulation-as-a-service: long-lived batch sweep
                           server (newline-delimited JSON, columnar
@@ -255,6 +261,16 @@ fn spec_from_args(args: &Args) -> Result<SimSpec> {
     if args.has("threads") {
         spec.threads = Some(args.get_u64("threads", 1)? as u32);
     }
+    if args.has("pdes-mode") {
+        let m = args.get_str("pdes-mode", "epoch")?;
+        spec.pdes_mode = Some(
+            PdesMode::parse(m)
+                .ok_or_else(|| anyhow!("unknown pdes mode {m:?} (epoch|nullmsg|auto)"))?,
+        );
+    }
+    if args.has("rebalance") {
+        spec.rebalance_every = Some(args.get_u64("rebalance", 0)? as u32);
+    }
     Ok(spec)
 }
 
@@ -277,6 +293,8 @@ fn cmd_run(args: &Args) -> Result<()> {
             "numa-ratio",
             "interleave",
             "threads",
+            "pdes-mode",
+            "rebalance",
         ],
         &["ooo", "no-spec"],
     )?;
@@ -460,6 +478,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
             "sockets",
             "numa-ratio",
             "threads",
+            "pdes-mode",
+            "rebalance",
         ],
         &[],
     )?;
@@ -473,6 +493,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
     let threads = args.get_u64("threads", 1)? as u32;
     if threads == 0 {
         bail!("--threads must be >= 1");
+    }
+    let pdes_mode = if args.has("pdes-mode") {
+        let m = args.get_str("pdes-mode", "epoch")?;
+        PdesMode::parse(m).ok_or_else(|| anyhow!("unknown pdes mode {m:?} (epoch|nullmsg|auto)"))?
+    } else {
+        PdesMode::Epoch
+    };
+    let rebalance = args.get_u64("rebalance", 0)? as u32;
+    if (args.has("pdes-mode") || args.has("rebalance")) && threads <= 1 {
+        bail!("--pdes-mode/--rebalance have no effect without --threads >= 2");
     }
     let policy = if args.has("lease-policy") {
         let p = args.get_str("lease-policy", "static")?;
@@ -508,14 +538,23 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 &mut ctx,
                 n_cores,
                 iters,
-                tardis_dsm::coordinator::bench::BenchOpts { policy, topology, threads },
+                tardis_dsm::coordinator::bench::BenchOpts {
+                    policy,
+                    topology,
+                    threads,
+                    pdes_mode,
+                    rebalance,
+                },
             )?
         }
         "lease" => {
             // The lease suite fixes its own grid (16/64/256 cores,
             // every policy, flat fabric): reject knobs it would
             // otherwise silently drop.
-            for flag in ["cores", "lease-policy", "sockets", "numa-ratio", "threads"] {
+            for flag in
+                ["cores", "lease-policy", "sockets", "numa-ratio", "threads", "pdes-mode",
+                 "rebalance"]
+            {
                 if args.has(flag) {
                     bail!("--{flag} does not apply to `bench --suite lease` \
                            (the suite sweeps its own fixed grid)");

@@ -37,6 +37,17 @@ impl Dram {
         self.accesses += 1;
         start + self.latency
     }
+
+    /// Next-free cycle of controller `mc`'s service slot (tile
+    /// migration: the slot travels with the controller's tile).
+    pub(crate) fn slot(&self, mc: McId) -> Cycle {
+        self.next_free[mc as usize % self.next_free.len()]
+    }
+
+    pub(crate) fn set_slot(&mut self, mc: McId, t: Cycle) {
+        let idx = mc as usize % self.next_free.len();
+        self.next_free[idx] = t;
+    }
 }
 
 #[cfg(test)]

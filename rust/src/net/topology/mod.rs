@@ -20,7 +20,7 @@
 //! as the inter-socket cost grows.
 
 use super::mesh::Mesh;
-use super::message::{Message, Node};
+use super::message::{Message, MsgKind, Node};
 use crate::config::SystemConfig;
 use crate::types::{CoreId, Cycle, SliceId};
 
@@ -120,6 +120,24 @@ impl Topology {
             Self::Flat(m) => m.tile_of(node),
             Self::Numa(f) => f.tile_of(node),
         }
+    }
+
+    /// Minimum delivery latency between two tiles: the smallest
+    /// (1-flit control) message probed over the tiles' resident core
+    /// pair.  Route timing depends only on the endpoint tiles and the
+    /// flit count, so this is the tight per-edge bound the PDES
+    /// lookahead table is built from — asymmetric on NUMA fabrics
+    /// (intra-socket tile pairs are much closer than cross-socket
+    /// ones), which is exactly what null-message mode exploits.
+    pub fn probe_latency(&self, tile_a: u32, tile_b: u32) -> Cycle {
+        let m = Message {
+            src: Node::Core(tile_a),
+            dst: Node::Core(tile_b),
+            addr: 0,
+            requester: 0,
+            kind: MsgKind::GetS,
+        };
+        self.route(&m).latency
     }
 }
 
@@ -403,6 +421,26 @@ mod tests {
         // Flat systems never stretch, whatever the ratio says.
         let flat = NumaView { n_sockets: 1, tiles_per_socket: 64, numa_ratio: 4 };
         assert_eq!(flat.lease_stretch(0, 63), 1);
+    }
+
+    /// `probe_latency` is the 1-flit control-message bound, and on
+    /// NUMA fabrics it is asymmetric across the socket boundary:
+    /// intra-socket tile pairs are strictly closer than cross-socket
+    /// pairs (the per-edge lookahead windows null-message mode uses).
+    #[test]
+    fn probe_latency_reflects_socket_distance() {
+        let mut cfg = SystemConfig::default(); // 64 cores
+        let flat = Topology::new(&cfg);
+        assert_eq!(flat.probe_latency(0, 0), 1, "same tile: controller hand-off");
+        assert_eq!(flat.probe_latency(0, 1), 2 + 1, "one hop + one flit");
+        cfg.topology = TopologyConfig { sockets: 2, numa_ratio: 4, ..cfg.topology };
+        let numa = Topology::new(&cfg);
+        let intra = numa.probe_latency(0, 1);
+        let cross = numa.probe_latency(0, 32);
+        assert!(
+            intra < cross,
+            "intra-socket edge ({intra}) must be tighter than cross-socket ({cross})"
+        );
     }
 
     #[test]

@@ -18,6 +18,11 @@ impl Ackwise {
     pub fn new(sys: &SystemConfig) -> Self {
         Self(Msi::with_limit(sys, Some(sys.ackwise.num_pointers)))
     }
+
+    /// Tile-state migration delegates to the wrapped directory.
+    pub(crate) fn inner_mut(&mut self) -> &mut Msi {
+        &mut self.0
+    }
 }
 
 impl Coherence for Ackwise {

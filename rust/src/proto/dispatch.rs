@@ -12,9 +12,17 @@ use crate::net::Message;
 use crate::types::{CoreId, LineAddr, Ts};
 
 use super::ackwise::Ackwise;
-use super::msi::Msi;
-use super::tardis::Tardis;
+use super::msi::{Msi, MsiTile};
+use super::tardis::{Tardis, TardisTile};
 use super::{AccessOutcome, Coherence, MemOp, Probe, ProtoCtx, SpinHint};
+
+/// A tile's protocol-private state, opaque to the engine, carried
+/// across shards when the PDES rebalancer migrates the tile.
+#[derive(Debug, Clone)]
+pub(crate) enum TileProtoState {
+    Tardis(Box<TardisTile>),
+    Msi(Box<MsiTile>),
+}
 
 /// The statically dispatched union of the coherence protocols.  Adding
 /// a protocol variant (MESI, Tardis 2.0 leases) means adding an enum
@@ -53,6 +61,26 @@ impl ProtocolDispatch {
             Self::Tardis(_) => ProtocolKind::Tardis,
             Self::Msi(_) => ProtocolKind::Msi,
             Self::Ackwise(_) => ProtocolKind::Ackwise,
+        }
+    }
+
+    /// Snapshot tile `t`'s protocol-private state for shard migration.
+    pub(crate) fn take_tile(&mut self, t: u32) -> TileProtoState {
+        match self {
+            Self::Tardis(p) => TileProtoState::Tardis(Box::new(p.take_tile(t))),
+            Self::Msi(p) => TileProtoState::Msi(Box::new(p.take_tile(t))),
+            Self::Ackwise(p) => TileProtoState::Msi(Box::new(p.inner_mut().take_tile(t))),
+        }
+    }
+
+    /// Install a migrated tile snapshot.  Panics on a protocol
+    /// mismatch — every shard runs the same configured protocol.
+    pub(crate) fn install_tile(&mut self, t: u32, tile: TileProtoState) {
+        match (self, tile) {
+            (Self::Tardis(p), TileProtoState::Tardis(s)) => p.install_tile(t, *s),
+            (Self::Msi(p), TileProtoState::Msi(s)) => p.install_tile(t, *s),
+            (Self::Ackwise(p), TileProtoState::Msi(s)) => p.inner_mut().install_tile(t, *s),
+            _ => panic!("migrated tile state does not match the shard's protocol"),
         }
     }
 }

@@ -9,6 +9,7 @@ pub mod tardis;
 pub mod ts;
 
 pub use dispatch::ProtocolDispatch;
+pub(crate) use dispatch::TileProtoState;
 
 use crate::net::Message;
 use crate::stats::SimStats;

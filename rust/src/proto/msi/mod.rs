@@ -147,6 +147,26 @@ impl Msi {
             Some(k) => Sharers::new_ptrs(k),
         }
     }
+
+    /// Snapshot tile `t`'s protocol state (L1 of core t, directory
+    /// slice t) for migration to another shard.
+    pub(crate) fn take_tile(&mut self, t: u32) -> MsiTile {
+        MsiTile { l1: self.l1[t as usize].clone(), dir: self.dir[t as usize].clone() }
+    }
+
+    /// Overwrite tile `t`'s state with a snapshot from another shard.
+    pub(crate) fn install_tile(&mut self, t: u32, tile: MsiTile) {
+        self.l1[t as usize] = tile.l1;
+        self.dir[t as usize] = tile.dir;
+    }
+}
+
+/// Everything the directory protocol keeps per tile, packaged for
+/// shard migration.
+#[derive(Debug, Clone)]
+pub(crate) struct MsiTile {
+    l1: MsiL1,
+    dir: DirSlice,
 }
 
 impl Coherence for Msi {

@@ -213,6 +213,33 @@ impl Tardis {
     pub fn pts(&self, core: CoreId) -> Ts {
         self.l1[core as usize].pts
     }
+
+    /// Snapshot tile `t`'s protocol state (L1 of core t, TM of slice
+    /// t, livelock streaks of core t) for migration to another shard.
+    /// The source copy is left in place — the losing shard never
+    /// dispatches for this tile again.
+    pub(crate) fn take_tile(&mut self, t: u32) -> TardisTile {
+        TardisTile {
+            l1: self.l1[t as usize].clone(),
+            tm: self.tm[t as usize].clone(),
+            streaks: self.guard.take_core_streaks(t),
+        }
+    }
+
+    /// Overwrite tile `t`'s state with a snapshot from another shard.
+    pub(crate) fn install_tile(&mut self, t: u32, tile: TardisTile) {
+        self.l1[t as usize] = tile.l1;
+        self.tm[t as usize] = tile.tm;
+        self.guard.install_core_streaks(t, tile.streaks);
+    }
+}
+
+/// Everything Tardis keeps per tile, packaged for shard migration.
+#[derive(Debug, Clone)]
+pub(crate) struct TardisTile {
+    l1: L1,
+    tm: Tm,
+    streaks: Vec<(LineAddr, u32)>,
 }
 
 impl Coherence for Tardis {

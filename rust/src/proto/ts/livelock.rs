@@ -60,6 +60,30 @@ impl LivelockGuard {
         self.streaks.remove(&(core, addr));
     }
 
+    /// Remove and return this core's active streaks, sorted by line
+    /// address (tile migration: the map iterates in hash order, so the
+    /// extraction must impose a canonical order itself).
+    pub(crate) fn take_core_streaks(&mut self, core: CoreId) -> Vec<(LineAddr, u32)> {
+        let mut out: Vec<(LineAddr, u32)> = self
+            .streaks
+            .iter()
+            .filter(|((c, _), _)| *c == core)
+            .map(|((_, a), s)| (*a, *s))
+            .collect();
+        out.sort_unstable_by_key(|&(a, _)| a);
+        self.streaks.retain(|(c, _), _| *c != core);
+        out
+    }
+
+    /// Install streaks for a core arriving from another shard,
+    /// replacing any stale local entries for it.
+    pub(crate) fn install_core_streaks(&mut self, core: CoreId, v: Vec<(LineAddr, u32)>) {
+        self.streaks.retain(|(c, _), _| *c != core);
+        for (addr, s) in v {
+            self.streaks.insert((core, addr), s);
+        }
+    }
+
     /// May this core still speculate through an expired load on
     /// `addr`, or has the line been escalated to blocking demands?
     pub fn allow_speculation(&self, core: CoreId, addr: LineAddr) -> bool {

@@ -13,7 +13,9 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::api::SimSpec;
-use crate::config::{Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave};
+use crate::config::{
+    Consistency, CoreModel, LeasePolicyKind, PdesMode, ProtocolKind, SocketInterleave,
+};
 
 use super::json::{self, Json};
 
@@ -135,6 +137,8 @@ const POINT_KEYS: &[&str] = &[
     "trace_len",
     "seed",
     "threads",
+    "pdes_mode",
+    "rebalance_every",
 ];
 
 fn decode_point(v: &Json, session_seed: Option<u64>) -> Result<SimSpec> {
@@ -203,6 +207,14 @@ fn decode_point(v: &Json, session_seed: Option<u64>) -> Result<SimSpec> {
     // Engine threads per point: a pure perf knob — results are
     // bit-for-bit identical to the serial run (tests/serve.rs).
     spec.threads = opt_u32(v, "threads")?;
+    if let Some(m) = v.get("pdes_mode").filter(|j| !j.is_null()) {
+        let s = m.as_str().ok_or_else(|| anyhow!("\"pdes_mode\" must be a string"))?;
+        spec.pdes_mode = Some(
+            PdesMode::parse(s)
+                .ok_or_else(|| anyhow!("unknown pdes_mode {s:?} (epoch, nullmsg, auto)"))?,
+        );
+    }
+    spec.rebalance_every = opt_u32(v, "rebalance_every")?;
     Ok(spec)
 }
 
@@ -300,6 +312,14 @@ mod tests {
                 "must be a u32",
             ),
             (
+                r#"{"type":"sweep","id":"b","points":[{"workload":"fft","pdes_mode":"turbo"}]}"#,
+                "unknown pdes_mode",
+            ),
+            (
+                r#"{"type":"sweep","id":"b","points":[{"workload":"fft","rebalance_every":"x"}]}"#,
+                "must be a u32",
+            ),
+            (
                 r#"{"type":"sweep","id":"b","points":[{"workload":"fft","cores":0}]}"#,
                 "at least one core",
             ),
@@ -340,5 +360,18 @@ mod tests {
         let Request::Sweep(s) = decode(line).unwrap() else { panic!() };
         assert_eq!(s.points[0].threads, Some(2));
         assert_eq!(s.points[1].threads, None);
+    }
+
+    #[test]
+    fn pdes_knobs_decode_per_point() {
+        let line = r#"{"type":"sweep","id":"b","points":[
+            {"workload":"fft","cores":4,"threads":2,"pdes_mode":"nullmsg",
+             "rebalance_every":4},
+            {"workload":"fft","pdes_mode":null}]}"#;
+        let Request::Sweep(s) = decode(line).unwrap() else { panic!() };
+        assert_eq!(s.points[0].pdes_mode, Some(PdesMode::NullMsg));
+        assert_eq!(s.points[0].rebalance_every, Some(4));
+        assert_eq!(s.points[1].pdes_mode, None, "null reads as absent");
+        assert_eq!(s.points[1].rebalance_every, None);
     }
 }

@@ -15,11 +15,11 @@ use crate::api::observer::Observers;
 use crate::config::{CoreModel, SystemConfig};
 use crate::core::{inorder::InOrderCore, ooo::OooCore, CoreAction, CoreEnv, CoreUnit};
 use crate::hashing::FxHashMap;
-use crate::mem::Dram;
+use crate::mem::{Dram, SliceMap};
 use crate::net::{Message, MsgClass, MsgKind, Node, Topology};
 use crate::prog::checker::AccessLog;
 use crate::prog::Workload;
-use crate::proto::{Coherence, Completion, ProtoCtx, ProtocolDispatch};
+use crate::proto::{Coherence, Completion, ProtoCtx, ProtocolDispatch, TileProtoState};
 use crate::stats::SimStats;
 use crate::types::{Cycle, LineAddr};
 
@@ -39,21 +39,93 @@ impl ShardSpec {
     }
 }
 
-/// The PDES ownership rule, shared by the engine and the parallel
-/// driver: nodes shard by *tile* (the unit both fabrics route by), in
-/// contiguous blocks of `n_cores / count` tiles — so a shard owns a
-/// run of cores, their co-located LLC/TM slices, and the memory
-/// controllers homed on its tiles.  Under `Topology::Numa` with
-/// `count` = sockets this is exactly the socket partition; any
-/// divisor of the core count works on either fabric.  Two nodes on
-/// different shards always sit on different tiles, so every
-/// cross-shard message pays >= 1 mesh hop — the lookahead is never 0.
+/// A contiguous assignment of tiles to shards: shard `s` owns tiles
+/// `[starts[s], starts[s+1])`.  The unit of PDES ownership is the
+/// *tile* (the unit both fabrics route by), so a shard owns a run of
+/// cores, their co-located LLC/TM slices, and the memory controllers
+/// homed on its tiles.  Two nodes on different shards always sit on
+/// different tiles, so every cross-shard message pays >= 1 mesh hop —
+/// the lookahead is never 0.  Contiguity is what keeps that true
+/// under rebalancing: the dynamic load balancer only moves the block
+/// boundaries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct TilePartition {
+    /// `count + 1` block boundaries; `starts[0] == 0`, last == tiles.
+    pub(crate) starts: Vec<u32>,
+}
+
+impl TilePartition {
+    /// Even contiguous blocks; when `count` does not divide `n_tiles`
+    /// the first `n_tiles % count` shards take one extra tile (so the
+    /// last shards are the smaller ones).  For dividing counts this is
+    /// exactly the fixed PR-8 split `tile / (n_tiles / count)`.
+    pub(crate) fn balanced(n_tiles: u32, count: u32) -> Self {
+        assert!(count >= 1 && count <= n_tiles, "need 1 <= shards <= tiles");
+        let base = n_tiles / count;
+        let rem = n_tiles % count;
+        let mut starts = Vec::with_capacity(count as usize + 1);
+        let mut at = 0;
+        starts.push(0);
+        for s in 0..count {
+            at += base + u32::from(s < rem);
+            starts.push(at);
+        }
+        Self { starts }
+    }
+
+    /// Repartition from cumulative per-tile event counts: block
+    /// boundaries land where the weight prefix sums cross the even
+    /// per-shard share, clamped so every shard keeps at least one
+    /// tile.  A pure function of *simulated* counts — identical on
+    /// every host and at every thread schedule, which is what keeps
+    /// rebalancing decisions deterministic (DESIGN.md §11.6).
+    pub(crate) fn from_counts(counts: &[u64], count: u32) -> Self {
+        let n = counts.len() as u32;
+        assert!(count >= 1 && count <= n, "need 1 <= shards <= tiles");
+        let mut prefix = Vec::with_capacity(counts.len() + 1);
+        let mut acc = 0u64;
+        prefix.push(0u64);
+        for &c in counts {
+            // +1 per tile: all-idle stretches still spread out instead
+            // of collapsing every boundary onto the first hot tile.
+            acc += c + 1;
+            prefix.push(acc);
+        }
+        let total = acc;
+        let mut starts = Vec::with_capacity(count as usize + 1);
+        starts.push(0u32);
+        for s in 1..count {
+            let target = total * s as u64 / count as u64;
+            let raw = prefix.partition_point(|&p| p < target) as u32;
+            let lo = starts[s as usize - 1] + 1;
+            let hi = n - (count - s);
+            starts.push(raw.clamp(lo, hi));
+        }
+        starts.push(n);
+        Self { starts }
+    }
+
+    pub(crate) fn count(&self) -> u32 {
+        self.starts.len() as u32 - 1
+    }
+
+    /// Owned tile range `[lo, hi)` of shard `s`.
+    pub(crate) fn range(&self, s: u32) -> (u32, u32) {
+        (self.starts[s as usize], self.starts[s as usize + 1])
+    }
+
+    pub(crate) fn shard_of_tile(&self, tile: u32) -> u32 {
+        self.starts.partition_point(|&x| x <= tile) as u32 - 1
+    }
+}
+
+/// The static PDES ownership rule (balanced blocks), shared by the
+/// parallel driver's setup path and the sharded verify schedule.
 pub(crate) fn shard_of_node(topo: &Topology, n_cores: u32, count: u32, node: Node) -> u32 {
     if count <= 1 {
         return 0;
     }
-    let tiles_per_shard = n_cores / count;
-    topo.tile_of(node) / tiles_per_shard
+    TilePartition::balanced(n_cores, count).shard_of_tile(topo.tile_of(node))
 }
 
 /// Per-(src, dst) channel ordering: the NoC delivers messages between
@@ -98,6 +170,20 @@ impl ChannelClock {
             + self.node_index(dst) as usize;
         &mut self.clocks[i]
     }
+
+    /// Copy the full outbound row of flat node `src` (tile migration;
+    /// a row is written only by `src`'s owning shard).
+    fn row(&self, src: u32) -> Vec<Cycle> {
+        let n = self.n_nodes as usize;
+        let base = src as usize * n;
+        self.clocks[base..base + n].to_vec()
+    }
+
+    fn set_row(&mut self, src: u32, row: &[Cycle]) {
+        let n = self.n_nodes as usize;
+        let base = src as usize * n;
+        self.clocks[base..base + n].copy_from_slice(row);
+    }
 }
 
 /// Result of a completed simulation.
@@ -124,6 +210,33 @@ pub(crate) struct ShardOutput {
     pub core_finish: Vec<(u32, Cycle)>,
     /// Cycle of the last event this shard dispatched.
     pub last_now: Cycle,
+}
+
+/// Everything a tile owns, packaged when the load balancer moves it to
+/// another shard: the core, the protocol-private tile state, pending
+/// calendar events targeting the tile, the channel-clock rows and
+/// push-mark counters of the tile's reactors, and (for tiles hosting a
+/// memory controller) the DRAM service slot plus the controller's
+/// backing-image entries.  Stats do NOT migrate — they are commutative
+/// shard sums merged by `SimStats::absorb`, so it does not matter
+/// which shard accumulated them.
+pub(crate) struct TileMigration {
+    pub tile: u32,
+    core: CoreUnit,
+    core_finished: bool,
+    proto: TileProtoState,
+    /// Pending events for this tile, in `(cycle, key)` order.
+    pub events: Vec<(Cycle, PushKey, Event)>,
+    /// `(flat node index, full clock row)` for each reactor on the
+    /// tile.  Only *rows* move: `clock[src][dst]` is written solely by
+    /// `src`'s owner.
+    chan_rows: Vec<(u32, Vec<Cycle>)>,
+    /// `(flat node index, (cycle, next k))` PushKey counters.
+    marks: Vec<(u32, (Cycle, u64))>,
+    /// `(mc, service slot, backing-image entries sorted by address)`.
+    mcs: Vec<(u32, Cycle, Vec<(LineAddr, u64)>)>,
+    /// Cumulative simulated event count the tile carries with it.
+    tile_events: u64,
 }
 
 pub(crate) struct Engine {
@@ -172,6 +285,15 @@ pub(crate) struct Engine {
     last_now: Cycle,
     /// Cores this shard owns (== n_cores when serial).
     n_owned: u32,
+    /// Current tile -> shard assignment (rewritten on rebalance).
+    part: TilePartition,
+    /// Flat node index -> owning shard, derived from `part`.
+    node_shard: Vec<u32>,
+    /// Flat node index -> hosting tile (topology-fixed).
+    node_tile: Vec<u32>,
+    /// Cumulative *simulated* events dispatched per tile — the load
+    /// balancer's deterministic weight signal (never host timings).
+    tile_events: Vec<u64>,
 }
 
 impl Engine {
@@ -204,13 +326,10 @@ impl Engine {
             );
         }
         assert!(shard.count >= 1 && shard.index < shard.count, "bad shard spec {shard:?}");
-        if shard.count > 1 {
-            assert_eq!(
-                cfg.n_cores % shard.count,
-                0,
-                "core count must divide evenly into shards (SimBuilder validates this)"
-            );
-        }
+        assert!(
+            shard.count <= cfg.n_cores,
+            "shard count must not exceed the core count (SimBuilder validates this)"
+        );
         let proto = ProtocolDispatch::new(&cfg);
         let cores = (0..cfg.n_cores)
             .map(|id| match cfg.core_model {
@@ -220,8 +339,24 @@ impl Engine {
             .collect();
         let n_nodes = (2 * cfg.n_cores + cfg.n_mcs) as usize;
         let record_groups = shard.count > 1 && obs.sc_log_enabled();
+        let topology = Topology::new(&cfg);
+        let part = TilePartition::balanced(cfg.n_cores, shard.count);
+        let node_tile: Vec<u32> = (0..n_nodes as u32)
+            .map(|idx| {
+                let node = if idx < cfg.n_cores {
+                    Node::Core(idx)
+                } else if idx < 2 * cfg.n_cores {
+                    Node::Slice(idx - cfg.n_cores)
+                } else {
+                    Node::Mc(idx - 2 * cfg.n_cores)
+                };
+                topology.tile_of(node)
+            })
+            .collect();
+        let node_shard: Vec<u32> = node_tile.iter().map(|&t| part.shard_of_tile(t)).collect();
+        let (lo, hi) = part.range(shard.index);
         Self {
-            topology: Topology::new(&cfg),
+            topology,
             dram: Dram::new(cfg.n_mcs, cfg.dram_latency, cfg.dram_service_cycles),
             queue: EventQueue::new(),
             memory: FxHashMap::default(),
@@ -241,7 +376,11 @@ impl Engine {
             log_groups: Vec::new(),
             record_groups,
             last_now: 0,
-            n_owned: cfg.n_cores / shard.count,
+            n_owned: hi - lo,
+            part,
+            node_shard,
+            tile_events: vec![0; cfg.n_cores as usize],
+            node_tile,
             shard,
             cfg,
         }
@@ -259,8 +398,7 @@ impl Engine {
     #[inline]
     fn owns(&self, n: Node) -> bool {
         self.shard.count == 1
-            || shard_of_node(&self.topology, self.cfg.n_cores, self.shard.count, n)
-                == self.shard.index
+            || self.node_shard[self.node_index(n) as usize] == self.shard.index
     }
 
     /// Mint the canonical key for the next push: `(push cycle,
@@ -398,6 +536,124 @@ impl Engine {
         self.queue.push_keyed(at, key, Event::Deliver(msg));
     }
 
+    /// Cumulative per-tile simulated event counts (the rebalance
+    /// weight signal); only this shard's owned range is meaningful.
+    pub(crate) fn tile_counts(&self) -> &[u64] {
+        &self.tile_events
+    }
+
+    /// Adopt a new tile partition: recompute node ownership.  Valid
+    /// only at a rebalance rendezvous, after this shard's lost tiles
+    /// were extracted and before its gained tiles are installed.
+    pub(crate) fn set_partition(&mut self, part: &TilePartition) {
+        assert_eq!(part.count(), self.shard.count, "rebalance cannot change the shard count");
+        self.part = part.clone();
+        for idx in 0..self.node_tile.len() {
+            self.node_shard[idx] = self.part.shard_of_tile(self.node_tile[idx]);
+        }
+        let (lo, hi) = self.part.range(self.shard.index);
+        self.n_owned = hi - lo;
+    }
+
+    /// Pop every pending event in `(cycle, key)` order, emptying the
+    /// queue (rebalance: the caller partitions events by target tile,
+    /// then re-pushes keeps + gains in sorted order).
+    pub(crate) fn drain_events(&mut self) -> Vec<(Cycle, PushKey, Event)> {
+        self.queue.drain_all()
+    }
+
+    /// The tile an event targets (CoreWake -> the core's tile,
+    /// Deliver -> the destination node's tile).
+    pub(crate) fn event_tile(&self, ev: &Event) -> u32 {
+        match ev {
+            Event::CoreWake(c) => self.node_tile[*c as usize],
+            Event::Deliver(m) => self.node_tile[self.node_index(m.dst) as usize],
+        }
+    }
+
+    /// Re-push drained/migrated events.  Must be sorted by `(cycle,
+    /// key)`: the first push rewinds the empty queue's cursor, and
+    /// sorted order keeps every later push at or beyond it.
+    pub(crate) fn push_events(&mut self, events: Vec<(Cycle, PushKey, Event)>) {
+        for (t, key, ev) in events {
+            self.queue.push_keyed(t, key, ev);
+        }
+    }
+
+    /// Package tile `tile` for migration to another shard.  `events`
+    /// is the tile's slice of this shard's drained queue; `workload`
+    /// seeds the placeholder core left behind (never driven again
+    /// unless a later rebalance hands the tile back, which overwrites
+    /// it).  All remaining events fire at or beyond the rendezvous
+    /// checkpoint, so snapshotting reactor state here is cut-point
+    /// consistent.
+    pub(crate) fn extract_tile(
+        &mut self,
+        tile: u32,
+        events: Vec<(Cycle, PushKey, Event)>,
+        workload: &Workload,
+    ) -> TileMigration {
+        let fresh = match self.cfg.core_model {
+            CoreModel::InOrder => CoreUnit::InOrder(InOrderCore::new(tile, workload)),
+            CoreModel::OutOfOrder => CoreUnit::Ooo(OooCore::new(tile, workload)),
+        };
+        let core = std::mem::replace(&mut self.cores[tile as usize], fresh);
+        let core_finished = core.finished_at().is_some();
+        if core_finished {
+            self.finished -= 1;
+        }
+        let proto = self.proto.take_tile(tile);
+        let mut chan_rows = Vec::new();
+        let mut marks = Vec::new();
+        for idx in 0..self.node_tile.len() {
+            if self.node_tile[idx] == tile {
+                chan_rows.push((idx as u32, self.channel_clock.row(idx as u32)));
+                marks.push((idx as u32, self.push_marks[idx]));
+            }
+        }
+        let map = SliceMap::new(&self.cfg);
+        let mut mcs = Vec::new();
+        for m in 0..self.cfg.n_mcs {
+            if self.topology.tile_of(Node::Mc(m)) == tile {
+                let mut entries: Vec<(LineAddr, u64)> = self
+                    .memory
+                    .iter()
+                    .filter(|&(&a, _)| map.home_mc(a) == m)
+                    .map(|(&a, &v)| (a, v))
+                    .collect();
+                entries.sort_unstable_by_key(|&(a, _)| a);
+                self.memory.retain(|&a, _| map.home_mc(a) != m);
+                mcs.push((m, self.dram.slot(m), entries));
+            }
+        }
+        let tile_events = std::mem::take(&mut self.tile_events[tile as usize]);
+        TileMigration { tile, core, core_finished, proto, events, chan_rows, marks, mcs, tile_events }
+    }
+
+    /// Install a tile arriving from another shard, returning its
+    /// pending events for the caller to merge into the sorted re-push.
+    pub(crate) fn install_tile(&mut self, m: TileMigration) -> Vec<(Cycle, PushKey, Event)> {
+        self.cores[m.tile as usize] = m.core;
+        if m.core_finished {
+            self.finished += 1;
+        }
+        self.proto.install_tile(m.tile, m.proto);
+        for (idx, row) in &m.chan_rows {
+            self.channel_clock.set_row(*idx, row);
+        }
+        for &(idx, mark) in &m.marks {
+            self.push_marks[idx as usize] = mark;
+        }
+        for (mc, slot, entries) in m.mcs {
+            self.dram.set_slot(mc, slot);
+            for (a, v) in entries {
+                self.memory.insert(a, v);
+            }
+        }
+        self.tile_events[m.tile as usize] = m.tile_events;
+        m.events
+    }
+
     /// Tear down a completed shard into its mergeable output.
     pub(crate) fn finalize_shard(mut self) -> ShardOutput {
         let core_finish: Vec<(u32, Cycle)> = (0..self.cfg.n_cores)
@@ -420,6 +676,7 @@ impl Engine {
             Event::CoreWake(c) => *c,
             Event::Deliver(m) => self.node_index(m.dst),
         };
+        self.tile_events[self.node_tile[self.cur_src as usize] as usize] += 1;
         let log_start = if self.record_groups { self.obs.log_len() } else { 0 };
         self.dispatch_inner(now, ev);
         if self.record_groups {
@@ -571,7 +828,7 @@ impl Engine {
         *slot = t;
         let key = self.next_key();
         if self.shard.count > 1 && !self.owns(msg.dst) {
-            let dest = shard_of_node(&self.topology, self.cfg.n_cores, self.shard.count, msg.dst);
+            let dest = self.node_shard[self.node_index(msg.dst) as usize];
             self.outboxes[dest as usize].push((t, key, msg));
             return;
         }
@@ -912,6 +1169,41 @@ mod tests {
         let ntopo = Topology::new(&ncfg);
         for c in 0..8u32 {
             assert_eq!(shard_of_node(&ntopo, 8, 4, Node::Core(c)), c / 2);
+        }
+    }
+
+    /// Uneven shard counts: balanced blocks give the first shards the
+    /// extra tiles and every tile lands in exactly one shard.
+    #[test]
+    fn balanced_partition_handles_uneven_counts() {
+        let p = TilePartition::balanced(8, 3);
+        assert_eq!(p.starts, vec![0, 3, 6, 8]);
+        assert_eq!(p.count(), 3);
+        for t in 0..8 {
+            let s = p.shard_of_tile(t);
+            let (lo, hi) = p.range(s);
+            assert!(lo <= t && t < hi);
+        }
+        // 1 tile per shard is legal; 0 would not be.
+        assert_eq!(TilePartition::balanced(4, 4).starts, vec![0, 1, 2, 3, 4]);
+    }
+
+    /// Count-driven repartitioning isolates hot tiles, reproduces the
+    /// balanced split on uniform counts, and never starves a shard.
+    #[test]
+    fn count_driven_partition_shifts_toward_hot_tiles() {
+        let counts = [1000u64, 1, 1, 1, 1, 1, 1, 1];
+        let p = TilePartition::from_counts(&counts, 2);
+        assert_eq!(p.range(0), (0, 1), "hot tile isolated on its own shard");
+        assert_eq!(p.range(1), (1, 8));
+        let even = [5u64; 8];
+        assert_eq!(TilePartition::from_counts(&even, 4), TilePartition::balanced(8, 4));
+        // All weight on the last tile: earlier shards keep >= 1 tile.
+        let tail = [0u64, 0, 0, 0, 0, 0, 0, 1000];
+        let t = TilePartition::from_counts(&tail, 4);
+        for s in 0..4 {
+            let (lo, hi) = t.range(s);
+            assert!(hi > lo, "shard {s} starved: {:?}", t.starts);
         }
     }
 

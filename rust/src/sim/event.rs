@@ -309,6 +309,21 @@ impl EventQueue {
         }
     }
 
+    /// Pop every pending event in `(cycle, key)` order, leaving the
+    /// queue (and its message slab) empty.  The rebalance migration
+    /// path: at a rendezvous all pending events fire at or beyond the
+    /// checkpoint cycle, so the survivors can be re-pushed in sorted
+    /// order afterwards — the first push rewinds the cursor of the
+    /// now-empty queue, and sorted order keeps every later push at or
+    /// beyond it.
+    pub fn drain_all(&mut self) -> Vec<(Cycle, PushKey, Event)> {
+        let mut out = Vec::with_capacity(self.len());
+        while let Some(e) = self.pop_keyed() {
+            out.push(e);
+        }
+        out
+    }
+
     pub fn is_empty(&self) -> bool {
         self.ring_len == 0 && self.heap.is_empty()
     }

@@ -1,71 +1,138 @@
-//! Conservative-lookahead parallel simulation driver (PDES).
+//! Parallel simulation drivers (PDES): conservative epochs and
+//! Chandy-Misra-Bryant null messages, with deterministic load-balanced
+//! sharding.
 //!
-//! The engine shards by tile ([`shard_of_node`]): each worker thread
-//! owns a contiguous block of cores, their co-located LLC/TM slices,
-//! and the memory controllers homed there, with a private event queue
-//! and message slab.  Workers advance in lockstep epochs of width `L`
-//! = the minimum cross-shard message latency ([`lookahead`]): every
-//! event a shard dispatches in window `[T, T+L)` can only schedule
-//! cross-shard work at `now + latency >= T + L`, so events exchanged
-//! at the epoch barrier always land in a *future* window — conservative
-//! synchronization with zero rollbacks (cf. DESIGN.md §11 for the full
-//! soundness argument).
+//! The engine shards by tile: each worker thread owns a contiguous
+//! block of tiles ([`TilePartition`]) — cores, their co-located
+//! LLC/TM slices, and the memory controllers homed there — with a
+//! private event queue and message slab.  Two synchronization modes
+//! drive the shards ([`PdesMode`], DESIGN.md §11.5):
 //!
-//! Determinism is bit-for-bit: every push carries a canonical
-//! [`PushKey`] minted by the *sending* reactor, identical in serial
-//! and sharded runs, and per-shard queues pop in global `(cycle, key)`
-//! order restricted to the shard.  Since shards partition the
-//! reactors and a reactor's dispatch sequence fully determines its
-//! state, an N-thread run produces the same per-shard stats — merged
-//! with commutative sums — and the same access log — merged by
-//! sorting per-dispatch record groups on `(cycle, key)` — as the
-//! 1-thread run.  `tests/determinism.rs` asserts exactly this.
+//! * **Epoch** (PR-8): workers advance in lockstep windows of width
+//!   `L` = the global minimum cross-shard latency
+//!   ([`LookaheadTable::min`]).  Every event dispatched in `[T, T+L)`
+//!   schedules cross-shard work at `>= T+L`, so mail exchanged at the
+//!   two epoch barriers always lands in a future window.  Cheap per
+//!   epoch, but the single tightest shard boundary rate-limits every
+//!   shard.
+//!
+//! * **NullMsg**: classic CMB per-edge channel clocks.  After each
+//!   dispatch window a shard publishes, per outbound neighbor `j`, a
+//!   promise `clock[me][j] = min(next_fire, safe) + L(me, j)` — a
+//!   *null message* when no real mail was sent — and independently
+//!   advances to `safe = min_j clock[j][me]`.  Shards separated by
+//!   wide windows no longer wait on the globally tightest edge.
+//!
+//! Every `rebalance_every` lookahead windows the drivers may
+//! repartition tiles by *simulated* cumulative per-tile event counts
+//! ([`TilePartition::from_counts`]) — never host timings — migrating
+//! each moved tile's full state ([`TileMigration`]).  Because the
+//! weights and the cut cycle are pure simulated quantities, the
+//! decision sequence is identical across runs and thread schedules
+//! (DESIGN.md §11.6).
+//!
+//! Determinism is bit-for-bit in both modes: every push carries a
+//! canonical [`PushKey`] minted by the *sending* reactor, identical
+//! in serial and sharded runs, and per-shard queues pop in global
+//! `(cycle, key)` order restricted to the shard.  Since shards
+//! partition the reactors and a reactor's dispatch sequence fully
+//! determines its state, an N-thread run produces the same per-shard
+//! stats — merged with commutative sums — and the same access log —
+//! merged by sorting per-dispatch record groups on `(cycle, key)` —
+//! as the 1-thread run.  `tests/determinism.rs` asserts exactly this.
 
-use std::sync::{Barrier, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Barrier, Condvar, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::api::observer::Observers;
-use crate::config::SystemConfig;
-use crate::net::{Message, MsgKind, Node, Topology};
+use crate::config::{PdesMode, SystemConfig};
+use crate::net::{Message, Topology};
 use crate::prog::checker::AccessLog;
 use crate::prog::Workload;
 use crate::stats::{ParallelStats, ShardLoad, SimStats};
 use crate::types::Cycle;
 
-use super::engine::{shard_of_node, Engine, ShardSpec, SimResult};
-use super::event::PushKey;
+use super::engine::{Engine, ShardSpec, SimResult, TileMigration, TilePartition};
+use super::event::{Event, PushKey};
 
-/// The conservative lookahead for `shards` shards of `cfg`: the
-/// minimum fabric latency over all cross-shard node pairs, probed
-/// with a 1-flit control message (latency grows with flit count, so
-/// the control probe is the true minimum).  Under `Topology::Numa`
-/// with shards == sockets this is the inter-socket link latency; under
-/// `Flat` it is the smallest cross-boundary mesh crossing.  Always
-/// >= 1 because distinct shards occupy distinct tiles.
-pub(crate) fn lookahead(cfg: &SystemConfig, shards: u32) -> Cycle {
+/// Per-(src shard, dst shard) conservative windows: `get(i, j)` is the
+/// minimum fabric latency from any tile of shard `i` to any tile of
+/// shard `j`, probed with a 1-flit control message (latency grows with
+/// flit count, so the control probe is the true minimum).  On NUMA
+/// fabrics the matrix has the interesting asymmetry: intra-socket
+/// shard pairs get tight mesh windows while cross-socket pairs get the
+/// wide link window — exactly the spread null-message mode exploits.
+pub(crate) struct LookaheadTable {
+    count: u32,
+    /// Global minimum over all cross-shard pairs (the epoch window
+    /// width).  Always >= 1: distinct shards occupy distinct tiles.
+    pub min: Cycle,
+    m: Vec<Cycle>,
+}
+
+impl LookaheadTable {
+    pub(crate) fn get(&self, src: u32, dst: u32) -> Cycle {
+        self.m[(src * self.count + dst) as usize]
+    }
+}
+
+/// Build the lookahead matrix for `part`.  Route timing depends only
+/// on the endpoint tiles and flit count, so probing tile pairs covers
+/// every node kind (core, slice, MC) homed on them.
+pub(crate) fn lookahead_table(cfg: &SystemConfig, part: &TilePartition) -> LookaheadTable {
     let topo = Topology::new(cfg);
-    let mut nodes = Vec::new();
-    for c in 0..cfg.n_cores {
-        nodes.push(Node::Core(c));
-        nodes.push(Node::Slice(c));
-    }
-    for m in 0..cfg.n_mcs {
-        nodes.push(Node::Mc(m));
-    }
-    let mut min = Cycle::MAX;
-    for &a in &nodes {
-        let sa = shard_of_node(&topo, cfg.n_cores, shards, a);
-        for &b in &nodes {
-            if shard_of_node(&topo, cfg.n_cores, shards, b) == sa {
+    let count = part.count();
+    let mut m = vec![Cycle::MAX; (count as usize) * (count as usize)];
+    for src in 0..count {
+        let (slo, shi) = part.range(src);
+        for dst in 0..count {
+            if src == dst {
                 continue;
             }
-            let probe = Message { src: a, dst: b, addr: 0, requester: 0, kind: MsgKind::GetS };
-            min = min.min(topo.route(&probe).latency);
+            let (dlo, dhi) = part.range(dst);
+            let mut min = Cycle::MAX;
+            for a in slo..shi {
+                for b in dlo..dhi {
+                    min = min.min(topo.probe_latency(a, b));
+                }
+            }
+            m[(src * count + dst) as usize] = min;
         }
     }
-    min
+    let min = m.iter().copied().filter(|&x| x != Cycle::MAX).min().unwrap_or(Cycle::MAX);
+    LookaheadTable { count, min, m }
+}
+
+/// The global conservative lookahead for `shards` balanced shards of
+/// `cfg` — the epoch window width (the scalar face of the matrix).
+pub(crate) fn lookahead(cfg: &SystemConfig, shards: u32) -> Cycle {
+    lookahead_table(cfg, &TilePartition::balanced(cfg.n_cores, shards)).min
+}
+
+/// Resolve `Auto`: null messages pay off when the global minimum
+/// window is small relative to the per-edge windows (the matrix has
+/// spread, so most shard pairs could run far ahead of the epoch
+/// width).  When the matrix is uniform — e.g. shards == sockets, every
+/// cross-shard route crossing the same link — epochs already advance
+/// every shard at the per-edge bound and two barriers are cheaper
+/// than per-edge clock maintenance.
+fn resolve_mode(mode: PdesMode, table: &LookaheadTable) -> PdesMode {
+    match mode {
+        PdesMode::Auto => {
+            let offs: Vec<Cycle> = table.m.iter().copied().filter(|&x| x != Cycle::MAX).collect();
+            let sum: u128 = offs.iter().map(|&x| x as u128).sum();
+            let mean = sum as f64 / offs.len().max(1) as f64;
+            if (table.min as f64) * 2.0 < mean {
+                PdesMode::NullMsg
+            } else {
+                PdesMode::Epoch
+            }
+        }
+        m => m,
+    }
 }
 
 /// Post-injection shard state published at each epoch's second
@@ -85,6 +152,65 @@ struct WorkerDone {
 
 type Mailbox = Mutex<Vec<(Cycle, PushKey, Message)>>;
 
+/// Shared state of an epoch-mode run.
+struct EpochShared {
+    statuses: Vec<Mutex<ShardStatus>>,
+    /// `mailboxes[to][from]`: senders fill before barrier A, the owner
+    /// drains between barriers A and B.
+    mailboxes: Vec<Vec<Mailbox>>,
+    barrier: Barrier,
+    /// Cumulative per-tile event counts, published at barrier C; every
+    /// rebalance rewrites all entries (shard ranges partition tiles).
+    counts: Mutex<Vec<u64>>,
+    /// Indexed by tile: the old owner stashes before barrier D, the
+    /// new owner takes after it.
+    migrations: Vec<Mutex<Option<TileMigration>>>,
+    rebalances: AtomicU64,
+    migrated: AtomicU64,
+}
+
+/// Shared state of a null-message run: one mutex, one condvar.  All
+/// cross-shard coordination — channel clocks, mail, rendezvous
+/// phases — lives under the single lock, so every predicate a worker
+/// evaluates is a consistent snapshot.
+struct Cmb {
+    mu: Mutex<CmbShared>,
+    cv: Condvar,
+}
+
+struct CmbShared {
+    /// Channel clocks, `clock[src * n + dst]`: a promise that no
+    /// message from `src` will be delivered to `dst` below this cycle.
+    /// Monotone non-decreasing within a rebalance generation; reset to
+    /// `ck + L_new` at a rendezvous (sound: nobody dispatched past
+    /// `ck`, so overshoot promises were never consumed).
+    clock: Vec<Cycle>,
+    /// Published earliest pending event per shard (`None` = drained).
+    next_fire: Vec<Option<Cycle>>,
+    finished: Vec<u32>,
+    /// `mail[dst][src]`, pushed atomically with the sender's clock
+    /// update — the CMB no-time-travel invariant.
+    mail: Vec<Vec<Vec<(Cycle, PushKey, Message)>>>,
+    done: bool,
+    error: Option<String>,
+    la: LookaheadTable,
+    /// Next rebalance checkpoint cycle (`Cycle::MAX` = rebalancing
+    /// off).  All shards drain strictly below `ck`, rendezvous, then
+    /// `ck` advances — a deterministic simulated cut.
+    ck: Cycle,
+    /// Rendezvous phase: 0 running, 1 counts, 2 extract, 3 install.
+    phase: u8,
+    arrived: u32,
+    /// Rendezvous generation, bumped at each completion.
+    gen: u64,
+    counts: Vec<u64>,
+    staged: Option<TilePartition>,
+    migrations: Vec<Option<TileMigration>>,
+    null_msgs: u64,
+    rebalances: u64,
+    migrated: u64,
+}
+
 /// Run `cfg` + `workload` across `threads` shards and merge the
 /// results into the same `SimResult` the serial engine produces.
 pub(crate) fn run_parallel(
@@ -92,34 +218,27 @@ pub(crate) fn run_parallel(
     workload: &Workload,
     threads: u32,
     record_log: bool,
+    mode: PdesMode,
+    rebalance_every: u32,
 ) -> Result<SimResult> {
     assert!(threads >= 2, "run_parallel needs at least two shards");
-    let la = lookahead(&cfg, threads);
-    if la == 0 || la == Cycle::MAX {
+    let part0 = TilePartition::balanced(cfg.n_cores, threads);
+    let table = lookahead_table(&cfg, &part0);
+    if table.min == 0 || table.min == Cycle::MAX {
         bail!("degenerate lookahead for {threads} shards (is the system shardable?)");
     }
+    let la_min = table.min;
+    let mode = resolve_mode(mode, &table);
     let n = threads as usize;
     let n_cores = cfg.n_cores;
-    let statuses: Vec<Mutex<ShardStatus>> =
-        (0..n).map(|_| Mutex::new(ShardStatus::default())).collect();
-    // mailboxes[to][from]: senders fill before barrier A, the owner
-    // drains between barriers A and B.
-    let mailboxes: Vec<Vec<Mailbox>> =
-        (0..n).map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect()).collect();
-    let barrier = Barrier::new(n);
     let t0 = Instant::now();
-    let results: Vec<std::result::Result<WorkerDone, String>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..threads)
-            .map(|me| {
-                let cfg = cfg.clone();
-                let (statuses, mailboxes, barrier) = (&statuses, &mailboxes, &barrier);
-                s.spawn(move || {
-                    run_shard(cfg, workload, me, threads, la, record_log, statuses, mailboxes, barrier)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
-    });
+    let (results, null_msgs, rebalances, migrated) = match mode {
+        PdesMode::Epoch => run_epoch(&cfg, workload, threads, record_log, rebalance_every, la_min),
+        PdesMode::NullMsg => {
+            run_nullmsg(&cfg, workload, threads, record_log, rebalance_every, table)
+        }
+        PdesMode::Auto => unreachable!("Auto resolved above"),
+    };
 
     let mut outs = Vec::with_capacity(n);
     let mut loads = Vec::with_capacity(n);
@@ -151,7 +270,16 @@ pub(crate) fn run_parallel(
         }
     }
     stats.cycles = core_finish.iter().copied().max().unwrap_or(0);
-    stats.parallel = ParallelStats { threads, lookahead: la, epochs, wall_ns, shards: loads };
+    stats.parallel = ParallelStats {
+        threads,
+        lookahead: la_min,
+        epochs,
+        wall_ns,
+        null_msgs,
+        rebalances,
+        migrated_events: migrated,
+        shards: loads,
+    };
 
     // Canonical log merge: per-dispatch record groups, globally sorted
     // by the dispatched event's (cycle, key) — the exact order the
@@ -176,22 +304,132 @@ pub(crate) fn run_parallel(
     Ok(SimResult { stats, log, core_finish })
 }
 
+// ---------------------------------------------------------------------------
+// Shared rebalance machinery
+// ---------------------------------------------------------------------------
+
+/// Drain this shard's queue, keep events for tiles it retains under
+/// `new`, and package each lost tile through `stash`.  Valid only at a
+/// rebalance cut: all pending events fire at or beyond it, so the
+/// snapshot is cut-point consistent.
+fn extract_lost_tiles(
+    eng: &mut Engine,
+    old: &TilePartition,
+    new: &TilePartition,
+    me: u32,
+    workload: &Workload,
+    mut stash: impl FnMut(u32, TileMigration),
+) -> Vec<(Cycle, PushKey, Event)> {
+    let (olo, ohi) = old.range(me);
+    let (nlo, nhi) = new.range(me);
+    let drained = eng.drain_events();
+    let mut keeps = Vec::with_capacity(drained.len());
+    let mut buckets: Vec<Vec<(Cycle, PushKey, Event)>> = (olo..ohi).map(|_| Vec::new()).collect();
+    for (at, key, ev) in drained {
+        let tile = eng.event_tile(&ev);
+        debug_assert!(tile >= olo && tile < ohi, "shard queue held a foreign event");
+        if tile >= nlo && tile < nhi {
+            keeps.push((at, key, ev));
+        } else {
+            buckets[(tile - olo) as usize].push((at, key, ev));
+        }
+    }
+    for tile in olo..ohi {
+        if tile >= nlo && tile < nhi {
+            continue;
+        }
+        let evs = std::mem::take(&mut buckets[(tile - olo) as usize]);
+        stash(tile, eng.extract_tile(tile, evs, workload));
+    }
+    keeps
+}
+
+/// Adopt `new`, install every gained tile fetched through `fetch`,
+/// and re-push kept + gained events in one sorted pass (the first
+/// push rewinds the drained queue's cursor; sorted order keeps every
+/// later push at or beyond it).  Returns the number of pending events
+/// that migrated in.
+fn install_gained_tiles(
+    eng: &mut Engine,
+    old: &TilePartition,
+    new: &TilePartition,
+    me: u32,
+    mut keeps: Vec<(Cycle, PushKey, Event)>,
+    mut fetch: impl FnMut(u32) -> TileMigration,
+) -> u64 {
+    eng.set_partition(new);
+    let (olo, ohi) = old.range(me);
+    let (nlo, nhi) = new.range(me);
+    let mut moved = 0u64;
+    for tile in nlo..nhi {
+        if tile >= olo && tile < ohi {
+            continue;
+        }
+        let m = fetch(tile);
+        moved += m.events.len() as u64;
+        keeps.extend(eng.install_tile(m));
+    }
+    keeps.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    eng.push_events(keeps);
+    moved
+}
+
+// ---------------------------------------------------------------------------
+// Epoch mode
+// ---------------------------------------------------------------------------
+
+fn run_epoch(
+    cfg: &SystemConfig,
+    workload: &Workload,
+    threads: u32,
+    record_log: bool,
+    rebalance_every: u32,
+    la: Cycle,
+) -> (Vec<std::result::Result<WorkerDone, String>>, u64, u64, u64) {
+    let n = threads as usize;
+    let shared = EpochShared {
+        statuses: (0..n).map(|_| Mutex::new(ShardStatus::default())).collect(),
+        mailboxes: (0..n).map(|_| (0..n).map(|_| Mutex::new(Vec::new())).collect()).collect(),
+        barrier: Barrier::new(n),
+        counts: Mutex::new(vec![0; cfg.n_cores as usize]),
+        migrations: (0..cfg.n_cores).map(|_| Mutex::new(None)).collect(),
+        rebalances: AtomicU64::new(0),
+        migrated: AtomicU64::new(0),
+    };
+    let results: Vec<std::result::Result<WorkerDone, String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|me| {
+                let shared = &shared;
+                s.spawn(move || {
+                    run_shard_epoch(cfg, workload, me, threads, la, record_log, rebalance_every, shared)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
+    });
+    let rb = shared.rebalances.into_inner();
+    let mig = shared.migrated.into_inner();
+    (results, 0, rb, mig)
+}
+
 #[allow(clippy::too_many_arguments)]
-fn run_shard(
-    cfg: SystemConfig,
+fn run_shard_epoch(
+    cfg: &SystemConfig,
     workload: &Workload,
     me: u32,
     threads: u32,
-    la: Cycle,
+    la0: Cycle,
     record_log: bool,
-    statuses: &[Mutex<ShardStatus>],
-    mailboxes: &[Vec<Mailbox>],
-    barrier: &Barrier,
+    rebalance_every: u32,
+    sh: &EpochShared,
 ) -> std::result::Result<WorkerDone, String> {
     let n_cores = cfg.n_cores;
     let obs = if record_log { Observers::with_sc_log() } else { Observers::none() };
-    let mut eng = Engine::build_shard(cfg, workload, obs, ShardSpec { index: me, count: threads });
+    let mut eng =
+        Engine::build_shard(cfg.clone(), workload, obs, ShardSpec { index: me, count: threads });
     eng.seed();
+    let mut part = TilePartition::balanced(cfg.n_cores, threads);
+    let mut la = la0;
     let mut window_start: Cycle = 0;
     let mut epochs: u64 = 0;
     let mut busy_ns: u64 = 0;
@@ -208,13 +446,13 @@ fn run_shard(
                 }
                 let out = eng.take_outbox(dest);
                 if !out.is_empty() {
-                    mailboxes[dest as usize][me as usize].lock().unwrap().extend(out);
+                    sh.mailboxes[dest as usize][me as usize].lock().unwrap().extend(out);
                 }
             }
         }
         busy_ns += b0.elapsed().as_nanos() as u64;
         let w0 = Instant::now();
-        barrier.wait(); // A: every shard's outboxes are published.
+        sh.barrier.wait(); // A: every shard's outboxes are published.
         wait_ns += w0.elapsed().as_nanos() as u64;
 
         let b1 = Instant::now();
@@ -224,21 +462,22 @@ fn run_shard(
                 if src == me {
                     continue;
                 }
-                let mail = std::mem::take(&mut *mailboxes[me as usize][src as usize].lock().unwrap());
+                let mail =
+                    std::mem::take(&mut *sh.mailboxes[me as usize][src as usize].lock().unwrap());
                 for (at, key, msg) in mail {
                     eng.inject(at, key, msg);
                 }
             }
         }
         {
-            let mut st = statuses[me as usize].lock().unwrap();
+            let mut st = sh.statuses[me as usize].lock().unwrap();
             st.next_fire = eng.next_fire();
             st.finished = eng.finished_cores();
             st.error = err.take();
         }
         busy_ns += b1.elapsed().as_nanos() as u64;
         let w1 = Instant::now();
-        barrier.wait(); // B: every shard's post-injection status is visible.
+        sh.barrier.wait(); // B: every shard's post-injection status is visible.
         wait_ns += w1.elapsed().as_nanos() as u64;
 
         // Symmetric decision: all workers read the same snapshot (the
@@ -247,7 +486,7 @@ fn run_shard(
         let mut min_next: Option<Cycle> = None;
         let mut finished_total = 0u32;
         let mut error: Option<String> = None;
-        for st in statuses {
+        for st in &sh.statuses {
             let st = st.lock().unwrap();
             if let Some(t) = st.next_fire {
                 min_next = Some(min_next.map_or(t, |m: Cycle| m.min(t)));
@@ -277,6 +516,60 @@ fn run_shard(
                 // below `limit` were dispatched; cross-shard fires are
                 // >= now + la >= limit).
                 debug_assert!(t >= limit, "event at {t} fired inside closed window [.., {limit})");
+                // Deterministic rebalance point: every worker counts
+                // the same epochs and reads the same decision, so all
+                // trigger together.  Mailboxes and outboxes are
+                // provably empty here and every pending event fires at
+                // or beyond `t` — a consistent cut (DESIGN.md §11.6).
+                if rebalance_every > 0 && epochs % rebalance_every as u64 == 0 {
+                    let b2 = Instant::now();
+                    {
+                        let mut counts = sh.counts.lock().unwrap();
+                        let (lo, hi) = part.range(me);
+                        let mine = eng.tile_counts();
+                        for tile in lo..hi {
+                            counts[tile as usize] = mine[tile as usize];
+                        }
+                    }
+                    busy_ns += b2.elapsed().as_nanos() as u64;
+                    let w2 = Instant::now();
+                    sh.barrier.wait(); // C: all cumulative tile counts published.
+                    wait_ns += w2.elapsed().as_nanos() as u64;
+                    let b3 = Instant::now();
+                    let new_part = TilePartition::from_counts(&sh.counts.lock().unwrap(), threads);
+                    if new_part != part {
+                        let keeps =
+                            extract_lost_tiles(&mut eng, &part, &new_part, me, workload, |t, m| {
+                                *sh.migrations[t as usize].lock().unwrap() = Some(m)
+                            });
+                        busy_ns += b3.elapsed().as_nanos() as u64;
+                        let w3 = Instant::now();
+                        sh.barrier.wait(); // D: all lost tiles stashed.
+                        wait_ns += w3.elapsed().as_nanos() as u64;
+                        let b4 = Instant::now();
+                        let moved = install_gained_tiles(&mut eng, &part, &new_part, me, keeps, |t| {
+                            sh.migrations[t as usize]
+                                .lock()
+                                .unwrap()
+                                .take()
+                                .expect("old owner stashed the tile before barrier D")
+                        });
+                        if moved > 0 {
+                            sh.migrated.fetch_add(moved, Ordering::Relaxed);
+                        }
+                        la = lookahead_table(cfg, &new_part).min;
+                        part = new_part;
+                        if me == 0 {
+                            sh.rebalances.fetch_add(1, Ordering::Relaxed);
+                        }
+                        busy_ns += b4.elapsed().as_nanos() as u64;
+                        let w4 = Instant::now();
+                        sh.barrier.wait(); // E: all gained tiles installed.
+                        wait_ns += w4.elapsed().as_nanos() as u64;
+                    } else {
+                        busy_ns += b3.elapsed().as_nanos() as u64;
+                    }
+                }
                 window_start = t;
             }
         }
@@ -285,6 +578,370 @@ fn run_shard(
     let out = eng.finalize_shard();
     let load = ShardLoad { shard: me, events: out.stats.events, busy_ns, wait_ns };
     Ok(WorkerDone { out, load, epochs })
+}
+
+// ---------------------------------------------------------------------------
+// Null-message mode
+// ---------------------------------------------------------------------------
+
+fn run_nullmsg(
+    cfg: &SystemConfig,
+    workload: &Workload,
+    threads: u32,
+    record_log: bool,
+    rebalance_every: u32,
+    table: LookaheadTable,
+) -> (Vec<std::result::Result<WorkerDone, String>>, u64, u64, u64) {
+    let n = threads as usize;
+    let ck = if rebalance_every == 0 {
+        Cycle::MAX
+    } else {
+        (rebalance_every as Cycle).saturating_mul(table.min)
+    };
+    let shared = Cmb {
+        mu: Mutex::new(CmbShared {
+            clock: vec![0; n * n],
+            next_fire: vec![Some(0); n],
+            finished: vec![0; n],
+            mail: (0..n).map(|_| (0..n).map(|_| Vec::new()).collect()).collect(),
+            done: false,
+            error: None,
+            la: table,
+            ck,
+            phase: 0,
+            arrived: 0,
+            gen: 0,
+            counts: vec![0; cfg.n_cores as usize],
+            staged: None,
+            migrations: (0..cfg.n_cores).map(|_| None).collect(),
+            null_msgs: 0,
+            rebalances: 0,
+            migrated: 0,
+        }),
+        cv: Condvar::new(),
+    };
+    let results: Vec<std::result::Result<WorkerDone, String>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|me| {
+                let shared = &shared;
+                s.spawn(move || {
+                    run_shard_nullmsg(cfg, workload, me, threads, record_log, rebalance_every, shared)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
+    });
+    let guard = shared.mu.lock().unwrap();
+    (results, guard.null_msgs, guard.rebalances, guard.migrated)
+}
+
+/// Minimum inbound channel clock of shard `me`: nothing can be
+/// delivered to it below this bound.
+fn inbound_bound(sh: &CmbShared, me: usize, n: usize) -> Cycle {
+    let mut safe = Cycle::MAX;
+    for j in 0..n {
+        if j != me {
+            safe = safe.min(sh.clock[j * n + me]);
+        }
+    }
+    safe
+}
+
+/// Publish shard `me`'s state: advance its clock row to
+/// `min(next_fire, safe) + L(me, j)` (monotone — the old promise stays
+/// valid because every future dispatch is at or beyond the old floor),
+/// and refresh its `next_fire`/`finished` slots.  An edge whose clock
+/// advances without real mail (`sent_real[j]` false) is a null
+/// message.  Returns whether anything changed (callers notify).
+fn publish(sh: &mut CmbShared, eng: &Engine, me: usize, n: usize, sent_real: &[bool]) -> bool {
+    let safe = inbound_bound(sh, me, n);
+    let nf = eng.next_fire();
+    let floor = nf.unwrap_or(Cycle::MAX).min(safe);
+    let mut changed = false;
+    for j in 0..n {
+        if j == me {
+            continue;
+        }
+        let promise = floor.saturating_add(sh.la.get(me as u32, j as u32));
+        if promise > sh.clock[me * n + j] {
+            sh.clock[me * n + j] = promise;
+            changed = true;
+            if !sent_real[j] {
+                sh.null_msgs += 1;
+            }
+        }
+    }
+    if sh.next_fire[me] != nf {
+        sh.next_fire[me] = nf;
+        changed = true;
+    }
+    let fin = eng.finished_cores();
+    if sh.finished[me] != fin {
+        sh.finished[me] = fin;
+        changed = true;
+    }
+    changed
+}
+
+fn run_shard_nullmsg(
+    cfg: &SystemConfig,
+    workload: &Workload,
+    me: u32,
+    threads: u32,
+    record_log: bool,
+    rebalance_every: u32,
+    shared: &Cmb,
+) -> std::result::Result<WorkerDone, String> {
+    let n = threads as usize;
+    let n_cores = cfg.n_cores;
+    let obs = if record_log { Observers::with_sc_log() } else { Observers::none() };
+    let mut eng =
+        Engine::build_shard(cfg.clone(), workload, obs, ShardSpec { index: me, count: threads });
+    eng.seed();
+    let mut part = TilePartition::balanced(cfg.n_cores, threads);
+    let mut rounds: u64 = 0;
+    let mut busy_ns: u64 = 0;
+    let mut wait_ns: u64 = 0;
+    let no_real = vec![false; n];
+    let verdict: std::result::Result<(), String> = 'run: loop {
+        // --- sync step: drain mail, publish, decide (one lock) ---
+        let limit = {
+            let mut sh = shared.mu.lock().unwrap();
+            let mut mark = Instant::now();
+            let decision: Option<Cycle> = 'decide: loop {
+                if sh.done {
+                    break 'decide None;
+                }
+                let mut changed = false;
+                for src in 0..n {
+                    let mail = std::mem::take(&mut sh.mail[me as usize][src]);
+                    if !mail.is_empty() {
+                        changed = true;
+                        for (at, key, msg) in mail {
+                            eng.inject(at, key, msg);
+                        }
+                    }
+                }
+                changed |= publish(&mut sh, &eng, me as usize, n, &no_real);
+                let limit = inbound_bound(&sh, me as usize, n).min(sh.ck);
+                if eng.next_fire().map_or(false, |t| t < limit) {
+                    if changed {
+                        shared.cv.notify_all();
+                    }
+                    break 'decide Some(limit);
+                }
+                let mail_empty = sh.mail.iter().all(|row| row.iter().all(|v| v.is_empty()));
+                if mail_empty && sh.next_fire.iter().all(|f| f.is_none()) {
+                    // Global quiescence (or deadlock — decided below).
+                    sh.done = true;
+                    shared.cv.notify_all();
+                    break 'decide None;
+                }
+                // Rebalance rendezvous: everyone has drained strictly
+                // below `ck` and no mail is in flight.  Stable (each
+                // dispatch limit is clamped to `ck`) and race-free (a
+                // mid-window worker's published next_fire is < ck, and
+                // mail is drained atomically with the next_fire
+                // refresh, so the predicate never sees a stale gap).
+                if sh.ck < Cycle::MAX
+                    && mail_empty
+                    && sh.next_fire.iter().all(|f| f.map_or(true, |t| t >= sh.ck))
+                {
+                    sh = rendezvous(
+                        sh,
+                        &shared.cv,
+                        &mut eng,
+                        &mut part,
+                        me,
+                        n,
+                        workload,
+                        cfg,
+                        rebalance_every,
+                    );
+                    continue 'decide;
+                }
+                if changed {
+                    shared.cv.notify_all();
+                }
+                busy_ns += mark.elapsed().as_nanos() as u64;
+                let w0 = Instant::now();
+                sh = shared.cv.wait(sh).unwrap();
+                wait_ns += w0.elapsed().as_nanos() as u64;
+                mark = Instant::now();
+            };
+            busy_ns += mark.elapsed().as_nanos() as u64;
+            match decision {
+                Some(l) => l,
+                None => {
+                    // Drained everywhere: derive the verdict from the
+                    // same shared snapshot every worker sees.
+                    break 'run match (&sh.error, sh.finished.iter().sum::<u32>()) {
+                        (Some(e), _) => Err(e.clone()),
+                        (None, f) if f == n_cores => Ok(()),
+                        (None, f) => {
+                            let stuck = eng.stuck_cores().join("\n");
+                            Err(format!(
+                                "deadlock: all shards drained with {f}/{n_cores} cores \
+                                 finished\nshard {me} stuck cores:\n{stuck}"
+                            ))
+                        }
+                    };
+                }
+            }
+        };
+        // --- dispatch window outside the lock ---
+        rounds += 1;
+        let b0 = Instant::now();
+        let res = eng.run_window(limit).map_err(|e| format!("{e:#}"));
+        busy_ns += b0.elapsed().as_nanos() as u64;
+        let b1 = Instant::now();
+        let mut sh = shared.mu.lock().unwrap();
+        if let Err(e) = res {
+            sh.error.get_or_insert(e.clone());
+            sh.done = true;
+            shared.cv.notify_all();
+            break 'run Err(e);
+        }
+        // Push real mail and the clock-row update atomically: a
+        // receiver that reads the new promise under this lock has
+        // either drained this mail already or will find it in its box.
+        let mut sent_real = vec![false; n];
+        for dest in 0..threads {
+            if dest == me {
+                continue;
+            }
+            let out = eng.take_outbox(dest);
+            if !out.is_empty() {
+                sent_real[dest as usize] = true;
+                sh.mail[dest as usize][me as usize].extend(out);
+            }
+        }
+        publish(&mut sh, &eng, me as usize, n, &sent_real);
+        shared.cv.notify_all();
+        busy_ns += b1.elapsed().as_nanos() as u64;
+    };
+    verdict?;
+    let out = eng.finalize_shard();
+    let load = ShardLoad { shard: me, events: out.stats.events, busy_ns, wait_ns };
+    Ok(WorkerDone { out, load, epochs: rounds })
+}
+
+/// Advance `ck` past the earliest pending event by one rebalance
+/// interval (`rebalance_every` windows of the current minimum
+/// lookahead).  Anchoring on the published minimum — a deterministic
+/// simulated quantity at the cut — keeps sparse stretches from
+/// spinning through empty checkpoints.
+fn advance_ck(sh: &mut CmbShared, rebalance_every: u32) {
+    let base = sh.next_fire.iter().filter_map(|f| *f).min().unwrap_or(sh.ck);
+    let interval = (rebalance_every as Cycle).saturating_mul(sh.la.min);
+    sh.ck = base.max(sh.ck).saturating_add(interval);
+}
+
+/// The four-phase rebalance rendezvous (DESIGN.md §11.6).  Entered by
+/// every worker once the predicate holds; the lock is held throughout
+/// (condvar waits release it at the phase edges).  Phase 1 publishes
+/// counts and decides; phase 2 extracts lost tiles; phase 3 installs
+/// gains, resets channel clocks to `ck + L_new`, and republishes.
+#[allow(clippy::too_many_arguments)]
+fn rendezvous<'a>(
+    mut sh: MutexGuard<'a, CmbShared>,
+    cv: &Condvar,
+    eng: &mut Engine,
+    part: &mut TilePartition,
+    me: u32,
+    n: usize,
+    workload: &Workload,
+    cfg: &SystemConfig,
+    rebalance_every: u32,
+) -> MutexGuard<'a, CmbShared> {
+    let entry_gen = sh.gen;
+    if sh.phase == 0 {
+        sh.phase = 1;
+        sh.arrived = 0;
+        sh.staged = None;
+    }
+    debug_assert_eq!(sh.phase, 1, "joined a rendezvous past its counts phase");
+    // --- phase 1: counts ---
+    {
+        let (lo, hi) = part.range(me);
+        for tile in lo..hi {
+            sh.counts[tile as usize] = eng.tile_counts()[tile as usize];
+        }
+    }
+    sh.arrived += 1;
+    if sh.arrived as usize == n {
+        let new_part = TilePartition::from_counts(&sh.counts, n as u32);
+        if new_part == *part {
+            // No movement: bump the checkpoint and resume.
+            advance_ck(&mut sh, rebalance_every);
+            sh.gen += 1;
+            sh.phase = 0;
+            sh.arrived = 0;
+            cv.notify_all();
+            return sh;
+        }
+        sh.staged = Some(new_part);
+        sh.rebalances += 1;
+        sh.phase = 2;
+        sh.arrived = 0;
+        cv.notify_all();
+    } else {
+        while sh.gen == entry_gen && sh.phase == 1 {
+            sh = cv.wait(sh).unwrap();
+        }
+        if sh.gen != entry_gen {
+            return sh; // no-movement fast path completed by the last arriver
+        }
+    }
+    // --- phase 2: extract lost tiles ---
+    let new_part = sh.staged.clone().expect("partition staged in phase 2");
+    let keeps = extract_lost_tiles(eng, part, &new_part, me, workload, |t, m| {
+        sh.migrations[t as usize] = Some(m)
+    });
+    sh.arrived += 1;
+    if sh.arrived as usize == n {
+        sh.la = lookahead_table(cfg, &new_part);
+        sh.phase = 3;
+        sh.arrived = 0;
+        cv.notify_all();
+    } else {
+        while sh.phase == 2 {
+            sh = cv.wait(sh).unwrap();
+        }
+    }
+    // --- phase 3: install gains, reset clocks, republish ---
+    let moved = install_gained_tiles(eng, part, &new_part, me, keeps, |t| {
+        sh.migrations[t as usize].take().expect("old owner stashed the tile in phase 2")
+    });
+    sh.migrated += moved;
+    // Clock reset: every pending event fires at or beyond `ck` and no
+    // receiver dispatched past it (limits are clamped to `ck`), so
+    // `ck + L_new(me, j)` is a valid promise and stale overshoot
+    // promises from the old matrix were never consumed.
+    let ck = sh.ck;
+    for j in 0..n {
+        if j != me as usize {
+            let l = sh.la.get(me, j as u32);
+            sh.clock[me as usize * n + j] = ck.saturating_add(l);
+        }
+    }
+    sh.next_fire[me as usize] = eng.next_fire();
+    sh.finished[me as usize] = eng.finished_cores();
+    *part = new_part;
+    sh.arrived += 1;
+    if sh.arrived as usize == n {
+        advance_ck(&mut sh, rebalance_every);
+        sh.gen += 1;
+        sh.phase = 0;
+        sh.arrived = 0;
+        sh.staged = None;
+        cv.notify_all();
+    } else {
+        while sh.phase == 3 {
+            sh = cv.wait(sh).unwrap();
+        }
+    }
+    sh
 }
 
 #[cfg(test)]
@@ -308,6 +965,53 @@ mod tests {
         assert!(nla > la2, "socket-link lookahead {nla} should exceed mesh lookahead {la2}");
     }
 
+    /// The per-edge matrix is asymmetric on NUMA fabrics: intra-socket
+    /// shard pairs see the tight mesh window, cross-socket pairs the
+    /// wide link window.
+    #[test]
+    fn lookahead_matrix_is_asymmetric_on_numa_fabrics() {
+        let mut numa = SystemConfig::small(8, ProtocolKind::Tardis);
+        numa.topology.sockets = 2;
+        numa.topology.numa_ratio = 4;
+        // Four shards of two tiles: shards {0,1} share socket 0,
+        // shards {2,3} share socket 1.
+        let part = TilePartition::balanced(8, 4);
+        let t = lookahead_table(&numa, &part);
+        let intra = t.get(0, 1);
+        let cross = t.get(0, 2);
+        assert!(
+            intra < cross,
+            "intra-socket window {intra} should be tighter than cross-socket {cross}"
+        );
+        assert_eq!(t.get(0, 2), t.get(2, 0), "symmetric fabric, symmetric windows");
+        assert_eq!(t.min, intra.min(t.get(2, 3)), "global min is the tightest mesh edge");
+        // The flat fabric has no socket cliff, only mesh distance.
+        let flat = SystemConfig::small(8, ProtocolKind::Tardis);
+        let tf = lookahead_table(&flat, &TilePartition::balanced(8, 4));
+        assert!(tf.get(0, 1) <= tf.get(0, 3), "flat windows grow only with mesh distance");
+    }
+
+    #[test]
+    fn auto_mode_picks_nullmsg_only_when_windows_spread() {
+        // Flat 256-core mesh, 4 shards: boundary-adjacent shards have
+        // tight windows while far pairs are wide — null messages let
+        // the far pairs run ahead.
+        let flat = SystemConfig::small(256, ProtocolKind::Tardis);
+        let t = lookahead_table(&flat, &TilePartition::balanced(256, 4));
+        assert_eq!(resolve_mode(PdesMode::Auto, &t), PdesMode::NullMsg);
+        // Two NUMA sockets split into two shards: every cross-shard
+        // route crosses the same link, the matrix is uniform, and the
+        // epoch window already is the per-edge bound.
+        let mut numa = SystemConfig::small(8, ProtocolKind::Tardis);
+        numa.topology.sockets = 2;
+        numa.topology.numa_ratio = 4;
+        let tn = lookahead_table(&numa, &TilePartition::balanced(8, 2));
+        assert_eq!(resolve_mode(PdesMode::Auto, &tn), PdesMode::Epoch);
+        // Explicit modes pass through untouched.
+        assert_eq!(resolve_mode(PdesMode::Epoch, &t), PdesMode::Epoch);
+        assert_eq!(resolve_mode(PdesMode::NullMsg, &tn), PdesMode::NullMsg);
+    }
+
     /// End-to-end canary (the full matrix lives in
     /// tests/determinism.rs): a 2-shard Tardis run is bit-for-bit the
     /// serial run — stats, access log, and per-core finish times.
@@ -317,7 +1021,7 @@ mod tests {
         let w = crate::trace::synth_workload(&spec.params, 4, 128);
         let cfg = SystemConfig::small(4, ProtocolKind::Tardis);
         let serial = Engine::build(cfg.clone(), &w, Observers::with_sc_log()).run().unwrap();
-        let par = run_parallel(cfg, &w, 2, true).unwrap();
+        let par = run_parallel(cfg, &w, 2, true, PdesMode::Epoch, 0).unwrap();
         assert_eq!(par.stats, serial.stats);
         assert_eq!(par.log.records, serial.log.records);
         assert_eq!(par.core_finish, serial.core_finish);
@@ -327,5 +1031,22 @@ mod tests {
         assert_eq!(par.stats.parallel.shards.len(), 2);
         let shard_events: u64 = par.stats.parallel.shards.iter().map(|s| s.events).sum();
         assert_eq!(shard_events, par.stats.events, "per-shard event loads sum to the total");
+    }
+
+    /// Null-message canary: same bit-for-bit contract under the
+    /// channel-clock driver, with and without rebalancing.
+    #[test]
+    fn nullmsg_mode_matches_serial_bit_for_bit() {
+        let spec = crate::workloads::by_name("fft").unwrap();
+        let w = crate::trace::synth_workload(&spec.params, 4, 128);
+        let cfg = SystemConfig::small(4, ProtocolKind::Tardis);
+        let serial = Engine::build(cfg.clone(), &w, Observers::with_sc_log()).run().unwrap();
+        for rebalance in [0u32, 4] {
+            let par =
+                run_parallel(cfg.clone(), &w, 2, true, PdesMode::NullMsg, rebalance).unwrap();
+            assert_eq!(par.stats, serial.stats, "rebalance_every={rebalance}");
+            assert_eq!(par.log.records, serial.log.records, "rebalance_every={rebalance}");
+            assert_eq!(par.core_finish, serial.core_finish, "rebalance_every={rebalance}");
+        }
     }
 }

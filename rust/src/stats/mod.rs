@@ -157,10 +157,18 @@ pub struct ParallelStats {
     pub threads: u32,
     /// Conservative lookahead (epoch window width) in cycles.
     pub lookahead: Cycle,
-    /// Epoch barriers crossed.
+    /// Epoch barriers crossed (Epoch mode) or the maximum per-shard
+    /// dispatch-round count (NullMsg mode).
     pub epochs: u64,
     /// Host wall-clock of the parallel section, nanoseconds.
     pub wall_ns: u64,
+    /// Null messages exchanged (per-edge bound publications with no
+    /// real mail attached); 0 in Epoch mode.
+    pub null_msgs: u64,
+    /// Deterministic repartitions the load balancer performed.
+    pub rebalances: u64,
+    /// Pending calendar events migrated across shards by rebalances.
+    pub migrated_events: u64,
     pub shards: Vec<ShardLoad>,
 }
 
@@ -181,6 +189,21 @@ impl ParallelStats {
         }
         let busy: u64 = self.shards.iter().map(|s| s.busy_ns).sum();
         busy as f64 / self.wall_ns as f64
+    }
+
+    /// Per-shard load imbalance: max over mean shard busy time, in
+    /// [1, threads].  1.0 = perfectly balanced; the load balancer's
+    /// win shows up here as the skewed-workload ratio dropping toward
+    /// 1.  Returns 1.0 when there is nothing to compare (empty or
+    /// all-idle shards) so the bench schema's >= 1 bound always holds.
+    pub fn imbalance(&self) -> f64 {
+        let max = self.shards.iter().map(|s| s.busy_ns).max().unwrap_or(0);
+        if max == 0 {
+            return 1.0;
+        }
+        let total: u64 = self.shards.iter().map(|s| s.busy_ns).sum();
+        let mean = total as f64 / self.shards.len() as f64;
+        max as f64 / mean
     }
 }
 
@@ -531,11 +554,26 @@ mod tests {
             lookahead: 9,
             epochs: 3,
             wall_ns: 200,
+            null_msgs: 7,
+            rebalances: 1,
+            migrated_events: 42,
             shards: vec![ShardLoad { shard: 0, events: 13, busy_ns: 150, wait_ns: 10 }],
         };
         assert_eq!(a, c);
         assert!((c.parallel.efficiency() - 0.75).abs() < 1e-12);
         assert_eq!(ParallelStats::default().efficiency(), 0.0);
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean_and_floors_at_one() {
+        let load = |busy_ns| ShardLoad { shard: 0, events: 0, busy_ns, wait_ns: 0 };
+        let p = ParallelStats { shards: vec![load(300), load(100)], ..Default::default() };
+        assert!((p.imbalance() - 1.5).abs() < 1e-12);
+        let even = ParallelStats { shards: vec![load(5), load(5)], ..Default::default() };
+        assert!((even.imbalance() - 1.0).abs() < 1e-12);
+        assert_eq!(ParallelStats::default().imbalance(), 1.0, "no shards: neutral");
+        let idle = ParallelStats { shards: vec![load(0), load(0)], ..Default::default() };
+        assert_eq!(idle.imbalance(), 1.0, "all-idle shards: neutral");
     }
 
     #[test]

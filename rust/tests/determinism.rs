@@ -8,8 +8,8 @@
 
 use tardis_dsm::api::{SimBuilder, SimReport};
 use tardis_dsm::config::{
-    Consistency, CoreModel, LeasePolicyKind, ProtocolKind, SocketInterleave, SystemConfig,
-    TopologyConfig, DEFAULT_MAX_LEASE,
+    Consistency, CoreModel, LeasePolicyKind, PdesMode, ProtocolKind, SocketInterleave,
+    SystemConfig, TopologyConfig, DEFAULT_MAX_LEASE,
 };
 use tardis_dsm::testutil::{ProgGen, Rng};
 use tardis_dsm::trace::synth_workload;
@@ -277,6 +277,112 @@ fn parallel_shards_match_serial_bit_for_bit_across_the_matrix() {
                 }
             }
         }
+    }
+}
+
+/// PR-9 synchronization/balancing matrix: both PDES modes, with and
+/// without count-driven rebalancing, at even *and uneven* thread
+/// counts (3 threads over 8 cores shards 3/3/2) must all reproduce
+/// the serial run bit-for-bit.  Null-message runs additionally have
+/// to exchange channel-clock promises — a NullMsg run with zero null
+/// messages silently fell back to something else.
+#[test]
+fn pdes_modes_and_rebalancing_match_serial_bit_for_bit() {
+    let spec = workloads::by_name("lu-nc").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    let run = |threads: u32, mode: PdesMode, rebalance: u32| {
+        SimBuilder::from_config(SystemConfig::small(8, ProtocolKind::Tardis))
+            .record_accesses(true)
+            .workload(&w)
+            .threads(threads)
+            .pdes_mode(mode)
+            .rebalance_every(rebalance)
+            .run()
+            .unwrap()
+    };
+    let serial = run(1, PdesMode::Epoch, 0);
+    serial.check_sc().unwrap();
+    for mode in [PdesMode::Epoch, PdesMode::NullMsg] {
+        for rebalance in [0u32, 3] {
+            for threads in [2u32, 3, 4] {
+                let par = run(threads, mode, rebalance);
+                let what = format!("{mode:?}/rb{rebalance}/t{threads}");
+                assert_identical(&par, &serial, &what);
+                assert_eq!(par.stats.parallel.threads, threads);
+                assert_eq!(par.stats.parallel.shards.len(), threads as usize);
+                if mode == PdesMode::NullMsg {
+                    assert!(
+                        par.stats.parallel.null_msgs > 0,
+                        "{what}: null-message run exchanged no promises"
+                    );
+                } else {
+                    assert_eq!(
+                        par.stats.parallel.null_msgs, 0,
+                        "{what}: epoch mode must not count null messages"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic load balancing must actually engage on a skewed
+/// workload — one hot tile carrying ~10x the operations — and, being
+/// driven purely by *simulated* event counts, must repartition the
+/// same way every run: same `rebalances`, same `migrated_events`,
+/// same simulated results, in both synchronization modes.
+#[test]
+fn skewed_workloads_trigger_deterministic_rebalancing() {
+    use tardis_dsm::prog::{load, store, Program, Workload};
+
+    let shared = 0x10u64;
+    let mut programs = Vec::new();
+    for core in 0..4u32 {
+        let ops = if core == 0 { 480 } else { 48 };
+        let base = 0x100 * (core as u64 + 1);
+        let mut prog = Vec::new();
+        for pc in 0..ops {
+            prog.push(match pc % 4 {
+                0 => load(base + (pc as u64 % 13)),
+                1 => store(base + (pc as u64 % 13), Workload::store_value(core, pc)),
+                2 => load(shared),
+                _ => store(shared, Workload::store_value(core, pc)),
+            });
+        }
+        programs.push(Program::new(prog));
+    }
+    let w = Workload::new(programs);
+
+    let run = |threads: u32, mode: PdesMode, rebalance: u32| {
+        SimBuilder::from_config(SystemConfig::small(4, ProtocolKind::Tardis))
+            .record_accesses(true)
+            .workload(&w)
+            .threads(threads)
+            .pdes_mode(mode)
+            .rebalance_every(rebalance)
+            .run()
+            .unwrap()
+    };
+    let serial = run(1, PdesMode::Epoch, 0);
+    serial.check_sc().unwrap();
+    for mode in [PdesMode::Epoch, PdesMode::NullMsg] {
+        let a = run(2, mode, 2);
+        let what = format!("skewed/{mode:?}");
+        assert_identical(&a, &serial, &what);
+        assert!(
+            a.stats.parallel.rebalances > 0,
+            "{what}: the hot tile never triggered a repartition"
+        );
+        // Count-driven decisions repeat bit-identically run to run
+        // (migrated_events may legitimately be 0 when the moved tile's
+        // queue is empty at the cut, but it must repeat exactly).
+        let b = run(2, mode, 2);
+        assert_identical(&b, &serial, &what);
+        assert_eq!(a.stats.parallel.rebalances, b.stats.parallel.rebalances, "{what}");
+        assert_eq!(
+            a.stats.parallel.migrated_events, b.stats.parallel.migrated_events,
+            "{what}"
+        );
     }
 }
 

@@ -63,10 +63,19 @@ POINT_OPTIONAL_KEYS = {
 
 # Parallel-engine keys arrived with the sharded PDES engine; emitted
 # together on every point of a `bench --threads N` (N > 1) report and
-# absent from serial reports.
+# absent from serial reports.  The sync/balance counters (null_msgs,
+# rebalances, imbalance) arrived with the null-message engine; older
+# threaded reports legitimately omit them, but when present they must
+# accompany `threads` and respect their bounds.
 POINT_PARALLEL_KEYS = {
     "threads": int,
     "parallel_efficiency": (int, float),
+}
+
+POINT_PARALLEL_V2_KEYS = {
+    "null_msgs": int,
+    "rebalances": int,
+    "imbalance": (int, float),
 }
 
 AGGREGATE_KEYS = {
@@ -106,7 +115,12 @@ def validate(path):
             point,
             POINT_KEYS,
             where,
-            optional={**POINT_SOCKET_KEYS, **POINT_OPTIONAL_KEYS, **POINT_PARALLEL_KEYS},
+            optional={
+                **POINT_SOCKET_KEYS,
+                **POINT_OPTIONAL_KEYS,
+                **POINT_PARALLEL_KEYS,
+                **POINT_PARALLEL_V2_KEYS,
+            },
         )
         if "cores" in point and point["cores"] < 1:
             raise ValueError(f"{where}: cores must be >= 1")
@@ -124,6 +138,18 @@ def validate(path):
                 raise ValueError(
                     f"{where}: parallel_efficiency {eff} outside (0, threads]"
                 )
+        for key in POINT_PARALLEL_V2_KEYS:
+            if key in point and "threads" not in point:
+                raise ValueError(
+                    f"{where}: {key} only makes sense on threaded points"
+                )
+        for key in ("null_msgs", "rebalances"):
+            if key in point and point[key] < 0:
+                raise ValueError(f"{where}: {key} must be non-negative")
+        if "imbalance" in point and point["imbalance"] < 1.0:
+            raise ValueError(
+                f"{where}: imbalance is a max/mean busy ratio and must be >= 1.0"
+            )
         if topology != "flat":
             for key in POINT_SOCKET_KEYS:
                 if key not in point:
