@@ -139,6 +139,7 @@ fn l1_hit_bench() {
     let cfg = SystemConfig { protocol: ProtocolKind::Tardis, ..SystemConfig::default() };
     let mut proto = ProtocolDispatch::new(&cfg);
     let mut stats = SimStats::default();
+    let mut trace = tardis_dsm::obs::TraceBuf::default();
     let mut comps = Vec::new();
 
     // Deliver every outstanding message instantly; memory controllers
@@ -149,6 +150,7 @@ fn l1_hit_bench() {
         msgs: &mut Vec<Message>,
         comps: &mut Vec<tardis_dsm::proto::Completion>,
         stats: &mut SimStats,
+        trace: &mut tardis_dsm::obs::TraceBuf,
     ) {
         while let Some(m) = msgs.pop() {
             match m.dst {
@@ -171,6 +173,7 @@ fn l1_hit_bench() {
                         msgs: &mut *msgs,
                         completions: &mut *comps,
                         stats: &mut *stats,
+                        trace: &mut *trace,
                     };
                     proto.on_message(m, &mut ctx);
                 }
@@ -190,6 +193,7 @@ fn l1_hit_bench() {
                     msgs: &mut msgs,
                     completions: &mut comps,
                     stats: &mut stats,
+                    trace: &mut trace,
                 };
                 proto.core_access(0, PRIV_BASE + i % LINES, op, false, &mut ctx)
             };
@@ -197,7 +201,7 @@ fn l1_hit_bench() {
                 hits += 1;
             }
             if !msgs.is_empty() {
-                resolve(&mut proto, i, &mut msgs, &mut comps, &mut stats);
+                resolve(&mut proto, i, &mut msgs, &mut comps, &mut stats, &mut trace);
             }
         }
         hits

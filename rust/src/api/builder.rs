@@ -10,6 +10,7 @@ use crate::config::{
     Consistency, CoreModel, LeasePolicyKind, PdesMode, ProtocolKind, SocketInterleave,
     SystemConfig, TardisConfig,
 };
+use crate::obs::TraceRecording;
 use crate::prog::checker::{AccessLog, CheckReport, Violation};
 use crate::prog::{Program, Workload};
 use crate::runtime::TraceRuntime;
@@ -77,6 +78,7 @@ pub struct SimBuilder {
     threads: u32,
     pdes_mode: PdesMode,
     rebalance_every: u32,
+    trace: bool,
     #[cfg(any(test, feature = "legacy-queue"))]
     legacy_queue: bool,
 }
@@ -104,6 +106,7 @@ impl SimBuilder {
             threads: 1,
             pdes_mode: PdesMode::Epoch,
             rebalance_every: 0,
+            trace: false,
             #[cfg(any(test, feature = "legacy-queue"))]
             legacy_queue: false,
         }
@@ -315,6 +318,16 @@ impl SimBuilder {
         self.sample_every(period).observe(ProgressObserver::default())
     }
 
+    /// Record the coherence flight recorder ([`crate::obs`]): protocol
+    /// events land in [`SimReport::trace`], in the same canonical
+    /// order under the serial engine and every PDES mode/thread count.
+    /// Off by default — a disabled run's stats and SC log are
+    /// byte-identical to a build without this call.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+
     /// Run on the pre-calendar all-heap event queue (§Perf determinism
     /// regression tests and old-vs-new benchmarking; needs the
     /// `legacy-queue` feature outside the crate's own tests).
@@ -416,6 +429,7 @@ impl SimBuilder {
             threads: self.threads,
             pdes_mode: self.pdes_mode,
             rebalance_every: self.rebalance_every,
+            trace: self.trace,
             #[cfg(any(test, feature = "legacy-queue"))]
             legacy_queue: self.legacy_queue,
         })
@@ -435,6 +449,7 @@ pub struct SimSession {
     threads: u32,
     pdes_mode: PdesMode,
     rebalance_every: u32,
+    trace: bool,
     #[cfg(any(test, feature = "legacy-queue"))]
     legacy_queue: bool,
 }
@@ -478,6 +493,7 @@ impl SimSession {
                 &self.workload,
                 self.threads,
                 record_log,
+                self.trace,
                 self.pdes_mode,
                 self.rebalance_every,
             )?;
@@ -485,12 +501,16 @@ impl SimSession {
                 stats: res.stats,
                 log: res.log,
                 core_finish: res.core_finish,
+                trace: res.trace,
                 consistency,
                 elapsed: t0.elapsed(),
             });
         }
         #[allow(unused_mut)]
         let mut eng = Engine::build(self.cfg, &self.workload, self.observers);
+        if self.trace {
+            eng.enable_trace();
+        }
         #[cfg(any(test, feature = "legacy-queue"))]
         Self::configure_queue(self.legacy_queue, &mut eng);
         let res = eng.run()?;
@@ -498,6 +518,7 @@ impl SimSession {
             stats: res.stats,
             log: res.log,
             core_finish: res.core_finish,
+            trace: res.trace,
             consistency,
             elapsed: t0.elapsed(),
         })
@@ -512,6 +533,8 @@ pub struct SimReport {
     pub log: AccessLog,
     /// Per-core completion cycles.
     pub core_finish: Vec<Cycle>,
+    /// Flight-recorder trace (empty unless `.trace(true)`).
+    pub trace: TraceRecording,
     /// Consistency model the run enforced (selects the checker rules).
     pub consistency: Consistency,
     /// Host wall-clock time of the run.

@@ -36,5 +36,5 @@ pub mod observer;
 pub mod spec;
 
 pub use builder::{default_trace_len, scaled_trace_len, SimBuilder, SimReport, SimSession};
-pub use observer::{Observer, Observers, ProgressObserver, StatsTap};
+pub use observer::{Observer, Observers, ProgressFormat, ProgressObserver, StatsTap};
 pub use spec::SimSpec;

@@ -16,7 +16,9 @@
 //! Custom plugins implement [`Observer`] (all hooks default to no-ops)
 //! and register with `.observe(..)`.
 
+use crate::obs::MetricsWindow;
 use crate::prog::checker::{AccessLog, LogRecord};
+use crate::serve::json::escape;
 use crate::stats::SimStats;
 use crate::types::Cycle;
 
@@ -42,6 +44,30 @@ pub trait Observer {
     fn on_finish(&mut self, _stats: &SimStats, _core_finish: &[Cycle]) {}
 }
 
+/// Output style of the [`ProgressObserver`] (the CLI's
+/// `--progress-format`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProgressFormat {
+    /// Human-readable `[sim] cycle ...` lines (the default).
+    #[default]
+    Human,
+    /// One JSON object per line, shaped like the serve subsystem's
+    /// `progress` frames (`type`/`memops`/`renew_rate`/`avg_lease`,
+    /// plus `cycle` and `label` in place of `batch_id`/`point`) so
+    /// one parser handles both streams.
+    Json,
+}
+
+impl ProgressFormat {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "human" => Some(Self::Human),
+            "json" => Some(Self::Json),
+            _ => None,
+        }
+    }
+}
+
 /// Cycle-sampled progress reporter: one stderr line per sample window
 /// plus a completion line.  Enable with
 /// `SimBuilder::progress_every(cycles)`.
@@ -49,11 +75,19 @@ pub trait Observer {
 pub struct ProgressObserver {
     /// Prefix for every line (e.g. the run label); empty means bare.
     pub label: String,
+    /// Human lines or serve-frame-shaped JSON.
+    pub format: ProgressFormat,
+    window: MetricsWindow,
 }
 
 impl ProgressObserver {
     pub fn new(label: impl Into<String>) -> Self {
-        Self { label: label.into() }
+        Self { label: label.into(), ..Self::default() }
+    }
+
+    /// Structured-output variant (`--progress-format json`).
+    pub fn json(label: impl Into<String>) -> Self {
+        Self { label: label.into(), format: ProgressFormat::Json, ..Self::default() }
     }
 
     fn prefix(&self) -> String {
@@ -67,18 +101,44 @@ impl ProgressObserver {
 
 impl Observer for ProgressObserver {
     fn on_sample(&mut self, now: Cycle, stats: &SimStats) {
+        let m = self.window.tick(stats);
+        if self.format == ProgressFormat::Json {
+            eprintln!(
+                "{{\"type\": \"progress\", \"label\": {}, \"cycle\": {now}, \"memops\": {}, \
+                 \"renew_rate\": {:.6}, \"avg_lease\": {:.6}}}",
+                escape(&self.label),
+                stats.memops,
+                m.renew_rate,
+                m.avg_lease
+            );
+            return;
+        }
         // `stats.cycles` is only written when the run completes, so
         // mid-run throughput must be derived from `now`.
         let thr = if now == 0 { 0.0 } else { stats.memops as f64 / now as f64 };
         eprintln!(
-            "{} cycle {now}: {} memops, {thr:.4} ops/cycle, {} flits",
+            "{} cycle {now}: {} memops, {thr:.4} ops/cycle, {} flits, \
+             renew rate {:.4}, avg lease {:.1}",
             self.prefix(),
             stats.memops,
-            stats.traffic.total()
+            stats.traffic.total(),
+            m.renew_rate,
+            m.avg_lease
         );
     }
 
     fn on_finish(&mut self, stats: &SimStats, core_finish: &[Cycle]) {
+        if self.format == ProgressFormat::Json {
+            eprintln!(
+                "{{\"type\": \"finished\", \"label\": {}, \"cycles\": {}, \"memops\": {}, \
+                 \"cores\": {}}}",
+                escape(&self.label),
+                stats.cycles,
+                stats.memops,
+                core_finish.len()
+            );
+            return;
+        }
         eprintln!(
             "{} finished: {} cycles, {} memops across {} cores",
             self.prefix(),

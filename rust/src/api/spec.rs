@@ -76,6 +76,10 @@ pub struct SimSpec {
     /// `None`/`Some(0)` disables migration.  Performance knob, absent
     /// from labels like `threads`.
     pub rebalance_every: Option<u32>,
+    /// Record the coherence flight recorder ([`crate::obs`]).  Purely
+    /// additive observability — stats and SC log stay bit-identical —
+    /// so it is absent from [`SimSpec::variant_label`] like `threads`.
+    pub trace: bool,
 }
 
 impl SimSpec {
@@ -102,6 +106,7 @@ impl SimSpec {
             threads: None,
             pdes_mode: None,
             rebalance_every: None,
+            trace: false,
         }
     }
 
@@ -182,6 +187,9 @@ impl SimSpec {
         }
         if let Some(r) = self.rebalance_every {
             b = b.rebalance_every(r);
+        }
+        if self.trace {
+            b = b.trace(true);
         }
         // NUMA knobs are inert on a 1-socket system: reject them
         // loudly instead of simulating flat while the spec looks

@@ -65,6 +65,11 @@ pub struct BenchPoint {
     /// Max/mean per-shard busy-time ratio from the best-wall
     /// iteration, >= 1.0 (1.0 = perfectly even).  0 on serial points.
     pub imbalance: f64,
+    /// Renew requests / LLC accesses, in [0, 1] (Fig. 5; deterministic
+    /// like the other simulated counters).
+    pub renew_rate: f64,
+    /// Mean granted lease length (0 for non-Tardis variants).
+    pub avg_lease: f64,
     /// Best host wall time over the iterations, seconds.
     pub wall_s: f64,
 }
@@ -185,7 +190,8 @@ impl BenchReport {
             let _ = write!(
                 j,
                 "    {{\"workload\": {}, \"variant\": {}, \"cores\": {}, \"sim_cycles\": {}, \
-                 \"memops\": {}, \"events\": {}{socket_split}{pdes}, \"wall_s\": {:.6}, \
+                 \"memops\": {}, \"events\": {}, \"renew_rate\": {:.6}, \
+                 \"avg_lease\": {:.6}{socket_split}{pdes}, \"wall_s\": {:.6}, \
                  \"events_per_sec\": {:.1}, \"sim_cycles_per_sec\": {:.1}}}",
                 lit(&p.workload),
                 lit(&p.variant),
@@ -193,6 +199,8 @@ impl BenchReport {
                 p.sim_cycles,
                 p.memops,
                 p.events,
+                p.renew_rate,
+                p.avg_lease,
                 p.wall_s,
                 p.events_per_sec(),
                 p.sim_cycles_per_sec(),
@@ -418,6 +426,8 @@ fn measure_points(
                 null_msgs: if threads > 1 { best_null } else { 0 },
                 rebalances: if threads > 1 { best_reb } else { 0 },
                 imbalance: if threads > 1 { best_imb } else { 0.0 },
+                renew_rate: stats.renew_rate(),
+                avg_lease: stats.avg_lease(),
                 wall_s: best_wall,
             });
         }
@@ -580,10 +590,21 @@ mod tests {
             "\"events\"",
             "\"wall_s\"",
             "\"events_per_sec\"",
+            "\"renew_rate\"",
+            "\"avg_lease\"",
             "\"aggregate\"",
         ] {
             assert!(j.contains(key), "missing {key} in:\n{j}");
         }
+        // The interval metrics are bounded like the validator demands.
+        assert!(r
+            .points
+            .iter()
+            .all(|p| (0.0..=1.0).contains(&p.renew_rate) && p.avg_lease >= 0.0));
+        assert!(
+            r.points.iter().any(|p| p.variant.starts_with("tardis") && p.avg_lease > 0.0),
+            "tardis points grant leases"
+        );
         // Balanced braces/brackets (cheap well-formedness probe).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());

@@ -265,6 +265,7 @@ impl InOrderCore {
             // in flight); the next drain completion frees a slot and
             // resumes this store.
             env.pctx.stats.sb_full_stalls += 1;
+            env.pctx.emit(crate::obs::EventKind::SbStall, self.id, addr, 0);
             self.sb_stalled = true;
             self.state = State::WaitDrain;
             return CoreAction::Park;

@@ -173,6 +173,7 @@ impl OooCore {
                         // count the episode once.
                         if !self.sb_stall_counted {
                             env.pctx.stats.sb_full_stalls += 1;
+                            env.pctx.emit(crate::obs::EventKind::SbStall, self.id, head.addr, 0);
                             self.sb_stall_counted = true;
                         }
                     }

@@ -6,7 +6,10 @@
 //! ```text
 //! tardis run   --workload fft --protocol tardis --cores 64 [--ooo]
 //!              [--lease N] [--self-inc N] [--no-spec] [--delta-bits N]
-//!              [--progress N]
+//!              [--progress N] [--progress-format human|json]
+//!              [--trace-out FILE] [--host-spans]
+//! tardis trace --workload fft [every run flag] [--out FILE]
+//!              [--host-spans] [--window N] [--top K]
 //! tardis sweep --figure fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7
 //!              [--threads N] [--scale-down N] [--out results/]
 //! tardis litmus
@@ -25,7 +28,7 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use tardis_dsm::api::{SimBuilder, SimSpec};
+use tardis_dsm::api::{ProgressFormat, ProgressObserver, SimBuilder, SimSpec};
 use tardis_dsm::config::{
     Consistency, CoreModel, LeasePolicyKind, PdesMode, ProtocolKind, SocketInterleave,
     TopologyConfig,
@@ -134,6 +137,7 @@ fn main() -> Result<()> {
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "run" => cmd_run(&args),
+        "trace" => cmd_trace(&args),
         "sweep" => cmd_sweep(&args),
         "litmus" => {
             args.expect_only("litmus", &[], &[])?;
@@ -164,9 +168,18 @@ USAGE:
              [--ooo] [--consistency sc|tso] [--lease N]
              [--lease-policy static|dynamic|predictive] [--self-inc N]
              [--no-spec] [--delta-bits N] [--scale-down N] [--progress N]
-             [--seed N] [--sockets N] [--numa-ratio N]
-             [--interleave line|block] [--threads N]
+             [--progress-format human|json] [--seed N] [--sockets N]
+             [--numa-ratio N] [--interleave line|block] [--threads N]
              [--pdes-mode epoch|nullmsg|auto] [--rebalance N]
+             [--trace-out FILE] [--host-spans]
+  tardis trace --workload <name> [every `run` flag] [--out FILE]
+             [--host-spans] [--window N] [--top K]
+                          coherence flight recorder: run the point with
+                          protocol-event tracing on, print the top-K
+                          hot-line / hot-core attribution tables and the
+                          interval timeline, and optionally write the
+                          tardis-trace-v1 Chrome trace JSON (--out;
+                          --host-spans adds the host-time PDES process)
   tardis sweep --figure <fig4|fig5|fig6|fig7|fig8|fig9|fig10|table6|table7|lease|numa>
              [--threads N] [--scale-down N] [--out DIR]
   tardis litmus           run the litmus suite under all three protocols
@@ -274,37 +287,69 @@ fn spec_from_args(args: &Args) -> Result<SimSpec> {
     Ok(spec)
 }
 
+/// Parse `--progress` / `--progress-format` into a configured
+/// progress observer (`None` when progress is off).
+fn progress_observer(args: &Args) -> Result<Option<(u64, ProgressObserver)>> {
+    let progress = args.get_u64("progress", 0)?;
+    let fmt = args.get_str("progress-format", "human")?;
+    let fmt = ProgressFormat::parse(fmt)
+        .ok_or_else(|| anyhow!("unknown progress format {fmt:?} (human|json)"))?;
+    if progress == 0 {
+        if args.has("progress-format") {
+            bail!("--progress-format has no effect without --progress N");
+        }
+        return Ok(None);
+    }
+    let obs = match fmt {
+        ProgressFormat::Human => ProgressObserver::default(),
+        ProgressFormat::Json => ProgressObserver::json(""),
+    };
+    Ok(Some((progress, obs)))
+}
+
+/// Flags shared by `tardis run` and `tardis trace` (the SimSpec
+/// surface).
+const SPEC_VALUE_FLAGS: &[&str] = &[
+    "workload",
+    "protocol",
+    "cores",
+    "consistency",
+    "lease",
+    "lease-policy",
+    "self-inc",
+    "delta-bits",
+    "scale-down",
+    "seed",
+    "sockets",
+    "numa-ratio",
+    "interleave",
+    "threads",
+    "pdes-mode",
+    "rebalance",
+];
+
 fn cmd_run(args: &Args) -> Result<()> {
-    args.expect_only(
-        "run",
-        &[
-            "workload",
-            "protocol",
-            "cores",
-            "consistency",
-            "lease",
-            "lease-policy",
-            "self-inc",
-            "delta-bits",
-            "scale-down",
-            "progress",
-            "seed",
-            "sockets",
-            "numa-ratio",
-            "interleave",
-            "threads",
-            "pdes-mode",
-            "rebalance",
-        ],
-        &["ooo", "no-spec"],
-    )?;
-    let spec = spec_from_args(args)?;
+    let mut value_flags = SPEC_VALUE_FLAGS.to_vec();
+    value_flags.extend(["progress", "progress-format", "trace-out"]);
+    args.expect_only("run", &value_flags, &["ooo", "no-spec", "host-spans"])?;
+    let trace_out = if args.has("trace-out") {
+        match args.get("trace-out") {
+            Some(p) => Some(p.to_string()),
+            None => bail!("--trace-out expects a file path"),
+        }
+    } else {
+        None
+    };
+    if args.has("host-spans") && trace_out.is_none() {
+        bail!("--host-spans has no effect without --trace-out FILE");
+    }
+    let mut spec = spec_from_args(args)?;
+    spec.trace = trace_out.is_some();
     let name = spec.workload.clone();
     let n_cores = spec.cores;
     let mut b = spec.builder()?;
-    let progress = args.get_u64("progress", 0)?;
-    if progress > 0 {
-        b = b.progress_every(progress);
+    if let Some((every, obs)) = progress_observer(args)? {
+        b = b.sample_every(every).observe(obs);
     }
     if let Ok(rt) = TraceRuntime::open_default() {
         b = b.trace_runtime(rt);
@@ -335,6 +380,113 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("ts incr rate      {:.0} cycles/ts", s.ts_incr_rate());
     println!("self incr share   {:.1}%", s.self_inc_fraction() * 100.0);
     println!("wall time         {:.3?}", res.elapsed);
+    if let Some(path) = trace_out {
+        write_trace(&path, &res, args.has("host-spans"))?;
+    }
+    Ok(())
+}
+
+/// Serialize a report's flight-recorder trace to `path`.
+fn write_trace(path: &str, res: &tardis_dsm::api::SimReport, host_spans: bool) -> Result<()> {
+    let opts = tardis_dsm::obs::ExportOpts { host_spans };
+    std::fs::write(path, tardis_dsm::obs::export_chrome(&res.trace, &res.stats.parallel, &opts))?;
+    println!(
+        "wrote trace {path} ({} events, {} dropped)",
+        res.trace.events.len(),
+        res.trace.dropped
+    );
+    Ok(())
+}
+
+/// `tardis trace`: the flight-recorder view of one simulation point —
+/// hot-line / hot-core attribution tables, the interval metrics
+/// timeline, and (with `--out`) the tardis-trace-v1 Chrome trace JSON
+/// (DESIGN.md §12).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let mut value_flags = SPEC_VALUE_FLAGS.to_vec();
+    value_flags.extend(["out", "window", "top"]);
+    args.expect_only("trace", &value_flags, &["ooo", "no-spec", "host-spans"])?;
+    if args.has("host-spans") && !args.has("out") {
+        bail!("--host-spans has no effect without --out FILE");
+    }
+    let mut spec = spec_from_args(args)?;
+    spec.trace = true;
+    let name = spec.workload.clone();
+    let mut b = spec.builder()?;
+    if let Ok(rt) = TraceRuntime::open_default() {
+        b = b.trace_runtime(rt);
+    } else {
+        eprintln!("note: artifacts not found, using rust synth fallback (run `make artifacts`)");
+    }
+    let res = b.run()?;
+    let events = &res.trace.events;
+    println!(
+        "{} on {} x{} cores: {} cycles, {} protocol events recorded ({} dropped)",
+        name,
+        spec.protocol.name(),
+        spec.cores,
+        res.stats.cycles,
+        events.len(),
+        res.trace.dropped
+    );
+
+    let top = args.get_u64("top", 10)? as usize;
+    println!();
+    print!(
+        "{}",
+        tardis_dsm::obs::format_hot_table(
+            &format!("hot lines (top {top} by coherence pressure)"),
+            "line",
+            true,
+            &tardis_dsm::obs::hot_lines(events, top),
+        )
+    );
+    println!();
+    print!(
+        "{}",
+        tardis_dsm::obs::format_hot_table(
+            &format!("hot cores (top {top} by coherence pressure)"),
+            "core",
+            false,
+            &tardis_dsm::obs::hot_cores(events, top),
+        )
+    );
+
+    // Timeline: explicit --window, or ~16 bins across the run.
+    let window = match args.get_u64("window", 0)? {
+        0 => (res.stats.cycles / 16).max(1),
+        w => w,
+    };
+    let bins = tardis_dsm::obs::timeline(events, window);
+    println!();
+    println!("timeline (window {window} cycles):");
+    println!(
+        "  {:>12} {:>8} {:>9} {:>11} {:>10} {:>9}",
+        "cycle", "demand", "expiries", "renew_rate", "avg_lease", "sb_stall"
+    );
+    const MAX_BINS: usize = 64;
+    for bin in bins.iter().take(MAX_BINS) {
+        println!(
+            "  {:>12} {:>8} {:>9} {:>11.4} {:>10.1} {:>9}",
+            bin.start,
+            bin.demand,
+            bin.expiries,
+            bin.renewal_success_rate(),
+            bin.avg_lease(),
+            bin.sb_stalls
+        );
+    }
+    if bins.len() > MAX_BINS {
+        println!("  ... {} more window(s) (raise --window)", bins.len() - MAX_BINS);
+    }
+
+    if args.has("out") {
+        let path = match args.get("out") {
+            Some(p) => p.to_string(),
+            None => bail!("--out expects a file path"),
+        };
+        write_trace(&path, &res, args.has("host-spans"))?;
+    }
     Ok(())
 }
 

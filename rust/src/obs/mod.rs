@@ -1,0 +1,871 @@
+//! The coherence flight recorder (DESIGN.md §12).
+//!
+//! Records protocol-level events — demand misses, lease expiries,
+//! renewal outcomes, lease grants, pts jumps, livelock escalations,
+//! store-buffer stalls — into a compact per-shard ring buffer as the
+//! simulation runs, and replays one recording as three views:
+//!
+//! 1. a `tardis-trace-v1` Chrome trace-event JSON export
+//!    ([`export_chrome`], loadable in Perfetto) where protocol events
+//!    live on the *sim-time* clock (pid 1, `ts` = cycle) and PDES
+//!    execution spans live on an explicitly tagged *host-time* process
+//!    (pid 2, `cat: "host"`);
+//! 2. an interval metrics timeline ([`timeline`]: renewal counts, avg
+//!    lease, a log2 pts-gap histogram per window of N cycles), plus
+//!    the [`MetricsWindow`] delta helper that surfaces the same
+//!    interval metrics through `Observer::on_sample`, serve progress
+//!    frames, and the bench per-point summary;
+//! 3. top-K hot-line / hot-core attribution tables ([`hot_lines`],
+//!    [`hot_cores`]) printed by `tardis trace` and embedded in the
+//!    export's `otherData`.
+//!
+//! Determinism contract: trace events are *simulated* quantities, like
+//! stats.  Each shard appends into its own [`TraceBuf`] in dispatch
+//! order; the PDES driver merges per-dispatch event groups in the same
+//! canonical `(cycle, PushKey)` order the SC log already uses, so the
+//! merged event sequence — and therefore the default export — is
+//! bit-for-bit identical across serial, epoch, null-message, and any
+//! thread count.  Host-time spans ([`ExecEvent`], per-shard busy/wait)
+//! are execution-strategy telemetry, excluded from the default export
+//! and only emitted behind `--host-spans`.
+//!
+//! Recording is zero-cost when disabled: [`TraceBuf::default`] is a
+//! disabled buffer whose `push` is one predictable branch, and no
+//! engine behavior depends on the recorder's state.
+
+use std::fmt::Write as _;
+
+use crate::hashing::FxHashMap;
+use crate::stats::{ParallelStats, SimStats};
+use crate::types::{Cycle, LineAddr};
+
+/// Per-shard ring-buffer capacity (events).  Chosen so a worst-case
+/// 64-shard run stays well under a gigabyte while typical sweeps never
+/// drop anything; the per-shard cap composes with the post-merge
+/// global truncation to the same constant (see [`TraceBuf`] docs for
+/// the determinism argument).
+pub const TRACE_CAP: usize = 1 << 20;
+
+/// Histogram buckets in the per-window pts-gap histogram (log2 of the
+/// `pts - rts` gap at lease expiry; bucket 0 is gap 0, the top bucket
+/// collects everything >= 2^14).
+pub const PTS_GAP_BUCKETS: usize = 16;
+
+/// Protocol-level event kinds the recorder captures.  The wire name
+/// ([`EventKind::name`]) is the `name` field of the exported Chrome
+/// trace event and part of the `tardis-trace-v1` schema
+/// (tools/validate_trace.py mirrors the list).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EventKind {
+    /// Demand miss: a load/store that missed (or needed an upgrade)
+    /// and issued a request to the home slice.  arg = 1 for writes.
+    Demand,
+    /// An expired-lease load: the line was present but `rts < pts`, so
+    /// a renewal was issued.  arg = the pts − rts gap at expiry (the
+    /// quantity the pts-gap histogram bins).
+    LeaseExpire,
+    /// A renewal resolved with an unchanged wts (the paper's cheap
+    /// flit-level renewal).  arg = 0.
+    RenewOk,
+    /// A renewal came back with new data (the line had been written):
+    /// the speculation window squashes or re-executes.  arg = 0.
+    RenewFail,
+    /// The home slice granted a shared lease.  arg = the effective
+    /// lease length; exported as a sim-time span of that duration.
+    LeaseGrant,
+    /// A core's pts advanced.  arg = the delta.  addr = 0 (pts is
+    /// per-core state, not per-line).
+    PtsJump,
+    /// The livelock guard escalated a starved renewal to a blocking
+    /// demand.  arg = 0.
+    Livelock,
+    /// A TSO store buffer filled and stalled retirement.  arg = 0.
+    SbStall,
+}
+
+impl EventKind {
+    /// Every kind, in export order (the schema vocabulary).
+    pub const ALL: [EventKind; 8] = [
+        EventKind::Demand,
+        EventKind::LeaseExpire,
+        EventKind::RenewOk,
+        EventKind::RenewFail,
+        EventKind::LeaseGrant,
+        EventKind::PtsJump,
+        EventKind::Livelock,
+        EventKind::SbStall,
+    ];
+
+    /// Stable wire name (the exported `name` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Demand => "demand",
+            EventKind::LeaseExpire => "lease_expire",
+            EventKind::RenewOk => "renew_ok",
+            EventKind::RenewFail => "renew_fail",
+            EventKind::LeaseGrant => "lease_grant",
+            EventKind::PtsJump => "pts_jump",
+            EventKind::Livelock => "livelock",
+            EventKind::SbStall => "sb_stall",
+        }
+    }
+}
+
+/// One recorded protocol event.  24 bytes + kind; everything needed to
+/// reconstruct the three views without re-running the simulation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Simulated cycle the handling dispatch ran at.
+    pub cycle: Cycle,
+    /// Line address (0 for per-core events like pts jumps).
+    pub addr: LineAddr,
+    /// Kind-specific argument (lease length, pts delta, gap...).
+    pub arg: u64,
+    /// Core the event is attributed to (the export's `tid`).
+    pub core: u32,
+    pub kind: EventKind,
+}
+
+/// Per-shard append buffer with a hard capacity.
+///
+/// Determinism under capping: each shard's buffer is appended in
+/// dispatch order, which the PDES merge re-sorts into the canonical
+/// `(cycle, PushKey)` order.  Because the merge preserves each shard's
+/// relative order, the events a shard contributes to the global first
+/// `TRACE_CAP` are a *prefix* of that shard's local sequence — so a
+/// per-shard cap of the same constant can never evict an event the
+/// global truncation would have kept, and merged-then-truncated equals
+/// the serial recording bit for bit.  `emitted` keeps counting past
+/// the cap so the dropped total is exact (and itself deterministic).
+#[derive(Debug, Default)]
+pub struct TraceBuf {
+    enabled: bool,
+    cap: usize,
+    emitted: u64,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceBuf {
+    /// An enabled buffer at the standard capacity.
+    pub fn recording() -> Self {
+        Self { enabled: true, cap: TRACE_CAP, emitted: 0, events: Vec::new() }
+    }
+
+    /// An enabled buffer with an explicit capacity (tests).
+    pub fn with_cap(cap: usize) -> Self {
+        Self { enabled: true, cap, emitted: 0, events: Vec::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Record one event; a single branch when disabled (the zero-cost
+    /// contract every untraced run relies on).
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if !self.enabled {
+            return;
+        }
+        self.emitted += 1;
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        }
+    }
+
+    /// Total events offered, including any past the cap.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Finish a serial recording: the append order *is* the canonical
+    /// order when there is only one shard.
+    pub fn into_recording(self) -> TraceRecording {
+        let dropped = self.emitted - self.events.len() as u64;
+        TraceRecording { enabled: self.enabled, events: self.events, dropped, exec: Vec::new() }
+    }
+
+    /// Decompose into raw parts for the PDES merge.
+    pub fn into_parts(self) -> (Vec<TraceEvent>, u64) {
+        (self.events, self.emitted)
+    }
+}
+
+/// Host-side execution event kinds (PDES telemetry, never part of the
+/// deterministic export).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecKind {
+    /// A count-driven shard repartition ran.  arg = migrated events.
+    Rebalance,
+    /// A synchronization window / epoch boundary.  arg = epoch index.
+    Window,
+}
+
+impl ExecKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ExecKind::Rebalance => "rebalance",
+            ExecKind::Window => "window",
+        }
+    }
+}
+
+/// One host-side execution event (shard-attributed; cycle is the
+/// *simulated* time the boundary corresponded to, exported with an
+/// explicit `"clock": "sim"` tag on the host process).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecEvent {
+    pub kind: ExecKind,
+    pub cycle: Cycle,
+    pub shard: u32,
+    pub arg: u64,
+}
+
+/// A finished recording: the canonically ordered protocol events plus
+/// host-side execution telemetry.
+#[derive(Debug, Default)]
+pub struct TraceRecording {
+    /// False for untraced runs (the export of a disabled recording is
+    /// an error at the CLI layer, not here).
+    pub enabled: bool,
+    /// Protocol events in canonical `(cycle, PushKey)` order.
+    pub events: Vec<TraceEvent>,
+    /// Events past the (deterministic) capacity.
+    pub dropped: u64,
+    /// Host-side PDES events (empty on serial runs).
+    pub exec: Vec<ExecEvent>,
+}
+
+// ---- view 2: interval metrics timeline -----------------------------
+
+/// Aggregated protocol activity over one window of cycles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TimelineBin {
+    /// First cycle of the window.
+    pub start: Cycle,
+    pub demand: u64,
+    pub expiries: u64,
+    pub renew_ok: u64,
+    pub renew_fail: u64,
+    pub leases: u64,
+    /// Sum of granted lease lengths (avg = lease_total / leases).
+    pub lease_total: u64,
+    /// Sum of pts deltas.
+    pub pts_total: u64,
+    pub sb_stalls: u64,
+    pub livelocks: u64,
+    /// log2 histogram of the pts − rts gap at each lease expiry.
+    pub pts_gap_hist: [u64; PTS_GAP_BUCKETS],
+}
+
+impl TimelineBin {
+    /// Fraction of resolved renewals that succeeded, in [0, 1].
+    pub fn renewal_success_rate(&self) -> f64 {
+        let n = self.renew_ok + self.renew_fail;
+        if n == 0 {
+            0.0
+        } else {
+            self.renew_ok as f64 / n as f64
+        }
+    }
+
+    /// Mean granted lease length over the window.
+    pub fn avg_lease(&self) -> f64 {
+        if self.leases == 0 {
+            0.0
+        } else {
+            self.lease_total as f64 / self.leases as f64
+        }
+    }
+}
+
+/// log2 bucket for a pts-gap value (bucket 0 = gap 0; top bucket
+/// collects the tail).
+pub fn pts_gap_bucket(gap: u64) -> usize {
+    if gap == 0 {
+        0
+    } else {
+        ((64 - gap.leading_zeros()) as usize).min(PTS_GAP_BUCKETS - 1)
+    }
+}
+
+/// Fold canonically ordered events into contiguous windows of
+/// `window` cycles ([start, start + window)); empty leading/interior
+/// windows are kept so bin index == window index.
+pub fn timeline(events: &[TraceEvent], window: Cycle) -> Vec<TimelineBin> {
+    let window = window.max(1);
+    let mut bins: Vec<TimelineBin> = Vec::new();
+    for ev in events {
+        let idx = (ev.cycle / window) as usize;
+        while bins.len() <= idx {
+            bins.push(TimelineBin {
+                start: bins.len() as Cycle * window,
+                ..TimelineBin::default()
+            });
+        }
+        let bin = &mut bins[idx];
+        match ev.kind {
+            EventKind::Demand => bin.demand += 1,
+            EventKind::LeaseExpire => {
+                bin.expiries += 1;
+                bin.pts_gap_hist[pts_gap_bucket(ev.arg)] += 1;
+            }
+            EventKind::RenewOk => bin.renew_ok += 1,
+            EventKind::RenewFail => bin.renew_fail += 1,
+            EventKind::LeaseGrant => {
+                bin.leases += 1;
+                bin.lease_total += ev.arg;
+            }
+            EventKind::PtsJump => bin.pts_total += ev.arg,
+            EventKind::Livelock => bin.livelocks += 1,
+            EventKind::SbStall => bin.sb_stalls += 1,
+        }
+    }
+    bins
+}
+
+// ---- view 3: hot-line / hot-core attribution -----------------------
+
+/// Per-key (line address or core id) protocol activity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct HotStat {
+    pub key: u64,
+    pub demand: u64,
+    pub expiries: u64,
+    pub renew_ok: u64,
+    pub renew_fail: u64,
+}
+
+impl HotStat {
+    /// Ranking metric: coherence *traffic pressure* — demand misses
+    /// plus renewal-triggering expiries.
+    pub fn total(&self) -> u64 {
+        self.demand + self.expiries
+    }
+}
+
+fn hot_by(
+    events: &[TraceEvent],
+    k: usize,
+    key_of: impl Fn(&TraceEvent) -> Option<u64>,
+) -> Vec<HotStat> {
+    let mut map: FxHashMap<u64, HotStat> = FxHashMap::default();
+    for ev in events {
+        let Some(key) = key_of(ev) else { continue };
+        let s = map.entry(key).or_insert(HotStat { key, ..HotStat::default() });
+        match ev.kind {
+            EventKind::Demand => s.demand += 1,
+            EventKind::LeaseExpire => s.expiries += 1,
+            EventKind::RenewOk => s.renew_ok += 1,
+            EventKind::RenewFail => s.renew_fail += 1,
+            _ => {}
+        }
+    }
+    let mut out: Vec<HotStat> = map.into_values().collect();
+    // Deterministic ranking: pressure desc, key asc on ties.
+    out.sort_unstable_by(|a, b| b.total().cmp(&a.total()).then(a.key.cmp(&b.key)));
+    out.truncate(k);
+    out
+}
+
+/// Top-K line addresses by coherence pressure.  Only line-attributed
+/// kinds count (pts jumps and SB stalls carry no meaningful address).
+pub fn hot_lines(events: &[TraceEvent], k: usize) -> Vec<HotStat> {
+    hot_by(events, k, |ev| match ev.kind {
+        EventKind::Demand | EventKind::LeaseExpire | EventKind::RenewOk | EventKind::RenewFail => {
+            Some(ev.addr)
+        }
+        _ => None,
+    })
+}
+
+/// Top-K cores by coherence pressure.
+pub fn hot_cores(events: &[TraceEvent], k: usize) -> Vec<HotStat> {
+    hot_by(events, k, |ev| match ev.kind {
+        EventKind::Demand | EventKind::LeaseExpire | EventKind::RenewOk | EventKind::RenewFail => {
+            Some(ev.core as u64)
+        }
+        _ => None,
+    })
+}
+
+/// Render a hot table for the CLI / report (aligned plain text).
+pub fn format_hot_table(title: &str, key_name: &str, hex_keys: bool, rows: &[HotStat]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{title}");
+    let _ = writeln!(
+        s,
+        "  {:<4} {:>14} {:>8} {:>9} {:>9} {:>10} {:>9}",
+        "rank", key_name, "demand", "expiries", "renew_ok", "renew_fail", "pressure"
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let key = if hex_keys { format!("{:#x}", r.key) } else { r.key.to_string() };
+        let _ = writeln!(
+            s,
+            "  {:<4} {:>14} {:>8} {:>9} {:>9} {:>10} {:>9}",
+            i + 1,
+            key,
+            r.demand,
+            r.expiries,
+            r.renew_ok,
+            r.renew_fail,
+            r.total()
+        );
+    }
+    s
+}
+
+// ---- interval metrics from stats snapshots -------------------------
+
+/// Interval metrics between two [`SimStats`] snapshots: the live
+/// counterpart of the trace timeline, cheap enough for every
+/// `Observer::on_sample` / serve progress frame.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct IntervalMetrics {
+    /// Renewals per LLC access over the interval, in [0, 1].
+    pub renew_rate: f64,
+    /// Mean granted lease length over the interval.
+    pub avg_lease: f64,
+}
+
+/// Stateful delta tracker over successive cumulative [`SimStats`]
+/// snapshots.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsWindow {
+    renew_requests: u64,
+    llc_accesses: u64,
+    lease_total: u64,
+    leases_granted: u64,
+}
+
+impl MetricsWindow {
+    /// Interval metrics since the previous call (or since zero).
+    pub fn tick(&mut self, stats: &SimStats) -> IntervalMetrics {
+        let d_renew = stats.renew_requests - self.renew_requests;
+        let d_llc = stats.llc_accesses - self.llc_accesses;
+        let d_lease = stats.ts.lease_total - self.lease_total;
+        let d_grants = stats.ts.leases_granted - self.leases_granted;
+        self.renew_requests = stats.renew_requests;
+        self.llc_accesses = stats.llc_accesses;
+        self.lease_total = stats.ts.lease_total;
+        self.leases_granted = stats.ts.leases_granted;
+        IntervalMetrics {
+            renew_rate: if d_llc == 0 { 0.0 } else { d_renew as f64 / d_llc as f64 },
+            avg_lease: if d_grants == 0 { 0.0 } else { d_lease as f64 / d_grants as f64 },
+        }
+    }
+}
+
+// ---- view 1: the tardis-trace-v1 Chrome trace-event export ---------
+
+/// Schema identifier stamped into every export.
+pub const TRACE_SCHEMA: &str = "tardis-trace-v1";
+
+/// Export options.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExportOpts {
+    /// Include the host-time PDES process (pid 2): per-shard busy/wait
+    /// spans and rebalance/window markers.  Host telemetry is
+    /// nondeterministic by nature, so the default export excludes it —
+    /// that is what makes serial-vs-parallel exports byte-diffable.
+    pub host_spans: bool,
+}
+
+/// Hot-table depth embedded in the export's `otherData`.
+const EXPORT_TOP_K: usize = 8;
+
+fn push_hot_json(j: &mut String, rows: &[HotStat], hex_keys: bool) {
+    j.push('[');
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            j.push_str(", ");
+        }
+        let key = if hex_keys { format!("\"{:#x}\"", r.key) } else { r.key.to_string() };
+        let _ = write!(
+            j,
+            "{{\"key\": {key}, \"demand\": {}, \"expiries\": {}, \"renew_ok\": {}, \
+             \"renew_fail\": {}, \"pressure\": {}}}",
+            r.demand,
+            r.expiries,
+            r.renew_ok,
+            r.renew_fail,
+            r.total()
+        );
+    }
+    j.push(']');
+}
+
+/// Serialize a recording to the `tardis-trace-v1` Chrome trace-event
+/// JSON document (tools/validate_trace.py validates it; Perfetto and
+/// `chrome://tracing` load it).
+///
+/// Layout: one event object per line inside `traceEvents`, so two
+/// exports diff line-by-line.  Sim-time protocol events are pid 1
+/// (`cat: "proto"`, `ts` = cycle, `tid` = core); lease grants are `X`
+/// spans of their lease length, everything else an instant.  Host-time
+/// events are pid 2 (`cat: "host"`), opt-in via
+/// [`ExportOpts::host_spans`].
+pub fn export_chrome(rec: &TraceRecording, parallel: &ParallelStats, opts: &ExportOpts) -> String {
+    let mut j = String::with_capacity(128 * rec.events.len() + 4096);
+    j.push_str("{\n\"displayTimeUnit\": \"ns\",\n");
+    let _ = write!(
+        j,
+        "\"otherData\": {{\"schema\": \"{TRACE_SCHEMA}\", \"events\": {}, \"dropped\": {}, \
+         \"hot_lines\": ",
+        rec.events.len(),
+        rec.dropped
+    );
+    push_hot_json(&mut j, &hot_lines(&rec.events, EXPORT_TOP_K), true);
+    j.push_str(", \"hot_cores\": ");
+    push_hot_json(&mut j, &hot_cores(&rec.events, EXPORT_TOP_K), false);
+    j.push_str("},\n\"traceEvents\": [\n");
+
+    let mut first = true;
+    let mut sep = |j: &mut String| {
+        if first {
+            first = false;
+        } else {
+            j.push_str(",\n");
+        }
+    };
+
+    // Process metadata, then one thread_name per core present (derived
+    // from the deterministic event sequence, so itself deterministic).
+    sep(&mut j);
+    j.push_str(
+        "{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 1, \"tid\": 0, \
+         \"args\": {\"name\": \"sim (protocol, ts=cycles)\"}}",
+    );
+    let mut cores: Vec<u32> = rec.events.iter().map(|e| e.core).collect();
+    cores.sort_unstable();
+    cores.dedup();
+    for c in &cores {
+        sep(&mut j);
+        let _ = write!(
+            j,
+            "{{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": 1, \"tid\": {c}, \
+             \"args\": {{\"name\": \"core {c}\"}}}}"
+        );
+    }
+
+    for ev in &rec.events {
+        sep(&mut j);
+        match ev.kind {
+            EventKind::LeaseGrant => {
+                let _ = write!(
+                    j,
+                    "{{\"name\": \"lease_grant\", \"cat\": \"proto\", \"ph\": \"X\", \
+                     \"pid\": 1, \"tid\": {}, \"ts\": {}, \"dur\": {}, \
+                     \"args\": {{\"addr\": \"{:#x}\", \"v\": {}}}}}",
+                    ev.core, ev.cycle, ev.arg.max(1), ev.addr, ev.arg
+                );
+            }
+            kind => {
+                let _ = write!(
+                    j,
+                    "{{\"name\": \"{}\", \"cat\": \"proto\", \"ph\": \"i\", \"s\": \"t\", \
+                     \"pid\": 1, \"tid\": {}, \"ts\": {}, \
+                     \"args\": {{\"addr\": \"{:#x}\", \"v\": {}}}}}",
+                    kind.name(),
+                    ev.core,
+                    ev.cycle,
+                    ev.addr,
+                    ev.arg
+                );
+            }
+        }
+    }
+
+    if opts.host_spans {
+        sep(&mut j);
+        j.push_str(
+            "{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": 2, \"tid\": 0, \
+             \"args\": {\"name\": \"host (PDES execution, ts=us)\"}}",
+        );
+        // Per-shard busy then wait spans laid end to end: ts is host
+        // microseconds, which Chrome treats natively.
+        for s in &parallel.shards {
+            let busy_us = s.busy_ns / 1_000;
+            let wait_us = s.wait_ns / 1_000;
+            sep(&mut j);
+            let _ = write!(
+                j,
+                "{{\"name\": \"shard_busy\", \"cat\": \"host\", \"ph\": \"X\", \"pid\": 2, \
+                 \"tid\": {}, \"ts\": 0, \"dur\": {}, \
+                 \"args\": {{\"clock\": \"host_us\", \"events\": {}}}}}",
+                s.shard, busy_us.max(1), s.events
+            );
+            sep(&mut j);
+            let _ = write!(
+                j,
+                "{{\"name\": \"shard_wait\", \"cat\": \"host\", \"ph\": \"X\", \"pid\": 2, \
+                 \"tid\": {}, \"ts\": {}, \"dur\": {}, \
+                 \"args\": {{\"clock\": \"host_us\"}}}}",
+                s.shard,
+                busy_us.max(1),
+                wait_us.max(1)
+            );
+        }
+        // Window/rebalance markers: simulated boundary cycles shown on
+        // the host process, tagged so tooling never conflates clocks.
+        for ex in &rec.exec {
+            sep(&mut j);
+            let _ = write!(
+                j,
+                "{{\"name\": \"{}\", \"cat\": \"host\", \"ph\": \"i\", \"s\": \"p\", \
+                 \"pid\": 2, \"tid\": {}, \"ts\": {}, \
+                 \"args\": {{\"clock\": \"sim\", \"v\": {}}}}}",
+                ex.kind.name(),
+                ex.shard,
+                ex.cycle,
+                ex.arg
+            );
+        }
+    }
+
+    j.push_str("\n]\n}\n");
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: Cycle, kind: EventKind, core: u32, addr: LineAddr, arg: u64) -> TraceEvent {
+        TraceEvent { cycle, addr, arg, core, kind }
+    }
+
+    #[test]
+    fn disabled_buffer_records_nothing() {
+        let mut b = TraceBuf::default();
+        assert!(!b.enabled());
+        b.push(ev(1, EventKind::Demand, 0, 0x10, 0));
+        assert!(b.is_empty());
+        assert_eq!(b.emitted(), 0);
+        let rec = b.into_recording();
+        assert!(!rec.enabled && rec.events.is_empty() && rec.dropped == 0);
+    }
+
+    #[test]
+    fn capped_buffer_keeps_the_prefix_and_counts_drops() {
+        let mut b = TraceBuf::with_cap(3);
+        for i in 0..5u64 {
+            b.push(ev(i, EventKind::Demand, 0, i, 0));
+        }
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.emitted(), 5);
+        let rec = b.into_recording();
+        assert_eq!(rec.dropped, 2);
+        assert_eq!(rec.events.iter().map(|e| e.cycle).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+
+    /// The determinism-under-capping argument, in miniature: two
+    /// shards each keep their first K events; the canonical-order
+    /// merge truncated to K equals the serial first K.
+    #[test]
+    fn per_shard_caps_compose_with_global_truncation() {
+        const K: usize = 4;
+        // Serial order: interleaved by cycle across two "shards".
+        let all: Vec<TraceEvent> =
+            (0..10u64).map(|i| ev(i, EventKind::Demand, (i % 2) as u32, i, 0)).collect();
+        let mut serial = TraceBuf::with_cap(K);
+        for &e in &all {
+            serial.push(e);
+        }
+        let serial = serial.into_recording();
+
+        let mut sh: [TraceBuf; 2] = [TraceBuf::with_cap(K), TraceBuf::with_cap(K)];
+        for &e in &all {
+            sh[e.core as usize].push(e);
+        }
+        let (ev0, em0) = std::mem::take(&mut sh[0]).into_parts();
+        let (ev1, em1) = std::mem::take(&mut sh[1]).into_parts();
+        let mut merged: Vec<TraceEvent> = ev0.into_iter().chain(ev1).collect();
+        merged.sort_unstable_by_key(|e| e.cycle); // stand-in for (cycle, PushKey)
+        let emitted = em0 + em1;
+        merged.truncate(K);
+        let dropped = emitted - merged.len() as u64;
+        assert_eq!(merged, serial.events);
+        assert_eq!(dropped, serial.dropped);
+    }
+
+    #[test]
+    fn timeline_bins_and_histogram() {
+        let events = vec![
+            ev(0, EventKind::Demand, 0, 0x10, 0),
+            ev(5, EventKind::LeaseGrant, 0, 0x10, 8),
+            ev(12, EventKind::LeaseExpire, 1, 0x10, 0),
+            ev(13, EventKind::LeaseExpire, 1, 0x10, 9),
+            ev(14, EventKind::RenewOk, 1, 0x10, 0),
+            ev(25, EventKind::RenewFail, 0, 0x20, 0),
+            ev(25, EventKind::PtsJump, 0, 0, 7),
+            ev(26, EventKind::SbStall, 2, 0x30, 0),
+            ev(27, EventKind::Livelock, 2, 0x30, 0),
+        ];
+        let bins = timeline(&events, 10);
+        assert_eq!(bins.len(), 3);
+        assert_eq!(bins[0].start, 0);
+        assert_eq!(bins[0].demand, 1);
+        assert_eq!(bins[0].leases, 1);
+        assert_eq!(bins[0].lease_total, 8);
+        assert_eq!(bins[0].avg_lease(), 8.0);
+        assert_eq!(bins[1].expiries, 2);
+        // gap 0 -> bucket 0; gap 9 -> bucket 4 ([8, 15]).
+        assert_eq!(bins[1].pts_gap_hist[0], 1);
+        assert_eq!(bins[1].pts_gap_hist[4], 1);
+        assert_eq!(bins[1].renew_ok, 1);
+        assert_eq!(bins[1].renewal_success_rate(), 1.0);
+        assert_eq!(bins[2].renew_fail, 1);
+        assert_eq!(bins[2].pts_total, 7);
+        assert_eq!(bins[2].sb_stalls, 1);
+        assert_eq!(bins[2].livelocks, 1);
+    }
+
+    #[test]
+    fn pts_gap_buckets_are_log2() {
+        assert_eq!(pts_gap_bucket(0), 0);
+        assert_eq!(pts_gap_bucket(1), 1);
+        assert_eq!(pts_gap_bucket(2), 2);
+        assert_eq!(pts_gap_bucket(3), 2);
+        assert_eq!(pts_gap_bucket(4), 3);
+        assert_eq!(pts_gap_bucket(1 << 13), 14);
+        assert_eq!(pts_gap_bucket(u64::MAX), PTS_GAP_BUCKETS - 1);
+    }
+
+    #[test]
+    fn hot_lines_rank_by_pressure_with_key_tiebreak() {
+        let mut events = Vec::new();
+        for _ in 0..5 {
+            events.push(ev(1, EventKind::LeaseExpire, 0, 0xAA, 1));
+        }
+        for _ in 0..2 {
+            events.push(ev(2, EventKind::Demand, 1, 0xBB, 0));
+        }
+        // 0x10 and 0x20 tie at pressure 1: key order must decide.
+        events.push(ev(3, EventKind::Demand, 0, 0x20, 0));
+        events.push(ev(3, EventKind::Demand, 0, 0x10, 0));
+        events.push(ev(4, EventKind::PtsJump, 0, 0xDEAD, 3)); // no address attribution
+        let hot = hot_lines(&events, 10);
+        assert_eq!(hot[0].key, 0xAA);
+        assert_eq!(hot[0].expiries, 5);
+        assert_eq!(hot[1].key, 0xBB);
+        assert_eq!(hot[2].key, 0x10);
+        assert_eq!(hot[3].key, 0x20);
+        assert!(hot.iter().all(|h| h.key != 0xDEAD));
+        let cores = hot_cores(&events, 2);
+        assert_eq!(cores[0].key, 0); // core 0: 5 expiries + 2 demands
+        assert_eq!(cores[0].total(), 7);
+    }
+
+    #[test]
+    fn metrics_window_computes_interval_deltas() {
+        let mut w = MetricsWindow::default();
+        let mut s = SimStats::default();
+        s.renew_requests = 10;
+        s.llc_accesses = 100;
+        s.ts.leases_granted = 5;
+        s.ts.lease_total = 50;
+        let m = w.tick(&s);
+        assert_eq!(m.renew_rate, 0.1);
+        assert_eq!(m.avg_lease, 10.0);
+        // Second window: only the delta counts.
+        s.renew_requests = 10; // no new renewals
+        s.llc_accesses = 200;
+        s.ts.leases_granted = 7;
+        s.ts.lease_total = 90;
+        let m = w.tick(&s);
+        assert_eq!(m.renew_rate, 0.0);
+        assert_eq!(m.avg_lease, 20.0);
+        // Empty interval yields zeros, not NaN.
+        let m = w.tick(&s);
+        assert_eq!(m.renew_rate, 0.0);
+        assert_eq!(m.avg_lease, 0.0);
+    }
+
+    fn sample_recording() -> TraceRecording {
+        TraceRecording {
+            enabled: true,
+            events: vec![
+                ev(3, EventKind::Demand, 1, 0x10, 1),
+                ev(7, EventKind::LeaseGrant, 1, 0x10, 12),
+                ev(30, EventKind::LeaseExpire, 2, 0x10, 4),
+                ev(31, EventKind::RenewOk, 2, 0x10, 0),
+            ],
+            dropped: 0,
+            exec: vec![ExecEvent { kind: ExecKind::Window, cycle: 64, shard: 0, arg: 1 }],
+        }
+    }
+
+    #[test]
+    fn export_is_deterministic_and_host_free_by_default() {
+        let rec = sample_recording();
+        let par = ParallelStats::default();
+        let a = export_chrome(&rec, &par, &ExportOpts::default());
+        let b = export_chrome(&rec, &par, &ExportOpts::default());
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\": \"tardis-trace-v1\""));
+        assert!(a.contains("\"events\": 4"));
+        assert!(a.contains("\"name\": \"lease_grant\""));
+        assert!(a.contains("\"dur\": 12"));
+        assert!(a.contains("\"hot_lines\": [{\"key\": \"0x10\""));
+        assert!(!a.contains("\"pid\": 2"), "default export must exclude host spans");
+        assert!(!a.contains("\"cat\": \"host\""));
+        // Every traceEvents line is exactly one event object.
+        let body = a.split("\"traceEvents\": [\n").nth(1).unwrap();
+        for line in body.lines().take_while(|l| l.starts_with('{')) {
+            assert!(line.trim_end_matches(',').ends_with('}'), "one object per line: {line}");
+        }
+    }
+
+    #[test]
+    fn host_spans_are_opt_in_and_tagged() {
+        use crate::stats::ShardLoad;
+        let rec = sample_recording();
+        let par = ParallelStats {
+            threads: 2,
+            shards: vec![
+                ShardLoad { shard: 0, events: 10, busy_ns: 5_000, wait_ns: 2_000 },
+                ShardLoad { shard: 1, events: 12, busy_ns: 6_000, wait_ns: 1_000 },
+            ],
+            ..ParallelStats::default()
+        };
+        let j = export_chrome(&rec, &par, &ExportOpts { host_spans: true });
+        assert!(j.contains("\"name\": \"shard_busy\""));
+        assert!(j.contains("\"name\": \"shard_wait\""));
+        assert!(j.contains("\"name\": \"window\""));
+        assert!(j.contains("\"clock\": \"sim\""));
+        // Every pid-2 line carries the host tag (the validator's rule).
+        for line in j.lines().filter(|l| l.contains("\"pid\": 2")) {
+            assert!(
+                line.contains("\"cat\": \"host\"") || line.contains("\"ph\": \"M\""),
+                "untagged host event: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn hot_table_renders_ranked_rows() {
+        let rows = vec![
+            HotStat { key: 0x10, demand: 3, expiries: 9, renew_ok: 8, renew_fail: 1 },
+            HotStat { key: 0x20, demand: 2, expiries: 0, renew_ok: 0, renew_fail: 0 },
+        ];
+        let t = format_hot_table("hot lines", "addr", true, &rows);
+        assert!(t.contains("hot lines"));
+        assert!(t.contains("0x10"));
+        assert!(t.contains("12")); // pressure = 3 + 9
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4); // title + header + 2 rows
+    }
+}

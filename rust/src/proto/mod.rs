@@ -128,12 +128,16 @@ pub enum SpinHint {
 
 /// Side-effect sink handed to the protocol on every call.  The engine
 /// drains `msgs` into the event queue (adding mesh latency + traffic
-/// accounting) and dispatches `completions` to cores.
+/// accounting) and dispatches `completions` to cores.  `trace` is the
+/// flight recorder's per-shard buffer (DESIGN.md §12) — disabled (one
+/// predictable branch per [`ProtoCtx::emit`]) unless the run asked for
+/// a recording.
 pub struct ProtoCtx<'a> {
     pub now: Cycle,
     pub msgs: &'a mut Vec<Message>,
     pub completions: &'a mut Vec<Completion>,
     pub stats: &'a mut SimStats,
+    pub trace: &'a mut crate::obs::TraceBuf,
 }
 
 impl<'a> ProtoCtx<'a> {
@@ -143,6 +147,13 @@ impl<'a> ProtoCtx<'a> {
 
     pub fn complete(&mut self, c: Completion) {
         self.completions.push(c);
+    }
+
+    /// Record one protocol event on the flight recorder (no-op for
+    /// untraced runs).
+    #[inline]
+    pub fn emit(&mut self, kind: crate::obs::EventKind, core: CoreId, addr: LineAddr, arg: u64) {
+        self.trace.push(crate::obs::TraceEvent { cycle: self.now, addr, arg, core, kind });
     }
 }
 

@@ -56,7 +56,7 @@ impl Tardis {
                     AccessOutcome::Done(AccessDone { value, ts: pts, extra_cycles: extra })
                 } else {
                     // Expired: renew (and maybe speculate, §IV-A).
-                    self.l1_expired_load(core, addr, wts, spec_ok, extra, ctx)
+                    self.l1_expired_load(core, addr, wts, rts, spec_ok, extra, ctx)
                 }
             }
             // ---- Store/atomic, exclusive hit ----
@@ -86,6 +86,7 @@ impl Tardis {
             // ---- Store/atomic, shared (upgrade) or miss ----
             (_, other) => {
                 ctx.stats.l1_misses += 1;
+                ctx.emit(EventKind::Demand, core, addr, op.is_write() as u64);
                 let slice = self.slice_of(addr);
                 let kind = if op.is_write() {
                     let wts = match other {
@@ -109,12 +110,15 @@ impl Tardis {
     }
 
     /// Load to an expired shared line: send a renewal; speculate through
-    /// it when allowed (§IV-A).
+    /// it when allowed (§IV-A).  `rts` is the expired lease bound (the
+    /// pts − rts gap is the flight recorder's expiry argument).
+    #[allow(clippy::too_many_arguments)]
     fn l1_expired_load(
         &mut self,
         core: CoreId,
         addr: LineAddr,
         wts: Ts,
+        rts: Ts,
         spec_ok: bool,
         extra: u64,
         ctx: &mut ProtoCtx,
@@ -144,6 +148,7 @@ impl Tardis {
 
         ctx.stats.renew_requests += 1;
         let pts0 = self.l1[c].pts;
+        ctx.emit(EventKind::LeaseExpire, core, addr, pts0.saturating_sub(rts));
         let slice = self.slice_of(addr);
         ctx.send(to_slice(core, slice, addr, MsgKind::ShReq { pts: pts0, wts, renew: true }));
         if speculate {
@@ -242,8 +247,10 @@ impl Tardis {
         // Renewal outcome: a ShRep for an outstanding renewal means the
         // lease could not be extended at the old version — new data.
         if let Some(renewal) = self.l1[c].renewals.remove(&addr) {
+            ctx.emit(EventKind::RenewFail, core, addr, 0);
             if self.guard.on_renew_failed(core, addr) {
                 ctx.stats.ts.livelock_escalations += 1;
+                ctx.emit(EventKind::Livelock, core, addr, 0);
             }
             if let Some(line) = self.l1[c].cache.get_mut(addr) {
                 line.excl = false;
@@ -287,6 +294,7 @@ impl Tardis {
     fn l1_renew_rep(&mut self, core: CoreId, addr: LineAddr, rts: Ts, ctx: &mut ProtoCtx) {
         let c = core as usize;
         ctx.stats.renew_success += 1;
+        ctx.emit(EventKind::RenewOk, core, addr, 0);
         self.guard.on_renew_success(core, addr);
         let Some(renewal) = self.l1[c].renewals.remove(&addr) else {
             return;
@@ -316,6 +324,7 @@ impl Tardis {
                 }
                 if renewal.demand_waiting {
                     ctx.stats.l1_misses += 1;
+                    ctx.emit(EventKind::Demand, core, addr, 0);
                     let slice = self.slice_of(addr);
                     let pts = self.l1[c].pts;
                     self.l1[c].demand.insert(addr, Demand { op: MemOp::Load, parked: 0 });
@@ -343,14 +352,17 @@ impl Tardis {
             match data {
                 None => {
                     ctx.stats.renew_success += 1;
+                    ctx.emit(EventKind::RenewOk, core, addr, 0);
                     self.guard.on_renew_success(core, addr);
                     for _ in 0..renewal.spec_count {
                         ctx.complete(completion(core, addr, CompletionKind::SpecOk, 0, 0));
                     }
                 }
                 Some((new_wts, new_value)) => {
+                    ctx.emit(EventKind::RenewFail, core, addr, 0);
                     if self.guard.on_renew_failed(core, addr) {
                         ctx.stats.ts.livelock_escalations += 1;
+                        ctx.emit(EventKind::Livelock, core, addr, 0);
                     }
                     if renewal.spec_count > 0 {
                         ctx.stats.misspeculations += 1;

@@ -15,6 +15,7 @@ use crate::config::{SystemConfig, TardisConfig};
 use crate::hashing::FxHashMap;
 use crate::mem::{SetAssoc, SliceMap};
 use crate::net::{Message, MsgKind, Node, NumaView};
+use crate::obs::EventKind;
 use crate::proto::ts::{LeasePolicy, LineLease, LivelockGuard};
 use crate::proto::{
     AccessOutcome, Coherence, Completion, CompletionKind, MemOp, ProtoCtx, SpinHint,
@@ -188,6 +189,7 @@ impl Tardis {
                 ctx.stats.ts.pts_increase_self_inc += delta;
             }
             l1.pts = new;
+            ctx.emit(EventKind::PtsJump, core, 0, delta);
         }
     }
 

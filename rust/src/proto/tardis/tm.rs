@@ -157,6 +157,7 @@ impl Tardis {
                 );
                 ctx.stats.ts.leases_granted += 1;
                 ctx.stats.ts.lease_total += eff_lease;
+                ctx.emit(EventKind::LeaseGrant, req.core, addr, eff_lease);
                 line.rts = line.rts.max(line.wts + eff_lease).max(pts + eff_lease);
                 line.touched = true;
                 let (l_wts, l_rts, l_val) = (line.wts, line.rts, line.value);

@@ -32,7 +32,10 @@ use anyhow::{Context, Result};
 
 use crate::api::{Observer, SimSpec};
 use crate::coordinator::WorkerPool;
+use crate::obs::{IntervalMetrics, MetricsWindow};
 use crate::prog::checker::LogRecord;
+use crate::stats::SimStats;
+use crate::types::Cycle;
 
 use super::columns::{self, BatchTiming, PointResult, SCHEMA};
 use super::json::escape;
@@ -338,6 +341,10 @@ fn run_point(
                 progress_every,
                 tx.clone(),
             ));
+            // Drive the observer's interval-metrics window off the
+            // engine's cycle sampler (same granularity; purely
+            // observational, so the stats stay bit-identical).
+            b = b.sample_every(progress_every);
         }
     }
     let report = b.run()?;
@@ -357,12 +364,22 @@ pub struct ServeProgressObserver {
     point: usize,
     every: u64,
     committed: u64,
+    window: MetricsWindow,
+    last: IntervalMetrics,
     tx: mpsc::Sender<String>,
 }
 
 impl ServeProgressObserver {
     pub fn new(batch_id: String, point: usize, every: u64, tx: mpsc::Sender<String>) -> Self {
-        Self { batch_id, point, every: every.max(1), committed: 0, tx }
+        Self {
+            batch_id,
+            point,
+            every: every.max(1),
+            committed: 0,
+            window: MetricsWindow::default(),
+            last: IntervalMetrics::default(),
+            tx,
+        }
     }
 }
 
@@ -370,8 +387,13 @@ impl Observer for ServeProgressObserver {
     fn on_commit(&mut self, _rec: &LogRecord) {
         self.committed += 1;
         if self.committed % self.every == 0 {
-            let _ = self.tx.send(progress_frame(&self.batch_id, self.point, self.committed));
+            let _ =
+                self.tx.send(progress_frame(&self.batch_id, self.point, self.committed, self.last));
         }
+    }
+
+    fn on_sample(&mut self, _now: Cycle, stats: &SimStats) {
+        self.last = self.window.tick(stats);
     }
 }
 
@@ -391,10 +413,13 @@ pub fn ack_frame(batch_id: &str, n_points: usize, queue_depth: usize) -> String 
     )
 }
 
-pub fn progress_frame(batch_id: &str, point: usize, memops: u64) -> String {
+pub fn progress_frame(batch_id: &str, point: usize, memops: u64, m: IntervalMetrics) -> String {
     format!(
-        "{{\"type\": \"progress\", \"batch_id\": {}, \"point\": {point}, \"memops\": {memops}}}",
-        escape(batch_id)
+        "{{\"type\": \"progress\", \"batch_id\": {}, \"point\": {point}, \"memops\": {memops}, \
+         \"renew_rate\": {:.6}, \"avg_lease\": {:.6}}}",
+        escape(batch_id),
+        m.renew_rate,
+        m.avg_lease
     )
 }
 
@@ -447,7 +472,7 @@ mod tests {
         for frame in [
             hello_frame(4),
             ack_frame("b\"1", 2, 1),
-            progress_frame("b", 0, 1000),
+            progress_frame("b", 0, 1000, IntervalMetrics::default()),
             point_done_frame("b", 1, Duration::from_millis(3)),
             result_frame(&req, 4, &timing, &[]),
             error_frame(None, "bad \"JSON\""),

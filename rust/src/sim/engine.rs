@@ -17,6 +17,7 @@ use crate::core::{inorder::InOrderCore, ooo::OooCore, CoreAction, CoreEnv, CoreU
 use crate::hashing::FxHashMap;
 use crate::mem::{Dram, SliceMap};
 use crate::net::{Message, MsgClass, MsgKind, Node, Topology};
+use crate::obs::{TraceBuf, TraceEvent, TraceRecording};
 use crate::prog::checker::AccessLog;
 use crate::prog::Workload;
 use crate::proto::{Coherence, Completion, ProtoCtx, ProtocolDispatch, TileProtoState};
@@ -192,6 +193,9 @@ pub struct SimResult {
     pub log: AccessLog,
     /// Per-core completion cycles.
     pub core_finish: Vec<Cycle>,
+    /// Flight-recorder trace (empty unless the run enabled tracing).
+    /// A simulated quantity like `stats`: identical serial or sharded.
+    pub trace: TraceRecording,
 }
 
 /// What one shard hands the parallel driver when its run completes:
@@ -210,6 +214,13 @@ pub(crate) struct ShardOutput {
     pub core_finish: Vec<(u32, Cycle)>,
     /// Cycle of the last event this shard dispatched.
     pub last_now: Cycle,
+    /// Shard-local flight-recorder events (empty unless tracing).
+    pub trace_events: Vec<TraceEvent>,
+    /// Events the recorder saw, kept or not (global drop accounting).
+    pub trace_emitted: u64,
+    /// Per-dispatch trace ranges, mirroring `log_groups`: sorting by
+    /// `(cycle, key)` and concatenating reproduces the serial trace.
+    pub trace_groups: Vec<(Cycle, PushKey, u32, u32)>,
 }
 
 /// Everything a tile owns, packaged when the load balancer moves it to
@@ -281,6 +292,11 @@ pub(crate) struct Engine {
     /// Per-dispatch log ranges (sharded runs with logging only).
     log_groups: Vec<(Cycle, PushKey, u32, u32)>,
     record_groups: bool,
+    /// Flight recorder (disabled unless [`Engine::enable_trace`] ran).
+    trace: TraceBuf,
+    /// Per-dispatch trace ranges (sharded traced runs only).
+    trace_groups: Vec<(Cycle, PushKey, u32, u32)>,
+    record_trace_groups: bool,
     /// Cycle of the last dispatched event.
     last_now: Cycle,
     /// Cores this shard owns (== n_cores when serial).
@@ -375,6 +391,9 @@ impl Engine {
             outboxes: (0..shard.count).map(|_| Vec::new()).collect(),
             log_groups: Vec::new(),
             record_groups,
+            trace: TraceBuf::default(),
+            trace_groups: Vec::new(),
+            record_trace_groups: false,
             last_now: 0,
             n_owned: hi - lo,
             part,
@@ -414,6 +433,15 @@ impl Engine {
         let k = m.1;
         m.1 += 1;
         PushKey { cycle: self.now, src: self.cur_src, k }
+    }
+
+    /// Arm the flight recorder (DESIGN.md §12).  Sharded runs also
+    /// record per-dispatch `(cycle, key)` groups so the driver can
+    /// merge shard-local traces into the canonical serial order —
+    /// exactly the SC-log mechanism.
+    pub(crate) fn enable_trace(&mut self) {
+        self.trace = TraceBuf::recording();
+        self.record_trace_groups = self.shard.count > 1;
     }
 
     /// Swap in the pre-calendar all-heap event queue (determinism
@@ -466,7 +494,8 @@ impl Engine {
         self.stats.cycles = core_finish.iter().copied().max().unwrap_or(last_now);
         self.obs.finish(&self.stats, &core_finish);
         let log = self.obs.take_log();
-        Ok(SimResult { stats: self.stats, log, core_finish })
+        let trace = std::mem::take(&mut self.trace).into_recording();
+        Ok(SimResult { stats: self.stats, log, core_finish, trace })
     }
 
     /// Dispatch every event firing strictly before `limit` — one PDES
@@ -661,12 +690,16 @@ impl Engine {
             .map(|c| (c, self.cores[c as usize].finished_at().unwrap_or(self.last_now)))
             .collect();
         let log = self.obs.take_log();
+        let (trace_events, trace_emitted) = self.trace.into_parts();
         ShardOutput {
             stats: self.stats,
             log,
             log_groups: self.log_groups,
             core_finish,
             last_now: self.last_now,
+            trace_events,
+            trace_emitted,
+            trace_groups: self.trace_groups,
         }
     }
 
@@ -678,11 +711,18 @@ impl Engine {
         };
         self.tile_events[self.node_tile[self.cur_src as usize] as usize] += 1;
         let log_start = if self.record_groups { self.obs.log_len() } else { 0 };
+        let trace_start = if self.record_trace_groups { self.trace.len() } else { 0 };
         self.dispatch_inner(now, ev);
         if self.record_groups {
             let log_end = self.obs.log_len();
             if log_end > log_start {
                 self.log_groups.push((now, key, log_start as u32, log_end as u32));
+            }
+        }
+        if self.record_trace_groups {
+            let trace_end = self.trace.len();
+            if trace_end > trace_start {
+                self.trace_groups.push((now, key, trace_start as u32, trace_end as u32));
             }
         }
     }
@@ -706,6 +746,7 @@ impl Engine {
                     msgs: &mut msgs,
                     completions: &mut comps,
                     stats: &mut self.stats,
+                    trace: &mut self.trace,
                 };
                 let mut env = CoreEnv {
                     proto: &mut self.proto,
@@ -731,6 +772,7 @@ impl Engine {
                         msgs: &mut msgs,
                         completions: &mut comps,
                         stats: &mut self.stats,
+                        trace: &mut self.trace,
                     };
                     self.proto.on_message(msg, &mut pctx);
                 }
@@ -753,6 +795,7 @@ impl Engine {
                     msgs: &mut msgs,
                     completions: &mut comps,
                     stats: &mut self.stats,
+                    trace: &mut self.trace,
                 };
                 let mut env = CoreEnv {
                     proto: &mut self.proto,

@@ -50,6 +50,7 @@ use anyhow::{bail, Result};
 use crate::api::observer::Observers;
 use crate::config::{PdesMode, SystemConfig};
 use crate::net::{Message, Topology};
+use crate::obs::{ExecEvent, ExecKind, TraceRecording, TRACE_CAP};
 use crate::prog::checker::AccessLog;
 use crate::prog::Workload;
 use crate::stats::{ParallelStats, ShardLoad, SimStats};
@@ -148,7 +149,14 @@ struct WorkerDone {
     out: super::engine::ShardOutput,
     load: ShardLoad,
     epochs: u64,
+    /// Host-side window/rebalance markers (traced runs only).
+    exec: Vec<ExecEvent>,
 }
+
+/// Per-shard cap on host-side exec markers: window boundaries can
+/// number in the millions on long runs; the first few thousand are
+/// plenty for a host timeline.
+const EXEC_CAP: usize = 4096;
 
 type Mailbox = Mutex<Vec<(Cycle, PushKey, Message)>>;
 
@@ -213,11 +221,13 @@ struct CmbShared {
 
 /// Run `cfg` + `workload` across `threads` shards and merge the
 /// results into the same `SimResult` the serial engine produces.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_parallel(
     cfg: SystemConfig,
     workload: &Workload,
     threads: u32,
     record_log: bool,
+    record_trace: bool,
     mode: PdesMode,
     rebalance_every: u32,
 ) -> Result<SimResult> {
@@ -233,15 +243,18 @@ pub(crate) fn run_parallel(
     let n_cores = cfg.n_cores;
     let t0 = Instant::now();
     let (results, null_msgs, rebalances, migrated) = match mode {
-        PdesMode::Epoch => run_epoch(&cfg, workload, threads, record_log, rebalance_every, la_min),
+        PdesMode::Epoch => {
+            run_epoch(&cfg, workload, threads, record_log, record_trace, rebalance_every, la_min)
+        }
         PdesMode::NullMsg => {
-            run_nullmsg(&cfg, workload, threads, record_log, rebalance_every, table)
+            run_nullmsg(&cfg, workload, threads, record_log, record_trace, rebalance_every, table)
         }
         PdesMode::Auto => unreachable!("Auto resolved above"),
     };
 
     let mut outs = Vec::with_capacity(n);
     let mut loads = Vec::with_capacity(n);
+    let mut exec_all: Vec<ExecEvent> = Vec::new();
     let mut epochs = 0u64;
     let mut errs: Vec<String> = Vec::new();
     for r in results {
@@ -249,6 +262,7 @@ pub(crate) fn run_parallel(
             Ok(d) => {
                 epochs = epochs.max(d.epochs);
                 loads.push(d.load);
+                exec_all.extend(d.exec);
                 outs.push(d.out);
             }
             Err(e) => errs.push(e),
@@ -301,7 +315,33 @@ pub(crate) fn run_parallel(
         r.seq = (i + 1) as u64;
     }
 
-    Ok(SimResult { stats, log, core_finish })
+    // Canonical trace merge: the identical mechanism.  Each shard's
+    // kept events are a prefix of its local sequence, so re-sorting
+    // the per-dispatch groups by the dispatched event's (cycle, key)
+    // and truncating to the same global cap reproduces the serial
+    // recording bit for bit (DESIGN.md §12).
+    let mut trace = TraceRecording::default();
+    if record_trace {
+        trace.enabled = true;
+        let mut torder: Vec<(Cycle, PushKey, usize, u32, u32)> = Vec::new();
+        for (i, o) in outs.iter().enumerate() {
+            for &(cy, key, start, end) in &o.trace_groups {
+                torder.push((cy, key, i, start, end));
+            }
+        }
+        torder.sort_unstable_by_key(|&(cy, key, ..)| (cy, key));
+        trace.events.reserve(outs.iter().map(|o| o.trace_events.len()).sum());
+        for &(_, _, i, start, end) in &torder {
+            trace.events.extend_from_slice(&outs[i].trace_events[start as usize..end as usize]);
+        }
+        trace.events.truncate(TRACE_CAP);
+        let emitted: u64 = outs.iter().map(|o| o.trace_emitted).sum();
+        trace.dropped = emitted - trace.events.len() as u64;
+        exec_all.sort_unstable_by_key(|e| (e.cycle, e.shard, e.kind as u8, e.arg));
+        trace.exec = exec_all;
+    }
+
+    Ok(SimResult { stats, log, core_finish, trace })
 }
 
 // ---------------------------------------------------------------------------
@@ -378,11 +418,13 @@ fn install_gained_tiles(
 // Epoch mode
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn run_epoch(
     cfg: &SystemConfig,
     workload: &Workload,
     threads: u32,
     record_log: bool,
+    record_trace: bool,
     rebalance_every: u32,
     la: Cycle,
 ) -> (Vec<std::result::Result<WorkerDone, String>>, u64, u64, u64) {
@@ -401,7 +443,17 @@ fn run_epoch(
             .map(|me| {
                 let shared = &shared;
                 s.spawn(move || {
-                    run_shard_epoch(cfg, workload, me, threads, la, record_log, rebalance_every, shared)
+                    run_shard_epoch(
+                        cfg,
+                        workload,
+                        me,
+                        threads,
+                        la,
+                        record_log,
+                        record_trace,
+                        rebalance_every,
+                        shared,
+                    )
                 })
             })
             .collect();
@@ -420,6 +472,7 @@ fn run_shard_epoch(
     threads: u32,
     la0: Cycle,
     record_log: bool,
+    record_trace: bool,
     rebalance_every: u32,
     sh: &EpochShared,
 ) -> std::result::Result<WorkerDone, String> {
@@ -427,6 +480,9 @@ fn run_shard_epoch(
     let obs = if record_log { Observers::with_sc_log() } else { Observers::none() };
     let mut eng =
         Engine::build_shard(cfg.clone(), workload, obs, ShardSpec { index: me, count: threads });
+    if record_trace {
+        eng.enable_trace();
+    }
     eng.seed();
     let mut part = TilePartition::balanced(cfg.n_cores, threads);
     let mut la = la0;
@@ -434,8 +490,17 @@ fn run_shard_epoch(
     let mut epochs: u64 = 0;
     let mut busy_ns: u64 = 0;
     let mut wait_ns: u64 = 0;
+    let mut exec: Vec<ExecEvent> = Vec::new();
     let verdict: std::result::Result<(), String> = loop {
         epochs += 1;
+        if record_trace && exec.len() < EXEC_CAP {
+            exec.push(ExecEvent {
+                kind: ExecKind::Window,
+                cycle: window_start,
+                shard: me,
+                arg: epochs,
+            });
+        }
         let limit = window_start.saturating_add(la);
         let b0 = Instant::now();
         let res = eng.run_window(limit).map_err(|e| format!("{e:#}"));
@@ -557,6 +622,14 @@ fn run_shard_epoch(
                         if moved > 0 {
                             sh.migrated.fetch_add(moved, Ordering::Relaxed);
                         }
+                        if record_trace && exec.len() < EXEC_CAP {
+                            exec.push(ExecEvent {
+                                kind: ExecKind::Rebalance,
+                                cycle: t,
+                                shard: me,
+                                arg: moved,
+                            });
+                        }
                         la = lookahead_table(cfg, &new_part).min;
                         part = new_part;
                         if me == 0 {
@@ -577,18 +650,20 @@ fn run_shard_epoch(
     verdict?;
     let out = eng.finalize_shard();
     let load = ShardLoad { shard: me, events: out.stats.events, busy_ns, wait_ns };
-    Ok(WorkerDone { out, load, epochs })
+    Ok(WorkerDone { out, load, epochs, exec })
 }
 
 // ---------------------------------------------------------------------------
 // Null-message mode
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn run_nullmsg(
     cfg: &SystemConfig,
     workload: &Workload,
     threads: u32,
     record_log: bool,
+    record_trace: bool,
     rebalance_every: u32,
     table: LookaheadTable,
 ) -> (Vec<std::result::Result<WorkerDone, String>>, u64, u64, u64) {
@@ -625,7 +700,16 @@ fn run_nullmsg(
             .map(|me| {
                 let shared = &shared;
                 s.spawn(move || {
-                    run_shard_nullmsg(cfg, workload, me, threads, record_log, rebalance_every, shared)
+                    run_shard_nullmsg(
+                        cfg,
+                        workload,
+                        me,
+                        threads,
+                        record_log,
+                        record_trace,
+                        rebalance_every,
+                        shared,
+                    )
                 })
             })
             .collect();
@@ -683,12 +767,14 @@ fn publish(sh: &mut CmbShared, eng: &Engine, me: usize, n: usize, sent_real: &[b
     changed
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_shard_nullmsg(
     cfg: &SystemConfig,
     workload: &Workload,
     me: u32,
     threads: u32,
     record_log: bool,
+    record_trace: bool,
     rebalance_every: u32,
     shared: &Cmb,
 ) -> std::result::Result<WorkerDone, String> {
@@ -697,11 +783,15 @@ fn run_shard_nullmsg(
     let obs = if record_log { Observers::with_sc_log() } else { Observers::none() };
     let mut eng =
         Engine::build_shard(cfg.clone(), workload, obs, ShardSpec { index: me, count: threads });
+    if record_trace {
+        eng.enable_trace();
+    }
     eng.seed();
     let mut part = TilePartition::balanced(cfg.n_cores, threads);
     let mut rounds: u64 = 0;
     let mut busy_ns: u64 = 0;
     let mut wait_ns: u64 = 0;
+    let mut exec: Vec<ExecEvent> = Vec::new();
     let no_real = vec![false; n];
     let verdict: std::result::Result<(), String> = 'run: loop {
         // --- sync step: drain mail, publish, decide (one lock) ---
@@ -757,6 +847,7 @@ fn run_shard_nullmsg(
                         workload,
                         cfg,
                         rebalance_every,
+                        if record_trace { Some(&mut exec) } else { None },
                     );
                     continue 'decide;
                 }
@@ -791,6 +882,9 @@ fn run_shard_nullmsg(
         };
         // --- dispatch window outside the lock ---
         rounds += 1;
+        if record_trace && exec.len() < EXEC_CAP {
+            exec.push(ExecEvent { kind: ExecKind::Window, cycle: limit, shard: me, arg: rounds });
+        }
         let b0 = Instant::now();
         let res = eng.run_window(limit).map_err(|e| format!("{e:#}"));
         busy_ns += b0.elapsed().as_nanos() as u64;
@@ -823,7 +917,7 @@ fn run_shard_nullmsg(
     verdict?;
     let out = eng.finalize_shard();
     let load = ShardLoad { shard: me, events: out.stats.events, busy_ns, wait_ns };
-    Ok(WorkerDone { out, load, epochs: rounds })
+    Ok(WorkerDone { out, load, epochs: rounds, exec })
 }
 
 /// Advance `ck` past the earliest pending event by one rebalance
@@ -853,6 +947,7 @@ fn rendezvous<'a>(
     workload: &Workload,
     cfg: &SystemConfig,
     rebalance_every: u32,
+    mut trace_exec: Option<&mut Vec<ExecEvent>>,
 ) -> MutexGuard<'a, CmbShared> {
     let entry_gen = sh.gen;
     if sh.phase == 0 {
@@ -914,6 +1009,11 @@ fn rendezvous<'a>(
         sh.migrations[t as usize].take().expect("old owner stashed the tile in phase 2")
     });
     sh.migrated += moved;
+    if let Some(exec) = trace_exec.as_deref_mut() {
+        if exec.len() < EXEC_CAP {
+            exec.push(ExecEvent { kind: ExecKind::Rebalance, cycle: sh.ck, shard: me, arg: moved });
+        }
+    }
     // Clock reset: every pending event fires at or beyond `ck` and no
     // receiver dispatched past it (limits are clamped to `ck`), so
     // `ck + L_new(me, j)` is a valid promise and stale overshoot
@@ -1021,7 +1121,7 @@ mod tests {
         let w = crate::trace::synth_workload(&spec.params, 4, 128);
         let cfg = SystemConfig::small(4, ProtocolKind::Tardis);
         let serial = Engine::build(cfg.clone(), &w, Observers::with_sc_log()).run().unwrap();
-        let par = run_parallel(cfg, &w, 2, true, PdesMode::Epoch, 0).unwrap();
+        let par = run_parallel(cfg, &w, 2, true, false, PdesMode::Epoch, 0).unwrap();
         assert_eq!(par.stats, serial.stats);
         assert_eq!(par.log.records, serial.log.records);
         assert_eq!(par.core_finish, serial.core_finish);
@@ -1043,7 +1143,7 @@ mod tests {
         let serial = Engine::build(cfg.clone(), &w, Observers::with_sc_log()).run().unwrap();
         for rebalance in [0u32, 4] {
             let par =
-                run_parallel(cfg.clone(), &w, 2, true, PdesMode::NullMsg, rebalance).unwrap();
+                run_parallel(cfg.clone(), &w, 2, true, false, PdesMode::NullMsg, rebalance).unwrap();
             assert_eq!(par.stats, serial.stats, "rebalance_every={rebalance}");
             assert_eq!(par.log.records, serial.log.records, "rebalance_every={rebalance}");
             assert_eq!(par.core_finish, serial.core_finish, "rebalance_every={rebalance}");

@@ -3,6 +3,53 @@
 
 use crate::types::Cycle;
 
+/// The `tardis-serve-v1` / `BENCH_*.json` stat-column vocabulary: one
+/// name per [`SimStats`] counter, in the stable wire order
+/// [`SimStats::columns`] emits.  `tools/schema_common.py` keeps the
+/// Python mirror (`STAT_COLUMNS`); a unit test below parses that file
+/// and asserts the two lists match name-for-name, so the 38-column
+/// contract lives in exactly two places that cannot drift.
+pub const STAT_COLUMNS: [&str; 38] = [
+    "sim_cycles",
+    "events",
+    "memops",
+    "loads",
+    "stores",
+    "atomics",
+    "l1_hits",
+    "l1_misses",
+    "llc_accesses",
+    "dram_accesses",
+    "renew_requests",
+    "renew_success",
+    "misspeculations",
+    "rollback_cycles",
+    "invalidations_sent",
+    "broadcasts",
+    "sb_stores",
+    "sb_forwards",
+    "sb_full_stalls",
+    "spin_cycles",
+    "locks_acquired",
+    "barriers_passed",
+    "request_flits",
+    "data_flits",
+    "control_flits",
+    "renew_flits",
+    "invalidation_flits",
+    "dram_flits",
+    "total_flits",
+    "intra_socket_msgs",
+    "inter_socket_msgs",
+    "link_crossings",
+    "inter_socket_flits",
+    "pts_increase_total",
+    "pts_increase_self_inc",
+    "leases_granted",
+    "lease_total",
+    "livelock_escalations",
+];
+
 /// Network-traffic breakdown by message class, in flits.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TrafficStats {
@@ -348,50 +395,51 @@ impl SimStats {
     /// Names mirror the `BENCH_*.json` fields where both schemas
     /// carry the stat (`sim_cycles`, `memops`, `events`,
     /// `intra_socket_msgs`, `inter_socket_msgs`), so the `tools/`
-    /// validators share one vocabulary.  Order is stable and part of
-    /// the wire schema; `tools/validate_serve.py` keeps the mirror
-    /// list.
+    /// validators share one vocabulary.  Names and order come from
+    /// [`STAT_COLUMNS`] — stable, part of the wire schema, and
+    /// asserted against `tools/schema_common.py`'s mirror by test.
     pub fn columns(&self) -> Vec<(&'static str, u64)> {
-        vec![
-            ("sim_cycles", self.cycles),
-            ("events", self.events),
-            ("memops", self.memops),
-            ("loads", self.loads),
-            ("stores", self.stores),
-            ("atomics", self.atomics),
-            ("l1_hits", self.l1_hits),
-            ("l1_misses", self.l1_misses),
-            ("llc_accesses", self.llc_accesses),
-            ("dram_accesses", self.dram_accesses),
-            ("renew_requests", self.renew_requests),
-            ("renew_success", self.renew_success),
-            ("misspeculations", self.misspeculations),
-            ("rollback_cycles", self.rollback_cycles),
-            ("invalidations_sent", self.invalidations_sent),
-            ("broadcasts", self.broadcasts),
-            ("sb_stores", self.sb_stores),
-            ("sb_forwards", self.sb_forwards),
-            ("sb_full_stalls", self.sb_full_stalls),
-            ("spin_cycles", self.spin_cycles),
-            ("locks_acquired", self.locks_acquired),
-            ("barriers_passed", self.barriers_passed),
-            ("request_flits", self.traffic.request_flits),
-            ("data_flits", self.traffic.data_flits),
-            ("control_flits", self.traffic.control_flits),
-            ("renew_flits", self.traffic.renew_flits),
-            ("invalidation_flits", self.traffic.invalidation_flits),
-            ("dram_flits", self.traffic.dram_flits),
-            ("total_flits", self.traffic.total()),
-            ("intra_socket_msgs", self.socket.intra_msgs),
-            ("inter_socket_msgs", self.socket.inter_msgs),
-            ("link_crossings", self.socket.link_crossings),
-            ("inter_socket_flits", self.socket.inter_flits),
-            ("pts_increase_total", self.ts.pts_increase_total),
-            ("pts_increase_self_inc", self.ts.pts_increase_self_inc),
-            ("leases_granted", self.ts.leases_granted),
-            ("lease_total", self.ts.lease_total),
-            ("livelock_escalations", self.ts.livelock_escalations),
-        ]
+        let values: [u64; 38] = [
+            self.cycles,
+            self.events,
+            self.memops,
+            self.loads,
+            self.stores,
+            self.atomics,
+            self.l1_hits,
+            self.l1_misses,
+            self.llc_accesses,
+            self.dram_accesses,
+            self.renew_requests,
+            self.renew_success,
+            self.misspeculations,
+            self.rollback_cycles,
+            self.invalidations_sent,
+            self.broadcasts,
+            self.sb_stores,
+            self.sb_forwards,
+            self.sb_full_stalls,
+            self.spin_cycles,
+            self.locks_acquired,
+            self.barriers_passed,
+            self.traffic.request_flits,
+            self.traffic.data_flits,
+            self.traffic.control_flits,
+            self.traffic.renew_flits,
+            self.traffic.invalidation_flits,
+            self.traffic.dram_flits,
+            self.traffic.total(),
+            self.socket.intra_msgs,
+            self.socket.inter_msgs,
+            self.socket.link_crossings,
+            self.socket.inter_flits,
+            self.ts.pts_increase_total,
+            self.ts.pts_increase_self_inc,
+            self.ts.leases_granted,
+            self.ts.lease_total,
+            self.ts.livelock_escalations,
+        ];
+        STAT_COLUMNS.iter().zip(values).map(|(&name, value)| (name, value)).collect()
     }
 
     /// Merge another run's counters into this one — the PDES shard
@@ -525,6 +573,31 @@ mod tests {
         names.dedup();
         assert_eq!(names.len(), before, "duplicate column names");
         assert_eq!(before, 38, "column count is part of the wire schema");
+    }
+
+    /// The 38-column wire contract has exactly two homes: the
+    /// [`STAT_COLUMNS`] const here and `STAT_COLUMNS` in
+    /// `tools/schema_common.py`.  Parse the Python mirror and require
+    /// a name-for-name, order-for-order match.
+    #[test]
+    fn stat_columns_match_the_python_mirror() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../tools/schema_common.py");
+        let src = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path}: {e}"));
+        let body = src
+            .split("STAT_COLUMNS = (")
+            .nth(1)
+            .expect("tools/schema_common.py must define STAT_COLUMNS")
+            .split(')')
+            .next()
+            .unwrap();
+        let python: Vec<&str> = body
+            .lines()
+            .filter_map(|l| l.trim().strip_prefix('"')?.strip_suffix("\","))
+            .collect();
+        assert_eq!(
+            python, STAT_COLUMNS,
+            "rust STAT_COLUMNS and tools/schema_common.py STAT_COLUMNS drifted"
+        );
     }
 
     #[test]

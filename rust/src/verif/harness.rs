@@ -149,12 +149,14 @@ impl<P: ModelProto> World<P> {
         let mut msgs = Vec::new();
         let mut comps = Vec::new();
         let mut stats = SimStats::default();
+        let mut trace = crate::obs::TraceBuf::default();
         let r = {
             let mut ctx = ProtoCtx {
                 now: self.step,
                 msgs: &mut msgs,
                 completions: &mut comps,
                 stats: &mut stats,
+                trace: &mut trace,
             };
             f(&mut self.proto, &mut ctx)
         };

@@ -1,0 +1,173 @@
+//! Flight-recorder integration suite (DESIGN.md §12): the protocol
+//! trace must be a pure function of (config, workload) — the same
+//! canonical `(cycle, PushKey)` order whether the PDES engine runs
+//! serial, epoch-synchronized, or null-message, at any thread count,
+//! with or without rebalancing — and recording must be *observational*:
+//! a traced run simulates the exact bits of an untraced one.
+
+use tardis_dsm::api::SimBuilder;
+use tardis_dsm::config::{PdesMode, ProtocolKind, SystemConfig};
+use tardis_dsm::obs::{export_chrome, hot_cores, hot_lines, EventKind, ExportOpts, TRACE_SCHEMA};
+use tardis_dsm::trace::synth_workload;
+use tardis_dsm::workloads;
+
+/// The tentpole determinism matrix: a serial traced run's default
+/// export must be *byte-identical* to every parallel combination —
+/// {epoch, null-message} x rebalance {off, every 3} x threads
+/// {2, 3, 4} (3 threads over 8 cores shards unevenly).  Host-time
+/// telemetry is excluded from the default export precisely so this
+/// diff can be empty.
+#[test]
+fn trace_export_is_bit_identical_serial_vs_every_pdes_combo() {
+    let spec = workloads::by_name("lu-nc").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    let run = |threads: u32, mode: PdesMode, rebalance: u32| {
+        SimBuilder::from_config(SystemConfig::small(8, ProtocolKind::Tardis))
+            .workload(&w)
+            .threads(threads)
+            .pdes_mode(mode)
+            .rebalance_every(rebalance)
+            .trace(true)
+            .run()
+            .unwrap()
+    };
+    let serial = run(1, PdesMode::Epoch, 0);
+    assert!(serial.trace.enabled, "builder .trace(true) did not reach the engine");
+    assert!(!serial.trace.events.is_empty(), "tardis run recorded no protocol events");
+    assert_eq!(serial.trace.dropped, 0, "512-op trace must fit the ring buffer");
+    assert!(
+        serial.trace.events.windows(2).all(|p| p[0].cycle <= p[1].cycle),
+        "recording is not in canonical nondecreasing-cycle order"
+    );
+    let baseline = export_chrome(&serial.trace, &serial.stats.parallel, &ExportOpts::default());
+    assert!(baseline.contains(TRACE_SCHEMA), "export must carry the schema tag");
+    assert!(
+        !baseline.contains("\"cat\": \"host\""),
+        "default export must exclude host-time spans"
+    );
+    for mode in [PdesMode::Epoch, PdesMode::NullMsg] {
+        for rebalance in [0u32, 3] {
+            for threads in [2u32, 3, 4] {
+                let par = run(threads, mode, rebalance);
+                let what = format!("{mode:?}/rb{rebalance}/t{threads}");
+                assert_eq!(par.stats, serial.stats, "{what}: stats diverged");
+                assert_eq!(
+                    par.trace.events, serial.trace.events,
+                    "{what}: merged event stream diverged from serial"
+                );
+                assert_eq!(par.trace.dropped, serial.trace.dropped, "{what}");
+                let export = export_chrome(&par.trace, &par.stats.parallel, &ExportOpts::default());
+                assert_eq!(export, baseline, "{what}: default export not byte-identical");
+            }
+        }
+    }
+    // Host spans are opt-in, tagged, and confined to pid 2: a parallel
+    // run's opt-in export gains shard spans without touching pid 1.
+    let par = run(4, PdesMode::Epoch, 0);
+    let host = export_chrome(&par.trace, &par.stats.parallel, &ExportOpts { host_spans: true });
+    assert!(host.contains("\"shard_busy\""), "opt-in export lost the PDES shard spans");
+    assert!(host.contains("\"cat\": \"host\""));
+}
+
+/// Zero-cost contract: enabling the recorder must not perturb the
+/// simulation.  A traced run and an untraced run of the same session
+/// produce bit-identical statistics, access logs, and finish times —
+/// and the untraced report carries no trace at all.
+#[test]
+fn tracing_is_observational_untraced_runs_are_unaffected() {
+    let spec = workloads::by_name("fft").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    let run = |trace: bool| {
+        SimBuilder::from_config(SystemConfig::small(8, ProtocolKind::Tardis))
+            .record_accesses(true)
+            .workload(&w)
+            .trace(trace)
+            .run()
+            .unwrap()
+    };
+    let traced = run(true);
+    let plain = run(false);
+    assert_eq!(traced.stats, plain.stats, "recording perturbed the statistics");
+    assert_eq!(traced.log.records, plain.log.records, "recording perturbed the access log");
+    assert_eq!(traced.core_finish, plain.core_finish, "recording perturbed finish times");
+    assert!(!plain.trace.enabled);
+    assert!(plain.trace.events.is_empty(), "untraced run must record nothing");
+    assert!(!traced.trace.events.is_empty());
+    traced.check_sc().unwrap();
+}
+
+/// Cross-layer consistency: every recorded event kind must agree with
+/// the aggregate counter the protocol already maintains — the trace is
+/// the same information at event granularity, not a parallel universe.
+#[test]
+fn event_counts_match_the_statistics_counters() {
+    let spec = workloads::by_name("volrend").unwrap();
+    let w = synth_workload(&spec.params, 8, 512);
+    let res = SimBuilder::from_config(SystemConfig::small(8, ProtocolKind::Tardis))
+        .workload(&w)
+        .trace(true)
+        .run()
+        .unwrap();
+    let count =
+        |kind: EventKind| res.trace.events.iter().filter(|e| e.kind == kind).count() as u64;
+    assert_eq!(
+        count(EventKind::LeaseGrant),
+        res.stats.ts.leases_granted,
+        "one LeaseGrant event per granted lease"
+    );
+    assert_eq!(
+        count(EventKind::RenewOk),
+        res.stats.renew_success,
+        "one RenewOk event per successful renewal"
+    );
+    assert_eq!(
+        count(EventKind::LeaseExpire),
+        res.stats.renew_requests,
+        "one LeaseExpire event per issued renewal"
+    );
+    assert!(count(EventKind::Demand) > 0, "misses must leave Demand events");
+}
+
+/// Hot-line attribution on a deliberately skewed workload: one shared
+/// line hammered by every core (and core 0 issuing ~10x the traffic)
+/// must top the per-line and per-core coherence-pressure tables.
+#[test]
+fn hot_line_attribution_ranks_the_contended_line_first() {
+    use tardis_dsm::prog::{load, store, Program, Workload};
+
+    let shared = 0x10u64;
+    let mut programs = Vec::new();
+    for core in 0..4u32 {
+        let ops = if core == 0 { 480 } else { 48 };
+        let base = 0x100 * (core as u64 + 1);
+        let mut prog = Vec::new();
+        for pc in 0..ops {
+            prog.push(match pc % 4 {
+                0 => load(base + (pc as u64 % 13)),
+                1 => store(base + (pc as u64 % 13), Workload::store_value(core, pc)),
+                2 => load(shared),
+                _ => store(shared, Workload::store_value(core, pc)),
+            });
+        }
+        programs.push(Program::new(prog));
+    }
+    let w = Workload::new(programs);
+    let res = SimBuilder::from_config(SystemConfig::small(4, ProtocolKind::Tardis))
+        .workload(&w)
+        .trace(true)
+        .run()
+        .unwrap();
+    let lines = hot_lines(&res.trace.events, 4);
+    assert!(!lines.is_empty());
+    assert_eq!(
+        lines[0].key, shared,
+        "the all-cores contended line must rank first by pressure"
+    );
+    assert!(
+        lines[0].demand + lines[0].expiries > 0,
+        "the hot line's pressure must come from recorded events"
+    );
+    let cores = hot_cores(&res.trace.events, 4);
+    assert_eq!(cores[0].key, 0, "the 10x-traffic core must rank first");
+    assert!(cores[0].total() > cores[cores.len() - 1].total());
+}

@@ -61,6 +61,13 @@ POINT_OPTIONAL_KEYS = {
     "cores": int,
 }
 
+# Interval metrics arrived with the flight-recorder subsystem; emitted
+# together on every point of current reports, absent from older files.
+POINT_METRIC_KEYS = {
+    "renew_rate": (int, float),
+    "avg_lease": (int, float),
+}
+
 # Parallel-engine keys arrived with the sharded PDES engine; emitted
 # together on every point of a `bench --threads N` (N > 1) report and
 # absent from serial reports.  The sync/balance counters (null_msgs,
@@ -118,10 +125,19 @@ def validate(path):
             optional={
                 **POINT_SOCKET_KEYS,
                 **POINT_OPTIONAL_KEYS,
+                **POINT_METRIC_KEYS,
                 **POINT_PARALLEL_KEYS,
                 **POINT_PARALLEL_V2_KEYS,
             },
         )
+        if ("renew_rate" in point) != ("avg_lease" in point):
+            raise ValueError(
+                f"{where}: renew_rate and avg_lease must appear together"
+            )
+        if "renew_rate" in point and not 0 <= point["renew_rate"] <= 1:
+            raise ValueError(f"{where}: renew_rate must be in [0, 1]")
+        if "avg_lease" in point and point["avg_lease"] < 0:
+            raise ValueError(f"{where}: avg_lease must be non-negative")
         if "cores" in point and point["cores"] < 1:
             raise ValueError(f"{where}: cores must be >= 1")
         if ("threads" in point) != ("parallel_efficiency" in point):

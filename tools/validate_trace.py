@@ -1,0 +1,183 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace export against the tardis-trace-v1 schema.
+
+Usage: validate_trace.py FILE [FILE...]
+
+Emitted by `tardis trace --out FILE` / `tardis run --trace-out FILE`
+(rust/src/obs/mod.rs `export_chrome`) and checked by the CI
+trace-smoke job.  Exits non-zero with a diagnostic on the first
+schema violation.
+
+The document is standard Chrome trace-event JSON with two processes:
+pid 1 is the simulated-time protocol stream (cat "proto", ts =
+cycles, deterministic and byte-diffable across engine modes), pid 2
+is opt-in host-time PDES telemetry (cat "host", every event tagged
+with which clock its ts uses).
+"""
+
+import json
+import sys
+
+from schema_common import check_keys, load
+
+SCHEMA = "tardis-trace-v1"
+
+# The protocol event vocabulary (rust/src/obs/mod.rs EventKind::name).
+PROTO_NAMES = {
+    "demand",
+    "lease_expire",
+    "renew_ok",
+    "renew_fail",
+    "lease_grant",
+    "pts_jump",
+    "livelock",
+    "sb_stall",
+}
+
+# Host-process vocabulary: shard spans plus execution markers.
+HOST_NAMES = {"shard_busy", "shard_wait", "rebalance", "window"}
+
+METADATA_NAMES = {"process_name", "thread_name"}
+
+TOP_KEYS = {
+    "displayTimeUnit": str,
+    "otherData": dict,
+    "traceEvents": list,
+}
+
+OTHER_DATA_KEYS = {
+    "schema": str,
+    "events": int,
+    "dropped": int,
+    "hot_lines": list,
+    "hot_cores": list,
+}
+
+HOT_ROW_KEYS = {
+    "key": (str, int),
+    "demand": int,
+    "expiries": int,
+    "renew_ok": int,
+    "renew_fail": int,
+    "pressure": int,
+}
+
+
+def check_hot_table(rows, where, hex_keys):
+    prev = None
+    for i, row in enumerate(rows):
+        here = f"{where}[{i}]"
+        if not isinstance(row, dict):
+            raise ValueError(f"{here}: not an object")
+        check_keys(row, HOT_ROW_KEYS, here)
+        if hex_keys:
+            if not (isinstance(row["key"], str) and row["key"].startswith("0x")):
+                raise ValueError(f"{here}: line keys must be hex strings")
+        elif not isinstance(row["key"], int):
+            raise ValueError(f"{here}: core keys must be integers")
+        # Pressure is the ranking metric: demand misses plus
+        # renewal-triggering expiries (renewals are the *consequence*).
+        total = row["demand"] + row["expiries"]
+        if row["pressure"] != total:
+            raise ValueError(
+                f"{here}: pressure {row['pressure']} != demand + expiries ({total})"
+            )
+        if prev is not None and row["pressure"] > prev:
+            raise ValueError(f"{here}: hot table not sorted by descending pressure")
+        prev = row["pressure"]
+
+
+def check_event(ev, where, last_sim_ts):
+    """Validate one trace event; returns the updated pid-1 ts watermark."""
+    if not isinstance(ev, dict):
+        raise ValueError(f"{where}: not an object")
+    for key in ("name", "ph", "pid", "tid"):
+        if key not in ev:
+            raise ValueError(f"{where}: missing key {key!r}")
+    name, ph, pid = ev["name"], ev["ph"], ev["pid"]
+    if ph == "M":
+        if name not in METADATA_NAMES:
+            raise ValueError(f"{where}: unknown metadata record {name!r}")
+        if "name" not in ev.get("args", {}):
+            raise ValueError(f"{where}: metadata must carry args.name")
+        return last_sim_ts
+    if ph not in ("i", "X"):
+        raise ValueError(f"{where}: unknown ph {ph!r}")
+    if not isinstance(ev.get("ts"), int) or ev["ts"] < 0:
+        raise ValueError(f"{where}: ts must be a non-negative integer")
+    if ph == "X" and (not isinstance(ev.get("dur"), int) or ev["dur"] < 1):
+        raise ValueError(f"{where}: complete events need an integer dur >= 1")
+    if pid == 1:
+        if ev.get("cat") != "proto":
+            raise ValueError(f"{where}: pid-1 events must be cat 'proto'")
+        if name not in PROTO_NAMES:
+            raise ValueError(f"{where}: unknown protocol event {name!r}")
+        if (name == "lease_grant") != (ph == "X"):
+            raise ValueError(
+                f"{where}: lease grants (and only they) are spans on pid 1"
+            )
+        if not str(ev.get("args", {}).get("addr", "")).startswith("0x"):
+            raise ValueError(f"{where}: protocol events carry a hex args.addr")
+        if ev["ts"] < last_sim_ts:
+            raise ValueError(
+                f"{where}: sim timeline went backwards "
+                f"({ev['ts']} after {last_sim_ts})"
+            )
+        return ev["ts"]
+    if pid == 2:
+        if ev.get("cat") != "host":
+            raise ValueError(f"{where}: pid-2 events must be cat 'host'")
+        if name not in HOST_NAMES:
+            raise ValueError(f"{where}: unknown host event {name!r}")
+        clock = ev.get("args", {}).get("clock")
+        if clock not in ("host_us", "sim"):
+            raise ValueError(
+                f"{where}: host events must tag their clock "
+                f"(got {clock!r}, expected 'host_us' or 'sim')"
+            )
+        return last_sim_ts
+    raise ValueError(f"{where}: unknown pid {pid}")
+
+
+def validate(path):
+    doc = load(path)
+    check_keys(doc, TOP_KEYS, "top level")
+    other = doc["otherData"]
+    check_keys(other, OTHER_DATA_KEYS, "otherData")
+    if other["schema"] != SCHEMA:
+        raise ValueError(f"unknown schema {other['schema']!r}")
+    if other["events"] < 0 or other["dropped"] < 0:
+        raise ValueError("event and dropped counts must be non-negative")
+    check_hot_table(other["hot_lines"], "otherData.hot_lines", hex_keys=True)
+    check_hot_table(other["hot_cores"], "otherData.hot_cores", hex_keys=False)
+
+    n_proto = 0
+    last_sim_ts = 0
+    for i, ev in enumerate(doc["traceEvents"]):
+        last_sim_ts = check_event(ev, f"traceEvents[{i}]", last_sim_ts)
+        if ev.get("pid") == 1 and ev.get("ph") != "M":
+            n_proto += 1
+    if n_proto != other["events"]:
+        raise ValueError(
+            f"otherData.events says {other['events']} protocol events, "
+            f"found {n_proto}"
+        )
+    return n_proto
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    for path in argv[1:]:
+        try:
+            n = validate(path)
+        except (OSError, ValueError, json.JSONDecodeError) as e:
+            print(f"FAIL {path}: {e}", file=sys.stderr)
+            return 1
+        print(f"ok {path}: {n} protocol events")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
